@@ -1,0 +1,128 @@
+//! End-to-end validation: proves all layers compose on a real workload
+//! (recorded in EXPERIMENTS.md §End-to-end).
+//!
+//!  L1/L2 — Pallas/JAX kernels, AOT-compiled to HLO text by
+//!          `make artifacts` (build time, Python);
+//!  runtime — the Rust PJRT client loads + compiles the artifacts;
+//!  L3  — the coordinator unrolls a parameter-range Experiment into
+//!        sampler scripts, the sampler executes the calls on the `xla`
+//!        backend (PJRT) AND the rust libraries, reports flow back
+//!        through the batch spooler, metrics/statistics/plots come out.
+//!
+//! The workload is the paper's core study: dgemm performance across
+//! libraries, plus a numerical cross-check that the PJRT path computes
+//! the same C as the rust substrate.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_validation`
+
+use anyhow::{bail, Result};
+use elaps::coordinator::{run_local, Metric, Spooler, Stat};
+use elaps::figures::call;
+use elaps::linalg::Matrix;
+use elaps::util::rng::Xoshiro256;
+
+fn main() -> Result<()> {
+    // ---- stage 1: artifacts + PJRT runtime --------------------------
+    let dir = elaps::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        bail!("artifacts/manifest.json missing — run `make artifacts` first");
+    }
+    let registry = elaps::runtime::register_xla_library(&dir)?;
+    println!(
+        "[1/4] PJRT runtime up: {} artifacts in {:?}",
+        registry.artifact_count(),
+        dir
+    );
+
+    // ---- stage 2: numerical cross-check rust ⇄ PJRT ⇄ Pallas --------
+    let n = 128;
+    let mut rng = Xoshiro256::seeded(2026);
+    let a = Matrix::random(n, n, &mut rng);
+    let b = Matrix::random(n, n, &mut rng);
+    let expect = a.matmul(&b);
+    for impl_name in ["jnp", "pallas"] {
+        let meta = registry
+            .find("dgemm", n, n, n, impl_name)
+            .filter(|m| m.key.impl_name == impl_name)
+            .ok_or_else(|| anyhow::anyhow!("no {impl_name} artifact for {n}³"))?
+            .clone();
+        let mut c = vec![0.0f64; n * n];
+        registry.run_gemm(&meta, &a.data, &b.data, &mut c, n, n, n, 1.0, 0.0)?;
+        let diff = Matrix { m: n, n, data: c }.max_abs_diff(&expect);
+        if diff > 1e-9 {
+            bail!("{impl_name} artifact disagrees with rust substrate: {diff}");
+        }
+        println!("[2/4] {impl_name:>6} artifact ✓ max|Δ| = {diff:.2e} vs rust gemm");
+    }
+
+    // ---- stage 3: full experiment across all backends ---------------
+    // dgemm n = 100..500 on every library, submitted through the batch
+    // spooler (the paper's LoadLeveler/LSF workflow substitute).
+    let spool_dir = std::env::temp_dir().join(format!("elaps-e2e-{}", std::process::id()));
+    let spool = Spooler::new(&spool_dir)?;
+    let sizes: Vec<i64> = vec![100, 128, 256, 500];
+    println!("[3/4] dgemm study over {sizes:?} via the batch spooler:");
+    println!(
+        "      {:>6} {:>12} {:>12} {:>12} {:>12}",
+        "n", "rustref", "rustblocked", "rustrec", "xla(PJRT)"
+    );
+    let mut per_lib: Vec<Vec<(i64, f64)>> = Vec::new();
+    for lib in ["rustref", "rustblocked", "rustrecursive", "xla"] {
+        let mut exp = elaps::coordinator::Experiment {
+            name: format!("e2e-dgemm-{lib}"),
+            library: lib.into(),
+            nreps: 4,
+            discard_first: true,
+            range: Some(elaps::coordinator::RangeDef::new("n", sizes.clone())),
+            calls: vec![call(
+                "dgemm",
+                &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+            )?],
+            ..Default::default()
+        };
+        exp.counters = vec!["PAPI_L1_TCM".into()];
+        let report = spool.run_through_queue(&exp)?;
+        per_lib.push(report.series(Metric::Gflops, Stat::Median));
+    }
+    for (i, &n) in sizes.iter().enumerate() {
+        println!(
+            "      {:>6} {:>12.3} {:>12.3} {:>12.3} {:>12.3}",
+            n, per_lib[0][i].1, per_lib[1][i].1, per_lib[2][i].1, per_lib[3][i].1
+        );
+    }
+    let _ = std::fs::remove_dir_all(&spool_dir);
+
+    // ---- stage 4: metrics/statistics/plot from a local run ----------
+    let mut exp = elaps::coordinator::Experiment {
+        name: "e2e-summary".into(),
+        library: "xla".into(),
+        nreps: 5,
+        discard_first: true,
+        calls: vec![call(
+            "dgemm",
+            &[
+                "N", "N", "1000", "1000", "1000", "1.0", "$A", "1000", "$B", "1000",
+                "0.0", "$C", "1000",
+            ],
+        )?],
+        ..Default::default()
+    };
+    exp.counters = vec![];
+    let report = run_local(&exp)?;
+    println!("[4/4] headline (paper §2 metrics table, dgemm 1000³ via PJRT):");
+    for (name, v) in report.metrics_table() {
+        println!("      {name:<18} {v:>16.2}");
+    }
+    let mut fig = elaps::coordinator::Figure::new("e2e dgemm across libraries", "n", "Gflops/s");
+    for (lib, series) in ["rustref", "rustblocked", "rustrecursive", "xla"]
+        .iter()
+        .zip(&per_lib)
+    {
+        fig.add_iseries(lib, series);
+    }
+    std::fs::create_dir_all("figures_out")?;
+    std::fs::write("figures_out/e2e_validation.svg", fig.to_svg(720, 440))?;
+    println!("\n{}", fig.to_ascii(70, 16));
+    println!("e2e validation PASSED — plot at figures_out/e2e_validation.svg");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Library selection (paper §4.2): which "library" solves the
+//! triangular Sylvester equation fastest?
+//!
+//! The vendor libraries of the paper (LAPACK, RECSY, libFLAME, MKL) are
+//! substituted by the from-scratch algorithmic variants — unblocked,
+//! blocked, recursive (DESIGN.md §Substitutions 1). The study runs one
+//! parameter-range experiment per library and compares the series,
+//! exactly the Fig. 12 workflow.
+//!
+//! Run: `cargo run --release --example library_selection`
+
+use anyhow::Result;
+use elaps::coordinator::{run_local, DataGen, Expr, Figure, Metric, RangeDef, Stat};
+use elaps::figures::call;
+
+fn main() -> Result<()> {
+    let mut fig = Figure::new("triangular Sylvester equation", "n", "Gflops/s");
+    println!("dtrsyl A·X + X·B = C across libraries (n = 64:64:448):\n");
+    println!("{:>6} {:>14} {:>14} {:>14}", "n", "rustref", "rustblocked", "rustrecursive");
+    let mut table: Vec<Vec<f64>> = Vec::new();
+    let mut xs: Vec<i64> = Vec::new();
+    for lib in ["rustref", "rustblocked", "rustrecursive"] {
+        let mut exp = elaps::coordinator::Experiment {
+            name: format!("sylvester-{lib}"),
+            library: lib.into(),
+            nreps: 4,
+            discard_first: true,
+            range: Some(RangeDef::span("n", 64, 64, 448)),
+            calls: vec![call(
+                "dtrsyl",
+                &["N", "N", "1", "n", "n", "$A", "n", "$B", "n", "$C", "n"],
+            )?],
+            ..Default::default()
+        };
+        exp.datagen.insert("A".into(), DataGen::Tri(Expr::sym("n"), 'U'));
+        exp.datagen.insert("B".into(), DataGen::Tri(Expr::sym("n"), 'U'));
+        let report = run_local(&exp)?;
+        let series = report.series(Metric::Gflops, Stat::Median);
+        if xs.is_empty() {
+            xs = series.iter().map(|&(x, _)| x).collect();
+            table = vec![Vec::new(); xs.len()];
+        }
+        for (i, &(_, g)) in series.iter().enumerate() {
+            table[i].push(g);
+        }
+        fig.add_iseries(lib, &series);
+    }
+    for (i, &x) in xs.iter().enumerate() {
+        println!(
+            "{x:>6} {:>14.3} {:>14.3} {:>14.3}",
+            table[i][0], table[i][1], table[i][2]
+        );
+    }
+    println!("\n{}", fig.to_ascii(70, 18));
+    let last = table.last().unwrap();
+    println!(
+        "decision: at large n pick `{}` — the paper reaches the analogous\n\
+         conclusion for RECSY over LAPACK/libFLAME/MKL (Fig. 12).",
+        ["rustref", "rustblocked", "rustrecursive"]
+            [last.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0]
+    );
+    Ok(())
+}

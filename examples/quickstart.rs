@@ -1,0 +1,83 @@
+//! Quickstart: the paper's §2 walk-through on the public API.
+//!
+//! Builds Experiment 1 (one dgemm), derives the metrics table, then
+//! Experiment 2 (10 repetitions) and prints the statistics of Fig. 1 —
+//! showing the first-execution outlier and why ELAPS drops it.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use elaps::coordinator::{run_local, Call, CallArg, Experiment, Metric, Stat};
+use elaps::coordinator::stats::ALL_STATS;
+use anyhow::Result;
+
+fn dgemm_call(n: i64) -> Result<Call> {
+    let e = |v: i64| CallArg::n(v);
+    Call::new(
+        "dgemm",
+        vec![
+            CallArg::Flag('N'),
+            CallArg::Flag('N'),
+            e(n),
+            e(n),
+            e(n),
+            CallArg::Scalar(1.0),
+            CallArg::Data("A".into()),
+            e(n),
+            CallArg::Data("B".into()),
+            e(n),
+            CallArg::Scalar(0.0),
+            CallArg::Data("C".into()),
+            e(n),
+        ],
+    )
+}
+
+fn main() -> Result<()> {
+    let n = 300;
+    // ------------------------------------------------ Experiment 1
+    let mut exp = Experiment {
+        name: "experiment-1".into(),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps: 1,
+        calls: vec![dgemm_call(n)?],
+        counters: vec!["PAPI_L1_TCM".into(), "PAPI_BR_MSP".into()],
+        ..Default::default()
+    };
+    let report = run_local(&exp)?;
+    println!("Experiment 1 — dgemm n={n}, 1 repetition:");
+    println!("  {:<18} {:>16}", "metric", "value");
+    for (name, v) in report.metrics_table() {
+        println!("  {name:<18} {v:>16.1}");
+    }
+    for (i, c) in exp.counters.iter().enumerate() {
+        let v = report.series(Metric::Counter(i), Stat::Median)[0].1;
+        println!("  {c:<18} {v:>16.0}   (simulated)");
+    }
+
+    // ------------------------------------------------ Experiment 2
+    exp.name = "experiment-2".into();
+    exp.nreps = 10;
+    let report = run_local(&exp)?;
+    let vals = report.rep_values(&report.points[0], Metric::TimeMs);
+    println!("\nExperiment 2 — same dgemm, 10 repetitions (time [ms]):");
+    println!(
+        "  per-rep: {}",
+        vals.iter().map(|v| format!("{v:.2}")).collect::<Vec<_>>().join(" ")
+    );
+    println!("  {:<8} {:>12} {:>16}", "stat", "all reps", "without first");
+    for &stat in ALL_STATS {
+        println!(
+            "  {:<8} {:>12.3} {:>16.3}",
+            stat.name(),
+            stat.apply(&vals),
+            stat.apply(&vals[1..])
+        );
+    }
+    println!(
+        "\nThe first repetition is {}the slowest — ELAPS discards it by default\n\
+         (experiment.discard_first) exactly as the paper's §2.1 recommends.",
+        if vals[0] >= vals[1..].iter().cloned().fold(0.0, f64::max) { "" } else { "not always " }
+    );
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Algorithm selection (paper §4.1): cast the tensor contraction
+//! C_abc := A_ak B_kcb as a series of dgemm's — loop over b (∀b) or
+//! over c (∀c)? The answer depends on the free dimension n, with a
+//! crossover the experiment locates (Fig. 11).
+//!
+//! Uses the `xla` backend (JAX-AOT artifacts via PJRT) when built,
+//! falling back to the rust blocked library.
+//!
+//! Run: `make artifacts && cargo run --release --example tensor_contraction`
+
+use anyhow::Result;
+use elaps::figures;
+
+fn main() -> Result<()> {
+    // register the PJRT-backed library if artifacts are present
+    let dir = elaps::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        let reg = elaps::runtime::register_xla_library(&dir)?;
+        println!(
+            "xla backend registered: {} AOT artifacts (gemm via PJRT)\n",
+            reg.artifact_count()
+        );
+    } else {
+        println!("artifacts/ missing — run `make artifacts`; using rustblocked\n");
+    }
+    let out = figures::f11_tensor_contraction(false)?;
+    for row in &out.rows {
+        println!("{row}");
+    }
+    if let Some(fig) = &out.figure {
+        println!("\n{}", fig.to_ascii(70, 18));
+    }
+    println!("{}", out.notes);
+    Ok(())
+}

@@ -1,0 +1,104 @@
+"""AOT driver: lower every (entry point, shape) pair the Rust runtime
+needs to **HLO text** plus a ``manifest.json`` the runtime indexes.
+
+HLO text — NOT ``lowered.compiler_ir('hlo')``/``.serialize()`` — is the
+interchange format: the image's xla_extension 0.5.1 rejects jax≥0.5's
+serialized protos (64-bit instruction ids); the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md and
+gen_hlo.py there.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# The artifact set: every (kernel, impl, m, n, k) the figures use on
+# the `xla` backend. gemm entries take (bt:(n,k), at:(k,m)) — see
+# model.py's column-major bridge.
+#
+# Tensor-contraction study (Fig. 11, sizes scaled /4 per DESIGN.md
+# §Substitutions 7): A ∈ R^{312×188}, B ∈ R^{188×125×n}.
+TC_M, TC_K, TC_B = 312, 188, 125
+TC_N_SWEEP = [25, 50, 75, 100, 150, 200, 300, 400, 500, 625]
+
+
+def artifact_list():
+    arts = []
+    # square vendor gemms for quickstart / e2e / locality studies
+    for n in [100, 128, 256, 500, 1000]:
+        arts.append(("dgemm", "jnp", n, n, n))
+    # Pallas-kernel gemms (block-divisible shapes)
+    for n in [128, 256]:
+        arts.append(("dgemm", "pallas", n, n, n))
+    # tensor contraction ∀b: C[:,:,c] slices — fixed (m,n,k)
+    arts.append(("dgemm", "jnp", TC_M, TC_B, TC_K))
+    # tensor contraction ∀c: C[:,b,:] slices — n sweeps
+    for n in TC_N_SWEEP:
+        arts.append(("dgemm", "jnp", TC_M, n, TC_K))
+    return arts
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, *, only_small: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+    for kernel, impl, m, n, k in artifact_list():
+        if only_small and max(m, n, k) > 128:
+            continue  # excluded from the manifest too: lookups must miss
+        entry = "gemm_pallas" if impl == "pallas" else "gemm_jnp"
+        fname = f"{kernel}_{impl}_{m}x{n}x{k}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        meta = {
+            "kernel": kernel,
+            "impl": impl,
+            "m": m,
+            "n": n,
+            "k": k,
+            "file": fname,
+            "dtype": "f64",
+        }
+        if not os.path.exists(path):
+            lowered = model.lower_entry(entry, [(n, k), (k, m)])
+            text = to_hlo_text(lowered)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(text)
+            os.replace(tmp, path)
+        manifest["artifacts"].append(meta)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--only-small",
+        action="store_true",
+        help="only artifacts ≤128 (fast smoke builds in tests)",
+    )
+    args = ap.parse_args()
+    manifest = build(args.out_dir, only_small=args.only_small)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

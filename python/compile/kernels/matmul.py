@@ -1,0 +1,89 @@
+"""L1: tiled Pallas matmul kernel — the compute hot-spot of ELAPS-RS's
+``xla`` "vendor library" backend.
+
+TPU-style structure (DESIGN.md §Hardware-Adaptation): the grid tiles
+C into (bm × bn) VMEM-resident blocks (MXU-shaped, default 128×128);
+the innermost grid dimension walks the K panels, accumulating into the
+revisited output block — the BlockSpec expresses the HBM↔VMEM schedule
+that a CUDA kernel would express with threadblocks and shared memory.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see
+/opt/xla-example/README.md). Real-TPU efficiency is *estimated* from
+the BlockSpec in EXPERIMENTS.md §Perf, never measured here.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nsteps: int):
+    """One (bm × bn) output block; grid dim 2 walks the K panels."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+    del nsteps  # structure kept for the TPU double-buffered variant
+
+
+def matmul_padded(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Pallas matmul requiring dims divisible by the block sizes."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{n},{k}) not divisible by blocks ({bm},{bn},{bk})"
+    )
+    nsteps = k // bk
+    grid = (m // bm, n // bn, nsteps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps=nsteps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)
+
+
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """General matmul: pads to block multiples, runs the Pallas kernel,
+    slices the result back. Equal to ``ref.matmul_ref`` on any shape."""
+    m, k = x.shape
+    _, n = y.shape
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = matmul_padded(xp, yp, bm=bm, bn=bn, bk=bk)
+    return out[:m, :n]
+
+
+def _round_up(v: int, to: int) -> int:
+    return ((v + to - 1) // to) * to
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step: X block + Y block +
+    O block (double-buffered inputs). Used by EXPERIMENTS.md §Perf."""
+    return dtype_bytes * (2 * (bm * bk + bk * bn) + bm * bn)
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issue slots doing useful work for one block step,
+    assuming a 128×128 systolic MXU: full tiles ⇒ 1.0, partial ⇒ the
+    fill ratio."""
+    fill = lambda b: min(b, 128) / 128.0  # noqa: E731
+    return fill(bm) * fill(bn) * fill(bk)

@@ -1,0 +1,20 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the L2
+model entry points. These ARE the semantics; pytest asserts the Pallas
+and AOT paths against them."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """C = X @ Y with accumulation in the output dtype."""
+    return jnp.dot(x, y, preferred_element_type=x.dtype)
+
+
+def gemm_ref(alpha, x, y, beta, c):
+    """Full BLAS dgemm semantics: alpha*X@Y + beta*C."""
+    return alpha * matmul_ref(x, y) + beta * c
+
+
+def syrk_ref(x):
+    """C = Xᵀ @ X (full matrix, both triangles)."""
+    return jnp.dot(x.T, x, preferred_element_type=x.dtype)

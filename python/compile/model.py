@@ -1,0 +1,54 @@
+"""L2: the JAX compute graph of the ``xla`` vendor-library backend.
+
+Each entry point is a pure jax function lowered once by ``aot.py`` to
+HLO text and executed from the Rust runtime via PJRT — Python never
+runs on the request path.
+
+Column-major bridge: Rust stores BLAS operands column-major; jax
+arrays are logically row-major. A column-major (m×k) buffer
+reinterpreted row-major is the (k×m) transpose, and ``(A·B)ᵀ =
+Bᵀ·Aᵀ``, so the Rust runtime passes (Bᵀ, Aᵀ) — i.e. the raw B and A
+buffers with swapped logical shapes — and receives Cᵀ, which is
+exactly the column-major C buffer. The gemm entry points are therefore
+``f(bt, at) = bt @ at`` with bt: (n, k), at: (k, m).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pk
+
+
+def gemm_jnp(bt, at):
+    """dgemm core via XLA's native dot (the 'vendor gemm')."""
+    return (jnp.dot(bt, at, preferred_element_type=bt.dtype),)
+
+
+def gemm_pallas(bt, at):
+    """dgemm core via the L1 Pallas kernel."""
+    return (pk.matmul(bt, at),)
+
+
+def syrk_jnp(at):
+    """dsyrk core. ``at`` is the raw column-major (n×k) A buffer seen
+    as (k, n) row-major; AᵀA is symmetric so Cᵀ = C and the result maps
+    straight back into the column-major C buffer: atᵀ·at? — careful:
+    C = A·Aᵀ (trans='N') in column-major is (k,n)-row-major ``at``
+    contracted over its first axis."""
+    c = jnp.dot(at.T, at, preferred_element_type=at.dtype)
+    return (c,)
+
+
+ENTRY_POINTS = {
+    "gemm_jnp": gemm_jnp,
+    "gemm_pallas": gemm_pallas,
+    "syrk_jnp": syrk_jnp,
+}
+
+
+def lower_entry(name: str, shapes, dtype=jnp.float64):
+    """Lower an entry point at concrete shapes; returns the jax
+    ``Lowered`` object."""
+    fn = ENTRY_POINTS[name]
+    args = [jax.ShapeDtypeStruct(s, dtype) for s in shapes]
+    return jax.jit(fn).lower(*args)

@@ -1,0 +1,5 @@
+//! Regenerates the paper's F2 (see DESIGN.md per-experiment index).
+//! Quick sizes by default; ELAPS_BENCH_FULL=1 for paper-scaled sizes.
+fn main() {
+    elaps::figures::bench_main("F2");
+}

@@ -1,0 +1,665 @@
+//! The [`Experiment`] class — the paper's central concept (§2, §3.2.1):
+//! one or more kernel calls, repeated `nreps` times, optionally swept
+//! over a parameter range and/or a sum-/OpenMP-range, with per-operand
+//! "vary" control (fresh memory per repetition / range iteration) —
+//! and its translation into sampler command scripts (§3.2.2).
+
+use super::symbolic::{Bindings, Expr};
+use crate::kernels::{ArgRole, Signature};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// One argument of an experiment call.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CallArg {
+    /// Flag character (side/uplo/trans/diag/jobz).
+    Flag(char),
+    /// Integer expression (dims, leading dimensions, strides).
+    Expr(Expr),
+    /// Floating scalar (alpha, beta).
+    Scalar(f64),
+    /// Logical operand name.
+    Data(String),
+}
+
+impl CallArg {
+    pub fn n(v: i64) -> CallArg {
+        CallArg::Expr(Expr::Const(v))
+    }
+    pub fn sym(s: &str) -> CallArg {
+        CallArg::Expr(Expr::Sym(s.to_string()))
+    }
+    pub fn expr(s: &str) -> CallArg {
+        CallArg::Expr(Expr::parse(s).expect("bad expression"))
+    }
+}
+
+/// One kernel call of the experiment.
+#[derive(Debug, Clone)]
+pub struct Call {
+    pub kernel: String,
+    pub args: Vec<CallArg>,
+}
+
+impl Call {
+    /// Build a call, checking arity against the signature.
+    pub fn new(kernel: &str, args: Vec<CallArg>) -> Result<Call> {
+        let sig = crate::kernels::lookup(kernel)
+            .ok_or_else(|| anyhow!("unknown kernel '{kernel}'"))?;
+        if sig.args.len() != args.len() {
+            bail!(
+                "{kernel}: expected {} args ({}), got {}",
+                sig.args.len(),
+                sig.args.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", "),
+                args.len()
+            );
+        }
+        Ok(Call { kernel: kernel.to_string(), args })
+    }
+
+    pub fn sig(&self) -> &'static Signature {
+        crate::kernels::lookup(&self.kernel).expect("validated in new()")
+    }
+}
+
+/// How an operand's contents are initialized.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DataGen {
+    /// Uniform random ]0,1[ (the sampler's dgerand) — the default.
+    Rand,
+    /// Random symmetric positive definite n×n (dporand).
+    Spd(Expr),
+    /// Random lower/upper triangular n×n (dtrrand).
+    Tri(Expr, char),
+    /// Zero-initialized.
+    Zero,
+}
+
+/// Operand vary specification (§2.2): fresh memory per repetition
+/// and/or per sum-/OpenMP-range iteration, with an optional pad between
+/// consecutive instances (the paper's "arbitrary offset").
+#[derive(Debug, Clone, Default)]
+pub struct Vary {
+    pub with_rep: bool,
+    pub with_sumrange: bool,
+    /// Extra elements between instances.
+    pub pad_elems: usize,
+}
+
+/// A named range: symbol + values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RangeDef {
+    pub sym: String,
+    pub values: Vec<i64>,
+}
+
+impl RangeDef {
+    pub fn new(sym: &str, values: Vec<i64>) -> RangeDef {
+        RangeDef { sym: sym.to_string(), values }
+    }
+
+    /// `lo:step:hi` inclusive.
+    pub fn span(sym: &str, lo: i64, step: i64, hi: i64) -> RangeDef {
+        let mut values = Vec::new();
+        let mut v = lo;
+        while v <= hi {
+            values.push(v);
+            v += step;
+        }
+        RangeDef::new(sym, values)
+    }
+}
+
+/// The experiment description (paper §3.2.1). Serializable to JSON for
+/// file-based workflows ([`super::io`]).
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub name: String,
+    /// Sampler backend (library) to run on: rustref / rustblocked /
+    /// rustrecursive / xla.
+    pub library: String,
+    /// Machine model name to report metrics against.
+    pub machine: String,
+    /// Library-internal threads. On this 1-core host values > 1 mark
+    /// the experiment for the thread-scaling model (DESIGN.md §Subst 4).
+    pub nthreads: Expr,
+    /// Repetitions (§2.1).
+    pub nreps: usize,
+    /// Whether statistics drop the first repetition (§2.1).
+    pub discard_first: bool,
+    /// Parameter range (§2.4) — outer sweep, one measurement series
+    /// per value.
+    pub range: Option<RangeDef>,
+    /// Sum-range (§2.5) or OpenMP-range (§2.5.1) — inner loop within a
+    /// repetition.
+    pub sumrange: Option<RangeDef>,
+    /// If true the sum-range iterations are parallel OpenMP tasks.
+    pub omp: bool,
+    /// The kernel calls (≥ 1; §2.3 sequences).
+    pub calls: Vec<Call>,
+    /// Operand initialization (operand name → generator).
+    pub datagen: BTreeMap<String, DataGen>,
+    /// Operand vary specs (§2.2).
+    pub vary: BTreeMap<String, Vary>,
+    /// PAPI counters to sample.
+    pub counters: Vec<String>,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment {
+            name: "experiment".into(),
+            library: "rustblocked".into(),
+            machine: "localhost".into(),
+            nthreads: Expr::Const(1),
+            nreps: 1,
+            discard_first: false,
+            range: None,
+            sumrange: None,
+            omp: false,
+            calls: vec![],
+            datagen: BTreeMap::new(),
+            vary: BTreeMap::new(),
+            counters: vec![],
+        }
+    }
+}
+
+/// The fully unrolled script for one parameter-range value, plus the
+/// index structure needed to fold the sampler's flat record stream back
+/// into (rep, sumrange-iteration, call).
+#[derive(Debug, Clone)]
+pub struct UnrolledPoint {
+    /// Parameter-range value this script belongs to (0 if no range).
+    pub range_value: i64,
+    /// Library threads at this point.
+    pub nthreads: usize,
+    /// The sampler command script.
+    pub script: String,
+    /// Number of sum-range iterations per repetition (1 if none).
+    pub sum_iters: usize,
+    /// Calls per sum-range iteration.
+    pub calls_per_iter: usize,
+}
+
+impl UnrolledPoint {
+    /// Total records expected from the sampler.
+    pub fn expected_records(&self, nreps: usize) -> usize {
+        nreps * self.sum_iters * self.calls_per_iter
+    }
+}
+
+impl Experiment {
+    /// Validate and unroll into one sampler script per parameter-range
+    /// value (§3.2.2).
+    pub fn unroll(&self) -> Result<Vec<UnrolledPoint>> {
+        if self.calls.is_empty() {
+            bail!("experiment has no calls");
+        }
+        if self.nreps == 0 {
+            bail!("nreps must be ≥ 1");
+        }
+        let range_values: Vec<i64> = match &self.range {
+            Some(r) if r.values.is_empty() => bail!("empty parameter range"),
+            Some(r) => r.values.clone(),
+            None => vec![0],
+        };
+        let mut out = Vec::with_capacity(range_values.len());
+        for &rv in &range_values {
+            out.push(self.unroll_point(rv)?);
+        }
+        Ok(out)
+    }
+
+    fn base_bindings(&self, rv: i64) -> Bindings {
+        let mut b = Bindings::new();
+        if let Some(r) = &self.range {
+            b.insert(r.sym.clone(), rv);
+        }
+        b
+    }
+
+    /// Operand element size: max over all calls and all loop bindings
+    /// of the signature-derived size.
+    fn operand_size(&self, op: &str, rv: i64) -> Result<usize> {
+        let sum_values: Vec<i64> = match &self.sumrange {
+            Some(s) => s.values.clone(),
+            None => vec![0],
+        };
+        let mut worst = 0usize;
+        for call in &self.calls {
+            let sig = call.sig();
+            for sv in &sum_values {
+                let mut b = self.base_bindings(rv);
+                if let Some(s) = &self.sumrange {
+                    b.insert(s.sym.clone(), *sv);
+                }
+                let av = eval_call(call, sig, &b)?;
+                let mut ord = 0;
+                for (i, (_, role)) in sig.args.iter().enumerate() {
+                    if let ArgRole::Data(_) = role {
+                        if av.values[i].as_data() == Some(op) {
+                            worst = worst.max(av.operand_elems(ord));
+                        }
+                        ord += 1;
+                    }
+                }
+            }
+        }
+        Ok(worst)
+    }
+
+    /// All logical operand names, in first-appearance order.
+    pub fn operands(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for call in &self.calls {
+            let sig = call.sig();
+            for (i, (_, role)) in sig.args.iter().enumerate() {
+                if let ArgRole::Data(_) = role {
+                    if let CallArg::Data(name) = &call.args[i] {
+                        if !out.contains(name) {
+                            out.push(name.clone());
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn unroll_point(&self, rv: i64) -> Result<UnrolledPoint> {
+        let mut script = String::new();
+        let b0 = self.base_bindings(rv);
+        let nthreads = self.nthreads.eval_usize(&b0).map_err(|e| anyhow!(e))? .max(1);
+        if !self.counters.is_empty() {
+            script.push_str(&format!("set_counters {}\n", self.counters.join(" ")));
+        }
+        script.push_str(&format!("set_threads {nthreads}\n"));
+
+        let sum_values: Vec<i64> = match &self.sumrange {
+            Some(s) if s.values.is_empty() => bail!("empty sum-range"),
+            Some(s) => s.values.clone(),
+            None => vec![0],
+        };
+        let sum_iters = sum_values.len();
+
+        // --- allocations (§3.2.2: varying operands are one large
+        // block subdivided via offsets) ---
+        for op in self.operands() {
+            let size = self.operand_size(&op, rv)?;
+            let vary = self.vary.get(&op).cloned().unwrap_or_default();
+            let rep_inst = if vary.with_rep { self.nreps } else { 1 };
+            let sum_inst = if vary.with_sumrange { sum_iters } else { 1 };
+            let instances = rep_inst * sum_inst;
+            let stride = size + vary.pad_elems;
+            if instances == 1 {
+                script.push_str(&format!("dmalloc {op} {size}\n"));
+                self.emit_datagen(&mut script, &op, &op, &b0, &sum_values, None)?;
+            } else {
+                script.push_str(&format!("dmalloc {op}__blk {}\n", stride * instances));
+                for r in 0..rep_inst {
+                    for s in 0..sum_inst {
+                        let inst = instance_name(&op, vary.with_rep.then_some(r), vary.with_sumrange.then_some(s));
+                        let idx = r * sum_inst + s;
+                        script.push_str(&format!("doffset {inst} {op}__blk {}\n", idx * stride));
+                        self.emit_datagen(
+                            &mut script, &inst, &op, &b0, &sum_values,
+                            vary.with_sumrange.then_some(s),
+                        )?;
+                    }
+                }
+            }
+        }
+
+        // --- call loop nest ---
+        for rep in 0..self.nreps {
+            if self.omp {
+                script.push_str("{omp\n");
+            }
+            for (si, sv) in sum_values.iter().enumerate() {
+                let mut b = b0.clone();
+                if let Some(s) = &self.sumrange {
+                    b.insert(s.sym.clone(), *sv);
+                }
+                b.insert("rep".to_string(), rep as i64);
+                for call in &self.calls {
+                    script.push_str(&self.render_call(call, &b, rep, si)?);
+                    script.push('\n');
+                }
+            }
+            if self.omp {
+                script.push_str("}\n");
+            }
+        }
+        script.push_str("go\n");
+        Ok(UnrolledPoint {
+            range_value: rv,
+            nthreads,
+            script,
+            sum_iters,
+            calls_per_iter: self.calls.len(),
+        })
+    }
+
+    /// Emit the data-generation command for one operand instance.
+    /// Size expressions may reference the sum-range symbol: an instance
+    /// tied to a specific iteration (`si`) binds that value; a shared
+    /// operand is generated at the maximum size over the sum-range.
+    fn emit_datagen(
+        &self,
+        script: &mut String,
+        inst: &str,
+        op: &str,
+        b0: &Bindings,
+        sum_values: &[i64],
+        si: Option<usize>,
+    ) -> Result<()> {
+        let eval_dim = |e: &Expr| -> Result<usize> {
+            let candidates: Vec<i64> = match si {
+                Some(s) => vec![sum_values[s]],
+                None => sum_values.to_vec(),
+            };
+            let mut best = None;
+            for sv in candidates {
+                let mut b = b0.clone();
+                if let Some(s) = &self.sumrange {
+                    b.insert(s.sym.clone(), sv);
+                }
+                let v = e.eval_usize(&b).map_err(|e| anyhow!(e))?;
+                best = Some(best.map_or(v, |x: usize| x.max(v)));
+            }
+            best.ok_or_else(|| anyhow!("no bindings for datagen of '{op}'"))
+        };
+        match self.datagen.get(op).unwrap_or(&DataGen::Rand) {
+            DataGen::Rand => script.push_str(&format!("dgerand {inst}\n")),
+            DataGen::Zero => script.push_str(&format!("dmemset {inst} 0\n")),
+            DataGen::Spd(e) => {
+                let n = eval_dim(e)?;
+                script.push_str(&format!("dporand {inst} {n}\n"));
+            }
+            DataGen::Tri(e, uplo) => {
+                let n = eval_dim(e)?;
+                script.push_str(&format!("dtrrand {inst} {n} {uplo}\n"));
+            }
+        }
+        Ok(())
+    }
+
+    fn render_call(&self, call: &Call, b: &Bindings, rep: usize, si: usize) -> Result<String> {
+        let sig = call.sig();
+        let mut line = call.kernel.clone();
+        for (arg, (name, role)) in call.args.iter().zip(sig.args) {
+            line.push(' ');
+            match (arg, role) {
+                (CallArg::Flag(c), ArgRole::Flag(_)) => line.push(*c),
+                (CallArg::Expr(e), ArgRole::Dim | ArgRole::Ld | ArgRole::Inc) => {
+                    line.push_str(&e.eval_usize(b).map_err(|e| anyhow!("{}: {e}", call.kernel))?.to_string())
+                }
+                (CallArg::Scalar(v), ArgRole::Scalar) => line.push_str(&v.to_string()),
+                (CallArg::Expr(e), ArgRole::Scalar) => {
+                    line.push_str(&e.eval(b).map_err(|e| anyhow!(e))?.to_string())
+                }
+                (CallArg::Data(opname), ArgRole::Data(_)) => {
+                    let vary = self.vary.get(opname).cloned().unwrap_or_default();
+                    // must match the allocation logic: one instance ⇒
+                    // plain name (even if marked varying)
+                    let sum_iters = self.sumrange.as_ref().map_or(1, |s| s.values.len());
+                    let rep_inst = if vary.with_rep { self.nreps } else { 1 };
+                    let sum_inst = if vary.with_sumrange { sum_iters } else { 1 };
+                    if rep_inst * sum_inst > 1 {
+                        line.push_str(&instance_name(
+                            opname,
+                            vary.with_rep.then_some(rep),
+                            vary.with_sumrange.then_some(si),
+                        ));
+                    } else {
+                        line.push_str(opname);
+                    }
+                }
+                (a, r) => bail!("{}: argument '{name}' role mismatch {a:?} vs {r:?}", call.kernel),
+            }
+        }
+        Ok(line)
+    }
+}
+
+fn instance_name(op: &str, rep: Option<usize>, si: Option<usize>) -> String {
+    let mut s = op.to_string();
+    if let Some(r) = rep {
+        s.push_str(&format!("__r{r}"));
+    }
+    if let Some(i) = si {
+        s.push_str(&format!("__s{i}"));
+    }
+    s
+}
+
+/// Evaluate a call's arguments under bindings into [`crate::kernels::ArgValues`]
+/// (dims/lds/scalars only; data args keep logical names).
+pub fn eval_call(
+    call: &Call,
+    sig: &'static Signature,
+    b: &Bindings,
+) -> Result<crate::kernels::ArgValues> {
+    use crate::kernels::ArgValue;
+    let mut values = Vec::with_capacity(call.args.len());
+    for (arg, (name, role)) in call.args.iter().zip(sig.args) {
+        let v = match (arg, role) {
+            (CallArg::Flag(c), ArgRole::Flag(_)) => ArgValue::Char(*c),
+            (CallArg::Expr(e), ArgRole::Dim | ArgRole::Ld | ArgRole::Inc) => {
+                ArgValue::Size(e.eval_usize(b).map_err(|e| anyhow!("{}: {e}", call.kernel))?)
+            }
+            (CallArg::Scalar(v), ArgRole::Scalar) => ArgValue::Num(*v),
+            (CallArg::Expr(e), ArgRole::Scalar) => {
+                ArgValue::Num(e.eval(b).map_err(|e| anyhow!(e))? as f64)
+            }
+            (CallArg::Data(d), ArgRole::Data(_)) => ArgValue::Data(d.clone()),
+            (a, r) => bail!("{}: arg '{name}' role mismatch {a:?} vs {r:?}", call.kernel),
+        };
+        values.push(v);
+    }
+    Ok(crate::kernels::ArgValues { sig, values })
+}
+
+/// Test helpers shared across coordinator modules.
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+
+    /// A minimal single-call dgemm experiment of size n.
+    pub fn dgemm_experiment(n: i64) -> Experiment {
+        let ns = n.to_string();
+        Experiment {
+            name: format!("dgemm{n}"),
+            calls: vec![Call::new(
+                "dgemm",
+                vec![
+                    CallArg::Flag('N'),
+                    CallArg::Flag('N'),
+                    CallArg::expr(&ns),
+                    CallArg::expr(&ns),
+                    CallArg::expr(&ns),
+                    CallArg::Scalar(1.0),
+                    CallArg::Data("A".into()),
+                    CallArg::expr(&ns),
+                    CallArg::Data("B".into()),
+                    CallArg::expr(&ns),
+                    CallArg::Scalar(0.0),
+                    CallArg::Data("C".into()),
+                    CallArg::expr(&ns),
+                ],
+            )
+            .unwrap()],
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dgemm_call(n: &str) -> Call {
+        Call::new(
+            "dgemm",
+            vec![
+                CallArg::Flag('N'),
+                CallArg::Flag('N'),
+                CallArg::expr(n),
+                CallArg::expr(n),
+                CallArg::expr(n),
+                CallArg::Scalar(1.0),
+                CallArg::Data("A".into()),
+                CallArg::expr(n),
+                CallArg::Data("B".into()),
+                CallArg::expr(n),
+                CallArg::Scalar(0.0),
+                CallArg::Data("C".into()),
+                CallArg::expr(n),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn simple_experiment_unrolls() {
+        let exp = Experiment {
+            name: "exp1".into(),
+            nreps: 3,
+            calls: vec![dgemm_call("100")],
+            ..Default::default()
+        };
+        let pts = exp.unroll().unwrap();
+        assert_eq!(pts.len(), 1);
+        let p = &pts[0];
+        assert_eq!(p.expected_records(3), 3);
+        assert!(p.script.contains("dmalloc A 10000"));
+        assert_eq!(p.script.matches("dgemm N N 100 100 100").count(), 3);
+        assert!(p.script.trim_end().ends_with("go"));
+    }
+
+    #[test]
+    fn parameter_range_one_script_per_value() {
+        let exp = Experiment {
+            range: Some(RangeDef::span("n", 100, 100, 300)),
+            calls: vec![dgemm_call("n")],
+            ..Default::default()
+        };
+        let pts = exp.unroll().unwrap();
+        assert_eq!(pts.len(), 3);
+        assert!(pts[0].script.contains("dgemm N N 100 100 100"));
+        assert!(pts[2].script.contains("dgemm N N 300 300 300"));
+        assert!(pts[2].script.contains("dmalloc A 90000"));
+    }
+
+    #[test]
+    fn vary_with_rep_allocates_block_and_offsets() {
+        // the paper's Experiment 3: C varies per repetition
+        let mut exp = Experiment {
+            nreps: 2,
+            calls: vec![dgemm_call("50")],
+            ..Default::default()
+        };
+        exp.vary.insert("C".into(), Vary { with_rep: true, ..Default::default() });
+        let pts = exp.unroll().unwrap();
+        let s = &pts[0].script;
+        assert!(s.contains("dmalloc C__blk 5000"), "{s}");
+        assert!(s.contains("doffset C__r0 C__blk 0"));
+        assert!(s.contains("doffset C__r1 C__blk 2500"));
+        assert!(s.contains("dgemm N N 50 50 50 1 A 50 B 50 0 C__r0 50"));
+        assert!(s.contains("C__r1 50"));
+    }
+
+    #[test]
+    fn sumrange_unrolls_inner_loop() {
+        // blocked triangular inversion sketch: calls with nb symbol
+        let exp = Experiment {
+            sumrange: Some(RangeDef::new("i", vec![0, 100, 200])),
+            calls: vec![Call::new(
+                "dtrti2",
+                vec![
+                    CallArg::Flag('L'),
+                    CallArg::Flag('N'),
+                    CallArg::n(100),
+                    CallArg::Data("A".into()),
+                    CallArg::n(100),
+                ],
+            )
+            .unwrap()],
+            ..Default::default()
+        };
+        let pts = exp.unroll().unwrap();
+        assert_eq!(pts[0].sum_iters, 3);
+        assert_eq!(pts[0].script.matches("dtrti2").count(), 3);
+    }
+
+    #[test]
+    fn omp_range_emits_groups() {
+        let exp = Experiment {
+            nreps: 2,
+            omp: true,
+            sumrange: Some(RangeDef::new("j", vec![0, 1])),
+            calls: vec![dgemm_call("30")],
+            ..Default::default()
+        };
+        let pts = exp.unroll().unwrap();
+        let s = &pts[0].script;
+        assert_eq!(s.matches("{omp").count(), 2);
+        assert_eq!(s.matches("\n}\n").count(), 2);
+    }
+
+    #[test]
+    fn sumrange_symbol_usable_in_args() {
+        let exp = Experiment {
+            sumrange: Some(RangeDef::new("nb", vec![8, 16])),
+            calls: vec![dgemm_call("nb")],
+            ..Default::default()
+        };
+        let pts = exp.unroll().unwrap();
+        assert!(pts[0].script.contains("dgemm N N 8 8 8"));
+        assert!(pts[0].script.contains("dgemm N N 16 16 16"));
+        // operand sized for the max
+        assert!(pts[0].script.contains("dmalloc A 256"));
+    }
+
+    #[test]
+    fn datagen_emitted() {
+        let mut exp = Experiment {
+            calls: vec![Call::new(
+                "dpotrf",
+                vec![CallArg::Flag('L'), CallArg::n(20), CallArg::Data("M".into()), CallArg::n(20)],
+            )
+            .unwrap()],
+            ..Default::default()
+        };
+        exp.datagen.insert("M".into(), DataGen::Spd(Expr::Const(20)));
+        let pts = exp.unroll().unwrap();
+        assert!(pts[0].script.contains("dporand M 20"));
+    }
+
+    #[test]
+    fn thread_expression_follows_range() {
+        let exp = Experiment {
+            range: Some(RangeDef::span("t", 1, 1, 4)),
+            nthreads: Expr::sym("t"),
+            calls: vec![dgemm_call("40")],
+            ..Default::default()
+        };
+        let pts = exp.unroll().unwrap();
+        assert_eq!(pts.iter().map(|p| p.nthreads).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        assert!(pts[3].script.contains("set_threads 4"));
+    }
+
+    #[test]
+    fn errors_on_empty_calls_or_reps() {
+        assert!(Experiment::default().unroll().is_err());
+        let exp = Experiment { nreps: 0, calls: vec![dgemm_call("10")], ..Default::default() };
+        assert!(exp.unroll().is_err());
+    }
+
+    #[test]
+    fn call_arity_validated() {
+        assert!(Call::new("dgemm", vec![CallArg::Flag('N')]).is_err());
+        assert!(Call::new("nosuch", vec![]).is_err());
+    }
+}

@@ -1,0 +1,361 @@
+//! Experiment and report (de)serialization — "easily stored to and
+//! loaded from strings and files for portability" (§3.2.1).
+
+use super::experiment::{Call, CallArg, DataGen, Experiment, RangeDef, Vary};
+use super::report::{PointResult, Report};
+use super::symbolic::Expr;
+use crate::kernels::ArgRole;
+use crate::perfmodel::MachineModel;
+use crate::sampler::Record;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+// ---------------------------------------------------------------- exp
+
+pub fn experiment_to_json(e: &Experiment) -> Json {
+    let mut j = Json::obj();
+    j.set("name", e.name.as_str())
+        .set("library", e.library.as_str())
+        .set("machine", e.machine.as_str())
+        .set("nthreads", e.nthreads.to_string())
+        .set("nreps", e.nreps)
+        .set("discard_first", e.discard_first)
+        .set("omp", e.omp);
+    if let Some(r) = &e.range {
+        j.set("range", range_to_json(r));
+    }
+    if let Some(r) = &e.sumrange {
+        j.set("sumrange", range_to_json(r));
+    }
+    j.set(
+        "calls",
+        Json::Arr(e.calls.iter().map(call_to_json).collect()),
+    );
+    let mut dg = Json::obj();
+    for (k, v) in &e.datagen {
+        dg.set(
+            k,
+            match v {
+                DataGen::Rand => Json::Str("rand".into()),
+                DataGen::Zero => Json::Str("zero".into()),
+                DataGen::Spd(ex) => Json::Str(format!("spd:{ex}")),
+                DataGen::Tri(ex, u) => Json::Str(format!("tri{u}:{ex}")),
+            },
+        );
+    }
+    j.set("datagen", dg);
+    let mut vy = Json::obj();
+    for (k, v) in &e.vary {
+        let mut o = Json::obj();
+        o.set("rep", v.with_rep).set("sumrange", v.with_sumrange).set("pad", v.pad_elems);
+        vy.set(k, o);
+    }
+    j.set("vary", vy);
+    j.set("counters", e.counters.clone());
+    j
+}
+
+fn range_to_json(r: &RangeDef) -> Json {
+    let mut o = Json::obj();
+    o.set("sym", r.sym.as_str())
+        .set("values", Json::Arr(r.values.iter().map(|&v| Json::Num(v as f64)).collect()));
+    o
+}
+
+fn call_to_json(c: &Call) -> Json {
+    let mut args = vec![Json::Str(c.kernel.clone())];
+    let sig = c.sig();
+    for (arg, (_, role)) in c.args.iter().zip(sig.args) {
+        args.push(match (arg, role) {
+            (CallArg::Flag(ch), _) => Json::Str(ch.to_string()),
+            (CallArg::Scalar(v), _) => Json::Num(*v),
+            (CallArg::Expr(e), _) => match e {
+                Expr::Const(v) => Json::Num(*v as f64),
+                other => Json::Str(other.to_string()),
+            },
+            (CallArg::Data(d), ArgRole::Data(_)) => Json::Str(format!("${d}")),
+            (CallArg::Data(d), _) => Json::Str(format!("${d}")),
+        });
+    }
+    Json::Arr(args)
+}
+
+pub fn experiment_from_json(j: &Json) -> Result<Experiment> {
+    let name = j.get("name").as_str().unwrap_or("experiment").to_string();
+    let library = j.get("library").as_str().unwrap_or("rustblocked").to_string();
+    let machine = j.get("machine").as_str().unwrap_or("localhost").to_string();
+    let nthreads = match j.get("nthreads") {
+        Json::Num(v) => Expr::Const(*v as i64),
+        Json::Str(s) => Expr::parse(s).map_err(|e| anyhow!("nthreads: {e}"))?,
+        _ => Expr::Const(1),
+    };
+    let nreps = j.get("nreps").as_u64().unwrap_or(1) as usize;
+    let discard_first = j.get("discard_first").as_bool().unwrap_or(false);
+    let omp = j.get("omp").as_bool().unwrap_or(false);
+    let range = range_from_json(j.get("range"))?;
+    let sumrange = range_from_json(j.get("sumrange"))?;
+    let mut calls = Vec::new();
+    for cj in j.get("calls").as_arr().unwrap_or(&[]) {
+        calls.push(call_from_json(cj)?);
+    }
+    let mut datagen = std::collections::BTreeMap::new();
+    if let Some(obj) = j.get("datagen").as_obj() {
+        for (k, v) in obj {
+            let s = v.as_str().unwrap_or("rand");
+            let g = if s == "rand" {
+                DataGen::Rand
+            } else if s == "zero" {
+                DataGen::Zero
+            } else if let Some(e) = s.strip_prefix("spd:") {
+                DataGen::Spd(Expr::parse(e).map_err(|e| anyhow!("datagen {k}: {e}"))?)
+            } else if let Some(e) = s.strip_prefix("triL:") {
+                DataGen::Tri(Expr::parse(e).map_err(|e| anyhow!("datagen {k}: {e}"))?, 'L')
+            } else if let Some(e) = s.strip_prefix("triU:") {
+                DataGen::Tri(Expr::parse(e).map_err(|e| anyhow!("datagen {k}: {e}"))?, 'U')
+            } else {
+                bail!("bad datagen spec '{s}' for operand {k}");
+            };
+            datagen.insert(k.clone(), g);
+        }
+    }
+    let mut vary = std::collections::BTreeMap::new();
+    if let Some(obj) = j.get("vary").as_obj() {
+        for (k, v) in obj {
+            vary.insert(
+                k.clone(),
+                Vary {
+                    with_rep: v.get("rep").as_bool().unwrap_or(false),
+                    with_sumrange: v.get("sumrange").as_bool().unwrap_or(false),
+                    pad_elems: v.get("pad").as_u64().unwrap_or(0) as usize,
+                },
+            );
+        }
+    }
+    let counters = j
+        .get("counters")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|c| c.as_str().map(String::from))
+        .collect();
+    Ok(Experiment {
+        name,
+        library,
+        machine,
+        nthreads,
+        nreps,
+        discard_first,
+        range,
+        sumrange,
+        omp,
+        calls,
+        datagen,
+        vary,
+        counters,
+    })
+}
+
+fn range_from_json(j: &Json) -> Result<Option<RangeDef>> {
+    if j.is_null() {
+        return Ok(None);
+    }
+    let sym = j.get("sym").as_str().ok_or_else(|| anyhow!("range needs 'sym'"))?;
+    let values: Vec<i64> = j
+        .get("values")
+        .as_arr()
+        .ok_or_else(|| anyhow!("range needs 'values'"))?
+        .iter()
+        .filter_map(Json::as_i64)
+        .collect();
+    Ok(Some(RangeDef::new(sym, values)))
+}
+
+fn call_from_json(j: &Json) -> Result<Call> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("call must be an array"))?;
+    let kernel = arr
+        .first()
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("call needs a kernel name"))?;
+    let sig = crate::kernels::lookup(kernel).ok_or_else(|| anyhow!("unknown kernel {kernel}"))?;
+    if arr.len() != sig.args.len() + 1 {
+        bail!("{kernel}: expected {} args, got {}", sig.args.len(), arr.len() - 1);
+    }
+    let mut args = Vec::new();
+    for (v, (name, role)) in arr[1..].iter().zip(sig.args) {
+        let arg = match role {
+            ArgRole::Flag(_) => CallArg::Flag(
+                v.as_str()
+                    .and_then(|s| s.chars().next())
+                    .ok_or_else(|| anyhow!("{kernel}: flag '{name}'"))?,
+            ),
+            ArgRole::Scalar => match v {
+                Json::Num(x) => CallArg::Scalar(*x),
+                Json::Str(s) => CallArg::Expr(Expr::parse(s).map_err(|e| anyhow!("{e}"))?),
+                _ => bail!("{kernel}: scalar '{name}'"),
+            },
+            ArgRole::Dim | ArgRole::Ld | ArgRole::Inc => match v {
+                Json::Num(x) => CallArg::Expr(Expr::Const(*x as i64)),
+                Json::Str(s) => CallArg::Expr(Expr::parse(s).map_err(|e| anyhow!("{e}"))?),
+                _ => bail!("{kernel}: dim '{name}'"),
+            },
+            ArgRole::Data(_) => {
+                let s = v.as_str().ok_or_else(|| anyhow!("{kernel}: data '{name}'"))?;
+                CallArg::Data(s.strip_prefix('$').unwrap_or(s).to_string())
+            }
+        };
+        args.push(arg);
+    }
+    Call::new(kernel, args)
+}
+
+// ------------------------------------------------------------- report
+
+pub fn report_to_json(r: &Report) -> Json {
+    let mut j = Json::obj();
+    j.set("experiment", experiment_to_json(&r.experiment));
+    j.set("machine", r.machine.name);
+    let mut pts = Vec::new();
+    for p in &r.points {
+        let mut pj = Json::obj();
+        pj.set("range_value", p.range_value)
+            .set("nthreads", p.nthreads)
+            .set("sum_iters", p.sum_iters)
+            .set("calls_per_iter", p.calls_per_iter);
+        let recs: Vec<Json> = p
+            .records
+            .iter()
+            .map(|rec| {
+                let mut o = Json::obj();
+                o.set("kernel", rec.kernel.as_str())
+                    .set("seconds", rec.seconds)
+                    .set("cycles", rec.cycles)
+                    .set("flops", rec.flops)
+                    .set(
+                        "counters",
+                        Json::Arr(rec.counters.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    );
+                if let Some(g) = rec.omp_group {
+                    o.set("omp_group", g);
+                }
+                o
+            })
+            .collect();
+        pj.set("records", Json::Arr(recs));
+        pts.push(pj);
+    }
+    j.set("points", Json::Arr(pts));
+    j
+}
+
+pub fn report_from_json(j: &Json) -> Result<Report> {
+    let experiment = experiment_from_json(j.get("experiment"))?;
+    let machine_name = j.get("machine").as_str().unwrap_or("localhost");
+    // accept both registry names and model display names
+    let machine = MachineModel::by_name(&experiment.machine)
+        .or_else(|| MachineModel::by_name(machine_name))
+        .unwrap_or_else(MachineModel::localhost);
+    let mut points = Vec::new();
+    for pj in j.get("points").as_arr().unwrap_or(&[]) {
+        let records = pj
+            .get("records")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|o| Record {
+                kernel: o.get("kernel").as_str().unwrap_or("?").to_string(),
+                seconds: o.get("seconds").as_f64().unwrap_or(0.0),
+                cycles: o.get("cycles").as_f64().unwrap_or(0.0),
+                flops: o.get("flops").as_f64().unwrap_or(0.0),
+                counters: o
+                    .get("counters")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|c| c.as_f64().map(|v| v as u64))
+                    .collect(),
+                omp_group: o.get("omp_group").as_u64().map(|v| v as usize),
+            })
+            .collect();
+        points.push(PointResult {
+            range_value: pj.get("range_value").as_i64().unwrap_or(0),
+            nthreads: pj.get("nthreads").as_u64().unwrap_or(1) as usize,
+            sum_iters: pj.get("sum_iters").as_u64().unwrap_or(1) as usize,
+            calls_per_iter: pj.get("calls_per_iter").as_u64().unwrap_or(1) as usize,
+            records,
+        });
+    }
+    Report::assemble(experiment, machine, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::tests_support::dgemm_experiment;
+    use crate::coordinator::submit::run_local;
+
+    #[test]
+    fn experiment_roundtrip() {
+        let mut e = dgemm_experiment(128);
+        e.nreps = 5;
+        e.discard_first = true;
+        e.range = Some(RangeDef::span("n", 100, 50, 200));
+        e.sumrange = Some(RangeDef::new("i", vec![0, 1, 2]));
+        e.omp = true;
+        e.counters = vec!["PAPI_L1_TCM".into()];
+        e.vary.insert("C".into(), Vary { with_rep: true, with_sumrange: false, pad_elems: 64 });
+        e.datagen.insert("A".into(), DataGen::Spd(Expr::parse("n").unwrap()));
+        let j = experiment_to_json(&e);
+        let e2 = experiment_from_json(&j).unwrap();
+        assert_eq!(e2.name, e.name);
+        assert_eq!(e2.nreps, 5);
+        assert!(e2.discard_first);
+        assert!(e2.omp);
+        assert_eq!(e2.range, e.range);
+        assert_eq!(e2.sumrange, e.sumrange);
+        assert_eq!(e2.counters, e.counters);
+        assert_eq!(e2.vary["C"].with_rep, true);
+        assert_eq!(e2.vary["C"].pad_elems, 64);
+        assert_eq!(e2.datagen["A"], e.datagen["A"]);
+        // and round again: stable
+        let j2 = experiment_to_json(&e2);
+        assert_eq!(j.to_string_compact(), j2.to_string_compact());
+    }
+
+    #[test]
+    fn symbolic_args_survive() {
+        let mut e = dgemm_experiment(0);
+        e.range = Some(RangeDef::span("n", 10, 10, 30));
+        // replace dims with symbolic n
+        let j = Json::parse(
+            r#"{"name":"x","calls":[["dgemm","N","N","n","n","n",1,"$A","n","$B","n",0,"$C","n"]],
+               "range":{"sym":"n","values":[10,20]},"nreps":2}"#,
+        )
+        .unwrap();
+        let e2 = experiment_from_json(&j).unwrap();
+        let pts = e2.unroll().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts[1].script.contains("dgemm N N 20 20 20"));
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let mut e = dgemm_experiment(40);
+        e.nreps = 2;
+        let r = run_local(&e).unwrap();
+        let j = report_to_json(&r);
+        let r2 = report_from_json(&j).unwrap();
+        assert_eq!(r2.points.len(), r.points.len());
+        assert_eq!(r2.points[0].records.len(), r.points[0].records.len());
+        let s1 = r.series(crate::coordinator::report::Metric::TimeS, crate::coordinator::stats::Stat::Avg);
+        let s2 = r2.series(crate::coordinator::report::Metric::TimeS, crate::coordinator::stats::Stat::Avg);
+        assert!((s1[0].1 - s2[0].1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_call_rejected() {
+        let j = Json::parse(r#"{"calls":[["dgemm","N","N"]]}"#).unwrap();
+        assert!(experiment_from_json(&j).is_err());
+        let j = Json::parse(r#"{"calls":[["zgemm"]]}"#).unwrap();
+        assert!(experiment_from_json(&j).is_err());
+    }
+}

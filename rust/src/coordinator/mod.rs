@@ -1,0 +1,20 @@
+//! The coordinator — the paper's middle layer (the `elaps` Python
+//! package, §3.2), in Rust: the [`Experiment`] abstraction with
+//! repetitions, operand varying and parameter-/sum-/OpenMP-ranges, its
+//! execution on [`crate::sampler::Sampler`]s (locally or through the
+//! batch spooler), and [`Report`]s with metrics, statistics and plots.
+
+pub mod symbolic;
+pub mod experiment;
+pub mod stats;
+pub mod report;
+pub mod plot;
+pub mod io;
+pub mod submit;
+
+pub use experiment::{Call, CallArg, DataGen, Experiment, RangeDef, Vary};
+pub use plot::Figure;
+pub use report::{Metric, PointResult, Report};
+pub use stats::Stat;
+pub use submit::{run_local, Spooler};
+pub use symbolic::Expr;

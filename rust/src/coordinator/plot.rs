@@ -1,0 +1,322 @@
+//! Plotting (§3.2.4): line and bar charts from report series, rendered
+//! as terminal ASCII and as standalone SVG files — the substitution for
+//! the paper's matplotlib module and Viewer GUI (DESIGN.md §Subst 6).
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// A figure: several series plus labels.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub title: String,
+    pub xlabel: String,
+    pub ylabel: String,
+    pub series: Vec<Series>,
+    /// Render bars (per-x grouped) instead of lines.
+    pub bars: bool,
+}
+
+impl Figure {
+    pub fn new(title: &str, xlabel: &str, ylabel: &str) -> Figure {
+        Figure {
+            title: title.into(),
+            xlabel: xlabel.into(),
+            ylabel: ylabel.into(),
+            series: vec![],
+            bars: false,
+        }
+    }
+
+    pub fn add_series(&mut self, label: &str, points: Vec<(f64, f64)>) -> &mut Self {
+        self.series.push(Series { label: label.into(), points });
+        self
+    }
+
+    pub fn add_iseries(&mut self, label: &str, points: &[(i64, f64)]) -> &mut Self {
+        self.add_series(label, points.iter().map(|&(x, y)| (x as f64, y)).collect())
+    }
+
+    fn bounds(&self) -> (f64, f64, f64, f64) {
+        let (mut x0, mut x1, mut y0, mut y1) =
+            (f64::INFINITY, f64::NEG_INFINITY, 0.0f64, f64::NEG_INFINITY);
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                if x.is_finite() {
+                    x0 = x0.min(x);
+                    x1 = x1.max(x);
+                }
+                if y.is_finite() {
+                    y0 = y0.min(y);
+                    y1 = y1.max(y);
+                }
+            }
+        }
+        if !x0.is_finite() {
+            (x0, x1) = (0.0, 1.0);
+        }
+        if x1 <= x0 {
+            x1 = x0 + 1.0;
+        }
+        if !y1.is_finite() || y1 <= y0 {
+            y1 = y0 + 1.0;
+        }
+        (x0, x1, y0, y1)
+    }
+
+    /// Render an ASCII chart (width×height characters of plot area).
+    pub fn to_ascii(&self, width: usize, height: usize) -> String {
+        const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+        let (x0, x1, y0, y1) = self.bounds();
+        let mut grid = vec![vec![' '; width]; height];
+        for (si, s) in self.series.iter().enumerate() {
+            let mark = MARKS[si % MARKS.len()];
+            // interpolate lines between consecutive points
+            let proj = |x: f64, y: f64| -> (usize, usize) {
+                let cx = ((x - x0) / (x1 - x0) * (width - 1) as f64).round() as usize;
+                let cy = ((y - y0) / (y1 - y0) * (height - 1) as f64).round() as usize;
+                (cx.min(width - 1), height - 1 - cy.min(height - 1))
+            };
+            if self.bars {
+                for &(x, y) in &s.points {
+                    if !(x.is_finite() && y.is_finite()) {
+                        continue;
+                    }
+                    let (cx, cy) = proj(x, y);
+                    let cx = (cx + si).min(width - 1); // offset grouped bars
+                    for row in grid.iter_mut().skip(cy) {
+                        row[cx] = mark;
+                    }
+                }
+            } else {
+                let mut prev: Option<(usize, usize)> = None;
+                for &(x, y) in &s.points {
+                    if !(x.is_finite() && y.is_finite()) {
+                        prev = None;
+                        continue;
+                    }
+                    let (cx, cy) = proj(x, y);
+                    if let Some((px, py)) = prev {
+                        // simple line interpolation
+                        let steps = (cx.abs_diff(px)).max(cy.abs_diff(py)).max(1);
+                        for t in 0..=steps {
+                            let ix = px as f64 + (cx as f64 - px as f64) * t as f64 / steps as f64;
+                            let iy = py as f64 + (cy as f64 - py as f64) * t as f64 / steps as f64;
+                            grid[iy.round() as usize][ix.round() as usize] = mark;
+                        }
+                    } else {
+                        grid[cy][cx] = mark;
+                    }
+                    prev = Some((cx, cy));
+                }
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{} ({})\n", self.title, self.ylabel));
+        for (i, row) in grid.iter().enumerate() {
+            let yv = y1 - (y1 - y0) * i as f64 / (height - 1) as f64;
+            out.push_str(&format!("{yv:>10.3} |"));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+        out.push_str(&format!(
+            "{:>10}  {:<width$}\n",
+            "",
+            format!("{} ∈ [{x0:.0}, {x1:.0}]", self.xlabel),
+            width = width
+        ));
+        for (si, s) in self.series.iter().enumerate() {
+            out.push_str(&format!(
+                "{:>10}  {} {}\n",
+                "",
+                ['*', 'o', '+', 'x', '#', '@', '%', '&'][si % 8],
+                s.label
+            ));
+        }
+        out
+    }
+
+    /// Render as a standalone SVG document.
+    pub fn to_svg(&self, width: usize, height: usize) -> String {
+        const COLORS: &[&str] =
+            &["#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b"];
+        let (x0, x1, y0, y1) = self.bounds();
+        let (ml, mr, mt, mb) = (70.0, 20.0, 35.0, 50.0);
+        let (w, h) = (width as f64, height as f64);
+        let (pw, ph) = (w - ml - mr, h - mt - mb);
+        let px = |x: f64| ml + (x - x0) / (x1 - x0) * pw;
+        let py = |y: f64| mt + ph - (y - y0) / (y1 - y0) * ph;
+        let mut s = format!(
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{width}" height="{height}" viewBox="0 0 {width} {height}">"#
+        );
+        s.push_str(&format!(
+            r#"<rect width="{width}" height="{height}" fill="white"/><text x="{}" y="20" text-anchor="middle" font-size="14" font-family="sans-serif">{}</text>"#,
+            w / 2.0,
+            xml_escape(&self.title)
+        ));
+        // axes
+        s.push_str(&format!(
+            r#"<line x1="{ml}" y1="{}" x2="{}" y2="{}" stroke="black"/><line x1="{ml}" y1="{mt}" x2="{ml}" y2="{}" stroke="black"/>"#,
+            mt + ph,
+            ml + pw,
+            mt + ph,
+            mt + ph
+        ));
+        // y ticks
+        for t in 0..=4 {
+            let yv = y0 + (y1 - y0) * t as f64 / 4.0;
+            let yy = py(yv);
+            s.push_str(&format!(
+                r#"<line x1="{}" y1="{yy}" x2="{ml}" y2="{yy}" stroke="black"/><text x="{}" y="{}" text-anchor="end" font-size="10" font-family="sans-serif">{}</text>"#,
+                ml - 4.0,
+                ml - 6.0,
+                yy + 3.0,
+                format_tick(yv)
+            ));
+        }
+        // x ticks
+        for t in 0..=4 {
+            let xv = x0 + (x1 - x0) * t as f64 / 4.0;
+            let xx = px(xv);
+            s.push_str(&format!(
+                r#"<line x1="{xx}" y1="{}" x2="{xx}" y2="{}" stroke="black"/><text x="{xx}" y="{}" text-anchor="middle" font-size="10" font-family="sans-serif">{}</text>"#,
+                mt + ph,
+                mt + ph + 4.0,
+                mt + ph + 16.0,
+                format_tick(xv)
+            ));
+        }
+        // axis labels
+        s.push_str(&format!(
+            r#"<text x="{}" y="{}" text-anchor="middle" font-size="11" font-family="sans-serif">{}</text>"#,
+            ml + pw / 2.0,
+            h - 12.0,
+            xml_escape(&self.xlabel)
+        ));
+        s.push_str(&format!(
+            r#"<text x="14" y="{}" text-anchor="middle" font-size="11" font-family="sans-serif" transform="rotate(-90 14 {})">{}</text>"#,
+            mt + ph / 2.0,
+            mt + ph / 2.0,
+            xml_escape(&self.ylabel)
+        ));
+        let nseries = self.series.len().max(1) as f64;
+        for (si, ser) in self.series.iter().enumerate() {
+            let color = COLORS[si % COLORS.len()];
+            if self.bars {
+                let bw = (pw / (ser.points.len().max(1) as f64) / (nseries + 1.0)).max(2.0);
+                for &(x, y) in &ser.points {
+                    let xx = px(x) + si as f64 * bw;
+                    let yy = py(y);
+                    s.push_str(&format!(
+                        r#"<rect x="{}" y="{yy}" width="{bw}" height="{}" fill="{color}"/>"#,
+                        xx - bw * nseries / 2.0,
+                        (mt + ph - yy).max(0.0)
+                    ));
+                }
+            } else {
+                let pts: Vec<String> = ser
+                    .points
+                    .iter()
+                    .filter(|(x, y)| x.is_finite() && y.is_finite())
+                    .map(|&(x, y)| format!("{:.1},{:.1}", px(x), py(y)))
+                    .collect();
+                s.push_str(&format!(
+                    r#"<polyline points="{}" fill="none" stroke="{color}" stroke-width="1.5"/>"#,
+                    pts.join(" ")
+                ));
+                for p in &pts {
+                    let (cx, cy) = p.split_once(',').unwrap();
+                    s.push_str(&format!(r#"<circle cx="{cx}" cy="{cy}" r="2.5" fill="{color}"/>"#));
+                }
+            }
+            // legend
+            let ly = mt + 14.0 * si as f64;
+            s.push_str(&format!(
+                r#"<rect x="{}" y="{}" width="10" height="10" fill="{color}"/><text x="{}" y="{}" font-size="10" font-family="sans-serif">{}</text>"#,
+                ml + pw - 120.0,
+                ly,
+                ml + pw - 106.0,
+                ly + 9.0,
+                xml_escape(&ser.label)
+            ));
+        }
+        s.push_str("</svg>");
+        s
+    }
+}
+
+fn format_tick(v: f64) -> String {
+    if v.abs() >= 1e6 || (v.abs() < 1e-2 && v != 0.0) {
+        format!("{v:.1e}")
+    } else if v.fract() == 0.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Figure {
+        let mut f = Figure::new("perf", "n", "Gflops/s");
+        f.add_series("rustblocked", vec![(100.0, 1.0), (200.0, 2.0), (300.0, 2.5)]);
+        f.add_series("rustref", vec![(100.0, 0.5), (200.0, 0.6), (300.0, 0.6)]);
+        f
+    }
+
+    #[test]
+    fn ascii_renders_marks_and_legend() {
+        let a = fig().to_ascii(60, 16);
+        assert!(a.contains('*'));
+        assert!(a.contains('o'));
+        assert!(a.contains("rustblocked"));
+        assert!(a.lines().count() > 16);
+    }
+
+    #[test]
+    fn svg_is_wellformed_ish() {
+        let s = fig().to_svg(640, 400);
+        assert!(s.starts_with("<svg"));
+        assert!(s.ends_with("</svg>"));
+        assert!(s.contains("polyline"));
+        assert_eq!(s.matches("<svg").count(), 1);
+    }
+
+    #[test]
+    fn bars_mode() {
+        let mut f = fig();
+        f.bars = true;
+        let s = f.to_svg(640, 400);
+        assert!(s.contains("<rect"));
+        let a = f.to_ascii(40, 10);
+        assert!(a.contains('*'));
+    }
+
+    #[test]
+    fn degenerate_single_point() {
+        let mut f = Figure::new("t", "x", "y");
+        f.add_series("s", vec![(5.0, 3.0)]);
+        let a = f.to_ascii(20, 5);
+        assert!(a.contains('*'));
+        let _ = f.to_svg(200, 100);
+    }
+
+    #[test]
+    fn escape_in_labels() {
+        let mut f = Figure::new("a<b", "x&y", "z");
+        f.add_series("s<&>", vec![(0.0, 1.0)]);
+        let s = f.to_svg(100, 100);
+        assert!(s.contains("a&lt;b"));
+        assert!(!s.contains("s<&>"));
+    }
+}

@@ -1,0 +1,347 @@
+//! Reports (§3.2.3) and metrics: structured access to raw measurements
+//! — the hierarchy "parameter-range value → repetition → sum/OpenMP-
+//! range value → kernel" — plus the reduced view that accumulates the
+//! sum-/OpenMP-range and the kernels, converted to metrics and reduced
+//! by statistics.
+
+use super::experiment::Experiment;
+use super::stats::{maybe_discard_first, Stat};
+use crate::perfmodel::{scaling, MachineModel};
+use crate::sampler::Record;
+use anyhow::{bail, Result};
+
+/// Performance metric (§3.2.3: "from execution time in seconds to
+/// Gflops/s and efficiency").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Metric {
+    Cycles,
+    TimeS,
+    TimeMs,
+    Gflops,
+    FlopsPerCycle,
+    /// Attained fraction of machine peak (in %), using the thread
+    /// count of the measurement point.
+    Efficiency,
+    /// Simulated PAPI counter by index into `experiment.counters`.
+    Counter(usize),
+}
+
+impl Metric {
+    pub fn name(self) -> String {
+        match self {
+            Metric::Cycles => "cycles".into(),
+            Metric::TimeS => "time [s]".into(),
+            Metric::TimeMs => "time [ms]".into(),
+            Metric::Gflops => "Gflops/s".into(),
+            Metric::FlopsPerCycle => "flops/cycle".into(),
+            Metric::Efficiency => "efficiency [%]".into(),
+            Metric::Counter(i) => format!("counter[{i}]"),
+        }
+    }
+}
+
+/// Results of one parameter-range point.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    pub range_value: i64,
+    pub nthreads: usize,
+    pub sum_iters: usize,
+    pub calls_per_iter: usize,
+    /// Flat records: index = (rep × sum_iters + si) × calls_per_iter + c.
+    pub records: Vec<Record>,
+}
+
+impl PointResult {
+    pub fn nreps(&self) -> usize {
+        self.records.len() / (self.sum_iters * self.calls_per_iter).max(1)
+    }
+
+    /// Raw record access (range → rep → sum iter → kernel).
+    pub fn record(&self, rep: usize, si: usize, call: usize) -> &Record {
+        &self.records[(rep * self.sum_iters + si) * self.calls_per_iter + call]
+    }
+}
+
+/// The report: experiment + all measurement points.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub experiment: Experiment,
+    pub machine: MachineModel,
+    pub points: Vec<PointResult>,
+}
+
+impl Report {
+    /// Bundle records into a report, validating counts.
+    pub fn assemble(
+        experiment: Experiment,
+        machine: MachineModel,
+        points: Vec<PointResult>,
+    ) -> Result<Report> {
+        for p in &points {
+            let per_rep = p.sum_iters * p.calls_per_iter;
+            if per_rep == 0 || p.records.len() % per_rep != 0 {
+                bail!(
+                    "point {}: {} records not divisible by {} per rep",
+                    p.range_value,
+                    p.records.len(),
+                    per_rep
+                );
+            }
+        }
+        Ok(Report { experiment, machine, points })
+    }
+
+    /// Reduced wall time of one repetition at one point, applying the
+    /// thread-scaling model (DESIGN.md §Substitutions 4):
+    /// * plain/sum-range: sum over all calls of the library-threaded
+    ///   time,
+    /// * OpenMP-range: the parallel-tasks model over the repetition's
+    ///   task list.
+    pub fn rep_seconds(&self, point: &PointResult, rep: usize) -> f64 {
+        let per_rep = point.sum_iters * point.calls_per_iter;
+        let recs = &point.records[rep * per_rep..(rep + 1) * per_rep];
+        let lib = crate::libraries::by_name(&self.experiment.library);
+        let pf = |kernel: &str| -> f64 {
+            lib.as_ref().map(|l| l.parallel_fraction(kernel)).unwrap_or(0.9)
+        };
+        if self.experiment.omp {
+            // tasks: every record in the repetition
+            let total_serial: f64 = recs.iter().map(|r| r.seconds).sum();
+            let ntasks = recs.len();
+            let mean_task = total_serial / ntasks.max(1) as f64;
+            let mean_pf =
+                recs.iter().map(|r| pf(&r.kernel)).sum::<f64>() / ntasks.max(1) as f64;
+            scaling::omp_tasks_time(
+                mean_task,
+                ntasks,
+                self.machine.cores, // OpenMP uses all cores
+                point.nthreads,
+                mean_pf,
+                &self.machine,
+            )
+        } else if point.nthreads <= 1 {
+            recs.iter().map(|r| r.seconds).sum()
+        } else {
+            recs.iter()
+                .map(|r| {
+                    scaling::library_threads_time(
+                        r.seconds,
+                        pf(&r.kernel),
+                        point.nthreads,
+                        &self.machine,
+                    )
+                })
+                .sum()
+        }
+    }
+
+    /// Total flops of one repetition.
+    pub fn rep_flops(&self, point: &PointResult, rep: usize) -> f64 {
+        let per_rep = point.sum_iters * point.calls_per_iter;
+        point.records[rep * per_rep..(rep + 1) * per_rep]
+            .iter()
+            .map(|r| r.flops)
+            .sum()
+    }
+
+    /// Per-repetition values of a metric at one point.
+    pub fn rep_values(&self, point: &PointResult, metric: Metric) -> Vec<f64> {
+        (0..point.nreps())
+            .map(|rep| {
+                let secs = self.rep_seconds(point, rep);
+                let flops = self.rep_flops(point, rep);
+                match metric {
+                    Metric::Cycles => self.machine.cycles(secs),
+                    Metric::TimeS => secs,
+                    Metric::TimeMs => secs * 1e3,
+                    Metric::Gflops => flops / secs / 1e9,
+                    Metric::FlopsPerCycle => flops / self.machine.cycles(secs),
+                    Metric::Efficiency => {
+                        100.0 * flops / secs / self.machine.peak_flops(point.nthreads)
+                    }
+                    Metric::Counter(i) => {
+                        let per_rep = point.sum_iters * point.calls_per_iter;
+                        point.records[rep * per_rep..(rep + 1) * per_rep]
+                            .iter()
+                            .map(|r| r.counters.get(i).copied().unwrap_or(0) as f64)
+                            .sum()
+                    }
+                }
+            })
+            .collect()
+    }
+
+    /// A metric/statistic series over the parameter range:
+    /// (range value, stat over repetitions).
+    pub fn series(&self, metric: Metric, stat: Stat) -> Vec<(i64, f64)> {
+        self.points
+            .iter()
+            .map(|p| {
+                let vals = self.rep_values(p, metric);
+                let vals = maybe_discard_first(&vals, self.experiment.discard_first);
+                (p.range_value, stat.apply(vals))
+            })
+            .collect()
+    }
+
+    /// Per-call time breakdown (§2.3 / Fig. 3): for each call of the
+    /// experiment, the stat over repetitions of its summed (over the
+    /// sum-range) time, per point.
+    pub fn call_breakdown(&self, stat: Stat) -> Vec<Vec<(String, f64)>> {
+        self.points
+            .iter()
+            .map(|p| {
+                (0..p.calls_per_iter)
+                    .map(|c| {
+                        let label = format!("{}#{c}", self.experiment.calls[c].kernel);
+                        let vals: Vec<f64> = (0..p.nreps())
+                            .map(|rep| {
+                                (0..p.sum_iters)
+                                    .map(|si| p.record(rep, si, c).seconds)
+                                    .sum()
+                            })
+                            .collect();
+                        let vals =
+                            maybe_discard_first(&vals, self.experiment.discard_first);
+                        (label, stat.apply(vals))
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// The paper's §2 metrics table for single-point experiments.
+    pub fn metrics_table(&self) -> Vec<(String, f64)> {
+        let stat = Stat::Median;
+        [
+            Metric::Cycles,
+            Metric::TimeMs,
+            Metric::Gflops,
+            Metric::FlopsPerCycle,
+            Metric::Efficiency,
+        ]
+        .iter()
+        .map(|&m| (m.name(), self.series(m, stat)[0].1))
+        .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::tests_support::dgemm_experiment;
+
+    fn fake_record(kernel: &str, seconds: f64, flops: f64) -> Record {
+        Record {
+            kernel: kernel.into(),
+            seconds,
+            cycles: seconds * 2.6e9,
+            counters: vec![],
+            omp_group: None,
+            flops,
+        }
+    }
+
+    fn fake_report(nreps: usize, omp: bool) -> Report {
+        let mut exp = dgemm_experiment(100);
+        exp.nreps = nreps;
+        exp.omp = omp;
+        let machine = MachineModel::sandybridge();
+        let records: Vec<Record> =
+            (0..nreps).map(|r| fake_record("dgemm", 0.01 * (1 + r % 2) as f64, 2e6)).collect();
+        Report::assemble(
+            exp,
+            machine,
+            vec![PointResult {
+                range_value: 0,
+                nthreads: 1,
+                sum_iters: 1,
+                calls_per_iter: 1,
+                records,
+            }],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn series_and_stats() {
+        let rep = fake_report(4, false);
+        let s = rep.series(Metric::TimeMs, Stat::Min);
+        assert_eq!(s.len(), 1);
+        assert!((s[0].1 - 10.0).abs() < 1e-9);
+        let g = rep.series(Metric::Gflops, Stat::Max);
+        assert!((g[0].1 - 2e6 / 0.01 / 1e9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_against_peak() {
+        let rep = fake_report(1, false);
+        let e = rep.series(Metric::Efficiency, Stat::Avg)[0].1;
+        // 2e6 flops / 0.01 s = 0.2 Gflops/s on a 20.8 Gflops peak
+        assert!((e - 100.0 * 0.2 / 20.8).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn discard_first_respected() {
+        let mut rep = fake_report(3, false);
+        // values: 10ms, 20ms, 10ms
+        rep.experiment.discard_first = true;
+        let avg = rep.series(Metric::TimeMs, Stat::Avg)[0].1;
+        assert!((avg - 15.0).abs() < 1e-9);
+        rep.experiment.discard_first = false;
+        let avg2 = rep.series(Metric::TimeMs, Stat::Avg)[0].1;
+        assert!((avg2 - 40.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn omp_reduction_faster_than_sum() {
+        // 4 identical tasks on 8 cores: parallel wall ≪ serial sum
+        let mut exp = dgemm_experiment(100);
+        exp.omp = true;
+        let machine = MachineModel::sandybridge();
+        let records: Vec<Record> = (0..4).map(|_| fake_record("dgemm", 0.01, 2e6)).collect();
+        let rep = Report::assemble(
+            exp,
+            machine,
+            vec![PointResult {
+                range_value: 0,
+                nthreads: 1,
+                sum_iters: 4,
+                calls_per_iter: 1,
+                records,
+            }],
+        )
+        .unwrap();
+        let wall = rep.rep_seconds(&rep.points[0], 0);
+        assert!(wall < 0.02, "parallel wall {wall} should be < serial 0.04");
+    }
+
+    #[test]
+    fn record_count_validated() {
+        let exp = dgemm_experiment(100);
+        let machine = MachineModel::sandybridge();
+        let bad = Report::assemble(
+            exp,
+            machine,
+            vec![PointResult {
+                range_value: 0,
+                nthreads: 1,
+                sum_iters: 2,
+                calls_per_iter: 1,
+                records: vec![fake_record("dgemm", 0.01, 1.0)],
+            }],
+        );
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn metrics_table_has_paper_rows() {
+        let rep = fake_report(2, false);
+        let table = rep.metrics_table();
+        let names: Vec<&str> = table.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(
+            names,
+            vec!["cycles", "time [ms]", "Gflops/s", "flops/cycle", "efficiency [%]"]
+        );
+    }
+}

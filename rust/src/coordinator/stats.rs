@@ -1,0 +1,122 @@
+//! Statistics over repetitions (§2.1, §3.2.3): minimum, maximum,
+//! average, median, standard deviation — with the paper's
+//! "discard the first repetition" option.
+
+/// A statistic reducing the per-repetition values of a metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stat {
+    Min,
+    Max,
+    Avg,
+    Median,
+    Std,
+}
+
+pub const ALL_STATS: &[Stat] = &[Stat::Min, Stat::Max, Stat::Avg, Stat::Median, Stat::Std];
+
+impl Stat {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stat::Min => "min",
+            Stat::Max => "max",
+            Stat::Avg => "avg",
+            Stat::Median => "med",
+            Stat::Std => "std",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Stat> {
+        Some(match name {
+            "min" => Stat::Min,
+            "max" => Stat::Max,
+            "avg" | "mean" => Stat::Avg,
+            "med" | "median" => Stat::Median,
+            "std" => Stat::Std,
+            _ => return None,
+        })
+    }
+
+    /// Apply to a sample; returns NaN for an empty sample.
+    pub fn apply(self, values: &[f64]) -> f64 {
+        if values.is_empty() {
+            return f64::NAN;
+        }
+        match self {
+            Stat::Min => values.iter().copied().fold(f64::INFINITY, f64::min),
+            Stat::Max => values.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            Stat::Avg => values.iter().sum::<f64>() / values.len() as f64,
+            Stat::Median => {
+                let mut v = values.to_vec();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let n = v.len();
+                if n % 2 == 1 {
+                    v[n / 2]
+                } else {
+                    0.5 * (v[n / 2 - 1] + v[n / 2])
+                }
+            }
+            Stat::Std => {
+                let n = values.len() as f64;
+                let mean = values.iter().sum::<f64>() / n;
+                (values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n).sqrt()
+            }
+        }
+    }
+}
+
+/// Drop the first repetition (§2.1: "the first one almost inevitably
+/// represents an outlier") unless that would empty the sample.
+pub fn maybe_discard_first(values: &[f64], discard: bool) -> &[f64] {
+    if discard && values.len() > 1 {
+        &values[1..]
+    } else {
+        values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const V: &[f64] = &[10.0, 2.0, 4.0, 4.0];
+
+    #[test]
+    fn basic_stats() {
+        assert_eq!(Stat::Min.apply(V), 2.0);
+        assert_eq!(Stat::Max.apply(V), 10.0);
+        assert_eq!(Stat::Avg.apply(V), 5.0);
+        assert_eq!(Stat::Median.apply(V), 4.0);
+        let std = Stat::Std.apply(V);
+        assert!((std - 3.0).abs() < 1e-12, "{std}"); // var = (25+9+1+1)/4 = 9
+    }
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(Stat::Median.apply(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        assert!(Stat::Avg.apply(&[]).is_nan());
+    }
+
+    #[test]
+    fn discard_first_changes_stats() {
+        // the paper's Fig. 1 point: the first-rep outlier dominates
+        // min/avg/std
+        let with = Stat::Avg.apply(maybe_discard_first(V, false));
+        let without = Stat::Avg.apply(maybe_discard_first(V, true));
+        assert_eq!(with, 5.0);
+        assert!((without - 10.0 / 3.0).abs() < 1e-12);
+        // never empties the sample
+        assert_eq!(maybe_discard_first(&[1.0], true), &[1.0]);
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for &s in ALL_STATS {
+            assert_eq!(Stat::by_name(s.name()), Some(s));
+        }
+        assert_eq!(Stat::by_name("p99"), None);
+    }
+}

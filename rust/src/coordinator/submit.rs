@@ -1,0 +1,222 @@
+//! Experiment execution (§3.2.1 "submit"): run locally, or through the
+//! batch-job spooler that substitutes the paper's LoadLeveler/LSF
+//! workflows (DESIGN.md §Substitutions 5).
+
+use super::experiment::Experiment;
+use super::io;
+use super::report::{PointResult, Report};
+use crate::perfmodel::MachineModel;
+use crate::sampler::Sampler;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Run an experiment on in-process samplers (the "local" backend).
+///
+/// One fresh sampler per parameter-range point, exactly as the paper
+/// starts the sampler separately per thread count / range value.
+pub fn run_local(exp: &Experiment) -> Result<Report> {
+    let machine = MachineModel::by_name(&exp.machine)
+        .ok_or_else(|| anyhow!("unknown machine '{}'", exp.machine))?;
+    let points = exp.unroll()?;
+    let mut results = Vec::with_capacity(points.len());
+    for p in &points {
+        let library = crate::libraries::by_name(&exp.library)
+            .ok_or_else(|| anyhow!("unknown library '{}'", exp.library))?;
+        let mut sampler = Sampler::new(library, machine.clone());
+        let records = sampler
+            .run_script(&p.script)
+            .with_context(|| format!("point {} of '{}'", p.range_value, exp.name))?;
+        let expected = p.expected_records(exp.nreps);
+        if records.len() != expected {
+            bail!(
+                "point {}: sampler produced {} records, expected {expected}",
+                p.range_value,
+                records.len()
+            );
+        }
+        results.push(PointResult {
+            range_value: p.range_value,
+            nthreads: p.nthreads,
+            sum_iters: p.sum_iters,
+            calls_per_iter: p.calls_per_iter,
+            records,
+        });
+    }
+    Report::assemble(exp.clone(), machine, results)
+}
+
+/// The batch spooler: `submit` drops a job file into `<spool>/queue`;
+/// a worker (`elaps worker`, or [`serve_one`] in-process) picks it up,
+/// runs it, and writes the report to `<spool>/done`. `wait` polls for
+/// the report — the same submit → poll → fetch workflow the paper uses
+/// with LoadLeveler and LSF.
+pub struct Spooler {
+    pub dir: PathBuf,
+}
+
+impl Spooler {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Spooler> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(dir.join("queue"))?;
+        std::fs::create_dir_all(dir.join("running"))?;
+        std::fs::create_dir_all(dir.join("done"))?;
+        Ok(Spooler { dir })
+    }
+
+    /// Submit an experiment; returns the job id.
+    pub fn submit(&self, exp: &Experiment) -> Result<String> {
+        let job_id = format!(
+            "{}-{:x}",
+            exp.name.replace(['/', ' '], "_"),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        );
+        let path = self.dir.join("queue").join(format!("{job_id}.json"));
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, io::experiment_to_json(exp).to_string_pretty())?;
+        std::fs::rename(&tmp, &path)?; // atomic enqueue
+        Ok(job_id)
+    }
+
+    /// Worker side: take one queued job (if any), run it, write the
+    /// report. Returns the processed job id.
+    pub fn serve_one(&self) -> Result<Option<String>> {
+        let queue = self.dir.join("queue");
+        let mut entries: Vec<_> = std::fs::read_dir(&queue)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+            .collect();
+        entries.sort_by_key(|e| e.file_name());
+        let Some(entry) = entries.into_iter().next() else {
+            return Ok(None);
+        };
+        let job_id = entry
+            .path()
+            .file_stem()
+            .unwrap()
+            .to_string_lossy()
+            .to_string();
+        let running = self.dir.join("running").join(format!("{job_id}.json"));
+        std::fs::rename(entry.path(), &running)?; // claim
+        let text = std::fs::read_to_string(&running)?;
+        let exp = io::experiment_from_json(
+            &crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{e}"))?,
+        )?;
+        let done = self.dir.join("done").join(format!("{job_id}.report.json"));
+        match run_local(&exp) {
+            Ok(report) => {
+                std::fs::write(&done, io::report_to_json(&report).to_string_pretty())?;
+            }
+            Err(e) => {
+                let mut j = crate::util::json::Json::obj();
+                j.set("error", format!("{e:#}"));
+                std::fs::write(&done, j.to_string_pretty())?;
+            }
+        }
+        std::fs::remove_file(&running)?;
+        Ok(Some(job_id))
+    }
+
+    /// Poll for a finished job's report.
+    pub fn fetch(&self, job_id: &str) -> Result<Option<Report>> {
+        let done = self.dir.join("done").join(format!("{job_id}.report.json"));
+        if !done.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&done)?;
+        let j = crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        if !j.get("error").is_null() {
+            bail!("job {job_id} failed: {}", j.get("error").as_str().unwrap_or("?"));
+        }
+        Ok(Some(io::report_from_json(&j)?))
+    }
+
+    /// Submit, serve in-process, and fetch — the blocking convenience
+    /// used by tests and the CLI's `--batch` mode without a separate
+    /// worker process.
+    pub fn run_through_queue(&self, exp: &Experiment) -> Result<Report> {
+        let id = self.submit(exp)?;
+        self.serve_one()?;
+        self.fetch(&id)?
+            .ok_or_else(|| anyhow!("job {id} did not produce a report"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::tests_support::dgemm_experiment;
+    use crate::coordinator::report::Metric;
+    use crate::coordinator::stats::Stat;
+
+    #[test]
+    fn local_run_end_to_end() {
+        let mut exp = dgemm_experiment(60);
+        exp.nreps = 3;
+        let report = run_local(&exp).unwrap();
+        assert_eq!(report.points.len(), 1);
+        assert_eq!(report.points[0].records.len(), 3);
+        let gflops = report.series(Metric::Gflops, Stat::Max)[0].1;
+        assert!(gflops > 0.01, "{gflops}");
+    }
+
+    #[test]
+    fn local_run_with_range() {
+        let mut exp = dgemm_experiment(0);
+        exp.calls = dgemm_experiment(0).calls;
+        // rebuild with a symbolic size
+        let exp = {
+            use crate::coordinator::experiment::{Call, CallArg, Experiment, RangeDef};
+            Experiment {
+                name: "range".into(),
+                nreps: 2,
+                range: Some(RangeDef::new("n", vec![20, 40])),
+                calls: vec![Call::new(
+                    "dgemm",
+                    vec![
+                        CallArg::Flag('N'),
+                        CallArg::Flag('N'),
+                        CallArg::sym("n"),
+                        CallArg::sym("n"),
+                        CallArg::sym("n"),
+                        CallArg::Scalar(1.0),
+                        CallArg::Data("A".into()),
+                        CallArg::sym("n"),
+                        CallArg::Data("B".into()),
+                        CallArg::sym("n"),
+                        CallArg::Scalar(0.0),
+                        CallArg::Data("C".into()),
+                        CallArg::sym("n"),
+                    ],
+                )
+                .unwrap()],
+                ..Default::default()
+            }
+        };
+        let report = run_local(&exp).unwrap();
+        assert_eq!(report.points.len(), 2);
+        assert_eq!(report.points[1].range_value, 40);
+    }
+
+    #[test]
+    fn unknown_library_rejected() {
+        let mut exp = dgemm_experiment(10);
+        exp.library = "essl".into();
+        assert!(run_local(&exp).is_err());
+    }
+
+    #[test]
+    fn spooler_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("elaps_spool_{}", std::process::id()));
+        let spool = Spooler::new(&dir).unwrap();
+        let mut exp = dgemm_experiment(30);
+        exp.nreps = 2;
+        let report = spool.run_through_queue(&exp).unwrap();
+        assert_eq!(report.points[0].records.len(), 2);
+        // queue drained
+        assert_eq!(spool.serve_one().unwrap(), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

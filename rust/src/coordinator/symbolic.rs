@@ -1,0 +1,325 @@
+//! Symbolic integer expressions over range variables.
+//!
+//! Experiment calls may use expressions like `n`, `4*m`, `n*(n+1)/2`
+//! or `i*nb` for dimension arguments and operand sizes; ranges bind the
+//! symbols at unroll time (§3.2.2: "all ranges and repetitions are
+//! completely unrolled, thereby evaluating any symbolic variable").
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A symbolic integer expression.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Expr {
+    Const(i64),
+    Sym(String),
+    Add(Box<Expr>, Box<Expr>),
+    Sub(Box<Expr>, Box<Expr>),
+    Mul(Box<Expr>, Box<Expr>),
+    /// Integer division (floor).
+    Div(Box<Expr>, Box<Expr>),
+    /// Ceiling division.
+    CeilDiv(Box<Expr>, Box<Expr>),
+    /// min / max
+    Min(Box<Expr>, Box<Expr>),
+    Max(Box<Expr>, Box<Expr>),
+}
+
+/// Bindings of symbols to values.
+pub type Bindings = BTreeMap<String, i64>;
+
+impl Expr {
+    pub fn c(v: i64) -> Expr {
+        Expr::Const(v)
+    }
+
+    pub fn sym(s: &str) -> Expr {
+        Expr::Sym(s.to_string())
+    }
+
+    /// Evaluate under bindings; errors on unbound symbols or division
+    /// by zero.
+    pub fn eval(&self, b: &Bindings) -> Result<i64, String> {
+        Ok(match self {
+            Expr::Const(v) => *v,
+            Expr::Sym(s) => {
+                *b.get(s).ok_or_else(|| format!("unbound symbol '{s}'"))?
+            }
+            Expr::Add(l, r) => l.eval(b)? + r.eval(b)?,
+            Expr::Sub(l, r) => l.eval(b)? - r.eval(b)?,
+            Expr::Mul(l, r) => l.eval(b)? * r.eval(b)?,
+            Expr::Div(l, r) => {
+                let d = r.eval(b)?;
+                if d == 0 {
+                    return Err("division by zero".into());
+                }
+                l.eval(b)?.div_euclid(d)
+            }
+            Expr::CeilDiv(l, r) => {
+                let d = r.eval(b)?;
+                if d == 0 {
+                    return Err("division by zero".into());
+                }
+                let n = l.eval(b)?;
+                (n + d - 1).div_euclid(d)
+            }
+            Expr::Min(l, r) => l.eval(b)?.min(r.eval(b)?),
+            Expr::Max(l, r) => l.eval(b)?.max(r.eval(b)?),
+        })
+    }
+
+    /// Evaluate to usize (errors on negative results).
+    pub fn eval_usize(&self, b: &Bindings) -> Result<usize, String> {
+        let v = self.eval(b)?;
+        usize::try_from(v).map_err(|_| format!("expression '{self}' evaluated to {v} < 0"))
+    }
+
+    /// Symbols appearing in the expression.
+    pub fn symbols(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        self.collect_symbols(&mut out);
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    fn collect_symbols(&self, out: &mut Vec<String>) {
+        match self {
+            Expr::Const(_) => {}
+            Expr::Sym(s) => out.push(s.clone()),
+            Expr::Add(l, r)
+            | Expr::Sub(l, r)
+            | Expr::Mul(l, r)
+            | Expr::Div(l, r)
+            | Expr::CeilDiv(l, r)
+            | Expr::Min(l, r)
+            | Expr::Max(l, r) => {
+                l.collect_symbols(out);
+                r.collect_symbols(out);
+            }
+        }
+    }
+
+    /// Parse from text. Grammar: `expr := term (('+'|'-') term)*`,
+    /// `term := atom (('*'|'/') atom)*`, `atom := int | ident |
+    /// '(' expr ')' | ('min'|'max'|'ceildiv') '(' expr ',' expr ')'`.
+    pub fn parse(text: &str) -> Result<Expr, String> {
+        let toks = tokenize(text)?;
+        let mut p = P { toks, pos: 0 };
+        let e = p.expr()?;
+        if p.pos != p.toks.len() {
+            return Err(format!("trailing input at token {}", p.pos));
+        }
+        Ok(e)
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Const(v) => write!(f, "{v}"),
+            Expr::Sym(s) => write!(f, "{s}"),
+            Expr::Add(l, r) => write!(f, "({l} + {r})"),
+            Expr::Sub(l, r) => write!(f, "({l} - {r})"),
+            Expr::Mul(l, r) => write!(f, "({l} * {r})"),
+            Expr::Div(l, r) => write!(f, "({l} / {r})"),
+            Expr::CeilDiv(l, r) => write!(f, "ceildiv({l}, {r})"),
+            Expr::Min(l, r) => write!(f, "min({l}, {r})"),
+            Expr::Max(l, r) => write!(f, "max({l}, {r})"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Int(i64),
+    Ident(String),
+    Op(char),
+}
+
+fn tokenize(s: &str) -> Result<Vec<Tok>, String> {
+    let mut toks = Vec::new();
+    let b: Vec<char> = s.chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c.is_whitespace() {
+            i += 1;
+        } else if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+            let txt: String = b[start..i].iter().collect();
+            toks.push(Tok::Int(txt.parse().map_err(|_| "bad integer")?));
+        } else if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok::Ident(b[start..i].iter().collect()));
+        } else if "+-*/(),".contains(c) {
+            toks.push(Tok::Op(c));
+            i += 1;
+        } else {
+            return Err(format!("unexpected character '{c}'"));
+        }
+    }
+    Ok(toks)
+}
+
+struct P {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+impl P {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn expr(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.term()?;
+        while let Some(Tok::Op(c @ ('+' | '-'))) = self.peek() {
+            let c = *c;
+            self.pos += 1;
+            let rhs = self.term()?;
+            lhs = if c == '+' {
+                Expr::Add(Box::new(lhs), Box::new(rhs))
+            } else {
+                Expr::Sub(Box::new(lhs), Box::new(rhs))
+            };
+        }
+        Ok(lhs)
+    }
+
+    fn term(&mut self) -> Result<Expr, String> {
+        let mut lhs = self.atom()?;
+        while let Some(Tok::Op(c @ ('*' | '/'))) = self.peek() {
+            let c = *c;
+            self.pos += 1;
+            let rhs = self.atom()?;
+            lhs = if c == '*' {
+                Expr::Mul(Box::new(lhs), Box::new(rhs))
+            } else {
+                Expr::Div(Box::new(lhs), Box::new(rhs))
+            };
+        }
+        Ok(lhs)
+    }
+
+    fn atom(&mut self) -> Result<Expr, String> {
+        match self.peek().cloned() {
+            Some(Tok::Int(v)) => {
+                self.pos += 1;
+                Ok(Expr::Const(v))
+            }
+            Some(Tok::Ident(name)) => {
+                self.pos += 1;
+                if matches!((name.as_str(), self.peek()), ("min" | "max" | "ceildiv", Some(Tok::Op('(')))) {
+                    self.pos += 1; // '('
+                    let a = self.expr()?;
+                    match self.peek() {
+                        Some(Tok::Op(',')) => self.pos += 1,
+                        _ => return Err("expected ','".into()),
+                    }
+                    let b2 = self.expr()?;
+                    match self.peek() {
+                        Some(Tok::Op(')')) => self.pos += 1,
+                        _ => return Err("expected ')'".into()),
+                    }
+                    Ok(match name.as_str() {
+                        "min" => Expr::Min(Box::new(a), Box::new(b2)),
+                        "max" => Expr::Max(Box::new(a), Box::new(b2)),
+                        _ => Expr::CeilDiv(Box::new(a), Box::new(b2)),
+                    })
+                } else {
+                    Ok(Expr::Sym(name))
+                }
+            }
+            Some(Tok::Op('(')) => {
+                self.pos += 1;
+                let e = self.expr()?;
+                match self.peek() {
+                    Some(Tok::Op(')')) => {
+                        self.pos += 1;
+                        Ok(e)
+                    }
+                    _ => Err("expected ')'".into()),
+                }
+            }
+            Some(Tok::Op('-')) => {
+                self.pos += 1;
+                let e = self.atom()?;
+                Ok(Expr::Sub(Box::new(Expr::Const(0)), Box::new(e)))
+            }
+            other => Err(format!("unexpected token {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bind(pairs: &[(&str, i64)]) -> Bindings {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn parse_and_eval() {
+        let e = Expr::parse("n*(n+1)/2").unwrap();
+        assert_eq!(e.eval(&bind(&[("n", 10)])).unwrap(), 55);
+    }
+
+    #[test]
+    fn precedence() {
+        let e = Expr::parse("2+3*4").unwrap();
+        assert_eq!(e.eval(&bind(&[])).unwrap(), 14);
+        let e = Expr::parse("(2+3)*4").unwrap();
+        assert_eq!(e.eval(&bind(&[])).unwrap(), 20);
+    }
+
+    #[test]
+    fn functions() {
+        let e = Expr::parse("min(n, 100) + max(m, 2) + ceildiv(n, 3)").unwrap();
+        assert_eq!(e.eval(&bind(&[("n", 10), ("m", 1)])).unwrap(), 10 + 2 + 4);
+    }
+
+    #[test]
+    fn unary_minus() {
+        let e = Expr::parse("-n + 5").unwrap();
+        assert_eq!(e.eval(&bind(&[("n", 3)])).unwrap(), 2);
+    }
+
+    #[test]
+    fn unbound_symbol_errors() {
+        let e = Expr::parse("n*m").unwrap();
+        assert!(e.eval(&bind(&[("n", 3)])).is_err());
+    }
+
+    #[test]
+    fn negative_to_usize_errors() {
+        let e = Expr::parse("n - 10").unwrap();
+        assert!(e.eval_usize(&bind(&[("n", 3)])).is_err());
+        assert_eq!(e.eval_usize(&bind(&[("n", 13)])).unwrap(), 3);
+    }
+
+    #[test]
+    fn symbols_collected() {
+        let e = Expr::parse("a*b + b*c").unwrap();
+        assert_eq!(e.symbols(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn div_by_zero() {
+        let e = Expr::parse("10/n").unwrap();
+        assert!(e.eval(&bind(&[("n", 0)])).is_err());
+    }
+
+    #[test]
+    fn min_ident_not_function_without_paren() {
+        let e = Expr::parse("min + 1").unwrap();
+        assert_eq!(e.eval(&bind(&[("min", 4)])).unwrap(), 5);
+    }
+}

@@ -1,0 +1,719 @@
+//! Kernel signature database — the paper's "Signatures" (§3.2.1).
+//!
+//! A [`Signature`] annotates a BLAS/LAPACK-style kernel with the
+//! semantics of each argument (flags with feasible values, dimensions,
+//! scalars, leading dimensions, data operands with direction), the
+//! kernel's flop count, and the sizes of its data operands as derived
+//! from the scalar arguments. The coordinator uses Signatures to unroll
+//! experiments into sampler calls, to size and place operands, and to
+//! compute performance metrics; the sampler uses them to parse calls.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+/// Direction of a data operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataDir {
+    In,
+    Out,
+    InOut,
+}
+
+/// Role of one kernel argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArgRole {
+    /// Single-character flag with the feasible values listed.
+    Flag(&'static [char]),
+    /// Problem dimension (non-negative integer).
+    Dim,
+    /// Floating-point scalar (e.g. alpha, beta).
+    Scalar,
+    /// Leading dimension of the preceding data operand.
+    Ld,
+    /// Vector stride.
+    Inc,
+    /// Data operand (matrix/vector in sampler memory).
+    Data(DataDir),
+}
+
+/// A parsed argument value, aligned with the signature's `args`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    Char(char),
+    Size(usize),
+    Num(f64),
+    /// Name of a sampler variable (possibly with an offset applied by
+    /// the coordinator via derived variables).
+    Data(String),
+}
+
+impl ArgValue {
+    pub fn as_size(&self) -> Option<usize> {
+        match self {
+            ArgValue::Size(s) => Some(*s),
+            _ => None,
+        }
+    }
+    pub fn as_char(&self) -> Option<char> {
+        match self {
+            ArgValue::Char(c) => Some(*c),
+            _ => None,
+        }
+    }
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            ArgValue::Num(v) => Some(*v),
+            ArgValue::Size(s) => Some(*s as f64),
+            _ => None,
+        }
+    }
+    pub fn as_data(&self) -> Option<&str> {
+        match self {
+            ArgValue::Data(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed argument list with by-name access through the signature.
+#[derive(Debug, Clone)]
+pub struct ArgValues {
+    pub sig: &'static Signature,
+    pub values: Vec<ArgValue>,
+}
+
+impl ArgValues {
+    pub fn get(&self, name: &str) -> Option<&ArgValue> {
+        self.sig
+            .args
+            .iter()
+            .position(|(n, _)| *n == name)
+            .map(|i| &self.values[i])
+    }
+
+    /// Dimension argument by name (panics if absent — signatures are
+    /// static, so a miss is a programming error).
+    pub fn dim(&self, name: &str) -> usize {
+        self.get(name)
+            .and_then(ArgValue::as_size)
+            .unwrap_or_else(|| panic!("{}: missing dim '{name}'", self.sig.name))
+    }
+
+    pub fn flag(&self, name: &str) -> char {
+        self.get(name)
+            .and_then(ArgValue::as_char)
+            .unwrap_or_else(|| panic!("{}: missing flag '{name}'", self.sig.name))
+    }
+
+    pub fn num(&self, name: &str) -> f64 {
+        self.get(name)
+            .and_then(ArgValue::as_num)
+            .unwrap_or_else(|| panic!("{}: missing scalar '{name}'", self.sig.name))
+    }
+
+    /// (signature index, variable name) of the data operands, in order.
+    pub fn data_args(&self) -> Vec<(usize, &str)> {
+        self.sig
+            .args
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, role))| matches!(role, ArgRole::Data(_)))
+            .map(|(i, _)| (i, self.values[i].as_data().unwrap_or("?")))
+            .collect()
+    }
+
+    /// Flop count of this call.
+    pub fn flops(&self) -> f64 {
+        (self.sig.flops)(self)
+    }
+
+    /// Element count of the k-th data operand (ordinal among data args).
+    pub fn operand_elems(&self, ordinal: usize) -> usize {
+        (self.sig.operand_elems)(self, ordinal)
+    }
+
+    /// Total bytes touched (reads + writes), for the cache model.
+    pub fn traffic_bytes(&self) -> f64 {
+        let mut total = 0.0;
+        let mut ord = 0;
+        for (_, role) in self.sig.args.iter() {
+            if let ArgRole::Data(dir) = role {
+                let bytes = 8.0 * self.operand_elems(ord) as f64;
+                total += match dir {
+                    DataDir::In | DataDir::Out => bytes,
+                    DataDir::InOut => 2.0 * bytes,
+                };
+                ord += 1;
+            }
+        }
+        total
+    }
+}
+
+/// Static description of one kernel.
+pub struct Signature {
+    pub name: &'static str,
+    /// (argument name, role) in calling order.
+    pub args: &'static [(&'static str, ArgRole)],
+    /// Flop count as a function of the call's scalar arguments.
+    pub flops: fn(&ArgValues) -> f64,
+    /// Size in f64 elements of the data operand with the given ordinal.
+    pub operand_elems: fn(&ArgValues, usize) -> usize,
+    /// One-line human description (PlayMat-style annotation).
+    pub doc: &'static str,
+}
+
+impl std::fmt::Debug for Signature {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Signature").field("name", &self.name).finish()
+    }
+}
+
+use ArgRole::*;
+use DataDir::*;
+
+const TT: &[char] = &['N', 'T'];
+const UL: &[char] = &['L', 'U'];
+const LR: &[char] = &['L', 'R'];
+const DG: &[char] = &['N', 'U'];
+const JZ: &[char] = &['N', 'V'];
+
+fn gemm_elems(av: &ArgValues, ord: usize) -> usize {
+    let (m, k) = (av.dim("m"), av.dim("k"));
+    match ord {
+        0 => av.dim("lda") * if av.flag("transa") == 'N' { k } else { m },
+        1 => av.dim("ldb") * if av.flag("transb") == 'N' { av.dim("n") } else { k },
+        _ => av.dim("ldc") * av.dim("n"),
+    }
+}
+
+fn trsm_elems(av: &ArgValues, ord: usize) -> usize {
+    let (m, n) = (av.dim("m"), av.dim("n"));
+    match ord {
+        0 => av.dim("lda") * if av.flag("side") == 'L' { m } else { n },
+        _ => av.dim("ldb") * n,
+    }
+}
+
+fn square_elems(av: &ArgValues, _ord: usize) -> usize {
+    av.dim("lda") * av.dim("n")
+}
+
+fn eig_flops(av: &ArgValues) -> f64 {
+    // LAPACK-style estimate: tridiagonal reduction 4/3·n³, plus ≈6n³
+    // for eigenvector accumulation when jobz = 'V'.
+    let n = av.dim("n") as f64;
+    if av.flag("jobz") == 'V' {
+        4.0 / 3.0 * n * n * n + 6.0 * n * n * n
+    } else {
+        4.0 / 3.0 * n * n * n
+    }
+}
+
+fn eig_elems(av: &ArgValues, ord: usize) -> usize {
+    match ord {
+        0 => av.dim("lda") * av.dim("n"),
+        _ => av.dim("n"),
+    }
+}
+
+const EIG_ARGS: &[(&str, ArgRole)] = &[
+    ("jobz", Flag(JZ)),
+    ("uplo", Flag(UL)),
+    ("n", Dim),
+    ("A", Data(InOut)),
+    ("lda", Ld),
+    ("W", Data(Out)),
+];
+
+static SIGNATURES: OnceLock<BTreeMap<&'static str, Signature>> = OnceLock::new();
+
+/// The kernel database.
+pub fn registry() -> &'static BTreeMap<&'static str, Signature> {
+    SIGNATURES.get_or_init(|| {
+        let mut m = BTreeMap::new();
+        let mut add = |s: Signature| {
+            m.insert(s.name, s);
+        };
+
+        add(Signature {
+            name: "dgemm",
+            args: &[
+                ("transa", Flag(TT)),
+                ("transb", Flag(TT)),
+                ("m", Dim),
+                ("n", Dim),
+                ("k", Dim),
+                ("alpha", Scalar),
+                ("A", Data(In)),
+                ("lda", Ld),
+                ("B", Data(In)),
+                ("ldb", Ld),
+                ("beta", Scalar),
+                ("C", Data(InOut)),
+                ("ldc", Ld),
+            ],
+            flops: |av| 2.0 * av.dim("m") as f64 * av.dim("n") as f64 * av.dim("k") as f64,
+            operand_elems: gemm_elems,
+            doc: "C := alpha*op(A)*op(B) + beta*C",
+        });
+
+        add(Signature {
+            name: "dtrsm",
+            args: &[
+                ("side", Flag(LR)),
+                ("uplo", Flag(UL)),
+                ("transa", Flag(TT)),
+                ("diag", Flag(DG)),
+                ("m", Dim),
+                ("n", Dim),
+                ("alpha", Scalar),
+                ("A", Data(In)),
+                ("lda", Ld),
+                ("B", Data(InOut)),
+                ("ldb", Ld),
+            ],
+            flops: |av| {
+                let (m, n) = (av.dim("m") as f64, av.dim("n") as f64);
+                if av.flag("side") == 'L' {
+                    m * m * n
+                } else {
+                    m * n * n
+                }
+            },
+            operand_elems: trsm_elems,
+            doc: "solve op(A)*X = alpha*B or X*op(A) = alpha*B",
+        });
+
+        add(Signature {
+            name: "dtrmm",
+            args: &[
+                ("side", Flag(LR)),
+                ("uplo", Flag(UL)),
+                ("transa", Flag(TT)),
+                ("diag", Flag(DG)),
+                ("m", Dim),
+                ("n", Dim),
+                ("alpha", Scalar),
+                ("A", Data(In)),
+                ("lda", Ld),
+                ("B", Data(InOut)),
+                ("ldb", Ld),
+            ],
+            flops: |av| {
+                let (m, n) = (av.dim("m") as f64, av.dim("n") as f64);
+                if av.flag("side") == 'L' {
+                    m * m * n
+                } else {
+                    m * n * n
+                }
+            },
+            operand_elems: trsm_elems,
+            doc: "B := alpha*op(A)*B or alpha*B*op(A)",
+        });
+
+        add(Signature {
+            name: "dsyrk",
+            args: &[
+                ("uplo", Flag(UL)),
+                ("trans", Flag(TT)),
+                ("n", Dim),
+                ("k", Dim),
+                ("alpha", Scalar),
+                ("A", Data(In)),
+                ("lda", Ld),
+                ("beta", Scalar),
+                ("C", Data(InOut)),
+                ("ldc", Ld),
+            ],
+            flops: |av| av.dim("n") as f64 * (av.dim("n") + 1) as f64 * av.dim("k") as f64,
+            operand_elems: |av, ord| {
+                let (n, k) = (av.dim("n"), av.dim("k"));
+                match ord {
+                    0 => av.dim("lda") * if av.flag("trans") == 'N' { k } else { n },
+                    _ => av.dim("ldc") * n,
+                }
+            },
+            doc: "C := alpha*A*A' + beta*C (symmetric rank-k update)",
+        });
+
+        add(Signature {
+            name: "dgemv",
+            args: &[
+                ("trans", Flag(TT)),
+                ("m", Dim),
+                ("n", Dim),
+                ("alpha", Scalar),
+                ("A", Data(In)),
+                ("lda", Ld),
+                ("x", Data(In)),
+                ("incx", Inc),
+                ("beta", Scalar),
+                ("y", Data(InOut)),
+                ("incy", Inc),
+            ],
+            flops: |av| 2.0 * av.dim("m") as f64 * av.dim("n") as f64,
+            operand_elems: |av, ord| {
+                let (m, n) = (av.dim("m"), av.dim("n"));
+                let (xl, yl) = if av.flag("trans") == 'N' { (n, m) } else { (m, n) };
+                match ord {
+                    0 => av.dim("lda") * n,
+                    1 => xl * av.dim("incx"),
+                    _ => yl * av.dim("incy"),
+                }
+            },
+            doc: "y := alpha*op(A)*x + beta*y",
+        });
+
+        add(Signature {
+            name: "dtrsv",
+            args: &[
+                ("uplo", Flag(UL)),
+                ("trans", Flag(TT)),
+                ("diag", Flag(DG)),
+                ("n", Dim),
+                ("A", Data(In)),
+                ("lda", Ld),
+                ("x", Data(InOut)),
+                ("incx", Inc),
+            ],
+            flops: |av| av.dim("n") as f64 * av.dim("n") as f64,
+            operand_elems: |av, ord| match ord {
+                0 => av.dim("lda") * av.dim("n"),
+                _ => av.dim("n") * av.dim("incx"),
+            },
+            doc: "solve op(A)*x = b (single right-hand side)",
+        });
+
+        add(Signature {
+            name: "dgetrf",
+            args: &[("m", Dim), ("n", Dim), ("A", Data(InOut)), ("lda", Ld)],
+            flops: |av| {
+                let (m, n) = (av.dim("m") as f64, av.dim("n") as f64);
+                let k = m.min(n);
+                m * n * k - (m + n) * k * k / 2.0 + k * k * k / 3.0
+            },
+            operand_elems: |av, _| av.dim("lda") * av.dim("n"),
+            doc: "LU factorization with partial pivoting (pivots internal)",
+        });
+
+        add(Signature {
+            name: "dgesv",
+            args: &[
+                ("n", Dim),
+                ("nrhs", Dim),
+                ("A", Data(InOut)),
+                ("lda", Ld),
+                ("B", Data(InOut)),
+                ("ldb", Ld),
+            ],
+            flops: |av| {
+                let n = av.dim("n") as f64;
+                let r = av.dim("nrhs") as f64;
+                2.0 / 3.0 * n * n * n + 2.0 * n * n * r
+            },
+            operand_elems: |av, ord| match ord {
+                0 => av.dim("lda") * av.dim("n"),
+                _ => av.dim("ldb") * av.dim("nrhs"),
+            },
+            doc: "solve A*X = B via LU with partial pivoting",
+        });
+
+        add(Signature {
+            name: "dpotrf",
+            args: &[("uplo", Flag(UL)), ("n", Dim), ("A", Data(InOut)), ("lda", Ld)],
+            flops: |av| {
+                let n = av.dim("n") as f64;
+                n * n * n / 3.0
+            },
+            operand_elems: square_elems,
+            doc: "Cholesky factorization",
+        });
+
+        add(Signature {
+            name: "dpotrs",
+            args: &[
+                ("uplo", Flag(UL)),
+                ("n", Dim),
+                ("nrhs", Dim),
+                ("A", Data(In)),
+                ("lda", Ld),
+                ("B", Data(InOut)),
+                ("ldb", Ld),
+            ],
+            flops: |av| 2.0 * av.dim("n") as f64 * av.dim("n") as f64 * av.dim("nrhs") as f64,
+            operand_elems: |av, ord| match ord {
+                0 => av.dim("lda") * av.dim("n"),
+                _ => av.dim("ldb") * av.dim("nrhs"),
+            },
+            doc: "solve A*X = B given the Cholesky factor",
+        });
+
+        add(Signature {
+            name: "dposv",
+            args: &[
+                ("uplo", Flag(UL)),
+                ("n", Dim),
+                ("nrhs", Dim),
+                ("A", Data(InOut)),
+                ("lda", Ld),
+                ("B", Data(InOut)),
+                ("ldb", Ld),
+            ],
+            flops: |av| {
+                let n = av.dim("n") as f64;
+                let r = av.dim("nrhs") as f64;
+                n * n * n / 3.0 + 2.0 * n * n * r
+            },
+            operand_elems: |av, ord| match ord {
+                0 => av.dim("lda") * av.dim("n"),
+                _ => av.dim("ldb") * av.dim("nrhs"),
+            },
+            doc: "Cholesky factorization + solve",
+        });
+
+        add(Signature {
+            name: "dtrtri",
+            args: &[
+                ("uplo", Flag(UL)),
+                ("diag", Flag(DG)),
+                ("n", Dim),
+                ("A", Data(InOut)),
+                ("lda", Ld),
+            ],
+            flops: |av| {
+                let n = av.dim("n") as f64;
+                n * n * n / 3.0
+            },
+            operand_elems: square_elems,
+            doc: "triangular matrix inversion (blocked)",
+        });
+
+        add(Signature {
+            name: "dtrti2",
+            args: &[
+                ("uplo", Flag(UL)),
+                ("diag", Flag(DG)),
+                ("n", Dim),
+                ("A", Data(InOut)),
+                ("lda", Ld),
+            ],
+            flops: |av| {
+                let n = av.dim("n") as f64;
+                n * n * n / 3.0
+            },
+            operand_elems: square_elems,
+            doc: "triangular matrix inversion (unblocked)",
+        });
+
+        add(Signature {
+            name: "dsyev",
+            args: EIG_ARGS,
+            flops: eig_flops,
+            operand_elems: eig_elems,
+            doc: "symmetric eigensolver (QL/QR iteration)",
+        });
+        add(Signature {
+            name: "dsyevd",
+            args: EIG_ARGS,
+            flops: eig_flops,
+            operand_elems: eig_elems,
+            doc: "symmetric eigensolver (divide & conquer)",
+        });
+        add(Signature {
+            name: "dsyevx",
+            args: EIG_ARGS,
+            flops: eig_flops,
+            operand_elems: eig_elems,
+            doc: "symmetric eigensolver (bisection + inverse iteration)",
+        });
+        add(Signature {
+            name: "dsyevr",
+            args: EIG_ARGS,
+            flops: eig_flops,
+            operand_elems: eig_elems,
+            doc: "symmetric eigensolver (MRRR-style)",
+        });
+
+        add(Signature {
+            name: "dtrsyl",
+            args: &[
+                ("transa", Flag(TT)),
+                ("transb", Flag(TT)),
+                ("isgn", Dim),
+                ("m", Dim),
+                ("n", Dim),
+                ("A", Data(In)),
+                ("lda", Ld),
+                ("B", Data(In)),
+                ("ldb", Ld),
+                ("C", Data(InOut)),
+                ("ldc", Ld),
+            ],
+            flops: |av| {
+                let (m, n) = (av.dim("m") as f64, av.dim("n") as f64);
+                m * n * (m + n)
+            },
+            operand_elems: |av, ord| match ord {
+                0 => av.dim("lda") * av.dim("m"),
+                1 => av.dim("ldb") * av.dim("n"),
+                _ => av.dim("ldc") * av.dim("n"),
+            },
+            doc: "triangular Sylvester equation A*X + X*B = C",
+        });
+
+        m
+    })
+}
+
+/// Look up a kernel signature by name.
+pub fn lookup(name: &str) -> Option<&'static Signature> {
+    registry().get(name)
+}
+
+/// Derive default leading dimensions for a kernel given its dimension
+/// arguments — the "automatically derive connected arguments" feature
+/// of the paper's Signatures.
+pub fn default_ld(sig: &Signature, dims: &[(String, usize)]) -> BTreeMap<String, usize> {
+    let get = |n: &str| dims.iter().find(|(k, _)| k == n).map(|(_, v)| *v);
+    let mut out = BTreeMap::new();
+    match sig.name {
+        "dgemm" => {
+            if let (Some(m), Some(k)) = (get("m"), get("k")) {
+                out.insert("lda".into(), m.max(1));
+                out.insert("ldb".into(), k.max(1));
+                out.insert("ldc".into(), m.max(1));
+            }
+        }
+        "dtrsm" | "dtrmm" => {
+            if let (Some(m), Some(n)) = (get("m"), get("n")) {
+                out.insert("lda".into(), m.max(n).max(1));
+                out.insert("ldb".into(), m.max(1));
+            }
+        }
+        "dtrsyl" => {
+            if let (Some(m), Some(n)) = (get("m"), get("n")) {
+                out.insert("lda".into(), m.max(1));
+                out.insert("ldb".into(), n.max(1));
+                out.insert("ldc".into(), m.max(1));
+            }
+        }
+        "dgemv" => {
+            if let Some(m) = get("m") {
+                out.insert("lda".into(), m.max(1));
+            }
+        }
+        _ => {
+            if let Some(n) = get("n") {
+                out.insert("lda".into(), n.max(1));
+                out.insert("ldb".into(), n.max(1));
+                out.insert("ldc".into(), n.max(1));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn parse_vals(sig: &'static Signature, toks: &[&str]) -> ArgValues {
+        assert_eq!(sig.args.len(), toks.len(), "{}: token count", sig.name);
+        let values: Vec<ArgValue> = sig
+            .args
+            .iter()
+            .zip(toks)
+            .map(|((_, role), t)| match role {
+                Flag(_) => ArgValue::Char(t.chars().next().unwrap()),
+                Dim | Ld | Inc => ArgValue::Size(t.parse().unwrap()),
+                Scalar => ArgValue::Num(t.parse().unwrap()),
+                Data(_) => ArgValue::Data(t.to_string()),
+            })
+            .collect();
+        ArgValues { sig, values }
+    }
+
+    #[test]
+    fn registry_has_all_experiment_kernels() {
+        for k in [
+            "dgemm", "dtrsm", "dtrmm", "dsyrk", "dgemv", "dtrsv", "dgetrf", "dgesv",
+            "dpotrf", "dpotrs", "dposv", "dtrtri", "dtrti2", "dsyev", "dsyevd", "dsyevx",
+            "dsyevr", "dtrsyl",
+        ] {
+            assert!(lookup(k).is_some(), "missing {k}");
+        }
+    }
+
+    #[test]
+    fn gemm_flops_and_operands() {
+        let sig = lookup("dgemm").unwrap();
+        let av = parse_vals(
+            sig,
+            &["N", "N", "1000", "1000", "1000", "1.0", "A", "1000", "B", "1000", "0.0", "C", "1000"],
+        );
+        assert_eq!(av.flops(), 2e9);
+        assert_eq!(av.operand_elems(0), 1_000_000);
+        assert_eq!(av.operand_elems(1), 1_000_000);
+        assert_eq!(av.operand_elems(2), 1_000_000);
+        assert_eq!(av.data_args().len(), 3);
+        assert_eq!(av.data_args()[2].1, "C");
+    }
+
+    #[test]
+    fn gemm_transposed_operand_sizes() {
+        let sig = lookup("dgemm").unwrap();
+        let av = parse_vals(
+            sig,
+            &["T", "N", "100", "50", "200", "1.0", "A", "200", "B", "200", "0.0", "C", "100"],
+        );
+        // A is 200×100 stored with lda=200
+        assert_eq!(av.operand_elems(0), 200 * 100);
+        assert_eq!(av.operand_elems(1), 200 * 50);
+        assert_eq!(av.operand_elems(2), 100 * 50);
+    }
+
+    #[test]
+    fn trsm_flops_side_dependent() {
+        let sig = lookup("dtrsm").unwrap();
+        let left =
+            parse_vals(sig, &["L", "L", "N", "N", "10", "100", "1.0", "A", "10", "B", "10"]);
+        let right =
+            parse_vals(sig, &["R", "L", "N", "N", "10", "100", "1.0", "A", "100", "B", "10"]);
+        assert_eq!(left.flops(), 10.0 * 10.0 * 100.0);
+        assert_eq!(right.flops(), 10.0 * 100.0 * 100.0);
+    }
+
+    #[test]
+    fn traffic_counts_inout_twice() {
+        let sig = lookup("dpotrf").unwrap();
+        let av = parse_vals(sig, &["L", "100", "A", "100"]);
+        assert_eq!(av.traffic_bytes(), 2.0 * 8.0 * 100.0 * 100.0);
+    }
+
+    #[test]
+    fn default_lds() {
+        let sig = lookup("dgemm").unwrap();
+        let lds = default_ld(sig, &[("m".into(), 30), ("k".into(), 20)]);
+        assert_eq!(lds["lda"], 30);
+        assert_eq!(lds["ldb"], 20);
+        assert_eq!(lds["ldc"], 30);
+    }
+
+    #[test]
+    fn eig_flops_jobz_dependent() {
+        let sig = lookup("dsyev").unwrap();
+        let v = parse_vals(sig, &["V", "L", "100", "A", "100", "W"]);
+        let n = parse_vals(sig, &["N", "L", "100", "A", "100", "W"]);
+        assert!(v.flops() > n.flops());
+    }
+
+    #[test]
+    fn flag_feasible_values_exposed() {
+        let sig = lookup("dtrsm").unwrap();
+        match sig.args[0].1 {
+            Flag(vals) => assert_eq!(vals, &['L', 'R']),
+            _ => panic!("side should be a flag"),
+        }
+    }
+}

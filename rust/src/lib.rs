@@ -1,0 +1,36 @@
+//! # ELAPS-RS — Experimental Linear Algebra Performance Studies
+//!
+//! A Rust + JAX/Pallas reproduction of *"The ELAPS Framework:
+//! Experimental Linear Algebra Performance Studies"* (Peise &
+//! Bientinesi, 2015).
+//!
+//! The framework is structured after the paper's three layers:
+//!
+//! * [`sampler`] — the bottom layer: a low-level tool that reads a list
+//!   of kernel calls, executes and times them, and reports raw
+//!   measurements (cycles, simulated PAPI counters).
+//! * [`coordinator`] — the middle layer: the [`coordinator::Experiment`]
+//!   abstraction (repetitions, operand varying, parameter-/sum-/OpenMP-
+//!   ranges), execution on samplers, [`coordinator::Report`]s, metrics,
+//!   statistics and plotting.
+//! * the top layer (the paper's GUI) is substituted by the `elaps` CLI
+//!   binary and file-based experiment descriptions.
+//!
+//! Underneath sit the substrates a reproduction must provide itself:
+//! a from-scratch dense linear algebra library ([`linalg`]) in several
+//! algorithmic variants ([`libraries`]), a machine/cache performance
+//! model ([`perfmodel`]) standing in for real hardware counters and
+//! multi-core platforms, and a PJRT runtime ([`runtime`]) that executes
+//! JAX/Pallas kernels AOT-compiled to HLO.
+
+pub mod util;
+pub mod linalg;
+pub mod kernels;
+pub mod libraries;
+pub mod perfmodel;
+pub mod sampler;
+pub mod coordinator;
+pub mod runtime;
+pub mod figures;
+
+pub use coordinator::{Experiment, Report};

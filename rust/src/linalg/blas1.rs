@@ -1,0 +1,147 @@
+//! Level-1 BLAS: vector-vector operations (stride-1 and strided).
+
+/// y := alpha*x + y
+pub fn daxpy(n: usize, alpha: f64, x: &[f64], incx: usize, y: &mut [f64], incy: usize) {
+    if alpha == 0.0 || n == 0 {
+        return;
+    }
+    if incx == 1 && incy == 1 {
+        for i in 0..n {
+            y[i] += alpha * x[i];
+        }
+    } else {
+        for i in 0..n {
+            y[i * incy] += alpha * x[i * incx];
+        }
+    }
+}
+
+/// dot := xᵀy
+pub fn ddot(n: usize, x: &[f64], incx: usize, y: &[f64], incy: usize) -> f64 {
+    let mut s = 0.0;
+    if incx == 1 && incy == 1 {
+        for i in 0..n {
+            s += x[i] * y[i];
+        }
+    } else {
+        for i in 0..n {
+            s += x[i * incx] * y[i * incy];
+        }
+    }
+    s
+}
+
+/// x := alpha*x
+pub fn dscal(n: usize, alpha: f64, x: &mut [f64], incx: usize) {
+    for i in 0..n {
+        x[i * incx] *= alpha;
+    }
+}
+
+/// y := x
+pub fn dcopy(n: usize, x: &[f64], incx: usize, y: &mut [f64], incy: usize) {
+    for i in 0..n {
+        y[i * incy] = x[i * incx];
+    }
+}
+
+/// Swap x and y.
+pub fn dswap(n: usize, x: &mut [f64], incx: usize, y: &mut [f64], incy: usize) {
+    for i in 0..n {
+        std::mem::swap(&mut x[i * incx], &mut y[i * incy]);
+    }
+}
+
+/// Euclidean norm, with scaling against overflow (LAPACK dnrm2 style).
+pub fn dnrm2(n: usize, x: &[f64], incx: usize) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for i in 0..n {
+        let xi = x[i * incx];
+        if xi != 0.0 {
+            let absxi = xi.abs();
+            if scale < absxi {
+                ssq = 1.0 + ssq * (scale / absxi).powi(2);
+                scale = absxi;
+            } else {
+                ssq += (absxi / scale).powi(2);
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// Sum of absolute values.
+pub fn dasum(n: usize, x: &[f64], incx: usize) -> f64 {
+    (0..n).map(|i| x[i * incx].abs()).sum()
+}
+
+/// Index of the element with maximum absolute value (0-based).
+pub fn idamax(n: usize, x: &[f64], incx: usize) -> usize {
+    let mut best = 0;
+    let mut bv = 0.0;
+    for i in 0..n {
+        let v = x[i * incx].abs();
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_basic() {
+        let x = [1.0, 2.0, 3.0];
+        let mut y = [10.0, 20.0, 30.0];
+        daxpy(3, 2.0, &x, 1, &mut y, 1);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn axpy_strided() {
+        let x = [1.0, 0.0, 2.0, 0.0];
+        let mut y = [0.0; 6];
+        daxpy(2, 1.0, &x, 2, &mut y, 3);
+        assert_eq!(y, [1.0, 0.0, 0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let x = [3.0, 4.0];
+        assert_eq!(ddot(2, &x, 1, &x, 1), 25.0);
+        assert!((dnrm2(2, &x, 1) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn nrm2_no_overflow() {
+        let x = [1e200, 1e200];
+        let n = dnrm2(2, &x, 1);
+        assert!((n - 2.0f64.sqrt() * 1e200).abs() / n < 1e-14);
+    }
+
+    #[test]
+    fn scal_copy_swap() {
+        let mut x = [1.0, 2.0];
+        dscal(2, 3.0, &mut x, 1);
+        assert_eq!(x, [3.0, 6.0]);
+        let mut y = [0.0; 2];
+        dcopy(2, &x, 1, &mut y, 1);
+        assert_eq!(y, x);
+        let mut z = [7.0, 8.0];
+        dswap(2, &mut x, 1, &mut z, 1);
+        assert_eq!(x, [7.0, 8.0]);
+        assert_eq!(z, [3.0, 6.0]);
+    }
+
+    #[test]
+    fn iamax_and_asum() {
+        let x = [1.0, -5.0, 3.0];
+        assert_eq!(idamax(3, &x, 1), 1);
+        assert_eq!(dasum(3, &x, 1), 9.0);
+    }
+}

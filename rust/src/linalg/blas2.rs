@@ -1,0 +1,305 @@
+//! Level-2 BLAS: matrix-vector operations (column-major, with `ld`).
+
+use super::{Diag, Trans, Uplo};
+
+/// y := alpha*op(A)*x + beta*y where A is m×n.
+pub fn dgemv(
+    trans: Trans,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    x: &[f64],
+    incx: usize,
+    beta: f64,
+    y: &mut [f64],
+    incy: usize,
+) {
+    let leny = match trans {
+        Trans::No => m,
+        Trans::Yes => n,
+    };
+    if beta != 1.0 {
+        for i in 0..leny {
+            y[i * incy] *= beta;
+        }
+    }
+    if alpha == 0.0 {
+        return;
+    }
+    match trans {
+        Trans::No => {
+            // y += alpha * A x — column sweep keeps A accesses contiguous
+            for j in 0..n {
+                let t = alpha * x[j * incx];
+                if t != 0.0 {
+                    let col = &a[j * lda..j * lda + m];
+                    for i in 0..m {
+                        y[i * incy] += t * col[i];
+                    }
+                }
+            }
+        }
+        Trans::Yes => {
+            for j in 0..n {
+                let col = &a[j * lda..j * lda + m];
+                let mut s = 0.0;
+                for i in 0..m {
+                    s += col[i] * x[i * incx];
+                }
+                y[j * incy] += alpha * s;
+            }
+        }
+    }
+}
+
+/// A := alpha*x*yᵀ + A where A is m×n.
+pub fn dger(
+    m: usize,
+    n: usize,
+    alpha: f64,
+    x: &[f64],
+    incx: usize,
+    y: &[f64],
+    incy: usize,
+    a: &mut [f64],
+    lda: usize,
+) {
+    for j in 0..n {
+        let t = alpha * y[j * incy];
+        if t != 0.0 {
+            let col = &mut a[j * lda..j * lda + m];
+            for i in 0..m {
+                col[i] += t * x[i * incx];
+            }
+        }
+    }
+}
+
+/// Solve op(A) x = b in place (x := op(A)⁻¹ x) for triangular A (n×n).
+pub fn dtrsv(
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    x: &mut [f64],
+    incx: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    let at = |i: usize, j: usize| a[i + j * lda];
+    match (uplo, trans) {
+        (Uplo::Lower, Trans::No) => {
+            for j in 0..n {
+                if diag == Diag::NonUnit {
+                    x[j * incx] /= at(j, j);
+                }
+                let t = x[j * incx];
+                for i in j + 1..n {
+                    x[i * incx] -= t * at(i, j);
+                }
+            }
+        }
+        (Uplo::Upper, Trans::No) => {
+            for j in (0..n).rev() {
+                if diag == Diag::NonUnit {
+                    x[j * incx] /= at(j, j);
+                }
+                let t = x[j * incx];
+                for i in 0..j {
+                    x[i * incx] -= t * at(i, j);
+                }
+            }
+        }
+        (Uplo::Lower, Trans::Yes) => {
+            // solve Lᵀ x = b: backward
+            for j in (0..n).rev() {
+                let mut s = x[j * incx];
+                for i in j + 1..n {
+                    s -= at(i, j) * x[i * incx];
+                }
+                x[j * incx] = if diag == Diag::NonUnit { s / at(j, j) } else { s };
+            }
+        }
+        (Uplo::Upper, Trans::Yes) => {
+            for j in 0..n {
+                let mut s = x[j * incx];
+                for i in 0..j {
+                    s -= at(i, j) * x[i * incx];
+                }
+                x[j * incx] = if diag == Diag::NonUnit { s / at(j, j) } else { s };
+            }
+        }
+    }
+}
+
+/// x := op(A) x for triangular A (n×n).
+pub fn dtrmv(
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    x: &mut [f64],
+    incx: usize,
+) {
+    let at = |i: usize, j: usize| a[i + j * lda];
+    match (uplo, trans) {
+        (Uplo::Lower, Trans::No) => {
+            for i in (0..n).rev() {
+                let mut s = if diag == Diag::NonUnit { at(i, i) * x[i * incx] } else { x[i * incx] };
+                for j in 0..i {
+                    s += at(i, j) * x[j * incx];
+                }
+                x[i * incx] = s;
+            }
+        }
+        (Uplo::Upper, Trans::No) => {
+            for i in 0..n {
+                let mut s = if diag == Diag::NonUnit { at(i, i) * x[i * incx] } else { x[i * incx] };
+                for j in i + 1..n {
+                    s += at(i, j) * x[j * incx];
+                }
+                x[i * incx] = s;
+            }
+        }
+        (Uplo::Lower, Trans::Yes) => {
+            for i in 0..n {
+                let mut s = if diag == Diag::NonUnit { at(i, i) * x[i * incx] } else { x[i * incx] };
+                for j in i + 1..n {
+                    s += at(j, i) * x[j * incx];
+                }
+                x[i * incx] = s;
+            }
+        }
+        (Uplo::Upper, Trans::Yes) => {
+            for i in (0..n).rev() {
+                let mut s = if diag == Diag::NonUnit { at(i, i) * x[i * incx] } else { x[i * incx] };
+                for j in 0..i {
+                    s += at(j, i) * x[j * incx];
+                }
+                x[i * incx] = s;
+            }
+        }
+    }
+}
+
+/// y := alpha*A*x + beta*y for symmetric A (only `uplo` triangle read).
+pub fn dsymv(
+    uplo: Uplo,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    x: &[f64],
+    incx: usize,
+    beta: f64,
+    y: &mut [f64],
+    incy: usize,
+) {
+    if beta != 1.0 {
+        for i in 0..n {
+            y[i * incy] *= beta;
+        }
+    }
+    let at = |i: usize, j: usize| a[i + j * lda];
+    for j in 0..n {
+        let xj = x[j * incx];
+        let mut s = 0.0;
+        match uplo {
+            Uplo::Lower => {
+                y[j * incy] += alpha * at(j, j) * xj;
+                for i in j + 1..n {
+                    y[i * incy] += alpha * at(i, j) * xj;
+                    s += at(i, j) * x[i * incx];
+                }
+            }
+            Uplo::Upper => {
+                for i in 0..j {
+                    y[i * incy] += alpha * at(i, j) * xj;
+                    s += at(i, j) * x[i * incx];
+                }
+                y[j * incy] += alpha * at(j, j) * xj;
+            }
+        }
+        y[j * incy] += alpha * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn gemv_notrans() {
+        // A = [[1,3],[2,4]] col-major, x = [1,1]
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let x = [1.0, 1.0];
+        let mut y = [1.0, 1.0];
+        dgemv(Trans::No, 2, 2, 1.0, &a, 2, &x, 1, 2.0, &mut y, 1);
+        assert_eq!(y, [6.0, 8.0]); // [4,6] + 2*[1,1]
+    }
+
+    #[test]
+    fn gemv_trans() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let x = [1.0, 2.0];
+        let mut y = [0.0, 0.0];
+        dgemv(Trans::Yes, 2, 2, 1.0, &a, 2, &x, 1, 0.0, &mut y, 1);
+        assert_eq!(y, [5.0, 11.0]);
+    }
+
+    #[test]
+    fn ger_rank1() {
+        let mut a = [0.0; 4];
+        dger(2, 2, 2.0, &[1.0, 2.0], 1, &[3.0, 4.0], 1, &mut a, 2);
+        assert_eq!(a, [6.0, 12.0, 8.0, 16.0]);
+    }
+
+    #[test]
+    fn trsv_inverts_trmv_all_variants() {
+        let mut rng = Xoshiro256::seeded(5);
+        for &uplo in &[Uplo::Lower, Uplo::Upper] {
+            for &trans in &[Trans::No, Trans::Yes] {
+                for &diag in &[Diag::NonUnit, Diag::Unit] {
+                    let n = 9;
+                    let a = Matrix::random_triangular(n, uplo, &mut rng);
+                    let x0: Vec<f64> = (0..n).map(|i| (i + 1) as f64).collect();
+                    let mut x = x0.clone();
+                    dtrmv(uplo, trans, diag, n, &a.data, n, &mut x, 1);
+                    dtrsv(uplo, trans, diag, n, &a.data, n, &mut x, 1);
+                    for (xi, x0i) in x.iter().zip(&x0) {
+                        assert!(
+                            (xi - x0i).abs() < 1e-10,
+                            "{uplo:?} {trans:?} {diag:?}: {xi} vs {x0i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn symv_matches_full_gemv() {
+        let mut rng = Xoshiro256::seeded(6);
+        let n = 7;
+        let a = Matrix::random_spd(n, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| 0.5 + i as f64).collect();
+        let mut y_full = vec![0.0; n];
+        dgemv(Trans::No, n, n, 1.5, &a.data, n, &x, 1, 0.0, &mut y_full, 1);
+        for &uplo in &[Uplo::Lower, Uplo::Upper] {
+            let mut y = vec![0.0; n];
+            dsymv(uplo, n, 1.5, &a.data, n, &x, 1, 0.0, &mut y, 1);
+            for (a, b) in y.iter().zip(&y_full) {
+                assert!((a - b).abs() < 1e-10);
+            }
+        }
+    }
+}

@@ -1,0 +1,856 @@
+//! Level-3 BLAS: matrix-matrix operations.
+//!
+//! `dgemm` comes in three algorithmic variants, which back the three
+//! rust "libraries" the experiments compare (DESIGN.md §Substitutions 1):
+//!
+//! * [`dgemm_naive`] — textbook triple loop (the "unblocked reference
+//!   library" / netlib analog),
+//! * [`dgemm_blocked`] — BLIS-style cache-blocked loop nest with packed
+//!   A/B panels and an `MR×NR` register microkernel (the optimized
+//!   library analog; this is the L3 performance hot path, see
+//!   EXPERIMENTS.md §Perf),
+//! * [`dgemm_recursive`] — recursive splitting down to a blocked base
+//!   case (the RECSY-style analog).
+//!
+//! `dtrsm`/`dtrmm`/`dsyrk` have unblocked and blocked (gemm-rich)
+//! variants.
+
+use super::{Diag, Side, Trans, Uplo};
+
+/// Microkernel tile: MR×NR accumulators held in registers.
+pub const MR: usize = 8;
+pub const NR: usize = 4;
+/// Cache blocking: A panel MC×KC (~L2), B panel KC×NC (~L3/L2).
+pub const MC: usize = 256;
+pub const KC: usize = 256;
+pub const NC: usize = 2048;
+
+#[inline(always)]
+fn idx(i: usize, j: usize, ld: usize) -> usize {
+    i + j * ld
+}
+
+/// Scale C by beta (shared prologue of the gemm variants).
+fn scale_c(m: usize, n: usize, beta: f64, c: &mut [f64], ldc: usize) {
+    if beta == 1.0 {
+        return;
+    }
+    for j in 0..n {
+        let col = &mut c[j * ldc..j * ldc + m];
+        if beta == 0.0 {
+            col.fill(0.0);
+        } else {
+            for v in col {
+                *v *= beta;
+            }
+        }
+    }
+}
+
+#[inline(always)]
+fn a_elem(a: &[f64], lda: usize, trans: Trans, i: usize, k: usize) -> f64 {
+    match trans {
+        Trans::No => a[idx(i, k, lda)],
+        Trans::Yes => a[idx(k, i, lda)],
+    }
+}
+
+/// C := alpha·op(A)·op(B) + beta·C, textbook loops. op(A): m×k, op(B): k×n.
+pub fn dgemm_naive(
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    scale_c(m, n, beta, c, ldc);
+    if alpha == 0.0 || k == 0 {
+        return;
+    }
+    for j in 0..n {
+        for p in 0..k {
+            let bpj = alpha * a_elem(b, ldb, transb, p, j);
+            if bpj == 0.0 {
+                continue;
+            }
+            match transa {
+                Trans::No => {
+                    let acol = &a[p * lda..p * lda + m];
+                    let ccol = &mut c[j * ldc..j * ldc + m];
+                    for i in 0..m {
+                        ccol[i] += bpj * acol[i];
+                    }
+                }
+                Trans::Yes => {
+                    for i in 0..m {
+                        c[idx(i, j, ldc)] += bpj * a[idx(p, i, lda)];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Pack an MC×KC block of op(A) into row-major MR-panels:
+/// buf[panel][k][r] with panel = i/MR.
+fn pack_a(
+    buf: &mut [f64],
+    a: &[f64],
+    lda: usize,
+    trans: Trans,
+    i0: usize,
+    k0: usize,
+    mc: usize,
+    kc: usize,
+) {
+    let mut dst = 0;
+    let mut i = 0;
+    while i < mc {
+        let mr = MR.min(mc - i);
+        for p in 0..kc {
+            for r in 0..MR {
+                buf[dst] = if r < mr {
+                    a_elem(a, lda, trans, i0 + i + r, k0 + p)
+                } else {
+                    0.0
+                };
+                dst += 1;
+            }
+        }
+        i += MR;
+    }
+}
+
+/// Pack a KC×NC block of op(B) into column-major NR-panels:
+/// buf[panel][k][c] with panel = j/NR.
+fn pack_b(
+    buf: &mut [f64],
+    b: &[f64],
+    ldb: usize,
+    trans: Trans,
+    k0: usize,
+    j0: usize,
+    kc: usize,
+    nc: usize,
+) {
+    let mut dst = 0;
+    let mut j = 0;
+    while j < nc {
+        let nr = NR.min(nc - j);
+        for p in 0..kc {
+            for cidx in 0..NR {
+                buf[dst] = if cidx < nr {
+                    a_elem(b, ldb, trans, k0 + p, j0 + j + cidx)
+                } else {
+                    0.0
+                };
+                dst += 1;
+            }
+        }
+        j += NR;
+    }
+}
+
+/// MR×NR microkernel over a length-`kc` rank-1 chain. `pa` is an
+/// MR-panel (MR consecutive per k), `pb` an NR-panel. Accumulates
+/// `alpha * pa * pb` into C (C already beta-scaled).
+#[inline(always)]
+fn microkernel(
+    kc: usize,
+    alpha: f64,
+    pa: &[f64],
+    pb: &[f64],
+    c: &mut [f64],
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    // Accumulators: NR columns of MR values — kept in a flat array the
+    // optimizer promotes to vector registers. The k-loop is unrolled by
+    // two to hide the panel loads (EXPERIMENTS.md §Perf iteration 4).
+    let mut acc = [[0.0f64; MR]; NR];
+    let mut p = 0;
+    while p + 2 <= kc {
+        let av0 = &pa[p * MR..p * MR + MR];
+        let bv0 = &pb[p * NR..p * NR + NR];
+        let av1 = &pa[(p + 1) * MR..(p + 1) * MR + MR];
+        let bv1 = &pb[(p + 1) * NR..(p + 1) * NR + NR];
+        for cidx in 0..NR {
+            let (b0, b1) = (bv0[cidx], bv1[cidx]);
+            let accc = &mut acc[cidx];
+            for r in 0..MR {
+                accc[r] += av0[r] * b0 + av1[r] * b1;
+            }
+        }
+        p += 2;
+    }
+    if p < kc {
+        let av = &pa[p * MR..p * MR + MR];
+        let bv = &pb[p * NR..p * NR + NR];
+        for cidx in 0..NR {
+            let bb = bv[cidx];
+            let accc = &mut acc[cidx];
+            for r in 0..MR {
+                accc[r] += av[r] * bb;
+            }
+        }
+    }
+    for cidx in 0..nr {
+        let ccol = &mut c[cidx * ldc..cidx * ldc + mr];
+        for r in 0..mr {
+            ccol[r] += alpha * acc[cidx][r];
+        }
+    }
+}
+
+/// C := alpha·op(A)·op(B) + beta·C — cache-blocked, packed, with the
+/// register microkernel. The optimized-library gemm.
+pub fn dgemm_blocked(
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    scale_c(m, n, beta, c, ldc);
+    if alpha == 0.0 || k == 0 || m == 0 || n == 0 {
+        return;
+    }
+    // Packing buffers are reused across calls (thread-local): per-call
+    // allocation of the ~1.5 MiB panels dominated small/recursive gemms
+    // (EXPERIMENTS.md §Perf iteration 1).
+    thread_local! {
+        static PACK_A: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+        static PACK_B: std::cell::RefCell<Vec<f64>> = const { std::cell::RefCell::new(Vec::new()) };
+    }
+    PACK_A.with(|pa| PACK_B.with(|pb| {
+    let mut pa = pa.borrow_mut();
+    let mut pb = pb.borrow_mut();
+    let need_a = MC.div_ceil(MR) * MR * KC;
+    let need_b = KC * NC.div_ceil(NR) * NR;
+    if pa.len() < need_a {
+        pa.resize(need_a, 0.0);
+    }
+    if pb.len() < need_b {
+        pb.resize(need_b, 0.0);
+    }
+    let packed_a: &mut [f64] = &mut pa;
+    let packed_b: &mut [f64] = &mut pb;
+
+    let mut j0 = 0;
+    while j0 < n {
+        let nc = NC.min(n - j0);
+        let mut k0 = 0;
+        while k0 < k {
+            let kc = KC.min(k - k0);
+            pack_b(packed_b, b, ldb, transb, k0, j0, kc, nc);
+            let mut i0 = 0;
+            while i0 < m {
+                let mc = MC.min(m - i0);
+                pack_a(packed_a, a, lda, transa, i0, k0, mc, kc);
+                // macrokernel: sweep microtiles
+                let mut jj = 0;
+                while jj < nc {
+                    let nr = NR.min(nc - jj);
+                    let pb = &packed_b[(jj / NR) * kc * NR..][..kc * NR];
+                    let mut ii = 0;
+                    while ii < mc {
+                        let mr = MR.min(mc - ii);
+                        let pa = &packed_a[(ii / MR) * kc * MR..][..kc * MR];
+                        let coff = idx(i0 + ii, j0 + jj, ldc);
+                        microkernel(kc, alpha, pa, pb, &mut c[coff..], ldc, mr, nr);
+                        ii += MR;
+                    }
+                    jj += NR;
+                }
+                i0 += MC;
+            }
+            k0 += KC;
+        }
+        j0 += NC;
+    }
+    }));
+}
+
+/// Recursion cutoff for [`dgemm_recursive`].
+const REC_CUTOFF: usize = 128;
+
+/// C := alpha·op(A)·op(B) + beta·C via recursive splitting of the
+/// largest dimension (RECSY-style), blocked base case.
+pub fn dgemm_recursive(
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    if m.max(n).max(k) <= REC_CUTOFF {
+        dgemm_blocked(transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+        return;
+    }
+    if m >= n && m >= k {
+        let m1 = m / 2;
+        dgemm_recursive(transa, transb, m1, n, k, alpha, a, lda, b, ldb, beta, c, ldc);
+        let a_lo = match transa {
+            Trans::No => &a[m1..],        // row split of A
+            Trans::Yes => &a[m1 * lda..], // column split of Aᵀ storage
+        };
+        dgemm_recursive(
+            transa, transb, m - m1, n, k, alpha, a_lo, lda, b, ldb, beta,
+            &mut c[m1..], ldc,
+        );
+    } else if n >= k {
+        let n1 = n / 2;
+        dgemm_recursive(transa, transb, m, n1, k, alpha, a, lda, b, ldb, beta, c, ldc);
+        let b_hi = match transb {
+            Trans::No => &b[n1 * ldb..],
+            Trans::Yes => &b[n1..],
+        };
+        dgemm_recursive(
+            transa, transb, m, n - n1, k, alpha, a, lda, b_hi, ldb, beta,
+            &mut c[n1 * ldc..], ldc,
+        );
+    } else {
+        let k1 = k / 2;
+        dgemm_recursive(transa, transb, m, n, k1, alpha, a, lda, b, ldb, beta, c, ldc);
+        let a_hi = match transa {
+            Trans::No => &a[k1 * lda..],
+            Trans::Yes => &a[k1..],
+        };
+        let b_lo = match transb {
+            Trans::No => &b[k1..],
+            Trans::Yes => &b[k1 * ldb..],
+        };
+        dgemm_recursive(transa, transb, m, n, k - k1, alpha, a_hi, lda, b_lo, ldb, 1.0, c, ldc);
+    }
+}
+
+/// Default gemm used by higher-level routines (blocked).
+pub fn dgemm(
+    transa: Trans,
+    transb: Trans,
+    m: usize,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    dgemm_blocked(transa, transb, m, n, k, alpha, a, lda, b, ldb, beta, c, ldc)
+}
+
+/// Unblocked triangular solve with multiple right-hand sides:
+/// op(A)·X = alpha·B (Left) or X·op(A) = alpha·B (Right), X overwrites B.
+pub fn dtrsm_unblocked(
+    side: Side,
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &mut [f64],
+    ldb: usize,
+) {
+    if alpha != 1.0 {
+        for j in 0..n {
+            for v in &mut b[j * ldb..j * ldb + m] {
+                *v *= alpha;
+            }
+        }
+    }
+    match side {
+        Side::Left => {
+            // solve op(A) X = B column by column
+            for j in 0..n {
+                super::blas2::dtrsv(uplo, trans, diag, m, a, lda, &mut b[j * ldb..], 1);
+            }
+        }
+        Side::Right => {
+            // X op(A) = B  ⇔  op(A)ᵀ Xᵀ = Bᵀ: solve row systems.
+            // Row i of B has stride ldb; dtrsv supports strides.
+            let flip = match trans {
+                Trans::No => Trans::Yes,
+                Trans::Yes => Trans::No,
+            };
+            for i in 0..m {
+                super::blas2::dtrsv(uplo, flip, diag, n, a, lda, &mut b[i..], ldb);
+            }
+        }
+    }
+}
+
+/// Blocked triangular solve: diagonal-block unblocked solves plus gemm
+/// updates (the optimized-library trsm).
+pub fn dtrsm_blocked(
+    side: Side,
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &mut [f64],
+    ldb: usize,
+    nb: usize,
+) {
+    let nb = nb.max(1);
+    if alpha != 1.0 {
+        for j in 0..n {
+            for v in &mut b[j * ldb..j * ldb + m] {
+                *v *= alpha;
+            }
+        }
+    }
+    match side {
+        Side::Left => {
+            // Traversal order depends on (uplo, trans).
+            let forward = matches!(
+                (uplo, trans),
+                (Uplo::Lower, Trans::No) | (Uplo::Upper, Trans::Yes)
+            );
+            let starts: Vec<usize> = (0..m).step_by(nb).collect();
+            let order: Vec<usize> =
+                if forward { starts.clone() } else { starts.iter().rev().copied().collect() };
+            for &i0 in &order {
+                let ib = nb.min(m - i0);
+                // solve diagonal block
+                dtrsm_unblocked(
+                    side, uplo, trans, diag, ib, n, 1.0,
+                    &a[idx(i0, i0, lda)..], lda, &mut b[i0..], ldb,
+                );
+                // Update the remaining rows. The solved row panel
+                // B1 = B[i0..i0+ib, :] is interleaved (column-major)
+                // with the rows being updated, so copy it into a packed
+                // temp first to satisfy Rust aliasing (LAPACK would
+                // alias; a pack is what optimized BLAS do anyway).
+                let mut panel = vec![0.0f64; ib * n];
+                for j in 0..n {
+                    panel[j * ib..(j + 1) * ib]
+                        .copy_from_slice(&b[i0 + j * ldb..i0 + j * ldb + ib]);
+                }
+                if forward {
+                    let rem = m - i0 - ib;
+                    if rem > 0 {
+                        // B2 -= op(A21) * B1
+                        let (a_off, ta) = match (uplo, trans) {
+                            (Uplo::Lower, Trans::No) => (idx(i0 + ib, i0, lda), Trans::No),
+                            (Uplo::Upper, Trans::Yes) => (idx(i0, i0 + ib, lda), Trans::Yes),
+                            _ => unreachable!(),
+                        };
+                        dgemm(
+                            ta, Trans::No, rem, n, ib, -1.0,
+                            &a[a_off..], lda, &panel, ib, 1.0, &mut b[i0 + ib..], ldb,
+                        );
+                    }
+                } else if i0 > 0 {
+                    // B1' -= op(A12) * B1 (rows above the solved block)
+                    let (a_off, ta) = match (uplo, trans) {
+                        (Uplo::Upper, Trans::No) => (idx(0, i0, lda), Trans::No),
+                        (Uplo::Lower, Trans::Yes) => (idx(i0, 0, lda), Trans::Yes),
+                        _ => unreachable!(),
+                    };
+                    dgemm(
+                        ta, Trans::No, i0, n, ib, -1.0,
+                        &a[a_off..], lda, &panel, ib, 1.0, b, ldb,
+                    );
+                }
+            }
+        }
+        Side::Right => {
+            // Column-block traversal of B. X op(A) = B.
+            let forward = matches!(
+                (uplo, trans),
+                (Uplo::Upper, Trans::No) | (Uplo::Lower, Trans::Yes)
+            );
+            let starts: Vec<usize> = (0..n).step_by(nb).collect();
+            let order: Vec<usize> =
+                if forward { starts.clone() } else { starts.iter().rev().copied().collect() };
+            for &j0 in &order {
+                let jb = nb.min(n - j0);
+                dtrsm_unblocked(
+                    side, uplo, trans, diag, m, jb, 1.0,
+                    &a[idx(j0, j0, lda)..], lda, &mut b[j0 * ldb..], ldb,
+                );
+                if forward {
+                    let rem = n - j0 - jb;
+                    if rem > 0 {
+                        // B2 -= B1 * op(A12)
+                        let (a_off, ta) = match (uplo, trans) {
+                            (Uplo::Upper, Trans::No) => (idx(j0, j0 + jb, lda), Trans::No),
+                            (Uplo::Lower, Trans::Yes) => (idx(j0 + jb, j0, lda), Trans::Yes),
+                            _ => unreachable!(),
+                        };
+                        let (b1, b2) = b.split_at_mut((j0 + jb) * ldb);
+                        dgemm(
+                            Trans::No, ta, m, rem, jb, -1.0,
+                            &b1[j0 * ldb..], ldb, &a[a_off..], lda, 1.0, b2, ldb,
+                        );
+                    }
+                } else if j0 > 0 {
+                    // B1 -= B2 * op(A21)
+                    let (a_off, ta) = match (uplo, trans) {
+                        (Uplo::Lower, Trans::No) => (idx(j0, 0, lda), Trans::No),
+                        (Uplo::Upper, Trans::Yes) => (idx(0, j0, lda), Trans::Yes),
+                        _ => unreachable!(),
+                    };
+                    let (b1, b2) = b.split_at_mut(j0 * ldb);
+                    dgemm(
+                        Trans::No, ta, m, j0, jb, -1.0,
+                        b2, ldb, &a[a_off..], lda, 1.0, b1, ldb,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Default trsm (blocked with nb=64).
+pub fn dtrsm(
+    side: Side,
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &mut [f64],
+    ldb: usize,
+) {
+    dtrsm_blocked(side, uplo, trans, diag, m, n, alpha, a, lda, b, ldb, 64)
+}
+
+/// B := alpha·op(A)·B (Left) or alpha·B·op(A) (Right), A triangular.
+pub fn dtrmm(
+    side: Side,
+    uplo: Uplo,
+    trans: Trans,
+    diag: Diag,
+    m: usize,
+    n: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    b: &mut [f64],
+    ldb: usize,
+) {
+    match side {
+        Side::Left => {
+            for j in 0..n {
+                super::blas2::dtrmv(uplo, trans, diag, m, a, lda, &mut b[j * ldb..], 1);
+                if alpha != 1.0 {
+                    for v in &mut b[j * ldb..j * ldb + m] {
+                        *v *= alpha;
+                    }
+                }
+            }
+        }
+        Side::Right => {
+            let flip = match trans {
+                Trans::No => Trans::Yes,
+                Trans::Yes => Trans::No,
+            };
+            for i in 0..m {
+                super::blas2::dtrmv(uplo, flip, diag, n, a, lda, &mut b[i..], ldb);
+            }
+            if alpha != 1.0 {
+                for j in 0..n {
+                    for v in &mut b[j * ldb..j * ldb + m] {
+                        *v *= alpha;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C := alpha·A·Aᵀ + beta·C (trans=No) or alpha·Aᵀ·A + beta·C
+/// (trans=Yes), C symmetric n×n, only `uplo` triangle updated.
+pub fn dsyrk(
+    uplo: Uplo,
+    trans: Trans,
+    n: usize,
+    k: usize,
+    alpha: f64,
+    a: &[f64],
+    lda: usize,
+    beta: f64,
+    c: &mut [f64],
+    ldc: usize,
+) {
+    for j in 0..n {
+        let (i_lo, i_hi) = match uplo {
+            Uplo::Lower => (j, n),
+            Uplo::Upper => (0, j + 1),
+        };
+        for i in i_lo..i_hi {
+            let mut s = 0.0;
+            for p in 0..k {
+                let aip = a_elem(a, lda, trans, i, p);
+                let ajp = a_elem(a, lda, trans, j, p);
+                s += aip * ajp;
+            }
+            let v = &mut c[idx(i, j, ldc)];
+            *v = alpha * s + if beta == 0.0 { 0.0 } else { beta * *v };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    fn ref_gemm(
+        transa: Trans,
+        transb: Trans,
+        alpha: f64,
+        a: &Matrix,
+        b: &Matrix,
+        beta: f64,
+        c: &Matrix,
+    ) -> Matrix {
+        let ae = if transa == Trans::Yes { a.transpose() } else { a.clone() };
+        let be = if transb == Trans::Yes { b.transpose() } else { b.clone() };
+        let mut out = ae.matmul(&be);
+        for j in 0..out.n {
+            for i in 0..out.m {
+                out[(i, j)] = alpha * out[(i, j)] + beta * c[(i, j)];
+            }
+        }
+        out
+    }
+
+    fn check_gemm_variant(
+        gemm: fn(
+            Trans, Trans, usize, usize, usize, f64, &[f64], usize, &[f64], usize, f64,
+            &mut [f64], usize,
+        ),
+        m: usize,
+        n: usize,
+        k: usize,
+        seed: u64,
+    ) {
+        let mut rng = Xoshiro256::seeded(seed);
+        for &transa in &[Trans::No, Trans::Yes] {
+            for &transb in &[Trans::No, Trans::Yes] {
+                let a = if transa == Trans::No {
+                    Matrix::random(m, k, &mut rng)
+                } else {
+                    Matrix::random(k, m, &mut rng)
+                };
+                let b = if transb == Trans::No {
+                    Matrix::random(k, n, &mut rng)
+                } else {
+                    Matrix::random(n, k, &mut rng)
+                };
+                let c0 = Matrix::random(m, n, &mut rng);
+                let expect = ref_gemm(transa, transb, 1.5, &a, &b, -0.5, &c0);
+                let mut c = c0.clone();
+                let ldc = c.ld();
+                gemm(
+                    transa, transb, m, n, k, 1.5, &a.data, a.ld(), &b.data, b.ld(), -0.5,
+                    &mut c.data, ldc,
+                );
+                let diff = c.max_abs_diff(&expect);
+                assert!(diff < 1e-10 * k as f64, "{transa:?}{transb:?} m{m} n{n} k{k}: {diff}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_naive_matches_ref() {
+        check_gemm_variant(dgemm_naive, 13, 7, 9, 10);
+    }
+
+    #[test]
+    fn gemm_blocked_matches_ref_small() {
+        check_gemm_variant(dgemm_blocked, 13, 7, 9, 11);
+    }
+
+    #[test]
+    fn gemm_blocked_matches_ref_microtile_edges() {
+        // Exercise all mr/nr edge combinations around MR=8, NR=4.
+        for &m in &[1usize, 7, 8, 9, 16, 17] {
+            for &n in &[1usize, 3, 4, 5, 8, 9] {
+                check_gemm_variant(dgemm_blocked, m, n, 5, 100 + (m * 31 + n) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_blocked_matches_ref_crossing_cache_blocks() {
+        check_gemm_variant(dgemm_blocked, MC + 9, NR * 3 + 2, KC + 5, 12);
+    }
+
+    #[test]
+    fn gemm_recursive_matches_ref() {
+        check_gemm_variant(dgemm_recursive, 150, 140, 130, 13);
+        check_gemm_variant(dgemm_recursive, 260, 40, 300, 14);
+    }
+
+    #[test]
+    fn gemm_beta_zero_ignores_nan_c() {
+        let a = [1.0, 1.0];
+        let b = [1.0];
+        let mut c = [f64::NAN, f64::NAN];
+        dgemm_blocked(Trans::No, Trans::No, 2, 1, 1, 1.0, &a, 2, &b, 1, 0.0, &mut c, 2);
+        assert_eq!(c, [1.0, 1.0]);
+    }
+
+    #[test]
+    fn gemm_with_ld_gt_m() {
+        // 2×2 matrices stored with ld=4.
+        let mut rng = Xoshiro256::seeded(15);
+        let mut a = vec![0.0; 8];
+        let mut b = vec![0.0; 8];
+        let mut c = vec![0.0; 8];
+        for j in 0..2 {
+            for i in 0..2 {
+                a[i + j * 4] = rng.next_open01();
+                b[i + j * 4] = rng.next_open01();
+            }
+        }
+        dgemm_blocked(Trans::No, Trans::No, 2, 2, 2, 1.0, &a, 4, &b, 4, 0.0, &mut c, 4);
+        for j in 0..2 {
+            for i in 0..2 {
+                let expect = a[i] * b[j * 4] + a[i + 4] * b[1 + j * 4];
+                assert!((c[i + j * 4] - expect).abs() < 1e-14);
+            }
+        }
+        // padding untouched
+        assert_eq!(c[2], 0.0);
+        assert_eq!(c[3], 0.0);
+    }
+
+    fn check_trsm_all_variants(blocked: bool, n_rhs: usize, n: usize, seed: u64) {
+        let mut rng = Xoshiro256::seeded(seed);
+        for &side in &[Side::Left, Side::Right] {
+            for &uplo in &[Uplo::Lower, Uplo::Upper] {
+                for &trans in &[Trans::No, Trans::Yes] {
+                    for &diag in &[Diag::NonUnit, Diag::Unit] {
+                        let (m_b, n_b) = match side {
+                            Side::Left => (n, n_rhs),
+                            Side::Right => (n_rhs, n),
+                        };
+                        let a = Matrix::random_triangular(n, uplo, &mut rng);
+                        let x = Matrix::random(m_b, n_b, &mut rng);
+                        // b := op(A)·x (left) or x·op(A) (right)
+                        let mut b = x.clone();
+                        dtrmm(side, uplo, trans, diag, m_b, n_b, 1.0, &a.data, n, &mut b.data, m_b);
+                        let mut solved = b.clone();
+                        if blocked {
+                            dtrsm_blocked(
+                                side, uplo, trans, diag, m_b, n_b, 1.0, &a.data, n,
+                                &mut solved.data, m_b, 3,
+                            );
+                        } else {
+                            dtrsm_unblocked(
+                                side, uplo, trans, diag, m_b, n_b, 1.0, &a.data, n,
+                                &mut solved.data, m_b,
+                            );
+                        }
+                        let diff = solved.max_abs_diff(&x);
+                        assert!(
+                            diff < 1e-9,
+                            "{side:?} {uplo:?} {trans:?} {diag:?} blocked={blocked}: {diff}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_unblocked_inverts_trmm() {
+        check_trsm_all_variants(false, 5, 8, 20);
+    }
+
+    #[test]
+    fn trsm_blocked_inverts_trmm() {
+        check_trsm_all_variants(true, 5, 8, 21);
+        check_trsm_all_variants(true, 4, 17, 22); // n not multiple of nb
+    }
+
+    #[test]
+    fn trsm_alpha_scaling() {
+        let a = [2.0]; // 1×1 lower
+        let mut b = [8.0, 6.0];
+        dtrsm(
+            Side::Left, Uplo::Lower, Trans::No, Diag::NonUnit, 1, 2, 0.5, &a, 1, &mut b, 1,
+        );
+        assert_eq!(b, [2.0, 1.5]);
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        let mut rng = Xoshiro256::seeded(23);
+        let n = 9;
+        let k = 5;
+        for &trans in &[Trans::No, Trans::Yes] {
+            let a = if trans == Trans::No {
+                Matrix::random(n, k, &mut rng)
+            } else {
+                Matrix::random(k, n, &mut rng)
+            };
+            let full = if trans == Trans::No {
+                a.matmul(&a.transpose())
+            } else {
+                a.transpose().matmul(&a)
+            };
+            for &uplo in &[Uplo::Lower, Uplo::Upper] {
+                let mut c = Matrix::zeros(n, n);
+                dsyrk(uplo, trans, n, k, 1.0, &a.data, a.ld(), 0.0, &mut c.data, n);
+                for j in 0..n {
+                    for i in 0..n {
+                        let in_tri = match uplo {
+                            Uplo::Lower => i >= j,
+                            Uplo::Upper => i <= j,
+                        };
+                        if in_tri {
+                            assert!((c[(i, j)] - full[(i, j)]).abs() < 1e-12);
+                        } else {
+                            assert_eq!(c[(i, j)], 0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

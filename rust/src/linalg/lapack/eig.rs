@@ -1,0 +1,826 @@
+//! Symmetric eigensolvers: the four LAPACK drivers the paper compares
+//! in its scalability study (Fig. 5), implemented from scratch on top
+//! of the shared tridiagonal reduction ([`super::tridiag`]):
+//!
+//! * [`dsyev`]  — implicit QL/QR iteration on T (dsteqr),
+//! * [`dsyevd`] — Cuppen divide & conquer with a secular-equation
+//!   solver (dstedc, simplified deflation),
+//! * [`dsyevx`] — bisection (dstebz) + inverse iteration (dstein),
+//! * [`dsyevr`] — bisection + single-solve twisted factorization
+//!   (simplified MRRR: no representation tree; clustered eigenvalues
+//!   fall back to Gram-Schmidt like dstein).
+//!
+//! All drivers produce ascending eigenvalues and (optionally)
+//! orthonormal eigenvectors of the dense symmetric input.
+
+use super::tridiag::{back_transform, dsytrd};
+use crate::linalg::{LinalgError, Result};
+
+const EPS: f64 = f64::EPSILON;
+
+/// Eigendecomposition result: ascending eigenvalues, optional
+/// column-eigenvectors (n×n, column j ↔ eigenvalue j).
+#[derive(Debug, Clone)]
+pub struct EigResult {
+    pub values: Vec<f64>,
+    pub vectors: Option<Vec<f64>>, // column-major n×n, ld = n
+}
+
+// ---------------------------------------------------------------------
+// dsteqr: implicit QL with Wilkinson shift (EISPACK tql2 lineage).
+// ---------------------------------------------------------------------
+
+/// Eigenvalues (and optionally eigenvectors accumulated into `z`,
+/// n×n ld=n, which must start as the basis to rotate — identity for
+/// tridiagonal eigenvectors) of a symmetric tridiagonal matrix.
+pub fn dsteqr(d: &mut [f64], e: &mut [f64], mut z: Option<&mut [f64]>) -> Result<()> {
+    let n = d.len();
+    if n <= 1 {
+        return Ok(());
+    }
+    let mut e = {
+        // work on a padded copy so e[l..m] indexing is uniform
+        let mut ee = vec![0.0f64; n];
+        ee[..n - 1].copy_from_slice(&e[..n - 1]);
+        ee
+    };
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find the first small subdiagonal element at or after l
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= EPS * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 80 {
+                return Err(LinalgError::NoConvergence(l));
+            }
+            // Wilkinson shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c, mut p) = (1.0f64, 1.0f64, 0.0f64);
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // recover from underflow
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate rotation into z (columns i and i+1)
+                if let Some(zz) = z.as_deref_mut() {
+                    for k in 0..n {
+                        f = zz[k + (i + 1) * n];
+                        zz[k + (i + 1) * n] = s * zz[k + i * n] + c * f;
+                        zz[k + i * n] = c * zz[k + i * n] - s * f;
+                    }
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    // sort ascending, carrying z columns
+    sort_eigenpairs(d, z.as_deref_mut());
+    Ok(())
+}
+
+fn sort_eigenpairs(d: &mut [f64], z: Option<&mut [f64]>) {
+    let n = d.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let sorted_d: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    d.copy_from_slice(&sorted_d);
+    if let Some(zz) = z {
+        let old = zz.to_vec();
+        for (newj, &oldj) in order.iter().enumerate() {
+            zz[newj * n..(newj + 1) * n].copy_from_slice(&old[oldj * n..(oldj + 1) * n]);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// dstedc: Cuppen divide & conquer.
+// ---------------------------------------------------------------------
+
+const DC_CUTOFF: usize = 24;
+
+/// Divide & conquer tridiagonal eigensolver (LAPACK dstedc,
+/// simplified deflation: only |z_i| ≈ 0 deflates). When `want_z`,
+/// returns the tridiagonal eigenvector matrix (n×n, column-major).
+/// Values-only falls back to QL iteration, exactly as LAPACK's dsyevd
+/// (jobz='N') calls dsterf.
+pub fn dstedc(d: &mut [f64], e: &[f64], want_z: bool) -> Result<Option<Vec<f64>>> {
+    let n = d.len();
+    if !want_z {
+        let mut ebuf = e.to_vec();
+        dsteqr(d, &mut ebuf, None)?;
+        return Ok(None);
+    }
+    let mut evec = Some(identity(n));
+    let e = e.to_vec();
+    stedc_rec(d, &e, evec.as_deref_mut(), n)?;
+    Ok(evec)
+}
+
+fn identity(n: usize) -> Vec<f64> {
+    let mut z = vec![0.0f64; n * n];
+    for i in 0..n {
+        z[i + i * n] = 1.0;
+    }
+    z
+}
+
+fn stedc_rec(d: &mut [f64], e: &[f64], z: Option<&mut [f64]>, ldz: usize) -> Result<()> {
+    let n = d.len();
+    if n <= DC_CUTOFF {
+        // base case: QL iteration. Need a compact z to rotate.
+        let mut ebuf = e.to_vec();
+        match z {
+            None => dsteqr(d, &mut ebuf, None),
+            Some(zz) => {
+                let mut small = identity(n);
+                dsteqr(d, &mut ebuf, Some(&mut small))?;
+                for j in 0..n {
+                    zz[j * ldz..j * ldz + n].copy_from_slice(&small[j * n..(j + 1) * n]);
+                }
+                Ok(())
+            }
+        }?;
+        return Ok(());
+    }
+    let m = n / 2;
+    // rank-one tear: rho = |e[m-1]|, w = (…,1, s,…) with s = sign(e[m-1])
+    let rho = e[m - 1].abs();
+    let sign = if e[m - 1] >= 0.0 { 1.0 } else { -1.0 };
+    let (d1, d2) = d.split_at_mut(m);
+    d1[m - 1] -= rho;
+    d2[0] -= rho;
+    // recurse on the two halves
+    match z {
+        None => unreachable!("values-only D&C handled by dstedc via QL"),
+        Some(zz) => {
+            // eigenvectors live in the caller's zz: columns [0,m) rows
+            // [0,m), and columns [m,n) rows [m,n) (block diagonal).
+            {
+                let (zcols1, zcols2) = zz.split_at_mut(m * ldz);
+                stedc_rec(d1, &e[..m - 1], Some(zcols1), ldz)?;
+                // second block occupies rows m.. of columns m..n: shift
+                // the base pointer by m so the block writes rows m..n.
+                stedc_rec(d2, &e[m..], Some(&mut zcols2[m..]), ldz)?;
+            }
+            // build z = (last row of Q1 | sign · first row of Q2)
+            let mut zvec = vec![0.0f64; n];
+            for j in 0..m {
+                zvec[j] = zz[(m - 1) + j * ldz];
+            }
+            for j in m..n {
+                zvec[j] = sign * zz[m + j * ldz];
+            }
+            let mut dall = d.to_vec();
+            let (lam, u) = secular_merge(&mut dall, &zvec, rho, true)?;
+            let umat = u.unwrap(); // n×n: column j = unit eigvec in D-basis
+            // new vectors: Znew[:, j] = Zblock · u_j
+            let mut newz = vec![0.0f64; n * n];
+            for j in 0..n {
+                for k in 0..n {
+                    let ukj = umat[k + j * n];
+                    if ukj != 0.0 {
+                        // column k of the block-diagonal Z
+                        let (rows, base) = if k < m { (0..m, 0) } else { (m..n, 0) };
+                        let _ = base;
+                        for r in rows {
+                            newz[r + j * n] += zz[r + k * ldz] * ukj;
+                        }
+                    }
+                }
+            }
+            for j in 0..n {
+                zz[j * ldz..j * ldz + n].copy_from_slice(&newz[j * n..(j + 1) * n]);
+            }
+            d.copy_from_slice(&lam);
+            Ok(())
+        }
+    }
+}
+
+/// Solve the secular equation f(λ) = 1 + rho Σ z_i²/(d_i − λ) = 0 for
+/// all n roots of D + rho·z·zᵀ (rho ≥ 0). `d` is sorted ascending on
+/// entry (sorted here if not). Returns ascending eigenvalues and, if
+/// `want_u`, the normalized eigenvectors in the D-basis.
+fn secular_merge(
+    d: &mut [f64],
+    z: &[f64],
+    rho: f64,
+    want_u: bool,
+) -> Result<(Vec<f64>, Option<Vec<f64>>)> {
+    let n = d.len();
+    // sort (d, z) ascending
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let ds: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let zs: Vec<f64> = order.iter().map(|&i| z[i]).collect();
+    let znorm2: f64 = zs.iter().map(|v| v * v).sum();
+    let scale = ds.iter().fold(1.0f64, |m, v| m.max(v.abs())) + rho * znorm2;
+
+    // Deflate: entries with negligible weight keep their eigenvalue
+    // d_i and unit eigenvector e_i; the secular equation is solved on
+    // the reduced set of non-deflated poles only (as in LAPACK dlaed2).
+    let mut deflated = vec![false; n];
+    for i in 0..n {
+        if rho * zs[i] * zs[i] <= EPS * scale * 16.0 {
+            deflated[i] = true;
+        }
+    }
+    let red: Vec<usize> = (0..n).filter(|&i| !deflated[i]).collect();
+    let k = red.len();
+    let dr: Vec<f64> = red.iter().map(|&i| ds[i]).collect();
+    let zr2: Vec<f64> = red.iter().map(|&i| zs[i] * zs[i]).collect();
+    let f = |x: f64| -> f64 {
+        let mut s = 1.0;
+        for i in 0..k {
+            s += rho * zr2[i] / (dr[i] - x);
+        }
+        s
+    };
+    // Roots of the reduced problem interlace its poles strictly:
+    // root j in (dr_j, dr_{j+1}), last in (dr_{k-1}, dr_{k-1}+rho*sum z^2).
+    // f -> -inf at each pole+ and +inf at the next pole-, and f is
+    // increasing in between, so sign-bisection without endpoint
+    // evaluation is safe.
+    let mut roots = vec![0.0f64; k];
+    for j in 0..k {
+        let lo0 = dr[j];
+        let hi0 = if j + 1 < k {
+            dr[j + 1]
+        } else {
+            dr[k - 1] + rho * znorm2 + scale * EPS
+        };
+        if hi0 - lo0 <= EPS * scale {
+            roots[j] = lo0; // (near-)degenerate pole pair
+            continue;
+        }
+        let (mut lo, mut hi) = (lo0, hi0);
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if mid <= lo || mid >= hi {
+                break;
+            }
+            if f(mid) < 0.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        roots[j] = 0.5 * (lo + hi);
+        if !roots[j].is_finite() {
+            return Err(LinalgError::NoConvergence(j));
+        }
+    }
+    // assemble all n eigenvalues in the sorted-D index space
+    let mut lam = vec![0.0f64; n];
+    {
+        let mut rj = 0;
+        for i in 0..n {
+            if deflated[i] {
+                lam[i] = ds[i];
+            } else {
+                lam[i] = roots[rj];
+                rj += 1;
+            }
+        }
+    }
+    // eigenvectors in D basis
+    let u = if want_u {
+        let mut u = vec![0.0f64; n * n];
+        for j in 0..n {
+            if deflated[j] {
+                u[j + j * n] = 1.0;
+                continue;
+            }
+            let mut norm = 0.0;
+            for i in 0..n {
+                let v = if deflated[i] { 0.0 } else { zs[i] / (ds[i] - lam[j]) };
+                u[i + j * n] = v;
+                norm += v * v;
+            }
+            let norm = norm.sqrt();
+            for i in 0..n {
+                u[i + j * n] /= norm;
+            }
+        }
+        Some(u)
+    } else {
+        None
+    };
+    // un-sort: map back to caller's original D order for the U rows
+    let mut lam_sorted = lam.clone();
+    lam_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let u_reordered = u.map(|us| {
+        // rows of U correspond to sorted ds; un-permute rows to the
+        // caller's original order, and order columns by ascending λ.
+        let mut colorder: Vec<usize> = (0..n).collect();
+        colorder.sort_by(|&a, &b| lam[a].partial_cmp(&lam[b]).unwrap());
+        let mut out = vec![0.0f64; n * n];
+        for (newj, &oldj) in colorder.iter().enumerate() {
+            for i in 0..n {
+                out[order[i] + newj * n] = us[i + oldj * n];
+            }
+        }
+        out
+    });
+    Ok((lam_sorted, u_reordered))
+}
+
+// ---------------------------------------------------------------------
+// dstebz: bisection eigenvalues via Sturm counts.
+// ---------------------------------------------------------------------
+
+/// Number of eigenvalues of T strictly less than `x` (Sturm count).
+pub fn sturm_count(d: &[f64], e: &[f64], x: f64) -> usize {
+    let n = d.len();
+    let mut count = 0;
+    let mut q = 1.0f64;
+    for i in 0..n {
+        let e2 = if i == 0 { 0.0 } else { e[i - 1] * e[i - 1] };
+        q = d[i] - x - if i == 0 { 0.0 } else { e2 / q };
+        if q == 0.0 {
+            q = EPS * (d[i].abs() + e2.sqrt() + 1.0);
+        }
+        if q < 0.0 {
+            count += 1;
+        }
+    }
+    count
+}
+
+/// All eigenvalues of a symmetric tridiagonal matrix by bisection
+/// (LAPACK dstebz, range='A'), ascending, to ~machine precision.
+pub fn dstebz(d: &[f64], e: &[f64], abstol: f64) -> Vec<f64> {
+    let n = d.len();
+    if n == 0 {
+        return vec![];
+    }
+    // Gershgorin interval
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for i in 0..n {
+        let r = (if i > 0 { e[i - 1].abs() } else { 0.0 })
+            + (if i + 1 < n { e[i].abs() } else { 0.0 });
+        lo = lo.min(d[i] - r);
+        hi = hi.max(d[i] + r);
+    }
+    let width = (hi - lo).max(1.0);
+    lo -= width * EPS * 2.0 + abstol;
+    hi += width * EPS * 2.0 + abstol;
+    let tol = if abstol > 0.0 { abstol } else { EPS * width * 2.0 };
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        // find the k-th smallest eigenvalue: smallest x with count(x) > k
+        let (mut a, mut b) = (lo, hi);
+        while b - a > tol.max(EPS * (a.abs() + b.abs())) {
+            let mid = 0.5 * (a + b);
+            if sturm_count(d, e, mid) > k {
+                b = mid;
+            } else {
+                a = mid;
+            }
+        }
+        out.push(0.5 * (a + b));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// dstein: inverse iteration.
+// ---------------------------------------------------------------------
+
+/// Solve (T − λI) x = b with a tridiagonal LU (partial pivoting),
+/// overwriting `x` (which holds b on entry). Internal helper.
+fn tridiag_shifted_solve(d: &[f64], e: &[f64], lambda: f64, x: &mut [f64]) {
+    let n = d.len();
+    if n == 1 {
+        let dd = d[0] - lambda;
+        x[0] /= if dd.abs() > EPS { dd } else { EPS };
+        return;
+    }
+    // Gaussian elimination with partial pivoting on the tridiagonal;
+    // band grows to 2 superdiagonals.
+    let mut diag: Vec<f64> = d.iter().map(|v| v - lambda).collect();
+    let mut sup1 = e.to_vec(); // superdiag
+    let mut sup2 = vec![0.0f64; n.saturating_sub(2)];
+    let sub = e.to_vec(); // subdiag (const copy)
+    for i in 0..n - 1 {
+        let (piv, other) = (diag[i], sub[i]);
+        if other.abs() > piv.abs() {
+            // swap row i with row i+1
+            let (a, b, c) = (diag[i + 1], sup1.get(i + 1).copied().unwrap_or(0.0), 0.0f64);
+            diag[i] = sub[i];
+            let olds1 = sup1[i];
+            sup1[i] = a;
+            if i + 2 < n {
+                sup2[i] = b;
+            }
+            let _ = c;
+            // new row i+1 = old row i
+            diag[i + 1] = olds1;
+            if i + 2 < n {
+                sup1[i + 1] = 0.0;
+            }
+            x.swap(i, i + 1);
+            // eliminate: factor = old_diag_i / new pivot
+            let f = piv / if diag[i].abs() > 0.0 { diag[i] } else { EPS };
+            diag[i + 1] -= f * sup1[i];
+            if i + 2 < n {
+                sup1[i + 1] -= f * sup2[i];
+            }
+            x[i + 1] -= f * x[i];
+        } else {
+            let p = if piv.abs() > 0.0 { piv } else { EPS };
+            let f = other / p;
+            diag[i + 1] -= f * sup1[i];
+            if i + 2 < n {
+                // sup2[i] stays 0 in the no-swap case
+            }
+            x[i + 1] -= f * x[i];
+        }
+    }
+    // back substitution
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        if i + 1 < n {
+            s -= sup1[i] * x[i + 1];
+        }
+        if i + 2 < n {
+            s -= sup2[i] * x[i + 2];
+        }
+        let p = if diag[i].abs() > EPS { diag[i] } else { EPS.copysign(diag[i]) };
+        x[i] = s / p;
+    }
+}
+
+/// Inverse iteration for the eigenvectors of a tridiagonal matrix given
+/// eigenvalues (LAPACK dstein). Reorthogonalizes within clusters of
+/// close eigenvalues. Returns n×k column-major vectors.
+pub fn dstein(d: &[f64], e: &[f64], lambdas: &[f64]) -> Vec<f64> {
+    let n = d.len();
+    let k = lambdas.len();
+    let mut z = vec![0.0f64; n * k];
+    let mut rng = crate::util::rng::Xoshiro256::seeded(0x5713);
+    let spread = lambdas.last().copied().unwrap_or(1.0) - lambdas.first().copied().unwrap_or(0.0);
+    let cluster_tol = (spread.abs().max(1.0)) * 1e-7;
+    for j in 0..k {
+        let col_range = j * n..(j + 1) * n;
+        // deterministic pseudo-random start
+        for v in &mut z[col_range.clone()] {
+            *v = rng.next_open01() - 0.5;
+        }
+        for _ in 0..4 {
+            let col = &mut z[col_range.clone()];
+            tridiag_shifted_solve(d, e, lambdas[j], col);
+            // orthogonalize against previous vectors in the cluster
+            let mut jj = j;
+            while jj > 0 && (lambdas[j] - lambdas[jj - 1]).abs() < cluster_tol {
+                jj -= 1;
+            }
+            for prev in jj..j {
+                let mut dot = 0.0;
+                for i in 0..n {
+                    dot += z[prev * n + i] * z[j * n + i];
+                }
+                for i in 0..n {
+                    z[j * n + i] -= dot * z[prev * n + i];
+                }
+            }
+            // normalize
+            let mut norm = 0.0;
+            for v in &z[col_range.clone()] {
+                norm += v * v;
+            }
+            let norm = norm.sqrt();
+            if norm > 0.0 {
+                for v in &mut z[col_range.clone()] {
+                    *v /= norm;
+                }
+            }
+        }
+    }
+    z
+}
+
+// ---------------------------------------------------------------------
+// twisted factorization (simplified MRRR kernel for dsyevr)
+// ---------------------------------------------------------------------
+
+/// Eigenvector of T for an isolated eigenvalue λ via twisted
+/// factorization: forward LDLᵀ + backward UDUᵀ, twist at the index
+/// minimizing |γ|, one triangular solve — no iteration.
+pub fn twisted_eigenvector(d: &[f64], e: &[f64], lambda: f64) -> Vec<f64> {
+    let n = d.len();
+    let mut x = vec![0.0f64; n];
+    if n == 1 {
+        x[0] = 1.0;
+        return x;
+    }
+    // forward: s[i] (D+ diagonal), l[i] = e[i]/s[i]
+    let mut s = vec![0.0f64; n];
+    let mut l = vec![0.0f64; n - 1];
+    s[0] = d[0] - lambda;
+    for i in 0..n - 1 {
+        let si = if s[i] != 0.0 { s[i] } else { EPS };
+        l[i] = e[i] / si;
+        s[i + 1] = d[i + 1] - lambda - e[i] * l[i];
+    }
+    // backward: p[i] (D− diagonal), u[i] = e[i]/p[i+1]
+    let mut p = vec![0.0f64; n];
+    let mut u = vec![0.0f64; n - 1];
+    p[n - 1] = d[n - 1] - lambda;
+    for i in (0..n - 1).rev() {
+        let pi = if p[i + 1] != 0.0 { p[i + 1] } else { EPS };
+        u[i] = e[i] / pi;
+        p[i] = d[i] - lambda - e[i] * u[i];
+    }
+    // twist index: γ_k = s_k + p_k − (d_k − λ)
+    let mut kbest = 0;
+    let mut gbest = f64::INFINITY;
+    for kk in 0..n {
+        let g = (s[kk] + p[kk] - (d[kk] - lambda)).abs();
+        if g < gbest {
+            gbest = g;
+            kbest = kk;
+        }
+    }
+    x[kbest] = 1.0;
+    for i in (0..kbest).rev() {
+        x[i] = -l[i] * x[i + 1];
+    }
+    for i in kbest..n - 1 {
+        x[i + 1] = -u[i] * x[i];
+    }
+    let norm: f64 = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    for v in &mut x {
+        *v /= norm;
+    }
+    x
+}
+
+// ---------------------------------------------------------------------
+// dense drivers
+// ---------------------------------------------------------------------
+
+fn reduce(a: &mut [f64], n: usize, lda: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut d = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n.saturating_sub(1)];
+    let mut tau = vec![0.0f64; n.saturating_sub(1)];
+    dsytrd(n, a, lda, &mut d, &mut e, &mut tau);
+    (d, e, tau)
+}
+
+/// dsyev: QL/QR iteration driver. `a` (lower symmetric, n×n, ld=lda)
+/// is destroyed. `want_vectors` selects jobz='V'.
+pub fn dsyev(n: usize, a: &mut [f64], lda: usize, want_vectors: bool) -> Result<EigResult> {
+    let (mut d, mut e, tau) = reduce(a, n, lda);
+    if !want_vectors {
+        dsteqr(&mut d, &mut e, None)?;
+        return Ok(EigResult { values: d, vectors: None });
+    }
+    let mut z = identity(n);
+    dsteqr(&mut d, &mut e, Some(&mut z))?;
+    back_transform(n, a, lda, &tau, &mut z, n, n);
+    Ok(EigResult { values: d, vectors: Some(z) })
+}
+
+/// dsyevd: divide & conquer driver.
+pub fn dsyevd(n: usize, a: &mut [f64], lda: usize, want_vectors: bool) -> Result<EigResult> {
+    let (mut d, e, tau) = reduce(a, n, lda);
+    let z = dstedc(&mut d, &e, want_vectors)?;
+    let vectors = match z {
+        None => None,
+        Some(mut z) => {
+            back_transform(n, a, lda, &tau, &mut z, n, n);
+            Some(z)
+        }
+    };
+    // dstedc returns ascending values already (secular merge sorts)
+    Ok(EigResult { values: d, vectors })
+}
+
+/// dsyevx: bisection + inverse iteration driver (range='A').
+pub fn dsyevx(n: usize, a: &mut [f64], lda: usize, want_vectors: bool) -> Result<EigResult> {
+    let (d, e, tau) = reduce(a, n, lda);
+    let lambdas = dstebz(&d, &e, 0.0);
+    if !want_vectors {
+        return Ok(EigResult { values: lambdas, vectors: None });
+    }
+    let mut z = dstein(&d, &e, &lambdas);
+    back_transform(n, a, lda, &tau, &mut z, n, n);
+    Ok(EigResult { values: lambdas, vectors: Some(z) })
+}
+
+/// dsyevr: bisection + twisted-factorization driver (simplified MRRR).
+/// Isolated eigenvalues get a single twisted solve; clustered ones are
+/// Gram-Schmidt re-orthogonalized.
+pub fn dsyevr(n: usize, a: &mut [f64], lda: usize, want_vectors: bool) -> Result<EigResult> {
+    let (d, e, tau) = reduce(a, n, lda);
+    let lambdas = dstebz(&d, &e, 0.0);
+    if !want_vectors {
+        return Ok(EigResult { values: lambdas, vectors: None });
+    }
+    let mut z = vec![0.0f64; n * n];
+    let spread =
+        lambdas.last().copied().unwrap_or(1.0) - lambdas.first().copied().unwrap_or(0.0);
+    let cluster_tol = spread.abs().max(1.0) * 1e-7;
+    for j in 0..n {
+        let v = twisted_eigenvector(&d, &e, lambdas[j]);
+        z[j * n..(j + 1) * n].copy_from_slice(&v);
+        // cluster fallback: orthogonalize against close predecessors
+        let mut jj = j;
+        while jj > 0 && (lambdas[j] - lambdas[jj - 1]).abs() < cluster_tol {
+            jj -= 1;
+        }
+        if jj < j {
+            for prev in jj..j {
+                let mut dot = 0.0;
+                for i in 0..n {
+                    dot += z[prev * n + i] * z[j * n + i];
+                }
+                for i in 0..n {
+                    z[j * n + i] -= dot * z[prev * n + i];
+                }
+            }
+            let norm: f64 =
+                z[j * n..(j + 1) * n].iter().map(|v| v * v).sum::<f64>().sqrt();
+            if norm > 0.0 {
+                for v in &mut z[j * n..(j + 1) * n] {
+                    *v /= norm;
+                }
+            }
+        }
+    }
+    back_transform(n, a, lda, &tau, &mut z, n, n);
+    Ok(EigResult { values: lambdas, vectors: Some(z) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    fn symmetrize_lower(a: &Matrix) -> Matrix {
+        let n = a.n;
+        Matrix::from_fn(n, n, |i, j| if i >= j { a[(i, j)] } else { a[(j, i)] })
+    }
+
+    fn check_driver(
+        driver: fn(usize, &mut [f64], usize, bool) -> Result<EigResult>,
+        n: usize,
+        seed: u64,
+        tol: f64,
+    ) {
+        let mut rng = Xoshiro256::seeded(seed);
+        let a0 = Matrix::random_spd(n, &mut rng);
+        let sym = symmetrize_lower(&a0);
+        let mut a = a0.clone();
+        let res = driver(n, &mut a.data, n, true).unwrap();
+        // ascending
+        for w in res.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+        // residuals ‖A v − λ v‖
+        let z = res.vectors.as_ref().unwrap();
+        let anorm = sym.frobenius();
+        for j in 0..n {
+            let v = &z[j * n..(j + 1) * n];
+            let mut resid = 0.0f64;
+            for i in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += sym[(i, k)] * v[k];
+                }
+                resid = resid.max((s - res.values[j] * v[i]).abs());
+            }
+            assert!(resid < tol * anorm, "col {j}: resid {resid} anorm {anorm}");
+        }
+        // orthogonality
+        let err = super::super::tridiag::orthogonality_error(z, n, n);
+        assert!(err < tol * 100.0, "orthogonality error {err}");
+        // trace preserved
+        let tr: f64 = (0..n).map(|i| sym[(i, i)]).sum();
+        let sum: f64 = res.values.iter().sum();
+        assert!((tr - sum).abs() < 1e-8 * tr.abs());
+    }
+
+    #[test]
+    fn syev_small() {
+        check_driver(dsyev, 15, 70, 1e-10);
+    }
+
+    #[test]
+    fn syevd_small() {
+        check_driver(dsyevd, 15, 71, 1e-8);
+    }
+
+    #[test]
+    fn syevd_crosses_dc_cutoff() {
+        check_driver(dsyevd, 60, 72, 1e-8);
+    }
+
+    #[test]
+    fn syevx_small() {
+        check_driver(dsyevx, 15, 73, 1e-8);
+    }
+
+    #[test]
+    fn syevr_small() {
+        check_driver(dsyevr, 15, 74, 1e-8);
+    }
+
+    #[test]
+    fn syevr_medium() {
+        check_driver(dsyevr, 40, 75, 1e-7);
+    }
+
+    #[test]
+    fn drivers_agree_on_values() {
+        let n = 25;
+        let mut rng = Xoshiro256::seeded(76);
+        let a0 = Matrix::random_spd(n, &mut rng);
+        let run = |f: fn(usize, &mut [f64], usize, bool) -> Result<EigResult>| {
+            let mut a = a0.clone();
+            f(n, &mut a.data, n, false).unwrap().values
+        };
+        let v1 = run(dsyev);
+        let v2 = run(dsyevd);
+        let v3 = run(dsyevx);
+        let v4 = run(dsyevr);
+        for i in 0..n {
+            assert!((v1[i] - v2[i]).abs() < 1e-7 * v1[i].abs().max(1.0), "d&c {i}");
+            assert!((v1[i] - v3[i]).abs() < 1e-7 * v1[i].abs().max(1.0), "bisect {i}");
+            assert!((v1[i] - v4[i]).abs() < 1e-7 * v1[i].abs().max(1.0), "mrrr {i}");
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] — eigenvalues 1 and 3
+        let mut a = vec![2.0, 1.0, 1.0, 2.0];
+        let res = dsyev(2, &mut a, 2, true).unwrap();
+        assert!((res.values[0] - 1.0).abs() < 1e-12);
+        assert!((res.values[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sturm_count_splits_spectrum() {
+        // tridiagonal with d = [1,2,3], e = [0,0] — eigenvalues 1,2,3
+        let d = [1.0, 2.0, 3.0];
+        let e = [0.0, 0.0];
+        assert_eq!(sturm_count(&d, &e, 0.5), 0);
+        assert_eq!(sturm_count(&d, &e, 1.5), 1);
+        assert_eq!(sturm_count(&d, &e, 2.5), 2);
+        assert_eq!(sturm_count(&d, &e, 3.5), 3);
+    }
+
+    #[test]
+    fn stebz_diagonal_matrix() {
+        let d = [3.0, 1.0, 2.0];
+        let e = [0.0, 0.0];
+        let ev = dstebz(&d, &e, 0.0);
+        assert!((ev[0] - 1.0).abs() < 1e-9);
+        assert!((ev[1] - 2.0).abs() < 1e-9);
+        assert!((ev[2] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn twisted_matches_known_eigvec() {
+        // T = [[2,1],[1,2]], λ=1 → v = (1,-1)/√2
+        let v = twisted_eigenvector(&[2.0, 2.0], &[1.0], 1.0);
+        assert!((v[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-8);
+        assert!((v[0] + v[1]).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,19 @@
+//! LAPACK-level routines built on the BLAS layers: factorizations,
+//! solvers, eigensolvers (four symmetric drivers, as compared in the
+//! paper's Fig. 5), triangular inversion (the paper's block-size study,
+//! Fig. 6) and the triangular Sylvester equation in three algorithmic
+//! variants (the paper's library study, Fig. 12).
+
+pub mod getrf;
+pub mod potrf;
+pub mod trtri;
+pub mod tridiag;
+pub mod eig;
+pub mod trsyl;
+
+pub use getrf::{dgesv, dgetrf, dgetrf_unblocked, dgetrs, dlaswp};
+pub use potrf::{dposv, dpotrf, dpotrf_unblocked, dpotrs};
+pub use trtri::{dtrti2, dtrtri, dtrtri_blocked};
+pub use tridiag::{dorgtr, dsytrd};
+pub use eig::{dsyev, dsyevd, dsyevr, dsyevx, EigResult};
+pub use trsyl::{dtrsyl_blocked, dtrsyl_recursive, dtrsyl_unblocked};

@@ -1,0 +1,252 @@
+//! Cholesky factorization (dpotrf), triangular solve after Cholesky
+//! (dpotrs) and the combined driver (dposv) — the kernels at the heart
+//! of the paper's GWAS study (Fig. 14).
+
+use crate::linalg::blas3::{dgemm, dsyrk, dtrsm};
+use crate::linalg::{Diag, LinalgError, Result, Side, Trans, Uplo};
+
+#[inline(always)]
+fn idx(i: usize, j: usize, ld: usize) -> usize {
+    i + j * ld
+}
+
+/// Unblocked Cholesky: A = L·Lᵀ (Lower) or UᵀU (Upper), in place.
+pub fn dpotrf_unblocked(uplo: Uplo, n: usize, a: &mut [f64], lda: usize) -> Result<()> {
+    match uplo {
+        Uplo::Lower => {
+            for j in 0..n {
+                let mut d = a[idx(j, j, lda)];
+                for k in 0..j {
+                    d -= a[idx(j, k, lda)] * a[idx(j, k, lda)];
+                }
+                if d <= 0.0 {
+                    return Err(LinalgError::NotPositiveDefinite(j));
+                }
+                let d = d.sqrt();
+                a[idx(j, j, lda)] = d;
+                for i in j + 1..n {
+                    let mut s = a[idx(i, j, lda)];
+                    for k in 0..j {
+                        s -= a[idx(i, k, lda)] * a[idx(j, k, lda)];
+                    }
+                    a[idx(i, j, lda)] = s / d;
+                }
+            }
+        }
+        Uplo::Upper => {
+            for j in 0..n {
+                let mut d = a[idx(j, j, lda)];
+                for k in 0..j {
+                    d -= a[idx(k, j, lda)] * a[idx(k, j, lda)];
+                }
+                if d <= 0.0 {
+                    return Err(LinalgError::NotPositiveDefinite(j));
+                }
+                let d = d.sqrt();
+                a[idx(j, j, lda)] = d;
+                for i in j + 1..n {
+                    let mut s = a[idx(j, i, lda)];
+                    for k in 0..j {
+                        s -= a[idx(k, j, lda)] * a[idx(k, i, lda)];
+                    }
+                    a[idx(j, i, lda)] = s / d;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Blocked Cholesky (LAPACK dpotrf), Lower variant blocked, Upper
+/// delegated per-block.
+pub fn dpotrf(uplo: Uplo, n: usize, a: &mut [f64], lda: usize) -> Result<()> {
+    dpotrf_nb(uplo, n, a, lda, 64)
+}
+
+/// Blocked Cholesky with explicit block size.
+pub fn dpotrf_nb(uplo: Uplo, n: usize, a: &mut [f64], lda: usize, nb: usize) -> Result<()> {
+    if nb <= 1 || nb >= n {
+        return dpotrf_unblocked(uplo, n, a, lda);
+    }
+    if uplo == Uplo::Upper {
+        // Factor the lower layout of Aᵀ: for simplicity use unblocked
+        // for Upper (the experiments use Lower).
+        return dpotrf_unblocked(uplo, n, a, lda);
+    }
+    let mut j = 0;
+    while j < n {
+        let jb = nb.min(n - j);
+        // A11 -= L10 · L10ᵀ (syrk on the diagonal block)
+        if j > 0 {
+            // pack L10 (jb × j)
+            let mut l10 = vec![0.0f64; jb * j];
+            for c in 0..j {
+                l10[c * jb..(c + 1) * jb]
+                    .copy_from_slice(&a[idx(j, c, lda)..idx(j, c, lda) + jb]);
+            }
+            dsyrk(
+                Uplo::Lower, Trans::No, jb, j, -1.0, &l10, jb, 1.0,
+                &mut a[idx(j, j, lda)..], lda,
+            );
+            // A21 -= L20 · L10ᵀ
+            if j + jb < n {
+                let mrem = n - j - jb;
+                let mut l20 = vec![0.0f64; mrem * j];
+                for c in 0..j {
+                    l20[c * mrem..(c + 1) * mrem]
+                        .copy_from_slice(&a[idx(j + jb, c, lda)..idx(j + jb, c, lda) + mrem]);
+                }
+                dgemm(
+                    Trans::No, Trans::Yes, mrem, jb, j, -1.0, &l20, mrem, &l10, jb, 1.0,
+                    &mut a[idx(j + jb, j, lda)..], lda,
+                );
+            }
+        }
+        // factor diagonal block (in place, offset view)
+        {
+            let sub = &mut a[idx(j, j, lda)..];
+            dpotrf_unblocked(Uplo::Lower, jb, sub, lda)
+                .map_err(|e| match e {
+                    LinalgError::NotPositiveDefinite(i) => {
+                        LinalgError::NotPositiveDefinite(i + j)
+                    }
+                    other => other,
+                })?;
+        }
+        // L21 := A21 · L11⁻ᵀ
+        if j + jb < n {
+            let mrem = n - j - jb;
+            let mut l11 = vec![0.0f64; jb * jb];
+            for c in 0..jb {
+                l11[c * jb..(c + 1) * jb]
+                    .copy_from_slice(&a[idx(j, j + c, lda)..idx(j, j + c, lda) + jb]);
+            }
+            dtrsm(
+                Side::Right, Uplo::Lower, Trans::Yes, Diag::NonUnit, mrem, jb, 1.0,
+                &l11, jb, &mut a[idx(j + jb, j, lda)..], lda,
+            );
+        }
+        j += jb;
+    }
+    Ok(())
+}
+
+/// Solve A·X = B given the Cholesky factor (LAPACK dpotrs).
+pub fn dpotrs(
+    uplo: Uplo,
+    n: usize,
+    nrhs: usize,
+    a: &[f64],
+    lda: usize,
+    b: &mut [f64],
+    ldb: usize,
+) {
+    match uplo {
+        Uplo::Lower => {
+            dtrsm(Side::Left, Uplo::Lower, Trans::No, Diag::NonUnit, n, nrhs, 1.0, a, lda, b, ldb);
+            dtrsm(Side::Left, Uplo::Lower, Trans::Yes, Diag::NonUnit, n, nrhs, 1.0, a, lda, b, ldb);
+        }
+        Uplo::Upper => {
+            dtrsm(Side::Left, Uplo::Upper, Trans::Yes, Diag::NonUnit, n, nrhs, 1.0, a, lda, b, ldb);
+            dtrsm(Side::Left, Uplo::Upper, Trans::No, Diag::NonUnit, n, nrhs, 1.0, a, lda, b, ldb);
+        }
+    }
+}
+
+/// Cholesky solve driver: factor + solve (LAPACK dposv).
+pub fn dposv(
+    uplo: Uplo,
+    n: usize,
+    nrhs: usize,
+    a: &mut [f64],
+    lda: usize,
+    b: &mut [f64],
+    ldb: usize,
+) -> Result<()> {
+    dpotrf(uplo, n, a, lda)?;
+    dpotrs(uplo, n, nrhs, a, lda, b, ldb);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn potrf_lower_reconstructs() {
+        let mut rng = Xoshiro256::seeded(40);
+        let n = 24;
+        let a0 = Matrix::random_spd(n, &mut rng);
+        let mut a = a0.clone();
+        dpotrf_nb(Uplo::Lower, n, &mut a.data, n, 8).unwrap();
+        // L·Lᵀ == A0
+        let mut l = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in j..n {
+                l[(i, j)] = a[(i, j)];
+            }
+        }
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.max_abs_diff(&a0) < 1e-10);
+    }
+
+    #[test]
+    fn potrf_upper_reconstructs() {
+        let mut rng = Xoshiro256::seeded(41);
+        let n = 12;
+        let a0 = Matrix::random_spd(n, &mut rng);
+        let mut a = a0.clone();
+        dpotrf_unblocked(Uplo::Upper, n, &mut a.data, n).unwrap();
+        let mut u = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..=j {
+                u[(i, j)] = a[(i, j)];
+            }
+        }
+        let rec = u.transpose().matmul(&u);
+        assert!(rec.max_abs_diff(&a0) < 1e-10);
+    }
+
+    #[test]
+    fn posv_solves_both_uplos() {
+        let mut rng = Xoshiro256::seeded(42);
+        let n = 30;
+        let nrhs = 4;
+        for &uplo in &[Uplo::Lower, Uplo::Upper] {
+            let a0 = Matrix::random_spd(n, &mut rng);
+            let x = Matrix::random(n, nrhs, &mut rng);
+            let b0 = a0.matmul(&x);
+            let mut a = a0.clone();
+            let mut b = b0.clone();
+            dposv(uplo, n, nrhs, &mut a.data, n, &mut b.data, n).unwrap();
+            assert!(b.max_abs_diff(&x) < 1e-9, "{uplo:?}");
+        }
+    }
+
+    #[test]
+    fn not_positive_definite_detected() {
+        let mut a = Matrix::identity(3);
+        a[(2, 2)] = -1.0;
+        let err = dpotrf_unblocked(Uplo::Lower, 3, &mut a.data, 3).unwrap_err();
+        assert_eq!(err, LinalgError::NotPositiveDefinite(2));
+    }
+
+    #[test]
+    fn blocked_matches_unblocked() {
+        let mut rng = Xoshiro256::seeded(43);
+        let n = 29;
+        let a0 = Matrix::random_spd(n, &mut rng);
+        let mut au = a0.clone();
+        dpotrf_unblocked(Uplo::Lower, n, &mut au.data, n).unwrap();
+        let mut ab = a0.clone();
+        dpotrf_nb(Uplo::Lower, n, &mut ab.data, n, 7).unwrap();
+        // compare lower triangles
+        for j in 0..n {
+            for i in j..n {
+                assert!((au[(i, j)] - ab[(i, j)]).abs() < 1e-11);
+            }
+        }
+    }
+}

@@ -1,0 +1,294 @@
+//! Householder tridiagonalization of a symmetric matrix (LAPACK
+//! dsytd2/dsytrd, lower-storage variant), explicit Q formation
+//! (dorgtr) and reflector application (dormtr-style back-transform).
+//!
+//! All four symmetric eigensolver drivers ([`super::eig`]) share this
+//! reduction — exactly as in LAPACK, where dsyev/dsyevd/dsyevx/dsyevr
+//! differ only in the tridiagonal stage the paper's Fig. 5 compares.
+
+use crate::linalg::blas1::{daxpy, ddot, dnrm2, dscal};
+use crate::linalg::blas2::dsymv;
+use crate::linalg::Uplo;
+
+#[inline(always)]
+fn idx(i: usize, j: usize, ld: usize) -> usize {
+    i + j * ld
+}
+
+/// Generate an elementary Householder reflector H = I - tau·v·vᵀ with
+/// v[0] = 1 such that H·x = (beta, 0, …, 0)ᵀ (LAPACK dlarfg).
+/// `x[0]` is alpha on entry, beta on exit; `x[1..]` becomes v[1..].
+/// Returns tau.
+pub fn dlarfg(n: usize, x: &mut [f64], incx: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let alpha = x[0];
+    let xnorm = dnrm2(n - 1, &x[incx..], incx);
+    if xnorm == 0.0 {
+        return 0.0;
+    }
+    let beta = -(alpha.hypot(xnorm)).copysign(alpha);
+    let tau = (beta - alpha) / beta;
+    let scale = 1.0 / (alpha - beta);
+    dscal(n - 1, scale, &mut x[incx..], incx);
+    x[0] = beta;
+    tau
+}
+
+/// Tridiagonalize a symmetric matrix stored in the lower triangle:
+/// A = Q·T·Qᵀ. On exit the reflector vectors are stored below the first
+/// subdiagonal of `a`; `d` receives the diagonal of T, `e` the
+/// subdiagonal, `tau` the reflector scalars (LAPACK dsytd2, uplo='L').
+pub fn dsytrd(n: usize, a: &mut [f64], lda: usize, d: &mut [f64], e: &mut [f64], tau: &mut [f64]) {
+    for i in 0..n.saturating_sub(1) {
+        let len = n - i - 1; // length of the column below the diagonal
+        // Generate reflector to annihilate A(i+2.., i)
+        let taui = dlarfg(len, &mut a[idx(i + 1, i, lda)..], 1);
+        e[i] = a[idx(i + 1, i, lda)];
+        tau[i] = taui;
+        if taui != 0.0 {
+            // Apply H to the trailing submatrix A(i+1.., i+1..):
+            // with v = (1, A(i+2.., i)):
+            a[idx(i + 1, i, lda)] = 1.0;
+            // w := tau · A22 · v
+            let mut w = vec![0.0f64; len];
+            {
+                let a22 = &a[idx(i + 1, i + 1, lda)..];
+                let v = &a[idx(i + 1, i, lda)..idx(i + 1, i, lda) + len];
+                dsymv(Uplo::Lower, len, taui, a22, lda, v, 1, 0.0, &mut w, 1);
+            }
+            // w := w - (tau/2)(wᵀv) v
+            let vwdot = {
+                let v = &a[idx(i + 1, i, lda)..idx(i + 1, i, lda) + len];
+                ddot(len, &w, 1, v, 1)
+            };
+            {
+                let v: Vec<f64> =
+                    a[idx(i + 1, i, lda)..idx(i + 1, i, lda) + len].to_vec();
+                daxpy(len, -0.5 * taui * vwdot, &v, 1, &mut w, 1);
+                // rank-2 update of the lower triangle:
+                // A22 := A22 - v·wᵀ - w·vᵀ
+                for j in 0..len {
+                    let vj = v[j];
+                    let wj = w[j];
+                    let col = idx(i + 1 + j, i + 1 + j, lda);
+                    for r in j..len {
+                        a[col + (r - j)] -= v[r] * wj + w[r] * vj;
+                    }
+                }
+            }
+            a[idx(i + 1, i, lda)] = e[i];
+        }
+        d[i] = a[idx(i, i, lda)];
+    }
+    if n > 0 {
+        d[n - 1] = a[idx(n - 1, n - 1, lda)];
+    }
+}
+
+/// Form Q explicitly from the dsytrd output (LAPACK dorgtr, lower).
+/// `q` must be n×n with ldq ≥ n.
+pub fn dorgtr(n: usize, a: &[f64], lda: usize, tau: &[f64], q: &mut [f64], ldq: usize) {
+    // Q = H(0)·H(1)···H(n-3); start from identity and apply reflectors
+    // from the last to the first.
+    for j in 0..n {
+        for i in 0..n {
+            q[idx(i, j, ldq)] = if i == j { 1.0 } else { 0.0 };
+        }
+    }
+    if n < 2 {
+        return;
+    }
+    for i in (0..n - 1).rev() {
+        apply_reflector_left(n, a, lda, tau, i, q, ldq);
+    }
+}
+
+/// Apply H(i) (from dsytrd, lower) to the rows i+1.. of an n-column
+/// matrix Z: Z := H(i)·Z. Shared by dorgtr and the eigensolver
+/// back-transforms (dormtr 'L','L','N').
+pub fn apply_reflector_left(
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    tau: &[f64],
+    i: usize,
+    z: &mut [f64],
+    ldz: usize,
+) {
+    let taui = tau[i];
+    if taui == 0.0 {
+        return;
+    }
+    let len = n - i - 1;
+    // v = (1, A(i+2.., i)) acting on rows i+1..n
+    let mut v = vec![0.0f64; len];
+    v[0] = 1.0;
+    if len > 1 {
+        v[1..].copy_from_slice(&a[idx(i + 2, i, lda)..idx(i + 2, i, lda) + len - 1]);
+    }
+    for col in 0..n {
+        let zcol = &mut z[col * ldz + i + 1..col * ldz + i + 1 + len];
+        let s = ddot(len, &v, 1, zcol, 1);
+        daxpy(len, -taui * s, &v, 1, zcol, 1);
+    }
+}
+
+/// Multiply Q (implicit, from dsytrd) into a tridiagonal eigenvector
+/// matrix: Z := Q·Z (LAPACK dormtr 'L','L','N' with Z n×m).
+pub fn back_transform(
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    tau: &[f64],
+    z: &mut [f64],
+    ldz: usize,
+    ncols: usize,
+) {
+    if n < 2 {
+        return;
+    }
+    // Q·Z = H(0)(H(1)(…H(n-3)·Z)) — apply last reflector first.
+    for i in (0..n - 1).rev() {
+        apply_reflector_left_cols(n, a, lda, tau, i, z, ldz, ncols);
+    }
+}
+
+fn apply_reflector_left_cols(
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    tau: &[f64],
+    i: usize,
+    z: &mut [f64],
+    ldz: usize,
+    ncols: usize,
+) {
+    let taui = tau[i];
+    if taui == 0.0 {
+        return;
+    }
+    let len = n - i - 1;
+    let mut v = vec![0.0f64; len];
+    v[0] = 1.0;
+    if len > 1 {
+        v[1..].copy_from_slice(&a[idx(i + 2, i, lda)..idx(i + 2, i, lda) + len - 1]);
+    }
+    for col in 0..ncols {
+        let zcol = &mut z[col * ldz + i + 1..col * ldz + i + 1 + len];
+        let s = ddot(len, &v, 1, zcol, 1);
+        daxpy(len, -taui * s, &v, 1, zcol, 1);
+    }
+}
+
+/// Assemble the explicit tridiagonal matrix T from d and e (test helper).
+pub fn tridiagonal_matrix(d: &[f64], e: &[f64]) -> crate::linalg::Matrix {
+    let n = d.len();
+    let mut t = crate::linalg::Matrix::zeros(n, n);
+    for i in 0..n {
+        t[(i, i)] = d[i];
+        if i + 1 < n {
+            t[(i + 1, i)] = e[i];
+            t[(i, i + 1)] = e[i];
+        }
+    }
+    t
+}
+
+/// Check transposes are consistent (test helper): ‖QᵀQ − I‖_max.
+pub fn orthogonality_error(q: &[f64], n: usize, ldq: usize) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0;
+            for k in 0..n {
+                s += q[idx(k, i, ldq)] * q[idx(k, j, ldq)];
+            }
+            let target = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((s - target).abs());
+        }
+    }
+    worst
+}
+
+#[allow(unused_imports)]
+use crate::linalg::Matrix;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    fn symmetrize_lower(a: &Matrix) -> Matrix {
+        let n = a.n;
+        Matrix::from_fn(n, n, |i, j| if i >= j { a[(i, j)] } else { a[(j, i)] })
+    }
+
+    #[test]
+    fn larfg_annihilates() {
+        let mut x = vec![3.0, 4.0, 0.0, 0.0];
+        let tau = dlarfg(2, &mut x, 1);
+        // H x = (beta, 0): |beta| = ||x|| = 5
+        assert!((x[0].abs() - 5.0).abs() < 1e-12);
+        assert!(tau > 0.0 && tau <= 2.0);
+    }
+
+    #[test]
+    fn sytrd_preserves_spectrum_structure() {
+        let mut rng = Xoshiro256::seeded(60);
+        let n = 12;
+        let a0full = Matrix::random_spd(n, &mut rng);
+        let mut a = a0full.clone();
+        let mut d = vec![0.0; n];
+        let mut e = vec![0.0; n - 1];
+        let mut tau = vec![0.0; n - 1];
+        dsytrd(n, &mut a.data, n, &mut d, &mut e, &mut tau);
+        // Q T Qᵀ == A0
+        let mut q = Matrix::zeros(n, n);
+        dorgtr(n, &a.data, n, &tau, &mut q.data, n);
+        assert!(orthogonality_error(&q.data, n, n) < 1e-12);
+        let t = tridiagonal_matrix(&d, &e);
+        let rec = q.matmul(&t).matmul(&q.transpose());
+        let sym = symmetrize_lower(&a0full);
+        assert!(rec.max_abs_diff(&sym) < 1e-10, "diff={}", rec.max_abs_diff(&sym));
+    }
+
+    #[test]
+    fn back_transform_matches_explicit_q() {
+        let mut rng = Xoshiro256::seeded(61);
+        let n = 9;
+        let a0 = Matrix::random_spd(n, &mut rng);
+        let mut a = a0.clone();
+        let mut d = vec![0.0; n];
+        let mut e = vec![0.0; n - 1];
+        let mut tau = vec![0.0; n - 1];
+        dsytrd(n, &mut a.data, n, &mut d, &mut e, &mut tau);
+        let mut q = Matrix::zeros(n, n);
+        dorgtr(n, &a.data, n, &tau, &mut q.data, n);
+        let z0 = Matrix::random(n, 4, &mut rng);
+        let expect = q.matmul(&z0);
+        let mut z = z0.clone();
+        back_transform(n, &a.data, n, &tau, &mut z.data, n, 4);
+        assert!(z.max_abs_diff(&expect) < 1e-11);
+    }
+
+    #[test]
+    fn sytrd_tiny_sizes() {
+        // n = 0, 1, 2 edge cases must not panic
+        let mut a = vec![4.0];
+        let mut d = vec![0.0];
+        dsytrd(1, &mut a, 1, &mut d, &mut [], &mut []);
+        assert_eq!(d[0], 4.0);
+
+        let mut a2 = vec![2.0, 1.0, 0.0, 3.0];
+        let mut d2 = vec![0.0; 2];
+        let mut e2 = vec![0.0; 1];
+        let mut tau2 = vec![0.0; 1];
+        dsytrd(2, &mut a2, 2, &mut d2, &mut e2, &mut tau2);
+        assert!((d2[0] - 2.0).abs() < 1e-14);
+        assert!((d2[1] - 3.0).abs() < 1e-14);
+        assert!((e2[0].abs() - 1.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,356 @@
+//! Triangular Sylvester equation  A·X + isgn·X·B = scale·C  (we fix
+//! scale = 1, isgn = +1), with A (m×m) and B (n×n) upper triangular —
+//! the kernel of the paper's library-selection study (§4.2, Fig. 12).
+//!
+//! Three algorithmic variants mirror the libraries the paper compares:
+//!
+//! * [`dtrsyl_unblocked`] — element/column-wise backward-substitution
+//!   (LAPACK's dtrsyl is unblocked; "reaches 2 Gflops/s … falls below
+//!   1"),
+//! * [`dtrsyl_blocked`]   — block partitioning with gemm updates
+//!   (libFLAME's approach),
+//! * [`dtrsyl_recursive`] — recursive splitting (RECSY's approach,
+//!   which the paper finds fastest).
+//!
+//! Restriction vs LAPACK: A and B are strictly triangular (real Schur
+//! quasi-triangular 2×2 bumps are not supported); callers must ensure
+//! spectra of A and −B are disjoint or `CommonEigenvalues` is returned.
+
+use crate::linalg::blas3::dgemm;
+use crate::linalg::{LinalgError, Result, Trans};
+
+#[inline(always)]
+fn idx(i: usize, j: usize, ld: usize) -> usize {
+    i + j * ld
+}
+
+const SMIN_FACTOR: f64 = 1e-12;
+
+/// Element-wise backward/forward substitution — faithful to LAPACK's
+/// netlib dtrsyl (trana='N', tranb='N'), which solves one 1×1 (dlasy2)
+/// system per element with two inner products, one of them a strided
+/// row-dot. This is the "unblocked reference library" variant: level-1
+/// BLAS bound, cache-hostile for large n, exactly like the LAPACK and
+/// MKL curves in the paper's Fig. 12.
+pub fn dtrsyl_unblocked(
+    m: usize,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) -> Result<()> {
+    // X[i,j] = (C[i,j] − Σ_{k>i} A[i,k]·X[k,j] − Σ_{l<j} X[i,l]·B[l,j])
+    //          / (A[i,i] + B[j,j])
+    for j in 0..n {
+        let bjj = b[idx(j, j, ldb)];
+        for i in (0..m).rev() {
+            // column-dot over A's row i (strided in A)
+            let mut s1 = 0.0;
+            for k in i + 1..m {
+                s1 += a[idx(i, k, lda)] * c[idx(k, j, ldc)];
+            }
+            // row-dot over X's row i (strided in C) — the LAPACK ddot
+            let mut s2 = 0.0;
+            for l in 0..j {
+                s2 += c[idx(i, l, ldc)] * b[idx(l, j, ldb)];
+            }
+            let diag = a[idx(i, i, lda)] + bjj;
+            if diag.abs() < SMIN_FACTOR {
+                return Err(LinalgError::CommonEigenvalues(i));
+            }
+            c[idx(i, j, ldc)] = (c[idx(i, j, ldc)] - s1 - s2) / diag;
+        }
+    }
+    Ok(())
+}
+
+/// Blocked variant: partition X into mb×nb tiles; solve diagonal-path
+/// subproblems unblocked and update with dgemm (libFLAME-style).
+pub fn dtrsyl_blocked(
+    m: usize,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+    mb: usize,
+    nb: usize,
+) -> Result<()> {
+    let mb = mb.max(1);
+    let nb = nb.max(1);
+    // Row blocks of A from bottom to top; column blocks of B left to
+    // right. For block (I, J):
+    //   A_II·X_IJ + X_IJ·B_JJ = C_IJ − Σ_{K>I} A_IK·X_KJ − Σ_{L<J} X_IL·B_LJ
+    let row_starts: Vec<usize> = (0..m).step_by(mb).collect();
+    let col_starts: Vec<usize> = (0..n).step_by(nb).collect();
+    for &j0 in &col_starts {
+        let jb = nb.min(n - j0);
+        // Horizontal update with all solved column-blocks L < J:
+        //   C[:, J] -= X[:, L] · B[L, J]
+        if j0 > 0 {
+            // pack X[:, 0..j0] (m×j0) and B[0..j0, j0..j0+jb]
+            let mut xl = vec![0.0f64; m * j0];
+            for cix in 0..j0 {
+                xl[cix * m..(cix + 1) * m]
+                    .copy_from_slice(&c[idx(0, cix, ldc)..idx(0, cix, ldc) + m]);
+            }
+            let mut blj = vec![0.0f64; j0 * jb];
+            for cix in 0..jb {
+                blj[cix * j0..(cix + 1) * j0]
+                    .copy_from_slice(&b[idx(0, j0 + cix, ldb)..idx(0, j0 + cix, ldb) + j0]);
+            }
+            dgemm(
+                Trans::No, Trans::No, m, jb, j0, -1.0, &xl, m, &blj, j0, 1.0,
+                &mut c[idx(0, j0, ldc)..], ldc,
+            );
+        }
+        for &i0 in row_starts.iter().rev() {
+            let ib = mb.min(m - i0);
+            // Vertical update with solved row-blocks K > I:
+            //   C[I, J] -= A[I, K] · X[K, J]
+            if i0 + ib < m {
+                let krows = m - i0 - ib;
+                let mut aik = vec![0.0f64; ib * krows];
+                for cix in 0..krows {
+                    aik[cix * ib..(cix + 1) * ib].copy_from_slice(
+                        &a[idx(i0, i0 + ib + cix, lda)..idx(i0, i0 + ib + cix, lda) + ib],
+                    );
+                }
+                let mut xkj = vec![0.0f64; krows * jb];
+                for cix in 0..jb {
+                    xkj[cix * krows..(cix + 1) * krows].copy_from_slice(
+                        &c[idx(i0 + ib, j0 + cix, ldc)..idx(i0 + ib, j0 + cix, ldc) + krows],
+                    );
+                }
+                let mut upd = vec![0.0f64; ib * jb];
+                dgemm(
+                    Trans::No, Trans::No, ib, jb, krows, 1.0, &aik, ib, &xkj, krows, 0.0,
+                    &mut upd, ib,
+                );
+                for cix in 0..jb {
+                    for r in 0..ib {
+                        c[idx(i0 + r, j0 + cix, ldc)] -= upd[r + cix * ib];
+                    }
+                }
+            }
+            // Solve the (ib × jb) diagonal subproblem unblocked. Pack
+            // the diagonal blocks of A and B.
+            let mut aii = vec![0.0f64; ib * ib];
+            for cix in 0..ib {
+                aii[cix * ib..(cix + 1) * ib]
+                    .copy_from_slice(&a[idx(i0, i0 + cix, lda)..idx(i0, i0 + cix, lda) + ib]);
+            }
+            let mut bjj = vec![0.0f64; jb * jb];
+            for cix in 0..jb {
+                bjj[cix * jb..(cix + 1) * jb]
+                    .copy_from_slice(&b[idx(j0, j0 + cix, ldb)..idx(j0, j0 + cix, ldb) + jb]);
+            }
+            let mut cij = vec![0.0f64; ib * jb];
+            for cix in 0..jb {
+                cij[cix * ib..(cix + 1) * ib].copy_from_slice(
+                    &c[idx(i0, j0 + cix, ldc)..idx(i0, j0 + cix, ldc) + ib],
+                );
+            }
+            trsyl_base(ib, jb, &aii, ib, &bjj, jb, &mut cij, ib)
+                .map_err(|e| shift_common(e, i0))?;
+            for cix in 0..jb {
+                c[idx(i0, j0 + cix, ldc)..idx(i0, j0 + cix, ldc) + ib]
+                    .copy_from_slice(&cij[cix * ib..(cix + 1) * ib]);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn shift_common(e: LinalgError, off: usize) -> LinalgError {
+    match e {
+        LinalgError::CommonEigenvalues(i) => LinalgError::CommonEigenvalues(i + off),
+        other => other,
+    }
+}
+
+const REC_BASE: usize = 64;
+
+/// Block solver used at the recursion base: one column sweep with a
+/// fused update (level-2.5; RECSY's small-problem kernel analog).
+fn trsyl_base(
+    m: usize,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) -> Result<()> {
+    // column sweep: (A + b_jj I) x_j = c_j − X[:,<j]·B[<j,j]
+    for j in 0..n {
+        let bjj = b[idx(j, j, ldb)];
+        for k in 0..j {
+            let bkj = b[idx(k, j, ldb)];
+            if bkj != 0.0 {
+                for i in 0..m {
+                    let xki = c[idx(i, k, ldc)];
+                    c[idx(i, j, ldc)] -= xki * bkj;
+                }
+            }
+        }
+        for i in (0..m).rev() {
+            let mut s = c[idx(i, j, ldc)];
+            for k in i + 1..m {
+                s -= a[idx(i, k, lda)] * c[idx(k, j, ldc)];
+            }
+            let diag = a[idx(i, i, lda)] + bjj;
+            if diag.abs() < SMIN_FACTOR {
+                return Err(LinalgError::CommonEigenvalues(i));
+            }
+            c[idx(i, j, ldc)] = s / diag;
+        }
+    }
+    Ok(())
+}
+
+/// Recursive variant (RECSY-style): split the larger dimension in
+/// half, solve recursively, update with one gemm. Submatrices are
+/// views (offset + leading dimension); the only pack is the X₂ row
+/// panel needed to satisfy Rust aliasing in the m-split update.
+pub fn dtrsyl_recursive(
+    m: usize,
+    n: usize,
+    a: &[f64],
+    lda: usize,
+    b: &[f64],
+    ldb: usize,
+    c: &mut [f64],
+    ldc: usize,
+) -> Result<()> {
+    if m.max(n) <= REC_BASE {
+        return trsyl_base(m, n, a, lda, b, ldb, c, ldc);
+    }
+    if m >= n {
+        // split A = [[A11, A12], [0, A22]], rows of X/C likewise.
+        let m1 = m / 2;
+        let m2 = m - m1;
+        // bottom rows first: A22·X2 + X2·B = C2 (views at row offset)
+        dtrsyl_recursive(m2, n, &a[idx(m1, m1, lda)..], lda, b, ldb, &mut c[m1..], ldc)
+            .map_err(|e| shift_common(e, m1))?;
+        // C1 -= A12 · X2 — X2's rows interleave with C1's in memory,
+        // so pack the solved row panel once.
+        let mut x2 = vec![0.0f64; m2 * n];
+        for j in 0..n {
+            x2[j * m2..(j + 1) * m2]
+                .copy_from_slice(&c[idx(m1, j, ldc)..idx(m1, j, ldc) + m2]);
+        }
+        dgemm(
+            Trans::No, Trans::No, m1, n, m2, -1.0, &a[idx(0, m1, lda)..], lda, &x2, m2,
+            1.0, c, ldc,
+        );
+        // A11·X1 + X1·B = C1
+        dtrsyl_recursive(m1, n, a, lda, b, ldb, c, ldc)
+    } else {
+        // split B = [[B11, B12], [0, B22]], columns of X/C likewise.
+        let n1 = n / 2;
+        let n2 = n - n1;
+        // left columns first: A·X1 + X1·B11 = C1
+        dtrsyl_recursive(m, n1, a, lda, b, ldb, c, ldc)?;
+        // C2 -= X1 · B12 — column split is contiguous, no packing
+        let (c1, c2) = c.split_at_mut(n1 * ldc);
+        dgemm(
+            Trans::No, Trans::No, m, n2, n1, -1.0, c1, ldc, &b[idx(0, n1, ldb)..], ldb,
+            1.0, c2, ldc,
+        );
+        // A·X2 + X2·B22 = C2 (view at column offset)
+        dtrsyl_recursive(m, n2, a, lda, &b[idx(n1, n1, ldb)..], ldb, c2, ldc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::linalg::Uplo;
+    use crate::util::rng::Xoshiro256;
+
+    /// Build a well-posed problem: A upper-tri with diag in ]1,2[,
+    /// B upper-tri with diag in ]1,2[ ⇒ A + b_jj I never singular.
+    fn make_problem(m: usize, n: usize, seed: u64) -> (Matrix, Matrix, Matrix, Matrix) {
+        let mut rng = Xoshiro256::seeded(seed);
+        let a = Matrix::random_triangular(m, Uplo::Upper, &mut rng);
+        let b = Matrix::random_triangular(n, Uplo::Upper, &mut rng);
+        let x = Matrix::random(m, n, &mut rng);
+        // C = A X + X B
+        let c = {
+            let ax = a.matmul(&x);
+            let xb = x.matmul(&b);
+            Matrix::from_fn(m, n, |i, j| ax[(i, j)] + xb[(i, j)])
+        };
+        (a, b, x, c)
+    }
+
+    #[test]
+    fn unblocked_recovers_x() {
+        let (a, b, x, c) = make_problem(12, 9, 80);
+        let mut sol = c.clone();
+        dtrsyl_unblocked(12, 9, &a.data, 12, &b.data, 9, &mut sol.data, 12).unwrap();
+        assert!(sol.max_abs_diff(&x) < 1e-9);
+    }
+
+    #[test]
+    fn blocked_recovers_x() {
+        for &(mb, nb) in &[(4usize, 3usize), (5, 5), (100, 100)] {
+            let (a, b, x, c) = make_problem(17, 13, 81);
+            let mut sol = c.clone();
+            dtrsyl_blocked(17, 13, &a.data, 17, &b.data, 13, &mut sol.data, 17, mb, nb)
+                .unwrap();
+            assert!(sol.max_abs_diff(&x) < 1e-9, "mb={mb} nb={nb}");
+        }
+    }
+
+    #[test]
+    fn recursive_recovers_x() {
+        let (a, b, x, c) = make_problem(70, 50, 82);
+        let mut sol = c.clone();
+        dtrsyl_recursive(70, 50, &a.data, 70, &b.data, 50, &mut sol.data, 70).unwrap();
+        assert!(sol.max_abs_diff(&x) < 1e-8);
+    }
+
+    #[test]
+    fn variants_agree() {
+        let (a, b, _x, c) = make_problem(40, 40, 83);
+        let mut s1 = c.clone();
+        dtrsyl_unblocked(40, 40, &a.data, 40, &b.data, 40, &mut s1.data, 40).unwrap();
+        let mut s2 = c.clone();
+        dtrsyl_blocked(40, 40, &a.data, 40, &b.data, 40, &mut s2.data, 40, 8, 8).unwrap();
+        let mut s3 = c.clone();
+        dtrsyl_recursive(40, 40, &a.data, 40, &b.data, 40, &mut s3.data, 40).unwrap();
+        assert!(s1.max_abs_diff(&s2) < 1e-10);
+        assert!(s1.max_abs_diff(&s3) < 1e-10);
+    }
+
+    #[test]
+    fn common_eigenvalues_detected() {
+        // a_00 = 1, b_00 = -1 ⇒ a_00 + b_00 = 0
+        let a = Matrix::identity(2);
+        let mut b = Matrix::identity(2);
+        b[(0, 0)] = -1.0;
+        b[(1, 1)] = -1.0;
+        let mut c = Matrix::random(2, 2, &mut Xoshiro256::seeded(84));
+        let err = dtrsyl_unblocked(2, 2, &a.data, 2, &b.data, 2, &mut c.data, 2).unwrap_err();
+        assert!(matches!(err, LinalgError::CommonEigenvalues(_)));
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        for &(m, n) in &[(1usize, 8usize), (8, 1), (33, 7), (7, 33)] {
+            let (a, b, x, c) = make_problem(m, n, 85 + (m * 100 + n) as u64);
+            let mut sol = c.clone();
+            dtrsyl_recursive(m, n, &a.data, m, &b.data, n, &mut sol.data, m).unwrap();
+            assert!(sol.max_abs_diff(&x) < 1e-8, "m={m} n={n}");
+        }
+    }
+}

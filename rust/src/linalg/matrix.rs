@@ -1,0 +1,210 @@
+//! Owned column-major matrices and helpers used by tests, examples and
+//! the sampler's utility kernels.
+
+use crate::util::rng::Xoshiro256;
+
+/// An owned, dense, column-major `m×n` matrix of f64 with `ld == m`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub m: usize,
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(m: usize, n: usize) -> Matrix {
+        Matrix { m, n, data: vec![0.0; m * n] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = 1.0;
+        }
+        a
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(m: usize, n: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut a = Matrix::zeros(m, n);
+        for j in 0..n {
+            for i in 0..m {
+                a[(i, j)] = f(i, j);
+            }
+        }
+        a
+    }
+
+    /// Random entries uniform in ]0,1[ (like the sampler's `dgerand`).
+    pub fn random(m: usize, n: usize, rng: &mut Xoshiro256) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| rng.next_open01())
+    }
+
+    /// Random symmetric positive definite matrix: A = RᵀR + n·I
+    /// (like the sampler's `dporand`).
+    pub fn random_spd(n: usize, rng: &mut Xoshiro256) -> Matrix {
+        let r = Matrix::random(n, n, rng);
+        let mut a = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += r[(k, i)] * r[(k, j)];
+                }
+                a[(i, j)] = s;
+            }
+            a[(j, j)] += n as f64;
+        }
+        a
+    }
+
+    /// Random lower/upper triangular with a well-conditioned diagonal.
+    pub fn random_triangular(
+        n: usize,
+        uplo: super::Uplo,
+        rng: &mut Xoshiro256,
+    ) -> Matrix {
+        let mut a = Matrix::zeros(n, n);
+        for j in 0..n {
+            for i in 0..n {
+                let keep = match uplo {
+                    super::Uplo::Lower => i >= j,
+                    super::Uplo::Upper => i <= j,
+                };
+                if keep {
+                    a[(i, j)] = rng.next_open01() - 0.5;
+                }
+            }
+            a[(j, j)] = 1.0 + rng.next_open01(); // diag in ]1,2[
+        }
+        a
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.n, self.m, |i, j| self[(j, i)])
+    }
+
+    /// Naive reference matmul (for verifying the optimized paths).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.n, other.m);
+        let mut c = Matrix::zeros(self.m, other.n);
+        for j in 0..other.n {
+            for k in 0..self.n {
+                let bkj = other[(k, j)];
+                for i in 0..self.m {
+                    c[(i, j)] += self[(i, k)] * bkj;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.m, self.n), (other.m, other.n));
+        Matrix::from_fn(self.m, self.n, |i, j| self[(i, j)] - other[(i, j)])
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.m, self.n), (other.m, other.n));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.m..(j + 1) * self.m]
+    }
+
+    /// Leading dimension of the owned storage (== m).
+    pub fn ld(&self) -> usize {
+        self.m
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.m && j < self.n);
+        &self.data[i + j * self.m]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.m && j < self.n);
+        &mut self.data[i + j * self.m]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Uplo;
+
+    #[test]
+    fn identity_matmul() {
+        let mut rng = Xoshiro256::seeded(1);
+        let a = Matrix::random(4, 6, &mut rng);
+        let i4 = Matrix::identity(4);
+        assert!(i4.matmul(&a).max_abs_diff(&a) < 1e-15);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::seeded(2);
+        let a = Matrix::random(5, 3, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn spd_is_symmetric_and_diag_dominant() {
+        let mut rng = Xoshiro256::seeded(3);
+        let a = Matrix::random_spd(8, &mut rng);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((a[(i, j)] - a[(j, i)]).abs() < 1e-12);
+            }
+            assert!(a[(i, i)] > 8.0);
+        }
+    }
+
+    #[test]
+    fn triangular_structure() {
+        let mut rng = Xoshiro256::seeded(4);
+        let l = Matrix::random_triangular(6, Uplo::Lower, &mut rng);
+        let u = Matrix::random_triangular(6, Uplo::Upper, &mut rng);
+        for i in 0..6 {
+            for j in 0..6 {
+                if i < j {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+                if i > j {
+                    assert_eq!(u[(i, j)], 0.0);
+                }
+            }
+            assert!(l[(i, i)] >= 1.0 && u[(i, i)] >= 1.0);
+        }
+    }
+
+    #[test]
+    fn frobenius_of_identity() {
+        assert!((Matrix::identity(9).frobenius() - 3.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,132 @@
+//! From-scratch dense linear algebra substrate (f64, column-major,
+//! BLAS/LAPACK calling conventions with leading dimensions).
+//!
+//! The paper's experiments exercise vendor BLAS/LAPACK libraries
+//! (OpenBLAS, MKL, ESSL, Accelerate, RECSY, libFLAME). None are
+//! available here, so this module implements the needed kernel set from
+//! scratch, in several algorithmic variants (naive/unblocked, blocked
+//! with packed microkernel, recursive) — the variants *are* the
+//! "libraries" being compared in the library-selection experiments
+//! (DESIGN.md §Substitutions 1).
+//!
+//! Conventions: matrices are column-major slices; element (i,j) of an
+//! m×n matrix with leading dimension `ld >= m` is `a[i + j*ld]`.
+
+pub mod matrix;
+pub mod blas1;
+pub mod blas2;
+pub mod blas3;
+pub mod lapack;
+
+pub use matrix::Matrix;
+
+/// Transpose flag, mirroring the BLAS `trans` character argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trans {
+    /// 'N' — operate on A
+    No,
+    /// 'T' — operate on Aᵀ
+    Yes,
+}
+
+impl Trans {
+    pub fn from_char(c: char) -> Option<Trans> {
+        match c.to_ascii_uppercase() {
+            'N' => Some(Trans::No),
+            'T' | 'C' => Some(Trans::Yes),
+            _ => None,
+        }
+    }
+    pub fn as_char(self) -> char {
+        match self {
+            Trans::No => 'N',
+            Trans::Yes => 'T',
+        }
+    }
+}
+
+/// Upper/lower triangular flag (`uplo`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Uplo {
+    Upper,
+    Lower,
+}
+
+impl Uplo {
+    pub fn from_char(c: char) -> Option<Uplo> {
+        match c.to_ascii_uppercase() {
+            'U' => Some(Uplo::Upper),
+            'L' => Some(Uplo::Lower),
+            _ => None,
+        }
+    }
+    pub fn as_char(self) -> char {
+        match self {
+            Uplo::Upper => 'U',
+            Uplo::Lower => 'L',
+        }
+    }
+}
+
+/// Left/right multiplication side (`side`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Left,
+    Right,
+}
+
+impl Side {
+    pub fn from_char(c: char) -> Option<Side> {
+        match c.to_ascii_uppercase() {
+            'L' => Some(Side::Left),
+            'R' => Some(Side::Right),
+            _ => None,
+        }
+    }
+    pub fn as_char(self) -> char {
+        match self {
+            Side::Left => 'L',
+            Side::Right => 'R',
+        }
+    }
+}
+
+/// Unit-diagonal flag (`diag`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Diag {
+    NonUnit,
+    Unit,
+}
+
+impl Diag {
+    pub fn from_char(c: char) -> Option<Diag> {
+        match c.to_ascii_uppercase() {
+            'N' => Some(Diag::NonUnit),
+            'U' => Some(Diag::Unit),
+            _ => None,
+        }
+    }
+    pub fn as_char(self) -> char {
+        match self {
+            Diag::NonUnit => 'N',
+            Diag::Unit => 'U',
+        }
+    }
+}
+
+/// Errors reported by the LAPACK-level routines (mirrors `info`).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum LinalgError {
+    #[error("matrix is singular at pivot {0}")]
+    Singular(usize),
+    #[error("matrix is not positive definite at column {0}")]
+    NotPositiveDefinite(usize),
+    #[error("eigensolver failed to converge for eigenvalue {0}")]
+    NoConvergence(usize),
+    #[error("sylvester equation has common eigenvalues (perturbed at {0})")]
+    CommonEigenvalues(usize),
+    #[error("invalid argument {0}: {1}")]
+    BadArg(usize, &'static str),
+}
+
+pub type Result<T> = std::result::Result<T, LinalgError>;

@@ -1,0 +1,287 @@
+//! The `elaps` CLI — the framework's top layer (substituting the
+//! paper's PlayMat/Viewer GUI on this headless host; DESIGN.md
+//! §Substitutions 6).
+//!
+//! Subcommands:
+//!   run <exp.json>        run an experiment file (local or --batch)
+//!   view <report.json>    metrics/statistics of a stored report
+//!   plot <report.json>    ASCII + SVG plot of a stored report
+//!   figures [ids…]        regenerate the paper's tables/figures
+//!   sampler               stdin/stdout sampler (the paper's §3.1 tool)
+//!   worker --spool <dir>  batch-queue worker
+//!   kernels               list the kernel signature database
+//!   libraries             list available kernel libraries
+
+use anyhow::{anyhow, bail, Context, Result};
+use elaps::coordinator::{io, run_local, Metric, Spooler, Stat};
+use elaps::perfmodel::MachineModel;
+use elaps::sampler::Sampler;
+use elaps::util::cli::Args;
+use elaps::util::json::Json;
+use std::io::{BufRead, Write};
+
+const USAGE: &str = "\
+elaps — Experimental Linear Algebra Performance Studies (rust+JAX/Pallas)
+
+USAGE:
+  elaps run <experiment.json> [--batch --spool DIR] [--out report.json]
+  elaps view <report.json> [--metric M] [--stat S]
+  elaps plot <report.json> [--metric M] [--stat S] [--svg out.svg]
+  elaps figures [T1 F1 F2 …|all] [--full] [--out-dir figures_out]
+  elaps sampler [--library L] [--machine M]
+  elaps worker --spool DIR [--once]
+  elaps kernels
+  elaps libraries
+
+metrics: cycles time_s time_ms gflops flops_per_cycle efficiency
+stats:   min max avg med std
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn try_register_xla() {
+    let dir = elaps::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        if let Err(e) = elaps::runtime::register_xla_library(&dir) {
+            eprintln!("note: xla backend unavailable: {e:#}");
+        }
+    }
+}
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let Some(cmd) = raw.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(raw[1..].iter().cloned(), &["batch", "once", "full", "help"]);
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "view" => cmd_view(&args),
+        "plot" => cmd_plot(&args),
+        "figures" => cmd_figures(&args),
+        "sampler" => cmd_sampler(&args),
+        "worker" => cmd_worker(&args),
+        "kernels" => cmd_kernels(),
+        "libraries" => cmd_libraries(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn load_experiment(path: &str) -> Result<elaps::Experiment> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    io::experiment_from_json(&j)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let path = args.positional.first().ok_or_else(|| anyhow!("usage: elaps run <exp.json>"))?;
+    try_register_xla();
+    let exp = load_experiment(path)?;
+    let report = if args.flag("batch") {
+        let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+        let id = spool.submit(&exp)?;
+        println!("submitted job {id}; serving in-process worker…");
+        spool.serve_one()?;
+        spool.fetch(&id)?.ok_or_else(|| anyhow!("job produced no report"))?
+    } else {
+        run_local(&exp)?
+    };
+    print_report_summary(&report)?;
+    let out = args.opt_or("out", "report.json");
+    std::fs::write(out, io::report_to_json(&report).to_string_pretty())?;
+    println!("report written to {out}");
+    Ok(())
+}
+
+fn parse_metric(name: &str) -> Result<Metric> {
+    Ok(match name {
+        "cycles" => Metric::Cycles,
+        "time_s" => Metric::TimeS,
+        "time_ms" => Metric::TimeMs,
+        "gflops" => Metric::Gflops,
+        "flops_per_cycle" => Metric::FlopsPerCycle,
+        "efficiency" => Metric::Efficiency,
+        other => {
+            if let Some(i) = other.strip_prefix("counter") {
+                Metric::Counter(i.parse().unwrap_or(0))
+            } else {
+                bail!("unknown metric '{other}'")
+            }
+        }
+    })
+}
+
+fn load_report(args: &Args) -> Result<elaps::Report> {
+    let path = args.positional.first().ok_or_else(|| anyhow!("need a report file"))?;
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    io::report_from_json(&j)
+}
+
+fn print_report_summary(report: &elaps::Report) -> Result<()> {
+    println!(
+        "experiment '{}' on library '{}' ({} point(s), {} rep(s))",
+        report.experiment.name,
+        report.experiment.library,
+        report.points.len(),
+        report.experiment.nreps
+    );
+    if report.points.len() == 1 {
+        for (name, v) in report.metrics_table() {
+            println!("  {name:<18} {v:>16.4}");
+        }
+    } else {
+        println!("  {:>8} {:>14} {:>14}", "range", "Gflops/s(med)", "time[s](med)");
+        let g = report.series(Metric::Gflops, Stat::Median);
+        let t = report.series(Metric::TimeS, Stat::Median);
+        for (i, (x, gf)) in g.iter().enumerate() {
+            println!("  {x:>8} {gf:>14.4} {:>14.6}", t[i].1);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_view(args: &Args) -> Result<()> {
+    let report = load_report(args)?;
+    let metric = parse_metric(args.opt_or("metric", "gflops"))?;
+    let stat = Stat::by_name(args.opt_or("stat", "med"))
+        .ok_or_else(|| anyhow!("unknown stat"))?;
+    print_report_summary(&report)?;
+    println!("\n{} ({}):", metric.name(), stat.name());
+    for (x, v) in report.series(metric, stat) {
+        println!("  {x:>8} {v:>16.4}");
+    }
+    Ok(())
+}
+
+fn cmd_plot(args: &Args) -> Result<()> {
+    let report = load_report(args)?;
+    let metric = parse_metric(args.opt_or("metric", "gflops"))?;
+    let stat = Stat::by_name(args.opt_or("stat", "med"))
+        .ok_or_else(|| anyhow!("unknown stat"))?;
+    let mut fig = elaps::coordinator::Figure::new(
+        &report.experiment.name,
+        report
+            .experiment
+            .range
+            .as_ref()
+            .map(|r| r.sym.as_str())
+            .unwrap_or("point"),
+        &metric.name(),
+    );
+    fig.add_iseries(
+        &format!("{} ({})", report.experiment.library, stat.name()),
+        &report.series(metric, stat),
+    );
+    println!("{}", fig.to_ascii(70, 20));
+    if let Some(svg) = args.opt("svg") {
+        std::fs::write(svg, fig.to_svg(720, 440))?;
+        println!("svg written to {svg}");
+    }
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    try_register_xla();
+    let quick = !args.flag("full");
+    let out_dir = std::path::PathBuf::from(args.opt_or("out-dir", "figures_out"));
+    let ids: Vec<String> = if args.positional.is_empty()
+        || args.positional.iter().any(|p| p == "all")
+    {
+        elaps::figures::all_builders().iter().map(|(id, _)| id.to_string()).collect()
+    } else {
+        args.positional.clone()
+    };
+    for id in &ids {
+        println!("--- running {id} (quick={quick}) ---");
+        let t0 = std::time::Instant::now();
+        let out = elaps::figures::run_figure(id, quick)?;
+        out.write_to(&out_dir)?;
+        println!(
+            "{}: {} rows, {:.1}s → {}/{}.{{csv,svg,txt}}",
+            out.id,
+            out.rows.len(),
+            t0.elapsed().as_secs_f64(),
+            out_dir.display(),
+            out.id
+        );
+        println!("    {}", out.notes.replace('\n', "\n    "));
+    }
+    Ok(())
+}
+
+fn cmd_sampler(args: &Args) -> Result<()> {
+    try_register_xla();
+    let lib_name = args.opt_or("library", "rustblocked");
+    let library = elaps::libraries::by_name(lib_name)
+        .ok_or_else(|| anyhow!("unknown library '{lib_name}'"))?;
+    let machine = MachineModel::by_name(args.opt_or("machine", "localhost"))
+        .ok_or_else(|| anyhow!("unknown machine"))?;
+    let mut sampler = Sampler::new(library, machine);
+    let stdin = std::io::stdin();
+    let mut out = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        match sampler.feed_line(&line) {
+            Ok(records) => {
+                for r in records {
+                    writeln!(out, "{}", r.to_line())?;
+                }
+                out.flush()?;
+            }
+            Err(e) => {
+                writeln!(out, "error: {e:#}")?;
+                out.flush()?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    try_register_xla();
+    let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    let once = args.flag("once");
+    loop {
+        match spool.serve_one()? {
+            Some(id) => println!("served job {id}"),
+            None => {
+                if once {
+                    return Ok(());
+                }
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+fn cmd_kernels() -> Result<()> {
+    for (name, sig) in elaps::kernels::registry() {
+        let args: Vec<&str> = sig.args.iter().map(|(n, _)| *n).collect();
+        println!("{name:<8} ({})\n         {}", args.join(", "), sig.doc);
+    }
+    Ok(())
+}
+
+fn cmd_libraries() -> Result<()> {
+    try_register_xla();
+    for name in elaps::libraries::RUST_LIBRARIES {
+        println!("{name}");
+    }
+    for name in ["xla", "xla-pallas"] {
+        if elaps::libraries::by_name(name).is_some() {
+            println!("{name}  (AOT artifacts via PJRT)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! Machine and performance models.
+//!
+//! The paper's experiments run on five hardware platforms and read PAPI
+//! hardware counters; neither is available here (single-core container,
+//! no PMU access), so this module provides the substitutes described in
+//! DESIGN.md §Substitutions 2–4:
+//!
+//! * [`machine::MachineModel`] — frequency, peak flops/cycle, core
+//!   count and cache hierarchy for the platform ELAPS reports metrics
+//!   against (cycles = wallclock × frequency; efficiency = attained /
+//!   peak).
+//! * [`cache::CacheSim`] — a deterministic segment-LRU multi-level
+//!   cache simulator that stands in for PAPI cache-miss counters.
+//! * [`scaling`] — Amdahl-style thread-scaling models used to produce
+//!   the multi-threaded experiments (Figs. 5, 7, 13) from measured
+//!   single-thread rates on this 1-core host.
+
+pub mod machine;
+pub mod cache;
+pub mod scaling;
+
+pub use cache::CacheSim;
+pub use machine::MachineModel;

@@ -1,0 +1,139 @@
+//! Thread-scaling models (DESIGN.md §Substitutions 4).
+//!
+//! This host has one core, so the paper's multi-threaded measurements
+//! (library threads, OpenMP task parallelism, and hybrids — Figs. 5, 7
+//! and 13) are *derived*: the serial time of each kernel is measured
+//! for real, then scaled with an Amdahl model whose parallel fraction
+//! comes from the library ([`crate::libraries::KernelLibrary::
+//! parallel_fraction`]) and whose overheads come from the machine
+//! description. EXPERIMENTS.md marks every figure produced this way as
+//! `simulated-threads`.
+
+use super::machine::MachineModel;
+
+/// Time of one kernel call executed with `t` library-internal threads,
+/// given its measured serial time.
+///
+/// Amdahl with a per-thread synchronization overhead and a mild memory-
+/// bandwidth saturation term (parallel BLAS stops scaling once the
+/// memory bus saturates — visible in the paper's Fig. 5 as the flat
+/// tail).
+pub fn library_threads_time(
+    serial_s: f64,
+    parallel_fraction: f64,
+    t: usize,
+    machine: &MachineModel,
+) -> f64 {
+    let t = t.max(1).min(machine.cores) as f64;
+    let p = parallel_fraction.clamp(0.0, 1.0);
+    // bandwidth saturation: effective speedup of the parallel part
+    // grows slightly sublinearly (t^0.95)
+    let eff_t = t.powf(0.95);
+    serial_s * ((1.0 - p) + p / eff_t) + machine.task_overhead_s * (t - 1.0)
+}
+
+/// Time of `ntasks` independent tasks (each `task_s` seconds serial)
+/// scheduled over `omp_threads` OpenMP threads, each task itself using
+/// `inner_threads` library threads.
+///
+/// Models the three §4.3 paradigms:
+/// * `omp_threads = 1, inner_threads = t` — multi-threaded kernel,
+/// * `omp_threads = t, inner_threads = 1` — parallel sequential kernels,
+/// * both > 1 — the hybrid.
+pub fn omp_tasks_time(
+    task_s: f64,
+    ntasks: usize,
+    omp_threads: usize,
+    inner_threads: usize,
+    parallel_fraction: f64,
+    machine: &MachineModel,
+) -> f64 {
+    if ntasks == 0 {
+        return 0.0;
+    }
+    // an OpenMP runtime never spawns more workers than tasks — the
+    // spare cores remain available to each task's internal threading
+    // (this is what makes the paper's §4.3 hybrid win at low counts)
+    let omp = omp_threads.max(1).min(machine.cores).min(ntasks);
+    let avail_inner = (machine.cores / omp).max(1);
+    let inner = inner_threads.max(1).min(avail_inner);
+    let per_task = library_threads_time(task_s, parallel_fraction, inner, machine);
+    // tasks run in waves of `omp`
+    let waves = ntasks.div_ceil(omp);
+    // cache interference: concurrent tasks evict each other's working
+    // sets; mild penalty growing with concurrency
+    let concurrency = omp.min(ntasks);
+    let interference = 1.0 + 0.02 * (concurrency as f64 - 1.0).max(0.0);
+    waves as f64 * per_task * interference + machine.task_overhead_s * ntasks as f64
+}
+
+/// Speedup helper: serial / threaded.
+pub fn speedup(serial_s: f64, threaded_s: f64) -> f64 {
+    serial_s / threaded_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> MachineModel {
+        MachineModel::haswell_laptop()
+    }
+
+    #[test]
+    fn monotone_in_threads_for_parallel_kernel() {
+        let mm = m();
+        let mut prev = f64::INFINITY;
+        for t in 1..=8 {
+            let time = library_threads_time(1.0, 0.95, t, &mm);
+            assert!(time < prev, "t={t}: {time} !< {prev}");
+            prev = time;
+        }
+    }
+
+    #[test]
+    fn amdahl_limits_speedup() {
+        let mm = m();
+        let s8 = speedup(1.0, library_threads_time(1.0, 0.60, 8, &mm));
+        // 60% parallel ⇒ max speedup 1/(0.4 + 0.6/8) ≈ 2.1
+        assert!(s8 < 2.3, "{s8}");
+        assert!(s8 > 1.5, "{s8}");
+    }
+
+    #[test]
+    fn thread_count_clamped_to_cores() {
+        let mm = m();
+        let t8 = library_threads_time(1.0, 0.9, 8, &mm);
+        let t64 = library_threads_time(1.0, 0.9, 64, &mm);
+        assert_eq!(t8, t64);
+    }
+
+    #[test]
+    fn omp_beats_internal_threads_for_many_small_tasks() {
+        // the paper's Fig. 13 crossover: > cores tasks ⇒ OpenMP with
+        // sequential kernels beats one multi-threaded kernel at a time
+        let mm = m();
+        let ntasks = 16;
+        let task_s = 0.01;
+        let pf = 0.92; // dgetrf
+        let t_mt = omp_tasks_time(task_s, ntasks, 1, 8, pf, &mm);
+        let t_omp = omp_tasks_time(task_s, ntasks, 8, 1, pf, &mm);
+        assert!(t_omp < t_mt, "omp {t_omp} vs mt {t_mt}");
+    }
+
+    #[test]
+    fn hybrid_at_least_as_good_as_pure_omp_for_few_tasks() {
+        let mm = m();
+        // 2 tasks on 8 cores: hybrid (2 omp × 4 inner) must beat
+        // 8-way omp (6 threads idle)
+        let pf = 0.92;
+        let t_omp8 = omp_tasks_time(0.01, 2, 8, 1, pf, &mm);
+        let t_hybrid = omp_tasks_time(0.01, 2, 2, 4, pf, &mm);
+        assert!(t_hybrid < t_omp8, "hybrid {t_hybrid} vs omp {t_omp8}");
+    }
+
+    #[test]
+    fn zero_tasks_zero_time() {
+        assert_eq!(omp_tasks_time(1.0, 0, 4, 1, 0.9, &m()), 0.0);
+    }
+}

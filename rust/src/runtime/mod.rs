@@ -1,0 +1,423 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them on the PJRT CPU client, and
+//! expose them as the `xla` kernel-library backend.
+//!
+//! Python never runs here — the artifacts directory is the only
+//! contact surface between the build-time JAX/Pallas path and the Rust
+//! request path (see /opt/xla-example/load_hlo for the pattern).
+
+use crate::kernels::ArgValues;
+use crate::libraries::{KernelLibrary, OperandSet};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub kernel: String,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// "jnp" (vendor XLA dot) or "pallas" (the L1 kernel).
+    pub impl_name: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub key: ArtifactKey,
+    pub file: PathBuf,
+}
+
+/// The artifact registry: manifest index + lazily compiled
+/// executables.
+///
+/// The `xla` crate's PJRT wrappers are `Rc`-based and thus neither
+/// `Send` nor `Sync`; the PJRT C API itself is thread-safe. We restore
+/// `Send + Sync` by funneling *every* client/executable access through
+/// one mutex (`inner`), so no `Rc` handle is ever touched by two
+/// threads concurrently — see the `unsafe impl`s below.
+pub struct ArtifactRegistry {
+    artifacts: Vec<ArtifactMeta>,
+    inner: Mutex<RegistryInner>,
+    compiled: AtomicUsize,
+}
+
+struct RegistryInner {
+    client: xla::PjRtClient,
+    cache: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: all uses of the Rc-based PJRT wrappers are confined to
+// `RegistryInner`, only reachable through the `inner` mutex; no Rc
+// handle escapes a locked section.
+unsafe impl Send for ArtifactRegistry {}
+unsafe impl Sync for ArtifactRegistry {}
+
+impl ArtifactRegistry {
+    /// Read `<dir>/manifest.json` and prepare the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").as_arr().unwrap_or(&[]) {
+            let key = ArtifactKey {
+                kernel: a.get("kernel").as_str().unwrap_or("?").to_string(),
+                m: a.get("m").as_u64().unwrap_or(0) as usize,
+                n: a.get("n").as_u64().unwrap_or(0) as usize,
+                k: a.get("k").as_u64().unwrap_or(0) as usize,
+                impl_name: a.get("impl").as_str().unwrap_or("jnp").to_string(),
+            };
+            let file = dir.join(a.get("file").as_str().ok_or_else(|| anyhow!("missing file"))?);
+            if !file.exists() {
+                bail!("artifact {file:?} listed in manifest but missing on disk");
+            }
+            artifacts.push(ArtifactMeta { key, file });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest {manifest_path:?} lists no artifacts");
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactRegistry {
+            artifacts,
+            inner: Mutex::new(RegistryInner { client, cache: HashMap::new() }),
+            compiled: AtomicUsize::new(0),
+        })
+    }
+
+    pub fn artifact_count(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    /// How many executables have been compiled so far (diagnostics).
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.load(Ordering::Relaxed)
+    }
+
+    /// Find an artifact: exact (kernel, m, n, k) match, preferring the
+    /// requested impl but falling back to any.
+    pub fn find(&self, kernel: &str, m: usize, n: usize, k: usize, prefer: &str) -> Option<&ArtifactMeta> {
+        let mut fallback = None;
+        for a in &self.artifacts {
+            if a.key.kernel == kernel && a.key.m == m && a.key.n == n && a.key.k == k {
+                if a.key.impl_name == prefer {
+                    return Some(a);
+                }
+                fallback = Some(a);
+            }
+        }
+        fallback
+    }
+
+    /// Execute a gemm artifact on raw column-major buffers.
+    ///
+    /// Column-major bridge (see python/compile/model.py): the m×k A
+    /// buffer is bit-identical to Aᵀ in row-major (k, m); likewise B.
+    /// The artifact computes Bᵀ·Aᵀ = (A·B)ᵀ, whose row-major bytes are
+    /// C in column-major. alpha/beta are applied here (O(mn), keeps
+    /// the artifact generic).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_gemm(
+        &self,
+        meta: &ArtifactMeta,
+        a: &[f64],
+        b: &[f64],
+        c: &mut [f64],
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f64,
+        beta: f64,
+    ) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.cache.contains_key(&meta.key) {
+            let path = meta
+                .file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+            self.compiled.fetch_add(1, Ordering::Relaxed);
+            inner.cache.insert(meta.key.clone(), exe);
+        }
+        let exe = inner.cache.get(&meta.key).unwrap();
+        let bt = xla::Literal::vec1(&b[..k * n])
+            .reshape(&[n as i64, k as i64])
+            .map_err(|e| anyhow!("reshape B: {e:?}"))?;
+        let at = xla::Literal::vec1(&a[..m * k])
+            .reshape(&[k as i64, m as i64])
+            .map_err(|e| anyhow!("reshape A: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[bt, at])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let values = out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if values.len() != m * n {
+            bail!("artifact returned {} values, expected {}", values.len(), m * n);
+        }
+        if beta == 0.0 && alpha == 1.0 {
+            c[..m * n].copy_from_slice(&values);
+        } else {
+            for (ci, vi) in c[..m * n].iter_mut().zip(&values) {
+                *ci = alpha * vi + beta * *ci;
+            }
+        }
+        Ok(())
+    }
+
+    /// Warm the executable cache for a key (compile without running).
+    pub fn precompile(&self, meta: &ArtifactMeta) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.cache.contains_key(&meta.key) {
+            return Ok(());
+        }
+        let path = meta.file.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+        self.compiled.fetch_add(1, Ordering::Relaxed);
+        inner.cache.insert(meta.key.clone(), exe);
+        Ok(())
+    }
+}
+
+/// The `xla` kernel library: routes dgemm calls with artifact-covered
+/// shapes to PJRT; everything else is rejected (the experiments pick
+/// shapes the manifest covers — exactly like linking a vendor library
+/// that only ships certain optimized paths).
+pub struct XlaLibrary {
+    registry: Arc<ArtifactRegistry>,
+    prefer: String,
+    nthreads: AtomicUsize,
+}
+
+impl XlaLibrary {
+    pub fn new(registry: Arc<ArtifactRegistry>, prefer_impl: &str) -> XlaLibrary {
+        XlaLibrary {
+            registry,
+            prefer: prefer_impl.to_string(),
+            nthreads: AtomicUsize::new(1),
+        }
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+}
+
+impl KernelLibrary for XlaLibrary {
+    fn name(&self) -> &str {
+        "xla"
+    }
+
+    fn set_threads(&self, n: usize) {
+        self.nthreads.store(n.max(1), Ordering::Relaxed);
+    }
+
+    fn threads(&self) -> usize {
+        self.nthreads.load(Ordering::Relaxed)
+    }
+
+    fn execute(&self, av: &ArgValues, ops: &OperandSet) -> Result<()> {
+        match av.sig.name {
+            "dgemm" => {
+                let (m, n, k) = (av.dim("m"), av.dim("n"), av.dim("k"));
+                if av.flag("transa") != 'N' || av.flag("transb") != 'N' {
+                    bail!("xla library: only dgemm N/N artifacts are compiled");
+                }
+                if av.dim("lda") != m || av.dim("ldb") != k || av.dim("ldc") != m {
+                    bail!("xla library: requires packed operands (ld == rows)");
+                }
+                let meta = self
+                    .registry
+                    .find("dgemm", m, n, k, &self.prefer)
+                    .ok_or_else(|| {
+                        anyhow!("xla library: no artifact for dgemm {m}x{n}x{k} — add it to aot.py")
+                    })?
+                    .clone();
+                self.registry.run_gemm(
+                    &meta,
+                    ops.get(0),
+                    ops.get(1),
+                    ops.get_mut(2),
+                    m,
+                    n,
+                    k,
+                    av.num("alpha"),
+                    av.num("beta"),
+                )
+            }
+            other => bail!("xla library: kernel '{other}' has no AOT artifact"),
+        }
+    }
+}
+
+/// Load the registry from `dir` and register the `xla` (and
+/// `xla-pallas`) libraries for resolution by name. Idempotent-ish:
+/// re-registering replaces the previous instance.
+pub fn register_xla_library(dir: impl AsRef<Path>) -> Result<Arc<ArtifactRegistry>> {
+    let registry = Arc::new(ArtifactRegistry::load(dir)?);
+    crate::libraries::register("xla", Arc::new(XlaLibrary::new(registry.clone(), "jnp")));
+    crate::libraries::register(
+        "xla-pallas",
+        Arc::new(XlaLibrary::new(registry.clone(), "pallas")),
+    );
+    Ok(registry)
+}
+
+/// Default artifacts directory: `$ELAPS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("ELAPS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::DataDir;
+    use crate::libraries::RawOperand;
+    use crate::linalg::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    fn registry() -> Option<Arc<ArtifactRegistry>> {
+        // Tests are skipped when artifacts haven't been built (CI
+        // runs `make artifacts` first; `cargo test` alone must not
+        // hard-fail).
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: no artifacts at {dir:?}");
+            return None;
+        }
+        Some(Arc::new(ArtifactRegistry::load(dir).unwrap()))
+    }
+
+    #[test]
+    fn manifest_loads_and_finds_shapes() {
+        let Some(reg) = registry() else { return };
+        assert!(reg.artifact_count() >= 10);
+        assert!(reg.find("dgemm", 128, 128, 128, "jnp").is_some());
+        assert!(reg.find("dgemm", 128, 128, 128, "pallas").is_some());
+        assert!(reg.find("dgemm", 7, 7, 7, "jnp").is_none());
+        // impl preference honored, with fallback
+        let a = reg.find("dgemm", 128, 128, 128, "pallas").unwrap();
+        assert_eq!(a.key.impl_name, "pallas");
+        let b = reg.find("dgemm", 1000, 1000, 1000, "pallas").unwrap();
+        assert_eq!(b.key.impl_name, "jnp"); // fallback
+    }
+
+    #[test]
+    fn gemm_via_pjrt_matches_rust_blas() {
+        let Some(reg) = registry() else { return };
+        let n = 128;
+        let mut rng = Xoshiro256::seeded(500);
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let expect = a.matmul(&b);
+        let meta = reg.find("dgemm", n, n, n, "jnp").unwrap().clone();
+        let mut c = vec![0.0f64; n * n];
+        reg.run_gemm(&meta, &a.data, &b.data, &mut c, n, n, n, 1.0, 0.0).unwrap();
+        let c = Matrix { m: n, n, data: c };
+        assert!(c.max_abs_diff(&expect) < 1e-10, "{}", c.max_abs_diff(&expect));
+        // executable caching
+        assert_eq!(reg.compiled_count(), 1);
+        let mut c2 = vec![0.0f64; n * n];
+        reg.run_gemm(&meta, &a.data, &b.data, &mut c2, n, n, n, 1.0, 0.0).unwrap();
+        assert_eq!(reg.compiled_count(), 1);
+    }
+
+    #[test]
+    fn pallas_artifact_matches_jnp_artifact() {
+        let Some(reg) = registry() else { return };
+        let n = 128;
+        let mut rng = Xoshiro256::seeded(501);
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let jnp = reg.find("dgemm", n, n, n, "jnp").unwrap().clone();
+        let pal = reg.find("dgemm", n, n, n, "pallas").unwrap().clone();
+        assert_eq!(pal.key.impl_name, "pallas");
+        let mut c1 = vec![0.0f64; n * n];
+        let mut c2 = vec![0.0f64; n * n];
+        reg.run_gemm(&jnp, &a.data, &b.data, &mut c1, n, n, n, 1.0, 0.0).unwrap();
+        reg.run_gemm(&pal, &a.data, &b.data, &mut c2, n, n, n, 1.0, 0.0).unwrap();
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn xla_library_full_dispatch_and_alpha_beta() {
+        let Some(reg) = registry() else { return };
+        let lib = XlaLibrary::new(reg, "jnp");
+        let n = 128;
+        let mut rng = Xoshiro256::seeded(502);
+        let a = Matrix::random(n, n, &mut rng);
+        let b = Matrix::random(n, n, &mut rng);
+        let c0 = Matrix::random(n, n, &mut rng);
+        let sig = crate::kernels::lookup("dgemm").unwrap();
+        let ns = n.to_string();
+        let toks = ["N", "N", &ns, &ns, &ns, "2.0", "A", &ns, "B", &ns, "-1.0", "C", &ns];
+        let values: Vec<crate::kernels::ArgValue> = sig
+            .args
+            .iter()
+            .zip(toks.iter())
+            .map(|((_, role), t)| match role {
+                crate::kernels::ArgRole::Flag(_) => {
+                    crate::kernels::ArgValue::Char(t.chars().next().unwrap())
+                }
+                crate::kernels::ArgRole::Scalar => {
+                    crate::kernels::ArgValue::Num(t.parse().unwrap())
+                }
+                crate::kernels::ArgRole::Data(_) => {
+                    crate::kernels::ArgValue::Data(t.to_string())
+                }
+                _ => crate::kernels::ArgValue::Size(t.parse().unwrap()),
+            })
+            .collect();
+        let av = ArgValues { sig, values };
+        let mut ab = a.data.clone();
+        let mut bb = b.data.clone();
+        let mut cb = c0.data.clone();
+        let ops = OperandSet::new(vec![
+            RawOperand { ptr: ab.as_mut_ptr(), len: ab.len(), dir: DataDir::In },
+            RawOperand { ptr: bb.as_mut_ptr(), len: bb.len(), dir: DataDir::In },
+            RawOperand { ptr: cb.as_mut_ptr(), len: cb.len(), dir: DataDir::InOut },
+        ])
+        .unwrap();
+        lib.execute(&av, &ops).unwrap();
+        let expect = {
+            let ab2 = a.matmul(&b);
+            Matrix::from_fn(n, n, |i, j| 2.0 * ab2[(i, j)] - c0[(i, j)])
+        };
+        let got = Matrix { m: n, n, data: cb };
+        assert!(got.max_abs_diff(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn missing_shape_is_clean_error() {
+        let Some(reg) = registry() else { return };
+        let lib = XlaLibrary::new(reg, "jnp");
+        assert!(lib
+            .registry()
+            .find("dgemm", 77, 77, 77, "jnp")
+            .is_none());
+        let _ = lib;
+    }
+}

@@ -1,0 +1,342 @@
+//! Sampler memory management (§3.1): named variables, derived offset
+//! variables, and dynamic (unnamed) scratch memory.
+//!
+//! Named variables are f64 buffers created by `dmalloc`; `doffset`
+//! creates aliases at an element offset inside an existing buffer
+//! (the paper's `xoffset`, which the coordinator uses to lay out
+//! varying operands inside one large allocation); `free` releases a
+//! buffer and its aliases. Dynamic memory (`[n]` operand tokens) is a
+//! bump allocator reset per call — disjoint within one call, reused
+//! across calls, exactly as the paper specifies.
+
+use crate::util::rng::Xoshiro256;
+use std::collections::BTreeMap;
+
+/// A resolved operand location.
+#[derive(Debug, Clone, Copy)]
+pub struct Resolved {
+    /// Stable buffer identity (for the cache simulator).
+    pub buf_id: u64,
+    /// Pointer to the first element.
+    pub ptr: *mut f64,
+    /// Elements available from `ptr` to the end of the buffer.
+    pub len: usize,
+    /// Byte offset of `ptr` within the buffer (for the cache sim).
+    pub byte_off: usize,
+}
+
+#[derive(Debug)]
+struct Variable {
+    id: u64,
+    data: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+struct Alias {
+    base: String,
+    offset_elems: usize,
+}
+
+/// The sampler's memory arena.
+#[derive(Debug, Default)]
+pub struct Memory {
+    vars: BTreeMap<String, Variable>,
+    aliases: BTreeMap<String, Alias>,
+    scratch: Vec<f64>,
+    scratch_used: usize,
+    next_id: u64,
+}
+
+impl Memory {
+    pub fn new() -> Memory {
+        Memory::default()
+    }
+
+    /// `dmalloc name elems` — allocate a named variable (zeroed).
+    pub fn malloc(&mut self, name: &str, elems: usize) -> Result<(), String> {
+        if self.aliases.contains_key(name) {
+            return Err(format!("'{name}' already exists as an offset alias"));
+        }
+        self.next_id += 1;
+        let id = self.next_id;
+        self.vars.insert(name.to_string(), Variable { id, data: vec![0.0; elems] });
+        Ok(())
+    }
+
+    /// `doffset new base elems` — create an alias into `base` at an
+    /// element offset. Chained offsets (alias of alias) accumulate.
+    pub fn offset(&mut self, new: &str, base: &str, elems: usize) -> Result<(), String> {
+        let (root, base_off) = self.root_of(base)?;
+        if self.vars.contains_key(new) {
+            return Err(format!("'{new}' already exists as a variable"));
+        }
+        self.aliases
+            .insert(new.to_string(), Alias { base: root, offset_elems: base_off + elems });
+        Ok(())
+    }
+
+    /// `free name` — release a variable (and any aliases into it).
+    pub fn free(&mut self, name: &str) -> Result<(), String> {
+        if self.vars.remove(name).is_some() {
+            let base = name.to_string();
+            self.aliases.retain(|_, a| a.base != base);
+            Ok(())
+        } else if self.aliases.remove(name).is_some() {
+            Ok(())
+        } else {
+            Err(format!("unknown variable '{name}'"))
+        }
+    }
+
+    fn root_of(&self, name: &str) -> Result<(String, usize), String> {
+        if self.vars.contains_key(name) {
+            return Ok((name.to_string(), 0));
+        }
+        match self.aliases.get(name) {
+            Some(a) => Ok((a.base.clone(), a.offset_elems)),
+            None => Err(format!("unknown variable '{name}'")),
+        }
+    }
+
+    /// Resolve a named operand to its location.
+    pub fn resolve(&mut self, name: &str) -> Result<Resolved, String> {
+        let (root, off) = self.root_of(name)?;
+        let var = self.vars.get_mut(&root).unwrap();
+        if off > var.data.len() {
+            return Err(format!("offset of '{name}' exceeds buffer '{root}'"));
+        }
+        Ok(Resolved {
+            buf_id: var.id,
+            ptr: unsafe { var.data.as_mut_ptr().add(off) },
+            len: var.data.len() - off,
+            byte_off: off * 8,
+        })
+    }
+
+    /// Ensure the dynamic pool holds at least `elems` elements.
+    /// MUST be called before handing out [`Self::dynamic`] pointers for
+    /// a call (growing the pool mid-call would reallocate and dangle
+    /// earlier pointers).
+    pub fn reserve_dynamic(&mut self, elems: usize) {
+        if self.scratch.len() < elems {
+            self.scratch.resize(elems, 0.0);
+        }
+    }
+
+    /// Allocate `elems` of dynamic (unnamed) memory for the current
+    /// call. Regions are disjoint within a call; [`Self::reset_dynamic`]
+    /// recycles them for the next call. Call [`Self::reserve_dynamic`]
+    /// with the call's total first.
+    pub fn dynamic(&mut self, elems: usize) -> Resolved {
+        let need = self.scratch_used + elems;
+        if self.scratch.len() < need {
+            self.scratch.resize(need, 0.0);
+        }
+        let off = self.scratch_used;
+        self.scratch_used += elems;
+        Resolved {
+            buf_id: u64::MAX, // single scratch identity
+            ptr: unsafe { self.scratch.as_mut_ptr().add(off) },
+            len: elems,
+            byte_off: off * 8,
+        }
+    }
+
+    /// Recycle dynamic memory (call boundary).
+    pub fn reset_dynamic(&mut self) {
+        self.scratch_used = 0;
+    }
+
+    /// `dmemset name value` — fill a variable (from its offset to the
+    /// end of its buffer view) with a constant.
+    pub fn memset(&mut self, name: &str, value: f64) -> Result<(), String> {
+        let r = self.resolve(name)?;
+        let s = unsafe { std::slice::from_raw_parts_mut(r.ptr, r.len) };
+        s.fill(value);
+        Ok(())
+    }
+
+    /// `dgerand name [elems]` — fill with uniform ]0,1[ values.
+    pub fn gerand(&mut self, name: &str, elems: Option<usize>, rng: &mut Xoshiro256) -> Result<(), String> {
+        let r = self.resolve(name)?;
+        let n = elems.unwrap_or(r.len).min(r.len);
+        let s = unsafe { std::slice::from_raw_parts_mut(r.ptr, n) };
+        rng.fill_open01(s);
+        Ok(())
+    }
+
+    /// `dporand name n` — write a random n×n SPD matrix (ld = n).
+    pub fn porand(&mut self, name: &str, n: usize, rng: &mut Xoshiro256) -> Result<(), String> {
+        let r = self.resolve(name)?;
+        if r.len < n * n {
+            return Err(format!("'{name}' too small for {n}x{n} SPD matrix"));
+        }
+        let m = crate::linalg::Matrix::random_spd(n, rng);
+        let s = unsafe { std::slice::from_raw_parts_mut(r.ptr, n * n) };
+        s.copy_from_slice(&m.data);
+        Ok(())
+    }
+
+    /// `dtrrand name n uplo` — random well-conditioned triangular n×n.
+    pub fn trrand(
+        &mut self,
+        name: &str,
+        n: usize,
+        uplo: crate::linalg::Uplo,
+        rng: &mut Xoshiro256,
+    ) -> Result<(), String> {
+        let r = self.resolve(name)?;
+        if r.len < n * n {
+            return Err(format!("'{name}' too small for {n}x{n} triangular matrix"));
+        }
+        let m = crate::linalg::Matrix::random_triangular(n, uplo, rng);
+        let s = unsafe { std::slice::from_raw_parts_mut(r.ptr, n * n) };
+        s.copy_from_slice(&m.data);
+        Ok(())
+    }
+
+    /// `dwritefile name path` — dump a variable to a little-endian
+    /// binary file of f64.
+    pub fn writefile(&mut self, name: &str, path: &str) -> Result<(), String> {
+        let r = self.resolve(name)?;
+        let s = unsafe { std::slice::from_raw_parts(r.ptr, r.len) };
+        let bytes: Vec<u8> = s.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(path, bytes).map_err(|e| e.to_string())
+    }
+
+    /// `dreadfile name path` — load a binary f64 file into a variable.
+    pub fn readfile(&mut self, name: &str, path: &str) -> Result<(), String> {
+        let bytes = std::fs::read(path).map_err(|e| e.to_string())?;
+        let r = self.resolve(name)?;
+        let n = (bytes.len() / 8).min(r.len);
+        let s = unsafe { std::slice::from_raw_parts_mut(r.ptr, n) };
+        for (i, chunk) in bytes.chunks_exact(8).take(n).enumerate() {
+            s[i] = f64::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.vars.contains_key(name) || self.aliases.contains_key(name)
+    }
+
+    /// Total allocated elements (named variables only).
+    pub fn allocated_elems(&self) -> usize {
+        self.vars.values().map(|v| v.data.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn malloc_resolve_free() {
+        let mut m = Memory::new();
+        m.malloc("A", 100).unwrap();
+        let r = m.resolve("A").unwrap();
+        assert_eq!(r.len, 100);
+        assert_eq!(r.byte_off, 0);
+        m.free("A").unwrap();
+        assert!(m.resolve("A").is_err());
+    }
+
+    #[test]
+    fn offsets_share_buffer_identity() {
+        let mut m = Memory::new();
+        m.malloc("big", 1000).unwrap();
+        m.offset("B1", "big", 100).unwrap();
+        m.offset("B2", "B1", 200).unwrap(); // chained: offset 300
+        let rb = m.resolve("big").unwrap();
+        let r1 = m.resolve("B1").unwrap();
+        let r2 = m.resolve("B2").unwrap();
+        assert_eq!(rb.buf_id, r1.buf_id);
+        assert_eq!(r1.byte_off, 800);
+        assert_eq!(r2.byte_off, 2400);
+        assert_eq!(r2.len, 700);
+        assert_eq!(unsafe { r1.ptr.offset_from(rb.ptr) }, 100);
+    }
+
+    #[test]
+    fn free_base_removes_aliases() {
+        let mut m = Memory::new();
+        m.malloc("big", 10).unwrap();
+        m.offset("x", "big", 2).unwrap();
+        m.free("big").unwrap();
+        assert!(!m.exists("x"));
+    }
+
+    #[test]
+    fn memset_and_gerand() {
+        let mut m = Memory::new();
+        let mut rng = Xoshiro256::seeded(1);
+        m.malloc("A", 50).unwrap();
+        m.memset("A", 2.5).unwrap();
+        let r = m.resolve("A").unwrap();
+        let s = unsafe { std::slice::from_raw_parts(r.ptr, r.len) };
+        assert!(s.iter().all(|&v| v == 2.5));
+        m.gerand("A", None, &mut rng).unwrap();
+        let s = unsafe { std::slice::from_raw_parts(r.ptr, r.len) };
+        assert!(s.iter().all(|&v| v > 0.0 && v < 1.0));
+    }
+
+    #[test]
+    fn porand_is_spd_shaped() {
+        let mut m = Memory::new();
+        let mut rng = Xoshiro256::seeded(2);
+        m.malloc("M", 16).unwrap();
+        m.porand("M", 4, &mut rng).unwrap();
+        let r = m.resolve("M").unwrap();
+        let s = unsafe { std::slice::from_raw_parts(r.ptr, 16) };
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((s[i + 4 * j] - s[j + 4 * i]).abs() < 1e-12);
+            }
+            assert!(s[i + 4 * i] > 4.0);
+        }
+        assert!(m.porand("M", 5, &mut rng).is_err());
+    }
+
+    #[test]
+    fn dynamic_memory_disjoint_within_call() {
+        let mut m = Memory::new();
+        m.reserve_dynamic(150);
+        let a = m.dynamic(100);
+        let b = m.dynamic(50);
+        assert_ne!(a.ptr, b.ptr);
+        assert_eq!(unsafe { b.ptr.offset_from(a.ptr) }, 100);
+        m.reset_dynamic();
+        let c = m.dynamic(10);
+        assert_eq!(c.ptr, a.ptr); // reused
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut m = Memory::new();
+        let mut rng = Xoshiro256::seeded(3);
+        m.malloc("A", 20).unwrap();
+        m.gerand("A", None, &mut rng).unwrap();
+        let path = std::env::temp_dir().join("elaps_mem_test.bin");
+        let path = path.to_str().unwrap();
+        m.writefile("A", path).unwrap();
+        m.malloc("B", 20).unwrap();
+        m.readfile("B", path).unwrap();
+        let ra = m.resolve("A").unwrap();
+        let rb = m.resolve("B").unwrap();
+        let sa = unsafe { std::slice::from_raw_parts(ra.ptr, 20) };
+        let sb = unsafe { std::slice::from_raw_parts(rb.ptr, 20) };
+        assert_eq!(sa, sb);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn name_collisions_rejected() {
+        let mut m = Memory::new();
+        m.malloc("A", 10).unwrap();
+        m.offset("B", "A", 1).unwrap();
+        assert!(m.malloc("B", 5).is_err());
+        assert!(m.offset("A", "A", 1).is_err());
+        assert!(m.offset("C", "nope", 0).is_err());
+        assert!(m.free("nope").is_err());
+    }
+}

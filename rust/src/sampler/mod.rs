@@ -1,0 +1,497 @@
+//! The Sampler — the paper's bottom layer (§3.1): a low-level tool
+//! that reads a list of kernel calls plus special commands, executes
+//! and times them, and reports raw measurements.
+//!
+//! Workflow (exactly the paper's):
+//! 1. read calls (and `dmalloc`/`doffset`/`free`/utility commands) from
+//!    the input;
+//! 2. on `go`, execute all queued calls, timing each in CPU cycles and
+//!    sampling the (simulated) PAPI counters selected by
+//!    `set_counters`;
+//! 3. report one result line per call.
+//!
+//! `{omp` … `}` brackets a group of calls to be treated as parallel
+//! OpenMP tasks (executed sequentially on this 1-core host; the
+//! measured serial task times are reported with the group id so the
+//! coordinator can apply the thread-scaling model — DESIGN.md
+//! §Substitutions 4).
+//!
+//! One Sampler is bound to one kernel library (the paper compiles one
+//! sampler binary per library) and one machine model.
+
+pub mod memory;
+
+use crate::kernels::{ArgRole, ArgValue, ArgValues};
+use crate::libraries::{KernelLibrary, OperandSet, RawOperand};
+use crate::perfmodel::{CacheSim, MachineModel};
+use crate::util::rng::Xoshiro256;
+use anyhow::{anyhow, bail, Result};
+use memory::Memory;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One queued kernel call.
+#[derive(Debug)]
+struct QueuedCall {
+    av: ArgValues,
+    omp_group: Option<usize>,
+}
+
+/// One measurement record, as printed on the sampler's stdout.
+#[derive(Debug, Clone)]
+pub struct Record {
+    pub kernel: String,
+    /// Wall time in seconds.
+    pub seconds: f64,
+    /// Cycles on the bound machine model (seconds × frequency).
+    pub cycles: f64,
+    /// Values of the counters selected via `set_counters`, in order.
+    pub counters: Vec<u64>,
+    /// OpenMP task-group id, if the call was inside `{omp … }`.
+    pub omp_group: Option<usize>,
+    /// Flops of the call (from the signature) — convenience for
+    /// metrics.
+    pub flops: f64,
+}
+
+impl Record {
+    /// Render as the sampler's stdout line.
+    pub fn to_line(&self) -> String {
+        let mut s = format!("{} {:.0}", self.kernel, self.cycles);
+        for c in &self.counters {
+            s.push_str(&format!(" {c}"));
+        }
+        if let Some(g) = self.omp_group {
+            s.push_str(&format!(" #omp{g}"));
+        }
+        s
+    }
+}
+
+/// The sampler.
+pub struct Sampler {
+    pub library: Arc<dyn KernelLibrary>,
+    pub machine: MachineModel,
+    mem: Memory,
+    cache: CacheSim,
+    counters: Vec<String>,
+    queue: Vec<QueuedCall>,
+    omp_depth: Option<usize>,
+    next_group: usize,
+    rng: Xoshiro256,
+}
+
+impl Sampler {
+    pub fn new(library: Arc<dyn KernelLibrary>, machine: MachineModel) -> Sampler {
+        let cache = CacheSim::new(&machine);
+        Sampler {
+            library,
+            machine,
+            mem: Memory::new(),
+            cache,
+            counters: Vec::new(),
+            queue: Vec::new(),
+            omp_depth: None,
+            next_group: 0,
+            rng: Xoshiro256::seeded(0xE1A5),
+        }
+    }
+
+    /// Direct access to the memory arena (used by tests/examples).
+    pub fn memory(&mut self) -> &mut Memory {
+        &mut self.mem
+    }
+
+    /// Feed one input line; returns the records produced (non-empty
+    /// only for `go`).
+    pub fn feed_line(&mut self, line: &str) -> Result<Vec<Record>> {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            return Ok(vec![]);
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks[0] {
+            "go" => return self.go(),
+            "{omp" => {
+                if self.omp_depth.is_some() {
+                    bail!("nested {{omp groups are not supported");
+                }
+                self.omp_depth = Some(self.next_group);
+                self.next_group += 1;
+            }
+            "}" => {
+                if self.omp_depth.take().is_none() {
+                    bail!("'}}' without matching '{{omp'");
+                }
+            }
+            "set_counters" => {
+                let avail = self.cache.counter_names();
+                for t in &toks[1..] {
+                    if !avail.contains(&t.to_string()) {
+                        bail!("unknown counter '{t}' (available: {avail:?})");
+                    }
+                }
+                self.counters = toks[1..].iter().map(|s| s.to_string()).collect();
+            }
+            "set_threads" => {
+                let n: usize = toks.get(1).and_then(|s| s.parse().ok()).unwrap_or(1);
+                self.library.set_threads(n);
+            }
+            "flush_caches" => self.cache.flush(),
+            "dmalloc" | "smalloc" | "imalloc" => {
+                let (name, elems) = two(&toks)?;
+                self.mem.malloc(name, elems.parse().map_err(|_| anyhow!("bad size"))?)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            "doffset" | "soffset" => {
+                if toks.len() != 4 {
+                    bail!("usage: doffset <new> <base> <elems>");
+                }
+                self.mem
+                    .offset(toks[1], toks[2], toks[3].parse().map_err(|_| anyhow!("bad offset"))?)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            "free" => {
+                self.mem.free(toks.get(1).copied().unwrap_or("")).map_err(|e| anyhow!(e))?;
+            }
+            "dmemset" => {
+                let (name, v) = two(&toks)?;
+                self.mem
+                    .memset(name, v.parse().map_err(|_| anyhow!("bad value"))?)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            "dgerand" => {
+                let name = toks.get(1).copied().ok_or_else(|| anyhow!("usage: dgerand <name>"))?;
+                let elems = toks.get(2).and_then(|s| s.parse().ok());
+                self.mem.gerand(name, elems, &mut self.rng).map_err(|e| anyhow!(e))?;
+            }
+            "dporand" => {
+                let (name, n) = two(&toks)?;
+                self.mem
+                    .porand(name, n.parse().map_err(|_| anyhow!("bad n"))?, &mut self.rng)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            "dtrrand" => {
+                if toks.len() != 4 {
+                    bail!("usage: dtrrand <name> <n> <L|U>");
+                }
+                let uplo = crate::linalg::Uplo::from_char(
+                    toks[3].chars().next().unwrap_or('L'),
+                )
+                .ok_or_else(|| anyhow!("bad uplo"))?;
+                self.mem
+                    .trrand(toks[1], toks[2].parse().map_err(|_| anyhow!("bad n"))?, uplo, &mut self.rng)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            "dwritefile" => {
+                let (name, path) = two(&toks)?;
+                self.mem.writefile(name, path).map_err(|e| anyhow!(e))?;
+            }
+            "dreadfile" => {
+                let (name, path) = two(&toks)?;
+                self.mem.readfile(name, path).map_err(|e| anyhow!(e))?;
+            }
+            kernel => {
+                // a kernel call: parse against its signature and queue
+                let av = self.parse_call(kernel, &toks[1..])?;
+                self.queue.push(QueuedCall { av, omp_group: self.omp_depth });
+            }
+        }
+        Ok(vec![])
+    }
+
+    /// Run a whole multi-line script; returns all records.
+    pub fn run_script(&mut self, script: &str) -> Result<Vec<Record>> {
+        let mut out = Vec::new();
+        for (no, line) in script.lines().enumerate() {
+            let recs = self
+                .feed_line(line)
+                .map_err(|e| anyhow!("line {}: {e}: '{}'", no + 1, line.trim()))?;
+            out.extend(recs);
+        }
+        Ok(out)
+    }
+
+    fn parse_call(&self, kernel: &str, toks: &[&str]) -> Result<ArgValues> {
+        let sig = crate::kernels::lookup(kernel)
+            .ok_or_else(|| anyhow!("unknown kernel '{kernel}'"))?;
+        if toks.len() != sig.args.len() {
+            bail!(
+                "{kernel}: expected {} arguments ({}), got {}",
+                sig.args.len(),
+                sig.args.iter().map(|(n, _)| *n).collect::<Vec<_>>().join(", "),
+                toks.len()
+            );
+        }
+        let mut values = Vec::with_capacity(toks.len());
+        for ((name, role), t) in sig.args.iter().zip(toks) {
+            let v = match role {
+                ArgRole::Flag(allowed) => {
+                    let c = t.chars().next().unwrap_or('?').to_ascii_uppercase();
+                    if !allowed.contains(&c) {
+                        bail!("{kernel}: flag '{name}' must be one of {allowed:?}, got '{t}'");
+                    }
+                    ArgValue::Char(c)
+                }
+                ArgRole::Dim | ArgRole::Ld | ArgRole::Inc => ArgValue::Size(
+                    t.parse().map_err(|_| anyhow!("{kernel}: bad integer '{t}' for '{name}'"))?,
+                ),
+                ArgRole::Scalar => ArgValue::Num(
+                    t.parse().map_err(|_| anyhow!("{kernel}: bad scalar '{t}' for '{name}'"))?,
+                ),
+                ArgRole::Data(_) => ArgValue::Data(t.to_string()),
+            };
+            values.push(v);
+        }
+        Ok(ArgValues { sig, values })
+    }
+
+    /// Execute and time everything queued (the `go` command).
+    pub fn go(&mut self) -> Result<Vec<Record>> {
+        let queue = std::mem::take(&mut self.queue);
+        let mut records = Vec::with_capacity(queue.len());
+        for call in &queue {
+            records.push(self.execute_one(call)?);
+        }
+        Ok(records)
+    }
+
+    fn execute_one(&mut self, call: &QueuedCall) -> Result<Record> {
+        let av = &call.av;
+        // resolve operands
+        self.mem.reset_dynamic();
+        // Pre-pass: reserve the call's total dynamic footprint so the
+        // pool never reallocates while we hold pointers into it.
+        {
+            let mut total = 0usize;
+            let mut ord = 0;
+            for (i, (_, role)) in av.sig.args.iter().enumerate() {
+                if let ArgRole::Data(_) = role {
+                    if let Some(tok) = av.values[i].as_data() {
+                        if let Some(dynspec) = tok.strip_prefix('[') {
+                            let inner = dynspec.trim_end_matches(']');
+                            let n: usize =
+                                inner.parse().unwrap_or(0).max(av.operand_elems(ord));
+                            total += n;
+                        }
+                    }
+                    ord += 1;
+                }
+            }
+            self.mem.reserve_dynamic(total);
+        }
+        let mut raw_ops = Vec::new();
+        let mut touches = Vec::new(); // (buf, off, bytes) for the cache sim
+        let mut ord = 0;
+        for (i, (name, role)) in av.sig.args.iter().enumerate() {
+            let _ = name;
+            if let ArgRole::Data(dir) = role {
+                let token = av.values[i].as_data().unwrap();
+                let elems = av.operand_elems(ord);
+                let r = if let Some(dynspec) = token.strip_prefix('[') {
+                    // dynamic memory: "[n]" or "[]" (size from signature)
+                    let inner = dynspec.trim_end_matches(']');
+                    let n: usize = if inner.is_empty() {
+                        elems
+                    } else {
+                        inner.parse().map_err(|_| anyhow!("bad dynamic size '{token}'"))?
+                    };
+                    self.mem.dynamic(n.max(elems))
+                } else {
+                    self.mem.resolve(token).map_err(|e| anyhow!(e))?
+                };
+                if r.len < elems {
+                    bail!(
+                        "{}: operand '{}' has {} elements, needs {}",
+                        av.sig.name, token, r.len, elems
+                    );
+                }
+                touches.push((r.buf_id, r.byte_off, elems * 8));
+                raw_ops.push(RawOperand { ptr: r.ptr, len: elems, dir: *dir });
+                ord += 1;
+            }
+        }
+        let ops = OperandSet::new(raw_ops)?;
+        // simulated counters: feed the cache model before timing so the
+        // timing loop is undisturbed
+        self.cache.reset_counters();
+        for (buf, off, bytes) in &touches {
+            self.cache.touch(*buf, *off, *bytes, 1);
+        }
+        let counters: Vec<u64> = self
+            .counters
+            .iter()
+            .map(|c| self.cache.counter(c).unwrap_or(0))
+            .collect();
+        // execute + time
+        let t0 = Instant::now();
+        self.library.execute(av, &ops)?;
+        let seconds = t0.elapsed().as_secs_f64();
+        Ok(Record {
+            kernel: av.sig.name.to_string(),
+            seconds,
+            cycles: self.machine.cycles(seconds),
+            counters,
+            omp_group: call.omp_group,
+            flops: av.flops(),
+        })
+    }
+}
+
+fn two<'a>(toks: &[&'a str]) -> Result<(&'a str, &'a str)> {
+    if toks.len() != 3 {
+        bail!("usage: {} <name> <value>", toks.first().unwrap_or(&"cmd"));
+    }
+    Ok((toks[1], toks[2]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::libraries;
+
+    fn sampler() -> Sampler {
+        Sampler::new(
+            libraries::by_name("rustblocked").unwrap(),
+            MachineModel::sandybridge(),
+        )
+    }
+
+    #[test]
+    fn experiment1_dgemm_metrics_pipeline() {
+        // the paper's Experiment 1: one dgemm on random 100³ (scaled)
+        let mut s = sampler();
+        let recs = s
+            .run_script(
+                "dmalloc A 10000\ndmalloc B 10000\ndmalloc C 10000\n\
+                 dgerand A\ndgerand B\ndgerand C\n\
+                 dgemm N N 100 100 100 1.0 A 100 B 100 0.0 C 100\ngo",
+            )
+            .unwrap();
+        assert_eq!(recs.len(), 1);
+        let r = &recs[0];
+        assert_eq!(r.kernel, "dgemm");
+        assert!(r.seconds > 0.0);
+        assert!(r.cycles > 0.0);
+        assert_eq!(r.flops, 2e6);
+    }
+
+    #[test]
+    fn repeated_calls_produce_one_record_each() {
+        let mut s = sampler();
+        s.run_script("dmalloc A 2500\ndmalloc B 2500\ndmalloc C 2500\ndgerand A\ndgerand B")
+            .unwrap();
+        let mut script = String::new();
+        for _ in 0..10 {
+            script.push_str("dgemm N N 50 50 50 1.0 A 50 B 50 0.0 C 50\n");
+        }
+        script.push_str("go");
+        let recs = s.run_script(&script).unwrap();
+        assert_eq!(recs.len(), 10);
+    }
+
+    #[test]
+    fn counters_respond_to_locality() {
+        // Experiment 3 shape: varying C (cold) vs fixed C (warm)
+        let mut s = sampler();
+        s.run_script("set_counters PAPI_L1_TCM").unwrap();
+        s.run_script("dmalloc A 400\ndmalloc B 400\ndmalloc C 400\ndgerand A\ndgerand B")
+            .unwrap();
+        // first call: everything cold
+        let r1 = s
+            .run_script("dgemm N N 20 20 20 1.0 A 20 B 20 0.0 C 20\ngo")
+            .unwrap();
+        // second call same operands: warm
+        let r2 = s
+            .run_script("dgemm N N 20 20 20 1.0 A 20 B 20 0.0 C 20\ngo")
+            .unwrap();
+        assert!(r1[0].counters[0] > 0);
+        assert_eq!(r2[0].counters[0], 0, "warm rerun should hit L1");
+        // flush ⇒ cold again
+        s.run_script("flush_caches").unwrap();
+        let r3 = s
+            .run_script("dgemm N N 20 20 20 1.0 A 20 B 20 0.0 C 20\ngo")
+            .unwrap();
+        assert!(r3[0].counters[0] > 0);
+    }
+
+    #[test]
+    fn omp_groups_are_tagged() {
+        let mut s = sampler();
+        s.run_script("dmalloc A 100\ndmalloc x1 10\ndmalloc x2 10\ndtrrand A 10 L")
+            .unwrap();
+        let recs = s
+            .run_script(
+                "{omp\ndtrsv L N N 10 A 10 x1 1\ndtrsv L N N 10 A 10 x2 1\n}\ngo",
+            )
+            .unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].omp_group, recs[1].omp_group);
+        assert!(recs[0].omp_group.is_some());
+        // separate groups get separate ids
+        let recs2 = s
+            .run_script("{omp\ndtrsv L N N 10 A 10 x1 1\n}\ngo")
+            .unwrap();
+        assert_ne!(recs2[0].omp_group, recs[0].omp_group);
+    }
+
+    #[test]
+    fn dynamic_memory_operands() {
+        let mut s = sampler();
+        let recs = s
+            .run_script("dgemm N N 30 30 30 1.0 [] 30 [] 30 0.0 [] 30\ngo")
+            .unwrap();
+        assert_eq!(recs.len(), 1);
+    }
+
+    #[test]
+    fn undersized_operand_rejected() {
+        let mut s = sampler();
+        s.run_script("dmalloc A 10\ndmalloc B 900\ndmalloc C 900").unwrap();
+        let err = s
+            .run_script("dgemm N N 30 30 30 1.0 A 30 B 30 0.0 C 30\ngo")
+            .unwrap_err();
+        assert!(err.to_string().contains("needs"), "{err}");
+    }
+
+    #[test]
+    fn bad_flag_rejected() {
+        let mut s = sampler();
+        let err = s.feed_line("dgemm X N 8 8 8 1.0 [] 8 [] 8 0.0 [] 8").unwrap_err();
+        assert!(err.to_string().contains("transa"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kernel_rejected() {
+        let mut s = sampler();
+        let err = s.feed_line("zgemm N N 8 8 8 1.0 [] 8 [] 8 0.0 [] 8").unwrap_err();
+        assert!(err.to_string().contains("unknown kernel"));
+    }
+
+    #[test]
+    fn record_line_format() {
+        let r = Record {
+            kernel: "dgemm".into(),
+            seconds: 0.1,
+            cycles: 2.6e8,
+            counters: vec![42],
+            omp_group: Some(3),
+            flops: 2e9,
+        };
+        assert_eq!(r.to_line(), "dgemm 260000000 42 #omp3");
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let mut s = sampler();
+        let recs = s.run_script("# a comment\n\n   \n").unwrap();
+        assert!(recs.is_empty());
+    }
+
+    #[test]
+    fn set_counters_validates() {
+        let mut s = sampler();
+        assert!(s.feed_line("set_counters PAPI_L1_TCM PAPI_BR_MSP").is_ok());
+        assert!(s.feed_line("set_counters PAPI_NOPE").is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal command-line argument parsing (the offline registry has no
+//! `clap`). Supports subcommands, `--flag`, `--key value`, `--key=value`
+//! and positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: flags, key-value options, and positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub flags: Vec<String>,
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `known_flags` lists boolean options (which
+    /// consume no value); everything else starting with `--` is treated
+    /// as `--key value` or `--key=value`.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Args {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        args.flags.push(body.to_string());
+                    } else {
+                        args.opts.insert(body.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Parse a range spec of the form `lo:hi` or `lo:step:hi` (inclusive),
+/// e.g. `50:50:2000` → 50, 100, ..., 2000. Mirrors the paper's
+/// parameter-range notation "n = 50:50:2000".
+pub fn parse_range(spec: &str) -> Option<Vec<usize>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let (lo, step, hi) = match parts.as_slice() {
+        [lo, hi] => (lo.parse().ok()?, 1usize, hi.parse().ok()?),
+        [lo, step, hi] => (lo.parse().ok()?, step.parse().ok()?, hi.parse().ok()?),
+        [single] => {
+            let v = single.parse().ok()?;
+            return Some(vec![v]);
+        }
+        _ => return None,
+    };
+    if step == 0 || hi < lo {
+        return None;
+    }
+    Some((lo..=hi).step_by(step).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_mixture() {
+        let a = Args::parse(
+            sv(&["run", "exp.json", "--backend", "xla", "--verbose", "--n=100"]),
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["run", "exp.json"]);
+        assert_eq!(a.opt("backend"), Some("xla"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_usize("n", 0), 100);
+    }
+
+    #[test]
+    fn flag_before_flag() {
+        let a = Args::parse(sv(&["--a", "--b", "val"]), &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("val"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(sv(&["--x"]), &[]);
+        assert!(a.flag("x"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(sv(&[]), &[]);
+        assert_eq!(a.opt_or("lib", "rustblocked"), "rustblocked");
+        assert_eq!(a.opt_usize("n", 7), 7);
+        assert_eq!(a.opt_f64("freq", 2.6e9), 2.6e9);
+    }
+
+    #[test]
+    fn ranges() {
+        assert_eq!(parse_range("50:50:200"), Some(vec![50, 100, 150, 200]));
+        assert_eq!(parse_range("1:4"), Some(vec![1, 2, 3, 4]));
+        assert_eq!(parse_range("7"), Some(vec![7]));
+        assert_eq!(parse_range("5:0:10"), None);
+        assert_eq!(parse_range("10:5"), None);
+        assert_eq!(parse_range("a:b"), None);
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained utilities: JSON, RNG, CLI parsing, property testing.
+//!
+//! The build environment is offline and the crates.io cache does not
+//! provide `serde`, `clap`, `rand` or `proptest`; these small modules
+//! implement the subsets ELAPS needs from scratch.
+
+pub mod json;
+pub mod rng;
+pub mod cli;
+pub mod prop;
+
+pub use json::Json;
+pub use rng::Xoshiro256;

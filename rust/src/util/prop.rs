@@ -1,0 +1,113 @@
+//! A small property-based testing harness (the offline registry has no
+//! `proptest`). Runs a property over many randomly generated cases with
+//! a deterministic seed, and on failure performs greedy shrinking of the
+//! generated integers toward zero.
+//!
+//! Used for coordinator invariants (unrolling, routing, report
+//! reduction) and linalg invariants (e.g. `trsm` inverts `trmm`).
+
+use super::rng::Xoshiro256;
+
+/// Number of cases per property (kept modest: the linalg properties do
+/// real factorizations).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` on `cases` random inputs produced by `gen`. On failure,
+/// tries shrinking by re-generating with progressively smaller "size"
+/// hints; panics with the failing case's debug representation.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Xoshiro256, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Xoshiro256::seeded(seed);
+    for case in 0..cases {
+        // size grows with case index so early cases are small/fast
+        let size = 1 + case * 4 / cases.max(1) * 8 + case % 8;
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: regenerate at smaller sizes with fresh
+            // sub-seeds, keep the smallest failure found.
+            let mut smallest: (usize, T, String) = (size, input.clone(), msg.clone());
+            for shrink_size in (1..size).rev() {
+                let mut srng = Xoshiro256::seeded(seed ^ (shrink_size as u64) << 32);
+                let candidate = gen(&mut srng, shrink_size);
+                if let Err(m) = prop(&candidate) {
+                    smallest = (shrink_size, candidate, m);
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}): {}\nminimal-ish input (size {}): {:#?}",
+                smallest.2, smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert two floats are close in the mixed absolute/relative sense used
+/// throughout the linalg tests.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+/// Assert two slices are element-wise close.
+pub fn all_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        close(x, y, tol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        forall(
+            1,
+            50,
+            |r, size| r.range_usize(0, size),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        forall(
+            2,
+            50,
+            |r, size| r.range_usize(0, size + 10),
+            |&v| if v < 5 { Ok(()) } else { Err(format!("{v} >= 5")) },
+        );
+    }
+
+    #[test]
+    fn close_mixed_tolerance() {
+        assert!(close(1e9, 1e9 + 1.0, 1e-8).is_ok());
+        assert!(close(1e-12, 0.0, 1e-8).is_ok());
+        assert!(close(1.0, 1.1, 1e-8).is_err());
+    }
+
+    #[test]
+    fn all_close_reports_index() {
+        let err = all_close(&[1.0, 2.0], &[1.0, 3.0], 1e-9).unwrap_err();
+        assert!(err.contains("index 1"), "{err}");
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+}

@@ -1,0 +1,144 @@
+//! Deterministic pseudo-random number generation (xoshiro256**).
+//!
+//! Stands in for the `rand` crate (unavailable offline). Used by the
+//! sampler's `dgerand`/`dporand` utility kernels and by the
+//! property-test harness; determinism (seeded) keeps experiments and
+//! tests reproducible.
+
+/// xoshiro256** by Blackman & Vigna — fast, high-quality, 256-bit state.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via splitmix64 so that any u64 (including 0) is a valid seed.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Xoshiro256 { s: [next(), next(), next(), next()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in the open interval ]0,1[ — matches the paper's
+    /// `xgerand` ("random values uniform in ]0,1[").
+    pub fn next_open01(&mut self) -> f64 {
+        loop {
+            let v = (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+            if v > 0.0 {
+                return v;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * ((self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64))
+    }
+
+    /// Uniform integer in [0, n). `n` must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire-style rejection-free-enough for test use.
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_open01() < p
+    }
+
+    /// Fill a slice with uniform ]0,1[ values.
+    pub fn fill_open01(&mut self, buf: &mut [f64]) {
+        for v in buf.iter_mut() {
+            *v = self.next_open01();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Xoshiro256::seeded(7);
+        let mut b = Xoshiro256::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Xoshiro256::seeded(1);
+        let mut b = Xoshiro256::seeded(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn open01_bounds() {
+        let mut r = Xoshiro256::seeded(42);
+        for _ in 0..10_000 {
+            let v = r.next_open01();
+            assert!(v > 0.0 && v < 1.0);
+        }
+    }
+
+    #[test]
+    fn open01_mean_near_half() {
+        let mut r = Xoshiro256::seeded(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_open01()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={}", mean);
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Xoshiro256::seeded(9);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            let v = r.below(5);
+            assert!(v < 5);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn range_usize_inclusive() {
+        let mut r = Xoshiro256::seeded(11);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..2000 {
+            let v = r.range_usize(3, 6);
+            assert!((3..=6).contains(&v));
+            lo_seen |= v == 3;
+            hi_seen |= v == 6;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+}

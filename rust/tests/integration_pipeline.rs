@@ -1,0 +1,195 @@
+//! Integration: the full coordinator → sampler → report pipeline over
+//! in-process samplers, exercising ranges, repetitions, vary, OpenMP
+//! groups, counters, serialization and the batch spooler together.
+
+use elaps::coordinator::{
+    io, run_local, DataGen, Experiment, Expr, Metric, RangeDef, Spooler, Stat, Vary,
+};
+use elaps::figures::call;
+use elaps::util::json::Json;
+
+fn dgemm_exp(n: i64, lib: &str) -> Experiment {
+    let ns = n.to_string();
+    Experiment {
+        name: format!("it-dgemm-{lib}"),
+        library: lib.into(),
+        nreps: 3,
+        calls: vec![call(
+            "dgemm",
+            &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+        )
+        .unwrap()],
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_rust_libraries_run_the_same_experiment() {
+    for lib in elaps::libraries::RUST_LIBRARIES {
+        let report = run_local(&dgemm_exp(48, lib)).unwrap();
+        let g = report.series(Metric::Gflops, Stat::Median)[0].1;
+        assert!(g > 0.01, "{lib}: {g}");
+    }
+}
+
+#[test]
+fn sequence_breakdown_sums_to_rep_total() {
+    let mut exp = dgemm_exp(64, "rustblocked");
+    exp.calls = vec![
+        call("dgetrf", &["64", "64", "$A", "64"]).unwrap(),
+        call("dtrsm", &["L", "L", "N", "U", "64", "8", "1.0", "$A", "64", "$B", "64"]).unwrap(),
+        call("dtrsm", &["L", "U", "N", "N", "64", "8", "1.0", "$A", "64", "$B", "64"]).unwrap(),
+    ];
+    let report = run_local(&exp).unwrap();
+    let breakdown = &report.call_breakdown(Stat::Avg)[0];
+    assert_eq!(breakdown.len(), 3);
+    assert!(breakdown[0].0.starts_with("dgetrf"));
+    let sum: f64 = breakdown.iter().map(|(_, v)| v).sum();
+    let total = report.series(Metric::TimeS, Stat::Avg)[0].1;
+    assert!((sum - total).abs() < 1e-9 * total.max(1.0), "{sum} vs {total}");
+}
+
+#[test]
+fn parameter_range_and_sumrange_compose() {
+    let mut exp = dgemm_exp(0, "rustblocked");
+    exp.range = Some(RangeDef::new("n", vec![16, 32]));
+    exp.sumrange = Some(RangeDef::new("i", vec![0, 1, 2]));
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+    )
+    .unwrap()];
+    exp.vary.insert("C".into(), Vary { with_sumrange: true, ..Default::default() });
+    let report = run_local(&exp).unwrap();
+    assert_eq!(report.points.len(), 2);
+    assert_eq!(report.points[0].sum_iters, 3);
+    // 3 reps × 3 iters × 1 call
+    assert_eq!(report.points[0].records.len(), 9);
+    // flops of one rep at n: 3 gemms
+    let f16 = report.rep_flops(&report.points[0], 0);
+    assert_eq!(f16, 3.0 * 2.0 * 16f64.powi(3));
+}
+
+#[test]
+fn omp_group_reduction_parallelizes() {
+    let mut exp = dgemm_exp(48, "rustblocked");
+    exp.machine = "sandybridge".into(); // 8 cores for the model
+    exp.omp = true;
+    exp.sumrange = Some(RangeDef::new("i", (0..8).collect()));
+    exp.vary.insert("C".into(), Vary { with_sumrange: true, ..Default::default() });
+    let report = run_local(&exp).unwrap();
+    let point = &report.points[0];
+    let serial: f64 = point.records[..8].iter().map(|r| r.seconds).sum();
+    let wall = report.rep_seconds(point, 0);
+    assert!(
+        wall < serial * 0.6,
+        "omp wall {wall} should be well below serial {serial}"
+    );
+    // records carry the group tag
+    assert!(point.records[0].omp_group.is_some());
+}
+
+#[test]
+fn counters_flow_end_to_end() {
+    let mut exp = dgemm_exp(32, "rustblocked");
+    exp.counters = vec!["PAPI_L1_TCM".into(), "PAPI_BR_MSP".into()];
+    let report = run_local(&exp).unwrap();
+    let misses = report.series(Metric::Counter(0), Stat::Max)[0].1;
+    assert!(misses > 0.0);
+}
+
+#[test]
+fn spd_datagen_supports_factorizations() {
+    let mut exp = dgemm_exp(40, "rustblocked");
+    exp.calls =
+        vec![call("dpotrf", &["L", "40", "$M", "40"]).unwrap()];
+    exp.datagen.insert("M".into(), DataGen::Spd(Expr::Const(40)));
+    // fresh SPD matrix every repetition (potrf destroys it)
+    exp.vary.insert("M".into(), Vary { with_rep: true, ..Default::default() });
+    let report = run_local(&exp).unwrap();
+    assert_eq!(report.points[0].records.len(), 3);
+}
+
+#[test]
+fn experiment_files_round_trip_through_disk() {
+    let mut exp = dgemm_exp(24, "rustref");
+    exp.range = Some(RangeDef::span("n", 16, 8, 32));
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+    )
+    .unwrap()];
+    let dir = std::env::temp_dir().join(format!("elaps-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.json");
+    std::fs::write(&path, io::experiment_to_json(&exp).to_string_pretty()).unwrap();
+    let loaded =
+        io::experiment_from_json(&Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap())
+            .unwrap();
+    let report = run_local(&loaded).unwrap();
+    assert_eq!(report.points.len(), 3);
+    // report file round trip preserves series
+    let rpath = dir.join("report.json");
+    std::fs::write(&rpath, io::report_to_json(&report).to_string_pretty()).unwrap();
+    let report2 =
+        io::report_from_json(&Json::parse(&std::fs::read_to_string(&rpath).unwrap()).unwrap())
+            .unwrap();
+    let s1 = report.series(Metric::Gflops, Stat::Median);
+    let s2 = report2.series(Metric::Gflops, Stat::Median);
+    for (a, b) in s1.iter().zip(&s2) {
+        assert_eq!(a.0, b.0);
+        assert!((a.1 - b.1).abs() < 1e-12);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_spooler_matches_local_shape() {
+    let dir = std::env::temp_dir().join(format!("elaps-it-spool-{}", std::process::id()));
+    let spool = Spooler::new(&dir).unwrap();
+    let exp = dgemm_exp(32, "rustblocked");
+    let via_queue = spool.run_through_queue(&exp).unwrap();
+    let local = run_local(&exp).unwrap();
+    assert_eq!(via_queue.points.len(), local.points.len());
+    assert_eq!(via_queue.points[0].records.len(), local.points[0].records.len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn eigensolver_drivers_through_pipeline() {
+    for driver in ["dsyev", "dsyevd", "dsyevx", "dsyevr"] {
+        let mut exp = dgemm_exp(0, "rustref");
+        exp.calls = vec![call(driver, &["V", "L", "24", "$A", "24", "$W"]).unwrap()];
+        exp.datagen.insert("A".into(), DataGen::Spd(Expr::Const(24)));
+        exp.vary.insert("A".into(), Vary { with_rep: true, ..Default::default() });
+        let report = run_local(&exp).unwrap();
+        assert_eq!(report.points[0].records.len(), 3, "{driver}");
+    }
+}
+
+#[test]
+fn failure_surfaces_cleanly_not_panics() {
+    // non-SPD input to dposv must produce an error result, not a panic
+    let mut exp = dgemm_exp(16, "rustblocked");
+    exp.calls = vec![call("dposv", &["L", "16", "1", "$M", "16", "$b", "16"]).unwrap()];
+    // default datagen is uniform random — NOT positive definite
+    let err = run_local(&exp).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("positive definite"), "{msg}");
+}
+
+#[test]
+fn thread_range_reports_scaled_series() {
+    let mut exp = dgemm_exp(48, "rustblocked");
+    exp.machine = "sandybridge".into();
+    exp.range = Some(RangeDef::span("t", 1, 1, 4));
+    exp.nthreads = Expr::sym("t");
+    let report = run_local(&exp).unwrap();
+    let times = report.series(Metric::TimeS, Stat::Median);
+    assert_eq!(times.len(), 4);
+    // modeled: more threads, less time (dgemm pf = 0.98)
+    assert!(times[3].1 < times[0].1);
+    // efficiency accounts for the bigger peak at t=4
+    let eff = report.series(Metric::Efficiency, Stat::Median);
+    assert!(eff[3].1 < eff[0].1 * 1.5);
+}

@@ -1,0 +1,251 @@
+//! Property-based tests (via the from-scratch harness in
+//! `elaps::util::prop` — the offline registry has no proptest) over
+//! coordinator and linalg invariants:
+//!
+//! * unrolling: record counts, operand sizing, instance naming
+//! * routing: every call reaches the right kernel with the right shape
+//! * state: report reduction is permutation/semantics-consistent
+//! * linalg: solve∘multiply = identity, factor∘reconstruct = identity
+
+use elaps::coordinator::{run_local, Experiment, Metric, RangeDef, Stat, Vary};
+use elaps::figures::call;
+use elaps::linalg::blas3::{dgemm_blocked, dgemm_naive, dtrsm_blocked, dtrmm};
+use elaps::linalg::{Diag, Matrix, Side, Trans, Uplo};
+use elaps::util::prop::{all_close, forall};
+use elaps::util::rng::Xoshiro256;
+
+#[test]
+fn prop_gemm_blocked_equals_naive_any_shape() {
+    forall(
+        0xA1,
+        40,
+        |r, size| {
+            let m = r.range_usize(1, 8 + size * 6);
+            let n = r.range_usize(1, 8 + size * 6);
+            let k = r.range_usize(1, 8 + size * 6);
+            let seed = r.next_u64();
+            (m, n, k, seed)
+        },
+        |&(m, n, k, seed)| {
+            let mut rng = Xoshiro256::seeded(seed);
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let c0 = Matrix::random(m, n, &mut rng);
+            let mut c1 = c0.clone();
+            let mut c2 = c0.clone();
+            dgemm_naive(
+                Trans::No, Trans::No, m, n, k, 1.3, &a.data, m, &b.data, k, 0.7,
+                &mut c1.data, m,
+            );
+            dgemm_blocked(
+                Trans::No, Trans::No, m, n, k, 1.3, &a.data, m, &b.data, k, 0.7,
+                &mut c2.data, m,
+            );
+            all_close(&c1.data, &c2.data, 1e-10 * k as f64)
+        },
+    );
+}
+
+#[test]
+fn prop_trsm_inverts_trmm() {
+    forall(
+        0xA2,
+        30,
+        |r, size| {
+            let n = r.range_usize(1, 4 + size * 4);
+            let nrhs = r.range_usize(1, 6);
+            let side = if r.chance(0.5) { Side::Left } else { Side::Right };
+            let uplo = if r.chance(0.5) { Uplo::Lower } else { Uplo::Upper };
+            let trans = if r.chance(0.5) { Trans::No } else { Trans::Yes };
+            let nb = r.range_usize(1, 9);
+            (n, nrhs, side, uplo, trans, nb, r.next_u64())
+        },
+        |&(n, nrhs, side, uplo, trans, nb, seed)| {
+            let mut rng = Xoshiro256::seeded(seed);
+            let a = Matrix::random_triangular(n, uplo, &mut rng);
+            let (m_b, n_b) = match side {
+                Side::Left => (n, nrhs),
+                Side::Right => (nrhs, n),
+            };
+            let x = Matrix::random(m_b, n_b, &mut rng);
+            let mut bmat = x.clone();
+            dtrmm(side, uplo, trans, Diag::NonUnit, m_b, n_b, 1.0, &a.data, n, &mut bmat.data, m_b);
+            dtrsm_blocked(
+                side, uplo, trans, Diag::NonUnit, m_b, n_b, 1.0, &a.data, n,
+                &mut bmat.data, m_b, nb,
+            );
+            all_close(&bmat.data, &x.data, 1e-8)
+        },
+    );
+}
+
+#[test]
+fn prop_getrf_solve_recovers_rhs() {
+    forall(
+        0xA3,
+        25,
+        |r, size| (r.range_usize(2, 8 + size * 3), r.range_usize(1, 5), r.next_u64()),
+        |&(n, nrhs, seed)| {
+            let mut rng = Xoshiro256::seeded(seed);
+            let a0 = Matrix::random_spd(n, &mut rng);
+            let x = Matrix::random(n, nrhs, &mut rng);
+            let b0 = a0.matmul(&x);
+            let mut a = a0.clone();
+            let mut b = b0.clone();
+            let mut ipiv = vec![0usize; n];
+            elaps::linalg::lapack::dgesv(n, nrhs, &mut a.data, n, &mut ipiv, &mut b.data, n)
+                .map_err(|e| e.to_string())?;
+            all_close(&b.data, &x.data, 1e-7)
+        },
+    );
+}
+
+#[test]
+fn prop_unroll_record_count_always_matches() {
+    forall(
+        0xB1,
+        30,
+        |r, _| {
+            let nreps = r.range_usize(1, 4);
+            let npoints = r.range_usize(1, 3);
+            let sum_iters = r.range_usize(1, 3);
+            let vary_rep = r.chance(0.5);
+            let vary_sum = r.chance(0.5);
+            let omp = r.chance(0.3);
+            (nreps, npoints, sum_iters, vary_rep, vary_sum, omp)
+        },
+        |&(nreps, npoints, sum_iters, vary_rep, vary_sum, omp)| {
+            let mut exp = Experiment {
+                name: "prop".into(),
+                library: "rustblocked".into(),
+                nreps,
+                omp,
+                range: Some(RangeDef::new("n", (1..=npoints as i64).map(|v| v * 8).collect())),
+                sumrange: Some(RangeDef::new("i", (0..sum_iters as i64).collect())),
+                calls: vec![call(
+                    "dgemm",
+                    &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+                )
+                .map_err(|e| e.to_string())?],
+                ..Default::default()
+            };
+            exp.vary.insert(
+                "C".into(),
+                Vary { with_rep: vary_rep, with_sumrange: vary_sum, pad_elems: 0 },
+            );
+            let report = run_local(&exp).map_err(|e| format!("{e:#}"))?;
+            if report.points.len() != npoints {
+                return Err(format!("{} points, want {npoints}", report.points.len()));
+            }
+            for p in &report.points {
+                let want = nreps * sum_iters;
+                if p.records.len() != want {
+                    return Err(format!("{} records, want {want}", p.records.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_report_stats_invariants() {
+    // min ≤ med ≤ max and avg within [min, max] for every metric series
+    forall(
+        0xB2,
+        15,
+        |r, _| (r.range_usize(2, 6), r.next_u64() % 32 + 8),
+        |&(nreps, n)| {
+            let ns = n.to_string();
+            let exp = Experiment {
+                name: "stats".into(),
+                library: "rustref".into(),
+                nreps,
+                calls: vec![call(
+                    "dgemm",
+                    &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+                )
+                .map_err(|e| e.to_string())?],
+                ..Default::default()
+            };
+            let report = run_local(&exp).map_err(|e| format!("{e:#}"))?;
+            for metric in [Metric::TimeS, Metric::Gflops, Metric::Cycles] {
+                let lo = report.series(metric, Stat::Min)[0].1;
+                let hi = report.series(metric, Stat::Max)[0].1;
+                let med = report.series(metric, Stat::Median)[0].1;
+                let avg = report.series(metric, Stat::Avg)[0].1;
+                if !(lo <= med && med <= hi && lo <= avg && avg <= hi) {
+                    return Err(format!("{metric:?}: {lo} {med} {avg} {hi}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_vary_instances_never_alias() {
+    // when C varies per rep, the unrolled script must reference a
+    // distinct instance in every repetition
+    forall(
+        0xB3,
+        20,
+        |r, _| (r.range_usize(2, 5), r.range_usize(1, 3)),
+        |&(nreps, sum_iters)| {
+            let mut exp = Experiment {
+                name: "alias".into(),
+                library: "rustblocked".into(),
+                nreps,
+                sumrange: Some(RangeDef::new("i", (0..sum_iters as i64).collect())),
+                calls: vec![call(
+                    "dgemm",
+                    &["N", "N", "8", "8", "8", "1.0", "$A", "8", "$B", "8", "0.0", "$C", "8"],
+                )
+                .map_err(|e| e.to_string())?],
+                ..Default::default()
+            };
+            exp.vary.insert(
+                "C".into(),
+                Vary { with_rep: true, with_sumrange: true, pad_elems: 0 },
+            );
+            let pts = exp.unroll().map_err(|e| format!("{e:#}"))?;
+            let script = &pts[0].script;
+            let mut seen = std::collections::BTreeSet::new();
+            for line in script.lines().filter(|l| l.starts_with("dgemm")) {
+                let cop = line.split_whitespace().nth(12).unwrap().to_string();
+                seen.insert(cop);
+            }
+            let want = nreps * sum_iters;
+            if want > 1 {
+                if seen.len() != want {
+                    return Err(format!("{} distinct C instances, want {want}", seen.len()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_eigenvalues_match_across_drivers() {
+    use elaps::linalg::lapack::{dsyev, dsyevd, dsyevr, dsyevx};
+    forall(
+        0xC1,
+        10,
+        |r, size| (r.range_usize(3, 10 + size * 2), r.next_u64()),
+        |&(n, seed)| {
+            let mut rng = Xoshiro256::seeded(seed);
+            let a0 = Matrix::random_spd(n, &mut rng);
+            let run = |f: fn(usize, &mut [f64], usize, bool) -> elaps::linalg::Result<elaps::linalg::lapack::eig::EigResult>| {
+                let mut a = a0.clone();
+                f(n, &mut a.data, n, false).map(|r| r.values).map_err(|e| e.to_string())
+            };
+            let v1 = run(dsyev)?;
+            for f in [dsyevd as fn(usize, &mut [f64], usize, bool) -> _, dsyevx, dsyevr] {
+                let v = run(f)?;
+                all_close(&v1, &v, 1e-6)?;
+            }
+            Ok(())
+        },
+    );
+}

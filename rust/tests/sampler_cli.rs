@@ -1,0 +1,156 @@
+//! End-to-end tests of the `elaps` binary: the sampler's stdin/stdout
+//! protocol (the paper's §3.1 workflow), the experiment-file workflow,
+//! and the worker/batch path — all through real process boundaries.
+
+use std::io::Write;
+use std::process::{Command, Stdio};
+
+fn elaps_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_elaps")
+}
+
+#[test]
+fn sampler_protocol_roundtrip() {
+    let mut child = Command::new(elaps_bin())
+        .args(["sampler", "--library", "rustblocked", "--machine", "sandybridge"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let script = "\
+set_counters PAPI_L1_TCM
+dmalloc A 1024
+dmalloc B 1024
+dmalloc C 1024
+dgerand A
+dgerand B
+dgemm N N 32 32 32 1.0 A 32 B 32 0.0 C 32
+dgemm N N 32 32 32 1.0 A 32 B 32 0.0 C 32
+go
+";
+    child.stdin.as_mut().unwrap().write_all(script.as_bytes()).unwrap();
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8(out.stdout).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 2, "{text}");
+    for l in &lines {
+        assert!(l.starts_with("dgemm "), "{l}");
+        let fields: Vec<&str> = l.split_whitespace().collect();
+        assert_eq!(fields.len(), 3); // kernel cycles counter
+        assert!(fields[1].parse::<f64>().unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn sampler_reports_errors_without_dying() {
+    let mut child = Command::new(elaps_bin())
+        .args(["sampler"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let script = "zgemm N N 4 4 4 1.0 A 4 B 4 0.0 C 4\ndmalloc A 16\nfree A\ngo\n";
+    child.stdin.as_mut().unwrap().write_all(script.as_bytes()).unwrap();
+    drop(child.stdin.take());
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8(out.stdout).unwrap();
+    assert!(text.contains("error: unknown kernel"), "{text}");
+}
+
+#[test]
+fn run_experiment_file_and_view_report() {
+    let dir = std::env::temp_dir().join(format!("elaps-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let exp = dir.join("exp.json");
+    std::fs::write(
+        &exp,
+        r#"{"name":"cli-test","library":"rustblocked","machine":"localhost",
+           "nreps":3,"discard_first":true,
+           "range":{"sym":"n","values":[16,32]},
+           "calls":[["dgemm","N","N","n","n","n",1,"$A","n","$B","n",0,"$C","n"]]}"#,
+    )
+    .unwrap();
+    let report = dir.join("report.json");
+    let out = Command::new(elaps_bin())
+        .args(["run", exp.to_str().unwrap(), "--out", report.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(report.exists());
+    // view
+    let out = Command::new(elaps_bin())
+        .args(["view", report.to_str().unwrap(), "--metric", "gflops", "--stat", "max"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Gflops/s"), "{text}");
+    // plot with svg
+    let svg = dir.join("plot.svg");
+    let out = Command::new(elaps_bin())
+        .args(["plot", report.to_str().unwrap(), "--svg", svg.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(std::fs::read_to_string(&svg).unwrap().starts_with("<svg"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_submit_and_worker_once() {
+    let dir = std::env::temp_dir().join(format!("elaps-cli-batch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let exp = dir.join("exp.json");
+    std::fs::write(
+        &exp,
+        r#"{"name":"batch-test","library":"rustref","nreps":2,
+           "calls":[["dgemm","N","N",24,24,24,1,"$A",24,"$B",24,0,"$C",24]]}"#,
+    )
+    .unwrap();
+    let spool = dir.join("spool");
+    let out = Command::new(elaps_bin())
+        .args([
+            "run",
+            exp.to_str().unwrap(),
+            "--batch",
+            "--spool",
+            spool.to_str().unwrap(),
+            "--out",
+            dir.join("report.json").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("report.json").exists());
+    // queue fully drained: worker --once exits immediately
+    let out = Command::new(elaps_bin())
+        .args(["worker", "--spool", spool.to_str().unwrap(), "--once"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn kernels_and_libraries_listings() {
+    let out = Command::new(elaps_bin()).args(["kernels"]).output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    for k in ["dgemm", "dtrsyl", "dsyevr", "dposv"] {
+        assert!(text.contains(k), "missing {k}");
+    }
+    let out = Command::new(elaps_bin()).args(["libraries"]).output().unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rustblocked"));
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let out = Command::new(elaps_bin()).args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+}
