@@ -210,40 +210,77 @@ fn call_from_json(j: &Json) -> Result<Call> {
 
 // ------------------------------------------------------------- report
 
+/// Serialize one measurement point (also the engine's result-cache
+/// entry format, [`crate::engine::cache`]).
+pub fn point_result_to_json(p: &PointResult) -> Json {
+    let mut pj = Json::obj();
+    pj.set("range_value", p.range_value)
+        .set("nthreads", p.nthreads)
+        .set("sum_iters", p.sum_iters)
+        .set("calls_per_iter", p.calls_per_iter);
+    let recs: Vec<Json> = p
+        .records
+        .iter()
+        .map(|rec| {
+            let mut o = Json::obj();
+            o.set("kernel", rec.kernel.as_str())
+                .set("seconds", rec.seconds)
+                .set("cycles", rec.cycles)
+                .set("flops", rec.flops)
+                .set(
+                    "counters",
+                    Json::Arr(rec.counters.iter().map(|&c| Json::Num(c as f64)).collect()),
+                );
+            if let Some(g) = rec.omp_group {
+                o.set("omp_group", g);
+            }
+            o
+        })
+        .collect();
+    pj.set("records", Json::Arr(recs));
+    pj
+}
+
+/// Deserialize one measurement point (lenient: missing fields fall back
+/// to defaults, matching the rest of the report loader).
+pub fn point_result_from_json(pj: &Json) -> PointResult {
+    let records = pj
+        .get("records")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|o| Record {
+            kernel: o.get("kernel").as_str().unwrap_or("?").to_string(),
+            seconds: o.get("seconds").as_f64().unwrap_or(0.0),
+            cycles: o.get("cycles").as_f64().unwrap_or(0.0),
+            flops: o.get("flops").as_f64().unwrap_or(0.0),
+            counters: o
+                .get("counters")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|c| c.as_f64().map(|v| v as u64))
+                .collect(),
+            omp_group: o.get("omp_group").as_u64().map(|v| v as usize),
+        })
+        .collect();
+    PointResult {
+        range_value: pj.get("range_value").as_i64().unwrap_or(0),
+        nthreads: pj.get("nthreads").as_u64().unwrap_or(1) as usize,
+        sum_iters: pj.get("sum_iters").as_u64().unwrap_or(1) as usize,
+        calls_per_iter: pj.get("calls_per_iter").as_u64().unwrap_or(1) as usize,
+        records,
+    }
+}
+
 pub fn report_to_json(r: &Report) -> Json {
     let mut j = Json::obj();
     j.set("experiment", experiment_to_json(&r.experiment));
     j.set("machine", r.machine.name);
-    let mut pts = Vec::new();
-    for p in &r.points {
-        let mut pj = Json::obj();
-        pj.set("range_value", p.range_value)
-            .set("nthreads", p.nthreads)
-            .set("sum_iters", p.sum_iters)
-            .set("calls_per_iter", p.calls_per_iter);
-        let recs: Vec<Json> = p
-            .records
-            .iter()
-            .map(|rec| {
-                let mut o = Json::obj();
-                o.set("kernel", rec.kernel.as_str())
-                    .set("seconds", rec.seconds)
-                    .set("cycles", rec.cycles)
-                    .set("flops", rec.flops)
-                    .set(
-                        "counters",
-                        Json::Arr(rec.counters.iter().map(|&c| Json::Num(c as f64)).collect()),
-                    );
-                if let Some(g) = rec.omp_group {
-                    o.set("omp_group", g);
-                }
-                o
-            })
-            .collect();
-        pj.set("records", Json::Arr(recs));
-        pts.push(pj);
-    }
-    j.set("points", Json::Arr(pts));
+    j.set(
+        "points",
+        Json::Arr(r.points.iter().map(point_result_to_json).collect()),
+    );
     j
 }
 
@@ -254,36 +291,13 @@ pub fn report_from_json(j: &Json) -> Result<Report> {
     let machine = MachineModel::by_name(&experiment.machine)
         .or_else(|| MachineModel::by_name(machine_name))
         .unwrap_or_else(MachineModel::localhost);
-    let mut points = Vec::new();
-    for pj in j.get("points").as_arr().unwrap_or(&[]) {
-        let records = pj
-            .get("records")
-            .as_arr()
-            .unwrap_or(&[])
-            .iter()
-            .map(|o| Record {
-                kernel: o.get("kernel").as_str().unwrap_or("?").to_string(),
-                seconds: o.get("seconds").as_f64().unwrap_or(0.0),
-                cycles: o.get("cycles").as_f64().unwrap_or(0.0),
-                flops: o.get("flops").as_f64().unwrap_or(0.0),
-                counters: o
-                    .get("counters")
-                    .as_arr()
-                    .unwrap_or(&[])
-                    .iter()
-                    .filter_map(|c| c.as_f64().map(|v| v as u64))
-                    .collect(),
-                omp_group: o.get("omp_group").as_u64().map(|v| v as usize),
-            })
-            .collect();
-        points.push(PointResult {
-            range_value: pj.get("range_value").as_i64().unwrap_or(0),
-            nthreads: pj.get("nthreads").as_u64().unwrap_or(1) as usize,
-            sum_iters: pj.get("sum_iters").as_u64().unwrap_or(1) as usize,
-            calls_per_iter: pj.get("calls_per_iter").as_u64().unwrap_or(1) as usize,
-            records,
-        });
-    }
+    let points = j
+        .get("points")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(point_result_from_json)
+        .collect();
     Report::assemble(experiment, machine, points)
 }
 

@@ -4,45 +4,23 @@
 
 use super::experiment::Experiment;
 use super::io;
-use super::report::{PointResult, Report};
-use crate::perfmodel::MachineModel;
-use crate::sampler::Sampler;
-use anyhow::{anyhow, bail, Context, Result};
+use super::report::Report;
+use anyhow::{anyhow, bail, Result};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// Run an experiment on in-process samplers (the "local" backend).
 ///
 /// One fresh sampler per parameter-range point, exactly as the paper
 /// starts the sampler separately per thread count / range value.
+/// Routes through the [`crate::engine`] with the process-default
+/// configuration — serial and uncached unless the CLI's `--jobs` /
+/// `--cache` flags or the `ELAPS_JOBS` / `ELAPS_CACHE` environment
+/// variables say otherwise.
 pub fn run_local(exp: &Experiment) -> Result<Report> {
-    let machine = MachineModel::by_name(&exp.machine)
-        .ok_or_else(|| anyhow!("unknown machine '{}'", exp.machine))?;
-    let points = exp.unroll()?;
-    let mut results = Vec::with_capacity(points.len());
-    for p in &points {
-        let library = crate::libraries::by_name(&exp.library)
-            .ok_or_else(|| anyhow!("unknown library '{}'", exp.library))?;
-        let mut sampler = Sampler::new(library, machine.clone());
-        let records = sampler
-            .run_script(&p.script)
-            .with_context(|| format!("point {} of '{}'", p.range_value, exp.name))?;
-        let expected = p.expected_records(exp.nreps);
-        if records.len() != expected {
-            bail!(
-                "point {}: sampler produced {} records, expected {expected}",
-                p.range_value,
-                records.len()
-            );
-        }
-        results.push(PointResult {
-            range_value: p.range_value,
-            nthreads: p.nthreads,
-            sum_iters: p.sum_iters,
-            calls_per_iter: p.calls_per_iter,
-            records,
-        });
-    }
-    Report::assemble(exp.clone(), machine, results)
+    crate::engine::Engine::with_defaults().run(exp)
 }
 
 /// The batch spooler: `submit` drops a job file into `<spool>/queue`;
@@ -63,60 +41,153 @@ impl Spooler {
         Ok(Spooler { dir })
     }
 
-    /// Submit an experiment; returns the job id.
+    /// Submit an experiment; returns the job id. The id embeds a
+    /// process-local sequence number besides the timestamp, so rapid
+    /// submissions from one process can never collide.
     pub fn submit(&self, exp: &Experiment) -> Result<String> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
         let job_id = format!(
-            "{}-{:x}",
+            "{}-{:x}-{}",
             exp.name.replace(['/', ' '], "_"),
             std::time::SystemTime::now()
                 .duration_since(std::time::UNIX_EPOCH)
                 .unwrap()
-                .as_nanos()
+                .as_nanos(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
         );
         let path = self.dir.join("queue").join(format!("{job_id}.json"));
-        let tmp = path.with_extension("tmp");
+        let tmp = unique_tmp(&path);
         std::fs::write(&tmp, io::experiment_to_json(exp).to_string_pretty())?;
         std::fs::rename(&tmp, &path)?; // atomic enqueue
         Ok(job_id)
     }
 
-    /// Worker side: take one queued job (if any), run it, write the
-    /// report. Returns the processed job id.
-    pub fn serve_one(&self) -> Result<Option<String>> {
+    /// Atomically claim the oldest queued job by renaming it into
+    /// `<spool>/running/`, and return its contents. Losing the rename
+    /// race to a concurrent worker (or having the fresh claim stolen by
+    /// a concurrent `recover_stale`) is not an error — the claimer just
+    /// moves on to the next queue entry.
+    fn claim_next(&self) -> Result<Option<(String, PathBuf, String)>> {
         let queue = self.dir.join("queue");
         let mut entries: Vec<_> = std::fs::read_dir(&queue)?
             .filter_map(|e| e.ok())
             .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
             .collect();
         entries.sort_by_key(|e| e.file_name());
-        let Some(entry) = entries.into_iter().next() else {
+        for entry in entries {
+            let job_id = path_job_id(&entry.path());
+            let running = self.dir.join("running").join(format!("{job_id}.json"));
+            match std::fs::rename(entry.path(), &running) {
+                Ok(()) => {}
+                // another worker claimed it between read_dir and rename
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e.into()),
+            }
+            let text = match std::fs::read_to_string(&running) {
+                Ok(text) => text,
+                // a concurrent recover_stale requeued it already
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
+                Err(e) => return Err(e.into()),
+            };
+            // rename preserves the submit-time mtime; atomically
+            // rewrite the claim so recover_stale measures staleness
+            // from the claim, not from submission (best-effort — a
+            // failed touch only makes the job recoverable earlier, and
+            // the tmp+rename means it can never truncate the claim)
+            let touch = unique_tmp(&running);
+            if std::fs::write(&touch, &text).is_ok() {
+                let _ = std::fs::rename(&touch, &running);
+            }
+            return Ok(Some((job_id, running, text)));
+        }
+        Ok(None)
+    }
+
+    /// Move jobs stranded in `<spool>/running/` by crashed workers back
+    /// into the queue. A job is considered stale once its claim file
+    /// has not been touched for `max_age`. Returns the number of jobs
+    /// recovered.
+    ///
+    /// Recovery gives at-least-once semantics: a job whose runtime
+    /// exceeds `max_age` may be recovered while still running and
+    /// executed twice (both executions publish complete reports
+    /// atomically; the last one wins). Pick `max_age` above the longest
+    /// expected job; true exactly-once needs worker heartbeats (see
+    /// ROADMAP "remote/multi-host workers").
+    pub fn recover_stale(&self, max_age: Duration) -> Result<usize> {
+        let running = self.dir.join("running");
+        let mut recovered = 0;
+        for entry in std::fs::read_dir(&running)?.filter_map(|e| e.ok()) {
+            let path = entry.path();
+            if !path.extension().is_some_and(|x| x == "json") {
+                continue;
+            }
+            let age = entry
+                .metadata()
+                .ok()
+                .and_then(|m| m.modified().ok())
+                .and_then(|t| t.elapsed().ok());
+            // only a readable, past timestamp older than max_age is
+            // stale; future-dated mtimes (clock skew) and unreadable
+            // metadata count as fresh so live jobs are never stolen
+            // on a hiccup
+            if !age.is_some_and(|a| a >= max_age) {
+                continue;
+            }
+            let dest = self.dir.join("queue").join(path.file_name().unwrap());
+            match std::fs::rename(&path, &dest) {
+                Ok(()) => recovered += 1,
+                // the (not so crashed) worker finished or re-claimed it
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(recovered)
+    }
+
+    /// Worker side: take one queued job (if any), run it, write the
+    /// report. Returns the processed job id.
+    pub fn serve_one(&self) -> Result<Option<String>> {
+        let Some((job_id, running, text)) = self.claim_next()? else {
             return Ok(None);
         };
-        let job_id = entry
-            .path()
-            .file_stem()
-            .unwrap()
-            .to_string_lossy()
-            .to_string();
-        let running = self.dir.join("running").join(format!("{job_id}.json"));
-        std::fs::rename(entry.path(), &running)?; // claim
-        let text = std::fs::read_to_string(&running)?;
-        let exp = io::experiment_from_json(
-            &crate::util::json::Json::parse(&text).map_err(|e| anyhow!("{e}"))?,
-        )?;
+        // A malformed job file is the job's failure, not the worker's:
+        // publish it as an error report like any failed run, so poison
+        // jobs cannot crash-loop the worker through recover_stale.
+        let result = crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("invalid job file: {e}"))
+            .and_then(|j| io::experiment_from_json(&j))
+            .and_then(|exp| run_local(&exp));
         let done = self.dir.join("done").join(format!("{job_id}.report.json"));
-        match run_local(&exp) {
-            Ok(report) => {
-                std::fs::write(&done, io::report_to_json(&report).to_string_pretty())?;
-            }
+        let payload = match result {
+            Ok(report) => io::report_to_json(&report).to_string_pretty(),
             Err(e) => {
                 let mut j = crate::util::json::Json::obj();
                 j.set("error", format!("{e:#}"));
-                std::fs::write(&done, j.to_string_pretty())?;
+                j.to_string_pretty()
             }
+        };
+        // atomic publish: if a duplicate worker (after recover_stale)
+        // races us, readers still only ever see one complete report
+        let tmp = unique_tmp(&done);
+        std::fs::write(&tmp, payload)?;
+        std::fs::rename(&tmp, &done)?;
+        // the claim may already be gone if recover_stale requeued this
+        // job and another worker finished it — our report is still valid
+        match std::fs::remove_file(&running) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(e.into()),
         }
-        std::fs::remove_file(&running)?;
         Ok(Some(job_id))
+    }
+
+    /// Number of jobs currently waiting in the queue.
+    pub fn queued(&self) -> Result<usize> {
+        Ok(std::fs::read_dir(self.dir.join("queue"))?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+            .count())
     }
 
     /// Poll for a finished job's report.
@@ -133,6 +204,59 @@ impl Spooler {
         Ok(Some(io::report_from_json(&j)?))
     }
 
+    /// Block until a job's report appears, polling with exponential
+    /// backoff (10 ms doubling up to 1 s — the submit → poll → fetch
+    /// workflow of the paper's LoadLeveler/LSF setups, without busy-
+    /// spinning on the filesystem).
+    pub fn wait(&self, job_id: &str, timeout: Duration) -> Result<Report> {
+        let deadline = Instant::now() + timeout;
+        let mut delay = Duration::from_millis(10);
+        loop {
+            if let Some(report) = self.fetch(job_id)? {
+                return Ok(report);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                bail!("timed out after {timeout:?} waiting for job {job_id}");
+            }
+            std::thread::sleep(delay.min(deadline - now));
+            delay = (delay * 2).min(Duration::from_secs(1));
+        }
+    }
+
+    /// Drain the queue with `jobs` concurrent workers (the multi-worker
+    /// spooler loop behind `elaps worker --jobs N`). Each worker claims
+    /// jobs via the atomic rename until the queue is empty. Returns the
+    /// number of jobs served.
+    pub fn drain(&self, jobs: usize) -> Result<usize> {
+        let jobs = jobs.max(1);
+        let served = AtomicUsize::new(0);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        std::thread::scope(|s| {
+            for _ in 0..jobs {
+                s.spawn(|| loop {
+                    match self.serve_one() {
+                        Ok(Some(_)) => {
+                            served.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            let mut guard = first_err.lock().unwrap();
+                            if guard.is_none() {
+                                *guard = Some(e);
+                            }
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = first_err.lock().unwrap().take() {
+            return Err(e);
+        }
+        Ok(served.load(Ordering::Relaxed))
+    }
+
     /// Submit, serve in-process, and fetch — the blocking convenience
     /// used by tests and the CLI's `--batch` mode without a separate
     /// worker process.
@@ -142,6 +266,22 @@ impl Spooler {
         self.fetch(&id)?
             .ok_or_else(|| anyhow!("job {id} did not produce a report"))
     }
+}
+
+/// Job id of a spool file (`<id>.json` → `<id>`).
+fn path_job_id(path: &Path) -> String {
+    path.file_stem().map(|s| s.to_string_lossy().to_string()).unwrap_or_default()
+}
+
+/// A sibling temp path unique across processes *and* within this
+/// process, for atomic write+rename publishes.
+fn unique_tmp(path: &Path) -> PathBuf {
+    static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+    path.with_extension(format!(
+        "{}.{}.tmp",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
 }
 
 #[cfg(test)]
@@ -217,6 +357,83 @@ mod tests {
         assert_eq!(report.points[0].records.len(), 2);
         // queue drained
         assert_eq!(spool.serve_one().unwrap(), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crashed_worker_job_is_recovered() {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_spool_recover_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = Spooler::new(&dir).unwrap();
+        let id = spool.submit(&dgemm_experiment(20)).unwrap();
+        // simulate a worker that claimed the job and then crashed
+        std::fs::rename(
+            dir.join("queue").join(format!("{id}.json")),
+            dir.join("running").join(format!("{id}.json")),
+        )
+        .unwrap();
+        assert_eq!(spool.serve_one().unwrap(), None, "claimed job must be invisible");
+        // a fresh claim is not stale yet
+        assert_eq!(spool.recover_stale(std::time::Duration::from_secs(3600)).unwrap(), 0);
+        // with zero tolerance it is recovered and servable again
+        assert_eq!(spool.recover_stale(std::time::Duration::ZERO).unwrap(), 1);
+        assert_eq!(spool.serve_one().unwrap().as_deref(), Some(id.as_str()));
+        assert!(spool.fetch(&id).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn poison_job_becomes_error_report_not_worker_crash() {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_spool_poison_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = Spooler::new(&dir).unwrap();
+        std::fs::write(dir.join("queue").join("poison.json"), "{not json").unwrap();
+        // the worker must survive and publish the failure as a report
+        assert_eq!(spool.serve_one().unwrap().as_deref(), Some("poison"));
+        let err = spool.fetch("poison").unwrap_err();
+        assert!(err.to_string().contains("failed"), "{err}");
+        assert_eq!(spool.serve_one().unwrap(), None, "poison job must not requeue");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drain_serves_all_jobs_with_concurrent_workers() {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_spool_drain_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = Spooler::new(&dir).unwrap();
+        let ids: Vec<String> =
+            (0..4).map(|_| spool.submit(&dgemm_experiment(16)).unwrap()).collect();
+        assert_eq!(ids.iter().collect::<std::collections::BTreeSet<_>>().len(), 4);
+        assert_eq!(spool.drain(3).unwrap(), 4);
+        for id in &ids {
+            assert!(spool.fetch(id).unwrap().is_some(), "{id}");
+        }
+        assert_eq!(spool.serve_one().unwrap(), None);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wait_polls_with_backoff_until_served() {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_spool_wait_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = Spooler::new(&dir).unwrap();
+        let id = spool.submit(&dgemm_experiment(16)).unwrap();
+        let report = std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(30));
+                spool.serve_one().unwrap();
+            });
+            spool.wait(&id, Duration::from_secs(30)).unwrap()
+        });
+        assert_eq!(report.points.len(), 1);
+        // waiting on a job nobody serves times out
+        let id2 = spool.submit(&dgemm_experiment(16)).unwrap();
+        let err = spool.wait(&id2, Duration::from_millis(40)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

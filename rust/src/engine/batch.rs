@@ -1,0 +1,219 @@
+//! Batch scheduling: the core fan-out/merge loop shared by single-
+//! experiment runs and whole-campaign batches. Every experiment is
+//! validated and unrolled up front; all points of all experiments go
+//! into one [`WorkQueue`]; a pool of OS threads drains it; results are
+//! merged back into per-experiment [`Report`]s strictly in point order,
+//! so parallel output is structurally identical to serial execution.
+
+use super::cache::ResultCache;
+use super::queue::WorkQueue;
+use super::{execute_point, EngineConfig, RunStats};
+use crate::coordinator::experiment::{Experiment, UnrolledPoint};
+use crate::coordinator::report::{PointResult, Report};
+use crate::perfmodel::MachineModel;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One experiment's resolved execution plan.
+struct Plan<'a> {
+    exp: &'a Experiment,
+    machine: MachineModel,
+    points: Vec<UnrolledPoint>,
+}
+
+/// One schedulable unit: point `pt_i` of experiment `exp_i`.
+#[derive(Clone, Copy)]
+struct Item {
+    exp_i: usize,
+    pt_i: usize,
+}
+
+/// Run a batch of experiments through the worker pool; returns one
+/// report per experiment (in input order) plus execution statistics.
+pub fn run_batch_stats(
+    cfg: &EngineConfig,
+    exps: &[Experiment],
+) -> Result<(Vec<Report>, RunStats)> {
+    // -- phase 1: validate and unroll everything before spawning
+    let mut plans = Vec::with_capacity(exps.len());
+    for exp in exps {
+        let machine = MachineModel::by_name(&exp.machine)
+            .ok_or_else(|| anyhow!("unknown machine '{}'", exp.machine))?;
+        // fail fast on unknown libraries before any worker spawns; the
+        // workers re-resolve per point so every point gets a library
+        // instance with fresh thread-count state, exactly like serial
+        crate::libraries::by_name(&exp.library)
+            .ok_or_else(|| anyhow!("unknown library '{}'", exp.library))?;
+        let points = exp.unroll()?;
+        plans.push(Plan { exp, machine, points });
+    }
+    let cache = match &cfg.cache_dir {
+        Some(dir) => Some(ResultCache::open(dir)?),
+        None => None,
+    };
+
+    // -- phase 2: shard all points across the pool
+    let items: Vec<Item> = plans
+        .iter()
+        .enumerate()
+        .flat_map(|(exp_i, p)| (0..p.points.len()).map(move |pt_i| Item { exp_i, pt_i }))
+        .collect();
+    let total = items.len();
+    let jobs = cfg.jobs.max(1).min(total.max(1));
+    let queue = WorkQueue::new(items);
+
+    // One slot per point: workers fill them by index, which makes the
+    // merge deterministic regardless of completion order.
+    let slots: Vec<Vec<Mutex<Option<PointResult>>>> = plans
+        .iter()
+        .map(|p| (0..p.points.len()).map(|_| Mutex::new(None)).collect())
+        .collect();
+    let executed = AtomicUsize::new(0);
+    let cache_hits = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    // Keep the failure at the lowest (experiment, point) index so a
+    // parallel run reports the same error a serial run would hit first.
+    let first_err: Mutex<Option<(usize, usize, anyhow::Error)>> = Mutex::new(None);
+
+    let process = |item: Item| -> Result<()> {
+        let plan = &plans[item.exp_i];
+        let point = &plan.points[item.pt_i];
+        let expected = point.expected_records(plan.exp.nreps);
+        let run = || -> Result<PointResult> {
+            let library = crate::libraries::by_name(&plan.exp.library)
+                .ok_or_else(|| anyhow!("unknown library '{}'", plan.exp.library))?;
+            // The three built-in rust libraries are constructed fresh
+            // per by_name call, so each point owns its thread-count
+            // state. Registered backends (e.g. xla) are one shared
+            // instance whose set_threads would race across workers —
+            // serialize those points so their measurements stay
+            // identical to serial execution.
+            static SHARED_BACKEND_LOCK: Mutex<()> = Mutex::new(());
+            let shared = !crate::libraries::RUST_LIBRARIES
+                .contains(&plan.exp.library.as_str());
+            let _guard = shared.then(|| SHARED_BACKEND_LOCK.lock().unwrap());
+            let r = execute_point(&library, &plan.machine, plan.exp, point)?;
+            executed.fetch_add(1, Ordering::Relaxed);
+            Ok(r)
+        };
+        let result = if let Some(c) = &cache {
+            let key = ResultCache::fingerprint(
+                &plan.exp.library,
+                plan.machine.name,
+                plan.exp.nreps,
+                point,
+            );
+            if let Some(hit) = c.lookup(&key, expected) {
+                cache_hits.fetch_add(1, Ordering::Relaxed);
+                hit
+            } else {
+                let r = run()?;
+                // a full/read-only cache must not discard a measurement
+                // that already succeeded — degrade to uncached
+                if let Err(e) = c.store(&key, &r) {
+                    eprintln!("warning: result-cache write failed ({e:#}); continuing uncached");
+                }
+                r
+            }
+        } else {
+            run()?
+        };
+        *slots[item.exp_i][item.pt_i].lock().unwrap() = Some(result);
+        Ok(())
+    };
+    let worker = || {
+        while let Some(item) = queue.pop() {
+            if failed.load(Ordering::Relaxed) {
+                break;
+            }
+            if let Err(e) = process(item) {
+                failed.store(true, Ordering::Relaxed);
+                let mut guard = first_err.lock().unwrap();
+                let replace = match &*guard {
+                    None => true,
+                    Some((ei, pi, _)) => (item.exp_i, item.pt_i) < (*ei, *pi),
+                };
+                if replace {
+                    *guard = Some((item.exp_i, item.pt_i, e));
+                }
+            }
+        }
+    };
+    if jobs <= 1 {
+        worker();
+    } else {
+        std::thread::scope(|s| {
+            for _ in 0..jobs {
+                s.spawn(&worker);
+            }
+        });
+    }
+
+    if let Some((_, _, e)) = first_err.lock().unwrap().take() {
+        return Err(e);
+    }
+
+    // -- phase 3: deterministic in-order merge
+    let mut reports = Vec::with_capacity(plans.len());
+    for (plan, row) in plans.iter().zip(&slots) {
+        let mut results = Vec::with_capacity(row.len());
+        for (pt_i, slot) in row.iter().enumerate() {
+            let r = slot.lock().unwrap().take().ok_or_else(|| {
+                anyhow!("engine produced no result for point {pt_i} of '{}'", plan.exp.name)
+            })?;
+            results.push(r);
+        }
+        reports.push(Report::assemble(plan.exp.clone(), plan.machine.clone(), results)?);
+    }
+    let stats = RunStats {
+        executed: executed.load(Ordering::Relaxed),
+        cache_hits: cache_hits.load(Ordering::Relaxed),
+        jobs,
+    };
+    Ok((reports, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::tests_support::dgemm_experiment;
+
+    #[test]
+    fn batch_preserves_input_order() {
+        let mut exps = Vec::new();
+        for n in [16i64, 24, 32] {
+            let mut e = dgemm_experiment(n);
+            e.nreps = 2;
+            exps.push(e);
+        }
+        let cfg = EngineConfig { jobs: 3, cache_dir: None };
+        let (reports, stats) = run_batch_stats(&cfg, &exps).unwrap();
+        assert_eq!(reports.len(), 3);
+        for (r, n) in reports.iter().zip([16i64, 24, 32]) {
+            assert_eq!(r.experiment.name, format!("dgemm{n}"));
+            assert_eq!(r.points.len(), 1);
+            assert_eq!(r.points[0].records.len(), 2);
+        }
+        assert_eq!(stats.executed, 3);
+        assert_eq!(stats.cache_hits, 0);
+        assert_eq!(stats.jobs, 3);
+    }
+
+    #[test]
+    fn bad_experiment_fails_whole_batch_with_its_error() {
+        let mut bad = dgemm_experiment(16);
+        bad.library = "essl".into();
+        let cfg = EngineConfig { jobs: 2, cache_dir: None };
+        let err = run_batch_stats(&cfg, &[dgemm_experiment(16), bad]).unwrap_err();
+        assert!(err.to_string().contains("essl"), "{err}");
+    }
+
+    #[test]
+    fn jobs_zero_means_serial() {
+        let cfg = EngineConfig { jobs: 0, cache_dir: None };
+        let (reports, stats) = run_batch_stats(&cfg, &[dgemm_experiment(16)]).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(stats.jobs, 1);
+    }
+}

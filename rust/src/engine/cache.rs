@@ -1,0 +1,180 @@
+//! Content-addressed result cache: fingerprint of (library, machine
+//! model, repetitions, unrolled point) → stored [`PointResult`] on
+//! disk. Re-runs and overlapping sweep campaigns skip already-measured
+//! points entirely — the paper's sweeps (§2.4, §3.2.1) routinely share
+//! points between figure campaigns.
+//!
+//! The fingerprint hashes the *unrolled sampler script*, not the
+//! experiment description: the script is the canonical form after all
+//! symbolic ranges are evaluated, so two different experiments that
+//! unroll to the same measurement share a cache entry, while any change
+//! to operand sizes, vary specs, counters or thread counts changes the
+//! script and therefore the key.
+
+use crate::coordinator::experiment::UnrolledPoint;
+use crate::coordinator::io;
+use crate::coordinator::report::PointResult;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// On-disk cache of measured points, one JSON file per fingerprint.
+pub struct ResultCache {
+    dir: PathBuf,
+}
+
+/// 64-bit FNV-1a (the registry provides no hashing crates; this is the
+/// standard offset-basis/prime pair).
+fn fnv1a64(basis: u64, data: &[u8]) -> u64 {
+    let mut h = basis;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl ResultCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<ResultCache> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        Ok(ResultCache { dir })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Content fingerprint of one measurement point. Two independent
+    /// FNV-1a passes (the second chained on the first) give a 128-bit
+    /// key — ample for campaign-scale point counts.
+    pub fn fingerprint(
+        library: &str,
+        machine: &str,
+        nreps: usize,
+        point: &UnrolledPoint,
+    ) -> String {
+        let desc = format!(
+            "library={library}\nmachine={machine}\nnreps={nreps}\n\
+             range_value={}\nnthreads={}\nsum_iters={}\ncalls_per_iter={}\nscript:\n{}",
+            point.range_value, point.nthreads, point.sum_iters, point.calls_per_iter,
+            point.script
+        );
+        let lo = fnv1a64(0xcbf2_9ce4_8422_2325, desc.as_bytes());
+        let hi = fnv1a64(lo ^ 0x9e37_79b9_7f4a_7c15, desc.as_bytes());
+        format!("{hi:016x}{lo:016x}")
+    }
+
+    fn entry_path(&self, key: &str) -> PathBuf {
+        self.dir.join(format!("{key}.json"))
+    }
+
+    /// Look up a cached point. Entries whose stored record count does
+    /// not match `expected_records` (e.g. written by an older run with
+    /// different semantics, or truncated) are treated as misses.
+    pub fn lookup(&self, key: &str, expected_records: usize) -> Option<PointResult> {
+        let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let p = io::point_result_from_json(&j);
+        if p.records.len() == expected_records {
+            Some(p)
+        } else {
+            None
+        }
+    }
+
+    /// Store a measured point atomically (unique temp file + rename),
+    /// so concurrent workers racing on the same key never expose a
+    /// partially written entry — last writer wins.
+    pub fn store(&self, key: &str, point: &PointResult) -> Result<()> {
+        let path = self.entry_path(key);
+        let tmp = self.dir.join(format!(
+            "{key}.{}.{}.tmp",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, io::point_result_to_json(point).to_string_pretty())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    /// Number of entries currently stored.
+    pub fn entries(&self) -> usize {
+        std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::tests_support::dgemm_experiment;
+    use crate::sampler::Record;
+
+    fn point() -> UnrolledPoint {
+        dgemm_experiment(16).unroll().unwrap().remove(0)
+    }
+
+    fn result(nrecords: usize) -> PointResult {
+        PointResult {
+            range_value: 0,
+            nthreads: 1,
+            sum_iters: 1,
+            calls_per_iter: 1,
+            records: (0..nrecords)
+                .map(|i| Record {
+                    kernel: "dgemm".into(),
+                    seconds: 0.001 * (i + 1) as f64,
+                    cycles: 2.6e6 * (i + 1) as f64,
+                    counters: vec![i as u64],
+                    omp_group: None,
+                    flops: 2.0 * 16.0 * 16.0 * 16.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_content_sensitive() {
+        let p = point();
+        let k1 = ResultCache::fingerprint("rustblocked", "localhost", 3, &p);
+        let k2 = ResultCache::fingerprint("rustblocked", "localhost", 3, &p);
+        assert_eq!(k1, k2);
+        assert_eq!(k1.len(), 32);
+        // any input component changes the key
+        assert_ne!(k1, ResultCache::fingerprint("rustref", "localhost", 3, &p));
+        assert_ne!(k1, ResultCache::fingerprint("rustblocked", "sandybridge", 3, &p));
+        assert_ne!(k1, ResultCache::fingerprint("rustblocked", "localhost", 4, &p));
+        let other = dgemm_experiment(32).unroll().unwrap().remove(0);
+        assert_ne!(k1, ResultCache::fingerprint("rustblocked", "localhost", 3, &other));
+    }
+
+    #[test]
+    fn store_lookup_roundtrip_and_count_validation() {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_cache_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap();
+        let key = ResultCache::fingerprint("rustblocked", "localhost", 3, &point());
+        assert!(cache.lookup(&key, 3).is_none());
+        cache.store(&key, &result(3)).unwrap();
+        assert_eq!(cache.entries(), 1);
+        let hit = cache.lookup(&key, 3).unwrap();
+        assert_eq!(hit.records.len(), 3);
+        assert_eq!(hit.records[2].counters, vec![2]);
+        assert!((hit.records[1].seconds - 0.002).abs() < 1e-12);
+        // a mismatching expected count is a miss, not a wrong answer
+        assert!(cache.lookup(&key, 5).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,254 @@
+//! The parallel experiment execution engine — the subsystem between the
+//! [`crate::coordinator::Experiment`] abstraction and the
+//! [`crate::sampler`]s.
+//!
+//! The paper's whole workflow (§2, §3.2.1–3.2.2) is running *many*
+//! sampler invocations: one per repetition × parameter-range point ×
+//! thread count, across whole figure campaigns. The engine turns that
+//! into a scheduled workload:
+//!
+//! * **sharding** ([`batch`]) — an experiment's unrolled points (and,
+//!   for batches, the points of *all* submitted experiments) are pushed
+//!   into one shared [`queue::WorkQueue`] and drained by a configurable
+//!   pool of OS threads;
+//! * **determinism** — every worker constructs its samplers locally,
+//!   one *fresh* sampler per point (exactly the serial semantics: the
+//!   paper starts the sampler separately per range value / thread
+//!   count), and results are merged back by point index, so a parallel
+//!   run is structurally identical — same point order, record counts,
+//!   simulated counters, flop counts and OpenMP groups — to `--jobs 1`;
+//! * **result caching** ([`cache`]) — a content-addressed on-disk cache
+//!   keyed by the fingerprint of (library, machine model, nreps,
+//!   unrolled script) lets re-runs and overlapping sweeps skip
+//!   already-measured points;
+//! * **batch submission** — [`Engine::run_batch`] schedules whole
+//!   campaigns (the `elaps batch` command, [`crate::figures`] drivers)
+//!   through one queue instead of one experiment at a time.
+//!
+//! [`crate::coordinator::run_local`] routes through the engine with the
+//! process-default configuration ([`default_config`]), which the CLI
+//! sets from `--jobs N --cache DIR` and which honours the `ELAPS_JOBS`
+//! / `ELAPS_CACHE` environment variables (used by the bench binaries).
+//!
+//! **Timing caveat.** Structure is deterministic, wall-clock is not:
+//! with `--jobs > 1` concurrently executing kernels contend for cores
+//! and memory bandwidth, which inflates the measured `seconds`/`cycles`
+//! of each point — and a result cache filled by a parallel run replays
+//! those inflated timings to later runs. Use parallel runs for
+//! campaign exploration and functional sweeps; measure publication
+//! timings (and populate shared caches) with `--jobs 1`. The simulated
+//! PAPI counters, flop counts and record structure are unaffected
+//! either way.
+
+pub mod batch;
+pub mod cache;
+pub mod queue;
+
+pub use cache::ResultCache;
+pub use queue::WorkQueue;
+
+use crate::coordinator::experiment::{Experiment, UnrolledPoint};
+use crate::coordinator::report::{PointResult, Report};
+use crate::libraries::KernelLibrary;
+use crate::perfmodel::MachineModel;
+use crate::sampler::Sampler;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock, RwLock};
+
+/// Engine configuration: worker-pool width and result-cache location.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EngineConfig {
+    /// Worker threads; 0 and 1 both mean serial execution.
+    pub jobs: usize,
+    /// Result-cache directory; `None` disables caching.
+    pub cache_dir: Option<PathBuf>,
+}
+
+impl EngineConfig {
+    pub fn with_jobs(mut self, jobs: usize) -> EngineConfig {
+        self.jobs = jobs;
+        self
+    }
+
+    pub fn with_cache(mut self, dir: impl Into<PathBuf>) -> EngineConfig {
+        self.cache_dir = Some(dir.into());
+        self
+    }
+
+    /// Configuration from the `ELAPS_JOBS` / `ELAPS_CACHE` environment
+    /// variables (unset, empty or unparsable values fall back to the
+    /// serial, uncached default).
+    pub fn from_env() -> EngineConfig {
+        let jobs = std::env::var("ELAPS_JOBS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(1);
+        let cache_dir = std::env::var("ELAPS_CACHE")
+            .ok()
+            .filter(|v| !v.trim().is_empty())
+            .map(PathBuf::from);
+        EngineConfig { jobs, cache_dir }
+    }
+}
+
+/// Execution statistics of one engine run — the source of the CLI's
+/// cache-statistics summary line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunStats {
+    /// Points whose sampler scripts were actually executed.
+    pub executed: usize,
+    /// Points served from the result cache without touching a sampler.
+    pub cache_hits: usize,
+    /// Worker threads used.
+    pub jobs: usize,
+}
+
+impl RunStats {
+    pub fn total_points(&self) -> usize {
+        self.executed + self.cache_hits
+    }
+
+    /// The run-summary line, e.g.
+    /// `engine: 12 point(s) on 4 worker(s) — 0 executed, 12 cache hit(s)`.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "engine: {} point(s) on {} worker(s) — {} executed, {} cache hit(s)",
+            self.total_points(),
+            self.jobs.max(1),
+            self.executed,
+            self.cache_hits
+        )
+    }
+}
+
+/// The execution engine. Cheap to construct; all state lives on disk
+/// (the cache) or per-run (the worker pool).
+pub struct Engine {
+    cfg: EngineConfig,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Engine {
+        Engine { cfg }
+    }
+
+    /// An engine with the process-default configuration (see
+    /// [`default_config`]).
+    pub fn with_defaults() -> Engine {
+        Engine::new(default_config())
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Run one experiment.
+    pub fn run(&self, exp: &Experiment) -> Result<Report> {
+        self.run_stats(exp).map(|(report, _)| report)
+    }
+
+    /// Run one experiment, returning execution statistics alongside.
+    pub fn run_stats(&self, exp: &Experiment) -> Result<(Report, RunStats)> {
+        let (mut reports, stats) =
+            batch::run_batch_stats(&self.cfg, std::slice::from_ref(exp))?;
+        let report = reports.pop().expect("one report per experiment");
+        Ok((report, stats))
+    }
+
+    /// Run a whole campaign through one scheduler; reports come back in
+    /// input order.
+    pub fn run_batch(&self, exps: &[Experiment]) -> Result<Vec<Report>> {
+        batch::run_batch_stats(&self.cfg, exps).map(|(reports, _)| reports)
+    }
+
+    /// [`Engine::run_batch`] with execution statistics.
+    pub fn run_batch_stats(&self, exps: &[Experiment]) -> Result<(Vec<Report>, RunStats)> {
+        batch::run_batch_stats(&self.cfg, exps)
+    }
+}
+
+/// Execute one unrolled point on a fresh sampler.
+///
+/// This is the single point-execution primitive: the serial path, every
+/// engine worker and the spooler all funnel through it. A *fresh*
+/// sampler per point (not per worker) keeps the simulated cache
+/// counters, RNG stream and OpenMP group ids bit-identical to serial
+/// execution regardless of which worker picks the point up.
+pub fn execute_point(
+    library: &Arc<dyn KernelLibrary>,
+    machine: &MachineModel,
+    exp: &Experiment,
+    point: &UnrolledPoint,
+) -> Result<PointResult> {
+    let mut sampler = Sampler::new(Arc::clone(library), machine.clone());
+    let records = sampler
+        .run_script(&point.script)
+        .with_context(|| format!("point {} of '{}'", point.range_value, exp.name))?;
+    let expected = point.expected_records(exp.nreps);
+    if records.len() != expected {
+        bail!(
+            "point {}: sampler produced {} records, expected {expected}",
+            point.range_value,
+            records.len()
+        );
+    }
+    Ok(PointResult {
+        range_value: point.range_value,
+        nthreads: point.nthreads,
+        sum_iters: point.sum_iters,
+        calls_per_iter: point.calls_per_iter,
+        records,
+    })
+}
+
+// ------------------------------------------------ process-default config
+
+static DEFAULT: OnceLock<RwLock<EngineConfig>> = OnceLock::new();
+
+fn default_cell() -> &'static RwLock<EngineConfig> {
+    DEFAULT.get_or_init(|| RwLock::new(EngineConfig::from_env()))
+}
+
+/// The process-default engine configuration used by
+/// [`crate::coordinator::run_local`]. Initialized from the environment
+/// ([`EngineConfig::from_env`]) on first use.
+pub fn default_config() -> EngineConfig {
+    default_cell().read().unwrap().clone()
+}
+
+/// Override the process-default engine configuration (the CLI's
+/// `--jobs` / `--cache` flags call this so that every `run_local` in
+/// the process — including figure builders and spooler workers — routes
+/// through the same pool and cache).
+pub fn set_default_config(cfg: EngineConfig) {
+    *default_cell().write().unwrap() = cfg;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::tests_support::dgemm_experiment;
+
+    #[test]
+    fn run_stats_counts_points() {
+        let mut exp = dgemm_experiment(20);
+        exp.nreps = 2;
+        exp.range = Some(crate::coordinator::RangeDef::new("unused", vec![1, 2, 3]));
+        // range sym unused by the call: still one point per value
+        let engine = Engine::new(EngineConfig::default().with_jobs(2));
+        let (report, stats) = engine.run_stats(&exp).unwrap();
+        assert_eq!(report.points.len(), 3);
+        assert_eq!(stats.executed, 3);
+        assert_eq!(stats.cache_hits, 0);
+        assert_eq!(stats.total_points(), 3);
+        assert!(stats.summary_line().contains("3 executed"));
+    }
+
+    #[test]
+    fn config_builders() {
+        let cfg = EngineConfig::default().with_jobs(4).with_cache("/tmp/x");
+        assert_eq!(cfg.jobs, 4);
+        assert_eq!(cfg.cache_dir.as_deref(), Some(std::path::Path::new("/tmp/x")));
+    }
+}

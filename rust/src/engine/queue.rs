@@ -1,0 +1,77 @@
+//! The engine's shared work queue: a FIFO that many worker threads pop
+//! from concurrently. Items are enqueued up front (the unrolled points
+//! of one or more experiments), so the queue doubles as the engine's
+//! scheduler: whichever worker is free takes the next point.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// A multi-consumer FIFO work queue.
+///
+/// Intentionally simple — a [`Mutex`]ed deque. The engine's work items
+/// are whole sampler scripts (milliseconds to minutes each), so queue
+/// contention is negligible next to the work itself.
+pub struct WorkQueue<T> {
+    items: Mutex<VecDeque<T>>,
+}
+
+impl<T> WorkQueue<T> {
+    /// Build a queue pre-loaded with `items`, preserving their order.
+    pub fn new(items: impl IntoIterator<Item = T>) -> WorkQueue<T> {
+        WorkQueue { items: Mutex::new(items.into_iter().collect()) }
+    }
+
+    /// Take the next item, or `None` once the queue is drained.
+    ///
+    /// Draining is final: all work is enqueued before workers start, so
+    /// a `None` means this worker is done (there is deliberately no
+    /// late `push` — a worker that already observed an empty queue
+    /// would never see such items).
+    pub fn pop(&self) -> Option<T> {
+        self.items.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    #[test]
+    fn fifo_order() {
+        let q = WorkQueue::new(vec![1, 2, 3]);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn concurrent_pop_covers_every_item_once() {
+        let n = 1000usize;
+        let q = WorkQueue::new(0..n);
+        let seen: StdMutex<Vec<usize>> = StdMutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    while let Some(v) = q.pop() {
+                        seen.lock().unwrap().push(v);
+                    }
+                });
+            }
+        });
+        let mut seen = seen.into_inner().unwrap();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>());
+    }
+}

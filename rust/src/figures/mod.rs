@@ -4,6 +4,11 @@
 //! §Substitutions 7 when `quick` is off, smaller still when on), runs
 //! it, and returns a [`FigureOutput`] with the plot and CSV rows the
 //! benches and the `elaps figures` command write out.
+//!
+//! Execution routes through [`crate::engine`]: `elaps figures --jobs N
+//! --cache DIR` (or `ELAPS_JOBS` / `ELAPS_CACHE` for the bench
+//! binaries) fans the builders' experiment points out over a worker
+//! pool and re-uses cached measurements across overlapping campaigns.
 
 use crate::coordinator::{
     run_local, Call, CallArg, DataGen, Experiment, Expr, Figure, Metric, RangeDef, Report,
@@ -571,7 +576,10 @@ pub fn f12_sylvester(quick: bool) -> Result<FigureOutput> {
     let mut rows = vec!["n,".to_string() + &libs.iter().map(|(l, _)| *l).collect::<Vec<_>>().join(",")];
     let mut table: Vec<Vec<f64>> = vec![];
     let mut xs: Vec<i64> = vec![];
-    for (lib, label) in libs {
+    // all three library sweeps as one batch through the engine's
+    // scheduler (their points interleave across the worker pool)
+    let mut exps = Vec::with_capacity(libs.len());
+    for (lib, _) in libs {
         let mut exp = base(&format!("f12-{lib}"), lib);
         exp.nreps = 3;
         exp.range = Some(RangeDef::span("n", step, step, hi));
@@ -581,7 +589,10 @@ pub fn f12_sylvester(quick: bool) -> Result<FigureOutput> {
         )?];
         exp.datagen.insert("A".into(), DataGen::Tri(Expr::sym("n"), 'U'));
         exp.datagen.insert("B".into(), DataGen::Tri(Expr::sym("n"), 'U'));
-        let report = run_local(&exp)?;
+        exps.push(exp);
+    }
+    let reports = crate::engine::Engine::with_defaults().run_batch(&exps)?;
+    for ((_, label), report) in libs.iter().zip(&reports) {
         let s = report.series(Metric::Gflops, Stat::Median);
         if xs.is_empty() {
             xs = s.iter().map(|&(x, _)| x).collect();
@@ -794,7 +805,9 @@ pub fn run_figure(id: &str, quick: bool) -> Result<FigureOutput> {
 /// (harness = false): runs one figure, prints the rows + ASCII plot,
 /// and writes CSV/SVG/TXT into `figures_out/`.
 ///
-/// `ELAPS_BENCH_FULL=1` switches from quick to full paper-scaled sizes.
+/// `ELAPS_BENCH_FULL=1` switches from quick to full paper-scaled sizes;
+/// `ELAPS_JOBS` / `ELAPS_CACHE` configure the execution engine's worker
+/// pool and result cache (picked up via the default engine config).
 pub fn bench_main(id: &str) {
     let quick = std::env::var("ELAPS_BENCH_FULL").map(|v| v != "1").unwrap_or(true);
     // make the xla backend resolvable when artifacts exist

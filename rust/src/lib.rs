@@ -13,6 +13,11 @@
 //!   abstraction (repetitions, operand varying, parameter-/sum-/OpenMP-
 //!   ranges), execution on samplers, [`coordinator::Report`]s, metrics,
 //!   statistics and plotting.
+//! * [`engine`] — the execution engine between coordinator and
+//!   samplers: shards an experiment's (or a whole batch's) unrolled
+//!   points across a worker-thread pool with a shared work queue and
+//!   deterministic in-order result merging, and skips already-measured
+//!   points via a content-addressed on-disk result cache.
 //! * the top layer (the paper's GUI) is substituted by the `elaps` CLI
 //!   binary and file-based experiment descriptions.
 //!
@@ -30,7 +35,9 @@ pub mod libraries;
 pub mod perfmodel;
 pub mod sampler;
 pub mod coordinator;
+pub mod engine;
 pub mod runtime;
 pub mod figures;
 
 pub use coordinator::{Experiment, Report};
+pub use engine::{Engine, EngineConfig, RunStats};

@@ -4,6 +4,7 @@
 //!
 //! Subcommands:
 //!   run <exp.json>        run an experiment file (local or --batch)
+//!   batch <exp.json>…     run a campaign of experiments via the engine
 //!   view <report.json>    metrics/statistics of a stored report
 //!   plot <report.json>    ASCII + SVG plot of a stored report
 //!   figures [ids…]        regenerate the paper's tables/figures
@@ -11,9 +12,14 @@
 //!   worker --spool <dir>  batch-queue worker
 //!   kernels               list the kernel signature database
 //!   libraries             list available kernel libraries
+//!
+//! `--jobs N` fans experiment points out over N engine worker threads;
+//! `--cache DIR` enables the content-addressed result cache, so re-runs
+//! and overlapping sweeps skip already-measured points.
 
 use anyhow::{anyhow, bail, Context, Result};
-use elaps::coordinator::{io, run_local, Metric, Spooler, Stat};
+use elaps::coordinator::{io, Metric, Spooler, Stat};
+use elaps::engine::{Engine, EngineConfig};
 use elaps::perfmodel::MachineModel;
 use elaps::sampler::Sampler;
 use elaps::util::cli::Args;
@@ -24,17 +30,25 @@ const USAGE: &str = "\
 elaps — Experimental Linear Algebra Performance Studies (rust+JAX/Pallas)
 
 USAGE:
-  elaps run <experiment.json> [--batch --spool DIR] [--out report.json]
+  elaps run <experiment.json> [--jobs N] [--cache DIR] [--out report.json]
+            [--batch --spool DIR]
+  elaps batch <exp.json>… [--jobs N] [--cache DIR] [--out-dir batch_out]
   elaps view <report.json> [--metric M] [--stat S]
   elaps plot <report.json> [--metric M] [--stat S] [--svg out.svg]
-  elaps figures [T1 F1 F2 …|all] [--full] [--out-dir figures_out]
+  elaps figures [T1 F1 F2 …|all] [--full] [--jobs N] [--cache DIR]
+                [--out-dir figures_out]
   elaps sampler [--library L] [--machine M]
-  elaps worker --spool DIR [--once]
+  elaps worker --spool DIR [--once] [--jobs N] [--recover SECS|0=off]
   elaps kernels
   elaps libraries
 
 metrics: cycles time_s time_ms gflops flops_per_cycle efficiency
 stats:   min max avg med std
+
+--jobs N    engine worker threads (default 1; env ELAPS_JOBS). Note:
+            parallel kernels contend for the CPU, so measure final
+            timings (and fill shared caches) with --jobs 1.
+--cache DIR content-addressed result cache (env ELAPS_CACHE)
 ";
 
 fn main() {
@@ -62,6 +76,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     let args = Args::parse(raw[1..].iter().cloned(), &["batch", "once", "full", "help"]);
     match cmd.as_str() {
         "run" => cmd_run(&args),
+        "batch" => cmd_batch(&args),
         "view" => cmd_view(&args),
         "plot" => cmd_plot(&args),
         "figures" => cmd_figures(&args),
@@ -83,23 +98,88 @@ fn load_experiment(path: &str) -> Result<elaps::Experiment> {
     io::experiment_from_json(&j)
 }
 
+/// Engine configuration from `--jobs` / `--cache`, layered over the
+/// `ELAPS_JOBS` / `ELAPS_CACHE` environment defaults, with validation.
+fn engine_config(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig::from_env();
+    if let Some(jobs) = args.opt_usize_strict("jobs").map_err(|e| anyhow!(e))? {
+        if jobs == 0 {
+            bail!("--jobs must be ≥ 1");
+        }
+        cfg.jobs = jobs;
+    }
+    if let Some(dir) = args.opt("cache") {
+        if dir.is_empty() {
+            bail!("--cache requires a directory");
+        }
+        cfg.cache_dir = Some(dir.into());
+    } else if args.flag("cache") {
+        bail!("--cache requires a directory");
+    }
+    Ok(cfg)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let path = args.positional.first().ok_or_else(|| anyhow!("usage: elaps run <exp.json>"))?;
     try_register_xla();
+    let cfg = engine_config(args)?;
+    // spooler workers and any nested run_local share the same pool/cache
+    elaps::engine::set_default_config(cfg.clone());
     let exp = load_experiment(path)?;
     let report = if args.flag("batch") {
         let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
         let id = spool.submit(&exp)?;
         println!("submitted job {id}; serving in-process worker…");
+        println!("note: engine cache statistics are not reported on the spooled path");
         spool.serve_one()?;
         spool.fetch(&id)?.ok_or_else(|| anyhow!("job produced no report"))?
     } else {
-        run_local(&exp)?
+        let (report, stats) = Engine::new(cfg).run_stats(&exp)?;
+        println!("{}", stats.summary_line());
+        report
     };
     print_report_summary(&report)?;
     let out = args.opt_or("out", "report.json");
     std::fs::write(out, io::report_to_json(&report).to_string_pretty())?;
     println!("report written to {out}");
+    Ok(())
+}
+
+/// Batch submission: run a whole campaign of experiment files through
+/// one engine scheduler and write one report per experiment.
+fn cmd_batch(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        bail!("usage: elaps batch <exp.json>… [--jobs N] [--cache DIR] [--out-dir DIR]");
+    }
+    try_register_xla();
+    let cfg = engine_config(args)?;
+    elaps::engine::set_default_config(cfg.clone());
+    let exps: Vec<elaps::Experiment> = args
+        .positional
+        .iter()
+        .map(|p| load_experiment(p))
+        .collect::<Result<_>>()?;
+    let t0 = std::time::Instant::now();
+    let (reports, stats) = Engine::new(cfg).run_batch_stats(&exps)?;
+    let out_dir = std::path::PathBuf::from(args.opt_or("out-dir", "batch_out"));
+    std::fs::create_dir_all(&out_dir)?;
+    let mut used_names = std::collections::HashSet::new();
+    for report in &reports {
+        print_report_summary(report)?;
+        // disambiguate duplicate experiment names instead of silently
+        // overwriting an earlier report
+        let base = report.experiment.name.replace(['/', ' '], "_");
+        let mut name = base.clone();
+        let mut k = 2;
+        while !used_names.insert(name.clone()) {
+            name = format!("{base}-{k}");
+            k += 1;
+        }
+        let out = out_dir.join(format!("{name}.report.json"));
+        std::fs::write(&out, io::report_to_json(report).to_string_pretty())?;
+        println!("report written to {}", out.display());
+    }
+    println!("{} ({:.1}s)", stats.summary_line(), t0.elapsed().as_secs_f64());
     Ok(())
 }
 
@@ -193,6 +273,9 @@ fn cmd_plot(args: &Args) -> Result<()> {
 
 fn cmd_figures(args: &Args) -> Result<()> {
     try_register_xla();
+    // figure builders call run_local internally; route them through the
+    // requested pool/cache via the process-default engine config
+    elaps::engine::set_default_config(engine_config(args)?);
     let quick = !args.flag("full");
     let out_dir = std::path::PathBuf::from(args.opt_or("out-dir", "figures_out"));
     let ids: Vec<String> = if args.positional.is_empty()
@@ -250,18 +333,41 @@ fn cmd_sampler(args: &Args) -> Result<()> {
 
 fn cmd_worker(args: &Args) -> Result<()> {
     try_register_xla();
+    let mut cfg = engine_config(args)?;
+    let jobs = cfg.jobs;
+    // --jobs parallelizes across queued jobs (drain); each job itself
+    // runs serially so the thread count stays bounded by --jobs. The
+    // cache is still shared through the default engine config.
+    cfg.jobs = 1;
+    elaps::engine::set_default_config(cfg);
     let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
     let once = args.flag("once");
+    // 0 disables recovery (it would otherwise classify every live
+    // claim as instantly stale and make workers steal each other's
+    // running jobs)
+    let recover_after = match args.opt_usize_strict("recover").map_err(|e| anyhow!(e))? {
+        Some(0) => None,
+        Some(secs) => Some(std::time::Duration::from_secs(secs as u64)),
+        None => Some(std::time::Duration::from_secs(300)),
+    };
     loop {
-        match spool.serve_one()? {
-            Some(id) => println!("served job {id}"),
-            None => {
-                if once {
-                    return Ok(());
-                }
-                std::thread::sleep(std::time::Duration::from_millis(200));
+        if let Some(max_age) = recover_after {
+            let recovered = spool.recover_stale(max_age)?;
+            if recovered > 0 {
+                println!("recovered {recovered} stale job(s) from crashed workers");
             }
         }
+        // don't spin up the worker pool just to watch an empty queue
+        if spool.queued()? > 0 {
+            let served = spool.drain(jobs)?;
+            if served > 0 {
+                println!("served {served} job(s)");
+            }
+        }
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_millis(200));
     }
 }
 

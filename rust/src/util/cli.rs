@@ -57,6 +57,23 @@ impl Args {
         self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Strict integer option parsing: distinguishes an absent option
+    /// (`Ok(None)`) from a present-but-invalid one (`Err`), including
+    /// `--name` given without a value. Used for options like `--jobs`
+    /// where silently falling back to a default would mask typos.
+    pub fn opt_usize_strict(&self, name: &str) -> Result<Option<usize>, String> {
+        if let Some(v) = self.opt(name) {
+            return v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name}: '{v}' is not a non-negative integer"));
+        }
+        if self.flag(name) {
+            return Err(format!("--{name} requires a value"));
+        }
+        Ok(None)
+    }
+
     pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
         self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -121,6 +138,19 @@ mod tests {
         assert_eq!(a.opt_or("lib", "rustblocked"), "rustblocked");
         assert_eq!(a.opt_usize("n", 7), 7);
         assert_eq!(a.opt_f64("freq", 2.6e9), 2.6e9);
+    }
+
+    #[test]
+    fn strict_usize_option() {
+        let a = Args::parse(sv(&["--jobs", "4"]), &[]);
+        assert_eq!(a.opt_usize_strict("jobs"), Ok(Some(4)));
+        assert_eq!(a.opt_usize_strict("cache"), Ok(None));
+        let bad = Args::parse(sv(&["--jobs", "four"]), &[]);
+        assert!(bad.opt_usize_strict("jobs").is_err());
+        // --jobs immediately followed by another option parses as a
+        // bare flag: strict parsing reports the missing value
+        let missing = Args::parse(sv(&["--jobs", "--cache", "dir"]), &[]);
+        assert!(missing.opt_usize_strict("jobs").is_err());
     }
 
     #[test]

@@ -1,0 +1,137 @@
+//! Integration tests for the parallel execution engine: determinism of
+//! N-thread runs vs serial, cache hit/miss behaviour (a cached re-run
+//! executes zero sampler scripts), and batch submission.
+
+use elaps::coordinator::{Experiment, Metric, RangeDef, Stat};
+use elaps::engine::{Engine, EngineConfig};
+use elaps::figures::call;
+use elaps::Report;
+
+/// A range experiment with enough points to keep several workers busy.
+fn range_experiment(name: &str, values: Vec<i64>) -> Experiment {
+    let mut exp = Experiment {
+        name: name.into(),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps: 2,
+        range: Some(RangeDef::new("n", values)),
+        counters: vec!["PAPI_L1_TCM".into(), "PAPI_L3_TCM".into()],
+        ..Default::default()
+    };
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+    )
+    .unwrap()];
+    exp
+}
+
+/// Everything about a report that is deterministic (wall times are
+/// not): point order and shape, kernels, simulated counters, flop
+/// counts and OpenMP groups must be bit-identical between runs.
+fn assert_structurally_identical(a: &Report, b: &Report) {
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.range_value, pb.range_value);
+        assert_eq!(pa.nthreads, pb.nthreads);
+        assert_eq!(pa.sum_iters, pb.sum_iters);
+        assert_eq!(pa.calls_per_iter, pb.calls_per_iter);
+        assert_eq!(pa.records.len(), pb.records.len());
+        for (ra, rb) in pa.records.iter().zip(&pb.records) {
+            assert_eq!(ra.kernel, rb.kernel);
+            assert_eq!(ra.counters, rb.counters, "point {}", pa.range_value);
+            assert_eq!(ra.flops, rb.flops);
+            assert_eq!(ra.omp_group, rb.omp_group);
+        }
+    }
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("elaps_engine_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn parallel_run_is_structurally_identical_to_serial() {
+    let exp = range_experiment("det", vec![16, 24, 32, 40, 48, 56]);
+    let serial = Engine::new(EngineConfig::default().with_jobs(1)).run(&exp).unwrap();
+    let parallel = Engine::new(EngineConfig::default().with_jobs(4)).run(&exp).unwrap();
+    assert_structurally_identical(&serial, &parallel);
+    // the deterministic metric (simulated counters) agrees exactly
+    let s = serial.series(Metric::Counter(0), Stat::Median);
+    let p = parallel.series(Metric::Counter(0), Stat::Median);
+    assert_eq!(s, p);
+}
+
+#[test]
+fn cached_rerun_executes_zero_sampler_scripts() {
+    let dir = tmpdir("cache");
+    let exp = range_experiment("cached", vec![16, 24, 32]);
+    let engine = Engine::new(EngineConfig::default().with_jobs(2).with_cache(&dir));
+
+    let (first, stats1) = engine.run_stats(&exp).unwrap();
+    assert_eq!(stats1.executed, 3);
+    assert_eq!(stats1.cache_hits, 0);
+
+    let (second, stats2) = engine.run_stats(&exp).unwrap();
+    assert_eq!(stats2.executed, 0, "second run must touch zero samplers");
+    assert_eq!(stats2.cache_hits, 3);
+    assert!(stats2.summary_line().contains("0 executed"));
+    assert!(stats2.summary_line().contains("3 cache hit(s)"));
+
+    // the replayed report matches the stored measurements, times included
+    assert_structurally_identical(&first, &second);
+    let t1 = first.series(Metric::TimeS, Stat::Avg);
+    let t2 = second.series(Metric::TimeS, Stat::Avg);
+    for ((x1, v1), (x2, v2)) in t1.iter().zip(&t2) {
+        assert_eq!(x1, x2);
+        assert!((v1 - v2).abs() <= 1e-9 * v1.abs().max(1e-12), "{v1} vs {v2}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn overlapping_sweeps_share_cached_points() {
+    let dir = tmpdir("overlap");
+    let engine = Engine::new(EngineConfig::default().with_jobs(2).with_cache(&dir));
+    let (_, s1) = engine.run_stats(&range_experiment("a", vec![16, 24])).unwrap();
+    assert_eq!((s1.executed, s1.cache_hits), (2, 0));
+    // same script content under a different experiment name: the
+    // fingerprint is content-addressed, so the shared points hit
+    let (_, s2) = engine.run_stats(&range_experiment("b", vec![16, 24, 32])).unwrap();
+    assert_eq!((s2.executed, s2.cache_hits), (1, 2));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn batch_submission_reports_in_input_order() {
+    let exps = vec![
+        range_experiment("batch-a", vec![16, 24]),
+        range_experiment("batch-b", vec![32]),
+        range_experiment("batch-c", vec![16, 40, 48]),
+    ];
+    let engine = Engine::new(EngineConfig::default().with_jobs(3));
+    let (reports, stats) = engine.run_batch_stats(&exps).unwrap();
+    assert_eq!(reports.len(), 3);
+    assert_eq!(reports[0].experiment.name, "batch-a");
+    assert_eq!(reports[1].experiment.name, "batch-b");
+    assert_eq!(reports[2].experiment.name, "batch-c");
+    assert_eq!(reports[0].points.len(), 2);
+    assert_eq!(reports[1].points.len(), 1);
+    assert_eq!(reports[2].points.len(), 3);
+    assert_eq!(stats.total_points(), 6);
+    // each report individually matches its serial run
+    for (exp, parallel) in exps.iter().zip(&reports) {
+        let serial = Engine::new(EngineConfig::default()).run(exp).unwrap();
+        assert_structurally_identical(&serial, parallel);
+    }
+}
+
+#[test]
+fn engine_surfaces_sampler_failures() {
+    let mut exp = range_experiment("bad", vec![16]);
+    exp.machine = "nosuchmachine".into();
+    let err = Engine::new(EngineConfig::default().with_jobs(2)).run(&exp).unwrap_err();
+    assert!(err.to_string().contains("nosuchmachine"), "{err}");
+}
