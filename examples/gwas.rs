@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 fn main() -> Result<()> {
-    let out = elaps::figures::f14_gwas(false)?;
+    let out = elaps::figures::f14_gwas(&elaps::figures::LocalRunner, false)?;
     for row in &out.rows {
         println!("{row}");
     }

@@ -23,7 +23,7 @@ fn main() -> Result<()> {
     } else {
         println!("artifacts/ missing — run `make artifacts`; using rustblocked\n");
     }
-    let out = figures::f11_tensor_contraction(false)?;
+    let out = figures::f11_tensor_contraction(&figures::LocalRunner, false)?;
     for row in &out.rows {
         println!("{row}");
     }

@@ -273,6 +273,83 @@ pub fn point_result_from_json(pj: &Json) -> PointResult {
     }
 }
 
+// ---------------------------------------------------- cache envelope
+
+/// Schema version of the engine's result-cache entry envelope
+/// ([`crate::engine::cache`]). Bump on incompatible layout changes;
+/// readers treat unknown schemas as cache misses, never as errors.
+pub const CACHE_ENTRY_SCHEMA: u64 = 1;
+
+/// A parsed result-cache entry: the stored [`PointResult`] plus the
+/// provenance the storing run recorded. `schema == 0` (with `jobs` and
+/// `created_unix` both `None`) marks a legacy pre-envelope entry — a
+/// bare point object, still readable but of unknown provenance.
+#[derive(Debug, Clone)]
+pub struct CacheEnvelope {
+    /// Envelope schema version (0 = legacy bare entry).
+    pub schema: u64,
+    /// Worker-pool width of the run that measured this entry; `None`
+    /// means unknown (legacy entry).
+    pub jobs: Option<usize>,
+    /// Unix seconds when the entry was stored; `None` means unknown.
+    pub created_unix: Option<u64>,
+    /// The cached measurement.
+    pub result: PointResult,
+}
+
+impl CacheEnvelope {
+    /// The timing-provenance rule: only entries measured without worker
+    /// contention (`jobs ≤ 1`) are trustworthy for publication timings.
+    /// Legacy entries cannot prove it, so they are untrusted.
+    pub fn trusted(&self) -> bool {
+        matches!(self.jobs, Some(j) if j <= 1)
+    }
+}
+
+/// Serialize a result-cache entry as the versioned envelope
+/// `{schema, jobs, created_unix, result}`.
+pub fn cache_envelope_to_json(p: &PointResult, jobs: usize, created_unix: Option<u64>) -> Json {
+    let mut j = Json::obj();
+    j.set("schema", CACHE_ENTRY_SCHEMA)
+        .set("jobs", jobs)
+        .set("result", point_result_to_json(p));
+    if let Some(t) = created_unix {
+        j.set("created_unix", t);
+    }
+    j
+}
+
+/// Parse a result-cache entry. Envelopes with an unknown `schema` are
+/// rejected (`None` — a miss, not an error); a bare point object (the
+/// pre-envelope format) parses as a legacy entry with unknown
+/// provenance.
+pub fn cache_envelope_from_json(j: &Json) -> Option<CacheEnvelope> {
+    if j.get("schema").is_null() {
+        // legacy bare entry: require at least a records array so that
+        // arbitrary JSON is not misread as an empty measurement
+        j.get("records").as_arr()?;
+        return Some(CacheEnvelope {
+            schema: 0,
+            jobs: None,
+            created_unix: None,
+            result: point_result_from_json(j),
+        });
+    }
+    let schema = j.get("schema").as_u64()?;
+    if schema != CACHE_ENTRY_SCHEMA {
+        return None;
+    }
+    // same guard as the legacy branch: a payload without a records
+    // array is junk, not an empty measurement
+    j.get("result").get("records").as_arr()?;
+    Some(CacheEnvelope {
+        schema,
+        jobs: j.get("jobs").as_u64().map(|v| v as usize),
+        created_unix: j.get("created_unix").as_u64(),
+        result: point_result_from_json(j.get("result")),
+    })
+}
+
 pub fn report_to_json(r: &Report) -> Json {
     let mut j = Json::obj();
     j.set("experiment", experiment_to_json(&r.experiment));
@@ -363,6 +440,53 @@ mod tests {
         let s1 = r.series(crate::coordinator::report::Metric::TimeS, crate::coordinator::stats::Stat::Avg);
         let s2 = r2.series(crate::coordinator::report::Metric::TimeS, crate::coordinator::stats::Stat::Avg);
         assert!((s1[0].1 - s2[0].1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_envelope_roundtrip_and_legacy() {
+        let p = PointResult {
+            range_value: 7,
+            nthreads: 2,
+            sum_iters: 1,
+            calls_per_iter: 1,
+            records: vec![Record {
+                kernel: "dgemm".into(),
+                seconds: 0.5,
+                cycles: 1.3e9,
+                flops: 2e9,
+                counters: vec![3, 4],
+                omp_group: None,
+            }],
+        };
+        let j = cache_envelope_to_json(&p, 8, Some(1_700_000_000));
+        let env = cache_envelope_from_json(&j).unwrap();
+        assert_eq!(env.schema, CACHE_ENTRY_SCHEMA);
+        assert_eq!(env.jobs, Some(8));
+        assert_eq!(env.created_unix, Some(1_700_000_000));
+        assert!(!env.trusted());
+        assert_eq!(env.result.records.len(), 1);
+        assert_eq!(env.result.records[0].counters, vec![3, 4]);
+        // jobs ≤ 1 is trusted
+        let env1 = cache_envelope_from_json(&cache_envelope_to_json(&p, 1, None)).unwrap();
+        assert!(env1.trusted());
+        // legacy bare point: readable, provenance unknown, untrusted
+        let legacy = cache_envelope_from_json(&point_result_to_json(&p)).unwrap();
+        assert_eq!(legacy.schema, 0);
+        assert_eq!(legacy.jobs, None);
+        assert!(!legacy.trusted());
+        assert_eq!(legacy.result.records.len(), 1);
+        // unknown schema and non-entry JSON are rejected, not errors
+        let mut wrong = cache_envelope_to_json(&p, 1, None);
+        wrong.set("schema", CACHE_ENTRY_SCHEMA + 1);
+        assert!(cache_envelope_from_json(&wrong).is_none());
+        assert!(cache_envelope_from_json(&Json::parse("{}").unwrap()).is_none());
+        assert!(cache_envelope_from_json(&Json::parse("[1,2]").unwrap()).is_none());
+        // a right-schema envelope missing its result payload is junk
+        // too, never a trusted empty measurement
+        let hollow = Json::parse(r#"{"schema":1,"jobs":1}"#).unwrap();
+        assert!(cache_envelope_from_json(&hollow).is_none());
+        let hollow2 = Json::parse(r#"{"schema":1,"jobs":1,"result":{}}"#).unwrap();
+        assert!(cache_envelope_from_json(&hollow2).is_none());
     }
 
     #[test]

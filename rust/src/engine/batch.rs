@@ -1,13 +1,16 @@
 //! Batch scheduling: the core fan-out/merge loop shared by single-
 //! experiment runs and whole-campaign batches. Every experiment is
-//! validated and unrolled up front; all points of all experiments go
-//! into one [`WorkQueue`]; a pool of OS threads drains it; results are
-//! merged back into per-experiment [`Report`]s strictly in point order,
-//! so parallel output is structurally identical to serial execution.
+//! validated and unrolled up front; the result cache is probed *before*
+//! anything is enqueued, so fully-cached experiments bypass the worker
+//! pool entirely and partially-cached ones enqueue only their misses;
+//! the remaining points of all experiments go into one [`WorkQueue`];
+//! a pool of OS threads drains it; results are merged back into
+//! per-experiment [`Report`]s strictly in point order, so parallel
+//! output is structurally identical to serial execution.
 
 use super::cache::ResultCache;
 use super::queue::WorkQueue;
-use super::{execute_point, EngineConfig, RunStats};
+use super::{execute_point, BatchStats, EngineConfig};
 use crate::coordinator::experiment::{Experiment, UnrolledPoint};
 use crate::coordinator::report::{PointResult, Report};
 use crate::perfmodel::MachineModel;
@@ -34,7 +37,7 @@ struct Item {
 pub fn run_batch_stats(
     cfg: &EngineConfig,
     exps: &[Experiment],
-) -> Result<(Vec<Report>, RunStats)> {
+) -> Result<(Vec<Report>, BatchStats)> {
     // -- phase 1: validate and unroll everything before spawning
     let mut plans = Vec::with_capacity(exps.len());
     for exp in exps {
@@ -49,28 +52,73 @@ pub fn run_batch_stats(
         plans.push(Plan { exp, machine, points });
     }
     let cache = match &cfg.cache_dir {
-        Some(dir) => Some(ResultCache::open(dir)?),
+        Some(dir) => Some(ResultCache::open(dir)?.with_trusted_only(cfg.trusted_only)),
         None => None,
     };
 
-    // -- phase 2: shard all points across the pool
-    let items: Vec<Item> = plans
-        .iter()
-        .enumerate()
-        .flat_map(|(exp_i, p)| (0..p.points.len()).map(move |pt_i| Item { exp_i, pt_i }))
-        .collect();
-    let total = items.len();
-    let jobs = cfg.jobs.max(1).min(total.max(1));
-    let queue = WorkQueue::new(items);
-
-    // One slot per point: workers fill them by index, which makes the
-    // merge deterministic regardless of completion order.
+    // One slot per point: the probe and the workers fill them by index,
+    // which makes the merge deterministic regardless of completion
+    // order.
     let slots: Vec<Vec<Mutex<Option<PointResult>>>> = plans
         .iter()
         .map(|p| (0..p.points.len()).map(|_| Mutex::new(None)).collect())
         .collect();
+    // Fingerprints, computed once and shared by the probe and the
+    // workers' store path.
+    let keys: Vec<Vec<Option<String>>> = plans
+        .iter()
+        .map(|p| {
+            p.points
+                .iter()
+                .map(|pt| {
+                    cache.as_ref().map(|_| {
+                        ResultCache::fingerprint(
+                            &p.exp.library,
+                            p.machine.name,
+                            p.exp.nreps,
+                            pt,
+                        )
+                    })
+                })
+                .collect()
+        })
+        .collect();
+
+    // -- phase 2: probe the cache, then shard only the misses
+    let mut scheduled_hits = 0usize;
+    let mut fully_cached = 0usize;
+    let mut items: Vec<Item> = Vec::new();
+    for (exp_i, plan) in plans.iter().enumerate() {
+        let mut misses = 0usize;
+        for (pt_i, point) in plan.points.iter().enumerate() {
+            let hit = match (&cache, &keys[exp_i][pt_i]) {
+                (Some(c), Some(k)) => c.lookup(k, point.expected_records(plan.exp.nreps)),
+                _ => None,
+            };
+            match hit {
+                Some(r) => {
+                    *slots[exp_i][pt_i].lock().unwrap() = Some(r);
+                    scheduled_hits += 1;
+                }
+                None => {
+                    items.push(Item { exp_i, pt_i });
+                    misses += 1;
+                }
+            }
+        }
+        if misses == 0 {
+            fully_cached += 1;
+        }
+    }
+    let enqueued = items.len();
+    let jobs = cfg.jobs.max(1).min(enqueued.max(1));
+    // provenance recorded on every entry this run stores: the actual
+    // worker-pool width the misses execute under
+    let cache = cache.map(|c| c.with_provenance(jobs));
+    let queue = WorkQueue::new(items);
+
     let executed = AtomicUsize::new(0);
-    let cache_hits = AtomicUsize::new(0);
+    let worker_hits = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
     // Keep the failure at the lowest (experiment, point) index so a
     // parallel run reports the same error a serial run would hit first.
@@ -97,21 +145,17 @@ pub fn run_batch_stats(
             executed.fetch_add(1, Ordering::Relaxed);
             Ok(r)
         };
-        let result = if let Some(c) = &cache {
-            let key = ResultCache::fingerprint(
-                &plan.exp.library,
-                plan.machine.name,
-                plan.exp.nreps,
-                point,
-            );
-            if let Some(hit) = c.lookup(&key, expected) {
-                cache_hits.fetch_add(1, Ordering::Relaxed);
+        let result = if let (Some(c), Some(key)) = (&cache, &keys[item.exp_i][item.pt_i]) {
+            // re-probe: a concurrent run may have stored this point
+            // between the scheduling probe and now
+            if let Some(hit) = c.lookup(key, expected) {
+                worker_hits.fetch_add(1, Ordering::Relaxed);
                 hit
             } else {
                 let r = run()?;
                 // a full/read-only cache must not discard a measurement
                 // that already succeeded — degrade to uncached
-                if let Err(e) = c.store(&key, &r) {
+                if let Err(e) = c.store(key, &r) {
                     eprintln!("warning: result-cache write failed ({e:#}); continuing uncached");
                 }
                 r
@@ -140,14 +184,18 @@ pub fn run_batch_stats(
             }
         }
     };
-    if jobs <= 1 {
-        worker();
-    } else {
-        std::thread::scope(|s| {
-            for _ in 0..jobs {
-                s.spawn(&worker);
-            }
-        });
+    // a fully-cached batch enqueues nothing — don't spin up a pool
+    // just to watch an empty queue
+    if enqueued > 0 {
+        if jobs <= 1 {
+            worker();
+        } else {
+            std::thread::scope(|s| {
+                for _ in 0..jobs {
+                    s.spawn(&worker);
+                }
+            });
+        }
     }
 
     if let Some((_, _, e)) = first_err.lock().unwrap().take() {
@@ -166,9 +214,12 @@ pub fn run_batch_stats(
         }
         reports.push(Report::assemble(plan.exp.clone(), plan.machine.clone(), results)?);
     }
-    let stats = RunStats {
+    let stats = BatchStats {
+        experiments: plans.len(),
+        fully_cached,
         executed: executed.load(Ordering::Relaxed),
-        cache_hits: cache_hits.load(Ordering::Relaxed),
+        cache_hits: scheduled_hits + worker_hits.load(Ordering::Relaxed),
+        scheduled_hits,
         jobs,
     };
     Ok((reports, stats))
@@ -187,7 +238,7 @@ mod tests {
             e.nreps = 2;
             exps.push(e);
         }
-        let cfg = EngineConfig { jobs: 3, cache_dir: None };
+        let cfg = EngineConfig::default().with_jobs(3);
         let (reports, stats) = run_batch_stats(&cfg, &exps).unwrap();
         assert_eq!(reports.len(), 3);
         for (r, n) in reports.iter().zip([16i64, 24, 32]) {
@@ -197,6 +248,8 @@ mod tests {
         }
         assert_eq!(stats.executed, 3);
         assert_eq!(stats.cache_hits, 0);
+        assert_eq!(stats.experiments, 3);
+        assert_eq!(stats.fully_cached, 0);
         assert_eq!(stats.jobs, 3);
     }
 
@@ -204,16 +257,68 @@ mod tests {
     fn bad_experiment_fails_whole_batch_with_its_error() {
         let mut bad = dgemm_experiment(16);
         bad.library = "essl".into();
-        let cfg = EngineConfig { jobs: 2, cache_dir: None };
+        let cfg = EngineConfig::default().with_jobs(2);
         let err = run_batch_stats(&cfg, &[dgemm_experiment(16), bad]).unwrap_err();
         assert!(err.to_string().contains("essl"), "{err}");
     }
 
     #[test]
     fn jobs_zero_means_serial() {
-        let cfg = EngineConfig { jobs: 0, cache_dir: None };
+        let cfg = EngineConfig::default();
         let (reports, stats) = run_batch_stats(&cfg, &[dgemm_experiment(16)]).unwrap();
         assert_eq!(reports.len(), 1);
         assert_eq!(stats.jobs, 1);
+    }
+
+    #[test]
+    fn probe_schedules_hits_and_skips_fully_cached_experiments() {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_batch_probe_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = EngineConfig::default().with_jobs(2).with_cache(&dir);
+        let mut a = dgemm_experiment(16);
+        a.nreps = 2;
+        let mut b = dgemm_experiment(24);
+        b.nreps = 2;
+        let (_, s1) = run_batch_stats(&cfg, &[a.clone()]).unwrap();
+        assert_eq!((s1.executed, s1.cache_hits), (1, 0));
+        // a is fully cached (skipped); b enqueues its single miss
+        let (reports, s2) = run_batch_stats(&cfg, &[a, b]).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(s2.executed, 1);
+        assert_eq!(s2.cache_hits, 1);
+        assert_eq!(s2.scheduled_hits, 1, "hit must be found before enqueue");
+        assert_eq!(s2.experiments, 2);
+        assert_eq!(s2.fully_cached, 1);
+        let line = s2.summary_line();
+        assert!(line.contains("1/2 experiment(s) fully cached"), "{line}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trusted_only_rejects_contended_entries_until_remeasured_serially() {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_batch_trust_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut exps = Vec::new();
+        for n in [16i64, 24, 32] {
+            exps.push(dgemm_experiment(n));
+        }
+        // measured with a 3-wide pool: entries carry jobs=3 provenance
+        let parallel = EngineConfig::default().with_jobs(3).with_cache(&dir);
+        let (_, s1) = run_batch_stats(&parallel, &exps).unwrap();
+        assert_eq!((s1.executed, s1.cache_hits), (3, 0));
+        // a permissive re-run serves them...
+        let (_, s2) = run_batch_stats(&parallel, &exps).unwrap();
+        assert_eq!((s2.executed, s2.cache_hits), (0, 3));
+        // ...a trusted-only serial run re-measures them all...
+        let serial = EngineConfig::default().with_cache(&dir).with_trusted_only(true);
+        let (_, s3) = run_batch_stats(&serial, &exps).unwrap();
+        assert_eq!((s3.executed, s3.cache_hits), (3, 0));
+        // ...and its jobs=1 entries now satisfy the trust gate
+        let (_, s4) = run_batch_stats(&serial, &exps).unwrap();
+        assert_eq!((s4.executed, s4.cache_hits), (0, 3));
+        assert_eq!(s4.fully_cached, 3);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -10,6 +10,17 @@
 //! unroll to the same measurement share a cache entry, while any change
 //! to operand sizes, vary specs, counters or thread counts changes the
 //! script and therefore the key.
+//!
+//! **Entry format (envelope schema 1).** Each entry is a JSON object
+//! `{schema, jobs, created_unix, result}` ([`CacheEnvelope`]): `jobs`
+//! records the worker-pool width of the measuring run (the timing
+//! provenance — entries measured with `jobs > 1` carry contention-
+//! inflated wall times), `created_unix` the store time, and `result`
+//! the [`PointResult`] payload. Legacy pre-envelope entries (a bare
+//! point object) remain readable with unknown provenance. Corrupt,
+//! truncated or unknown-schema files are cache *misses*, never errors.
+//! With [`ResultCache::with_trusted_only`], lookups additionally reject
+//! every entry that cannot prove `jobs ≤ 1`.
 
 use crate::coordinator::experiment::UnrolledPoint;
 use crate::coordinator::io;
@@ -19,9 +30,17 @@ use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+pub use crate::coordinator::io::{CacheEnvelope, CACHE_ENTRY_SCHEMA};
+
 /// On-disk cache of measured points, one JSON file per fingerprint.
 pub struct ResultCache {
     dir: PathBuf,
+    /// Provenance recorded on every `store`: the worker-pool width of
+    /// the run producing the entries.
+    store_jobs: usize,
+    /// When set, `lookup` serves only entries proven to be measured
+    /// without worker contention (`jobs ≤ 1`).
+    trusted_only: bool,
 }
 
 /// 64-bit FNV-1a (the registry provides no hashing crates; this is the
@@ -38,12 +57,28 @@ fn fnv1a64(basis: u64, data: &[u8]) -> u64 {
 static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 impl ResultCache {
-    /// Open (creating if needed) a cache directory.
+    /// Open (creating if needed) a cache directory. Entries are stored
+    /// with `jobs: 1` provenance and served regardless of provenance
+    /// unless the builders below say otherwise.
     pub fn open(dir: impl AsRef<Path>) -> Result<ResultCache> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
-        Ok(ResultCache { dir })
+        Ok(ResultCache { dir, store_jobs: 1, trusted_only: false })
+    }
+
+    /// Record `jobs` as the provenance of every entry this cache stores.
+    pub fn with_provenance(mut self, jobs: usize) -> ResultCache {
+        self.store_jobs = jobs;
+        self
+    }
+
+    /// Serve only entries proven to be measured with `jobs ≤ 1`
+    /// (publication-quality timings); contended and legacy entries
+    /// become misses.
+    pub fn with_trusted_only(mut self, trusted_only: bool) -> ResultCache {
+        self.trusted_only = trusted_only;
+        self
     }
 
     pub fn dir(&self) -> &Path {
@@ -74,23 +109,49 @@ impl ResultCache {
         self.dir.join(format!("{key}.json"))
     }
 
-    /// Look up a cached point. Entries whose stored record count does
-    /// not match `expected_records` (e.g. written by an older run with
-    /// different semantics, or truncated) are treated as misses.
-    pub fn lookup(&self, key: &str, expected_records: usize) -> Option<PointResult> {
+    /// Parse a cached entry with its provenance, without applying the
+    /// record-count or trust filters. Corrupt, truncated or unknown-
+    /// schema files return `None`.
+    pub fn lookup_entry(&self, key: &str) -> Option<CacheEnvelope> {
         let text = std::fs::read_to_string(self.entry_path(key)).ok()?;
         let j = Json::parse(&text).ok()?;
-        let p = io::point_result_from_json(&j);
-        if p.records.len() == expected_records {
-            Some(p)
-        } else {
-            None
+        io::cache_envelope_from_json(&j)
+    }
+
+    /// Look up a cached point. Entries whose stored record count does
+    /// not match `expected_records` (e.g. written by an older run with
+    /// different semantics, or truncated) are treated as misses, as are
+    /// untrusted entries when the cache is in trusted-only mode.
+    /// Served hits have their file times bumped so the gc sweep's LRU
+    /// ordering works even on `noatime`/`relatime` mounts.
+    pub fn lookup(&self, key: &str, expected_records: usize) -> Option<PointResult> {
+        let env = self.lookup_entry(key)?;
+        if self.trusted_only && !env.trusted() {
+            return None;
+        }
+        if env.result.records.len() != expected_records {
+            return None;
+        }
+        self.touch(key);
+        Some(env.result)
+    }
+
+    /// Best-effort recency bump of an entry's atime+mtime (the age
+    /// shown by `cache stats` comes from the envelope's `created_unix`,
+    /// which is unaffected). Failure — entry deleted by a racing gc,
+    /// read-only cache — is fine: the entry just keeps its old recency.
+    fn touch(&self, key: &str) {
+        let now = std::time::SystemTime::now();
+        let times = std::fs::FileTimes::new().set_accessed(now).set_modified(now);
+        if let Ok(f) = std::fs::OpenOptions::new().write(true).open(self.entry_path(key)) {
+            let _ = f.set_times(times);
         }
     }
 
     /// Store a measured point atomically (unique temp file + rename),
     /// so concurrent workers racing on the same key never expose a
-    /// partially written entry — last writer wins.
+    /// partially written entry — last writer wins. The entry carries
+    /// the envelope with this cache's provenance (`with_provenance`).
     pub fn store(&self, key: &str, point: &PointResult) -> Result<()> {
         let path = self.entry_path(key);
         let tmp = self.dir.join(format!(
@@ -98,7 +159,12 @@ impl ResultCache {
             std::process::id(),
             TMP_SEQ.fetch_add(1, Ordering::Relaxed)
         ));
-        std::fs::write(&tmp, io::point_result_to_json(point).to_string_pretty())?;
+        let created = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .ok()
+            .map(|d| d.as_secs());
+        let j = io::cache_envelope_to_json(point, self.store_jobs, created);
+        std::fs::write(&tmp, j.to_string_pretty())?;
         std::fs::rename(&tmp, &path)?;
         Ok(())
     }
@@ -175,6 +241,78 @@ mod tests {
         assert!((hit.records[1].seconds - 0.002).abs() < 1e-12);
         // a mismatching expected count is a miss, not a wrong answer
         assert!(cache.lookup(&key, 5).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn provenance_survives_store_and_gates_trusted_lookups() {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_cache_prov_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap().with_provenance(8);
+        cache.store("contended", &result(3)).unwrap();
+        let env = cache.lookup_entry("contended").unwrap();
+        assert_eq!(env.schema, CACHE_ENTRY_SCHEMA);
+        assert_eq!(env.jobs, Some(8));
+        assert!(env.created_unix.is_some());
+        assert!(!env.trusted());
+        // plain lookups serve it; trusted-only lookups reject it
+        assert!(cache.lookup("contended", 3).is_some());
+        let strict = ResultCache::open(&dir).unwrap().with_trusted_only(true);
+        assert!(strict.lookup("contended", 3).is_none());
+        // a jobs=1 entry passes the trust gate
+        let serial = ResultCache::open(&dir).unwrap();
+        serial.store("clean", &result(3)).unwrap();
+        assert!(strict.lookup("clean", 3).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn served_hits_refresh_lru_recency() {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_cache_touch_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap();
+        cache.store("hot", &result(2)).unwrap();
+        let path = dir.join("hot.json");
+        // backdate the entry, as if it were measured days ago
+        let old = std::time::SystemTime::now() - std::time::Duration::from_secs(86_400);
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_accessed(old).set_modified(old)).unwrap();
+        assert!(cache.lookup("hot", 2).is_some());
+        // the hit bumped the file times: gc's LRU now sees it as recent
+        let mtime = std::fs::metadata(&path).unwrap().modified().unwrap();
+        assert!(
+            mtime.elapsed().unwrap() < std::time::Duration::from_secs(3_600),
+            "lookup must refresh recency"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_and_corrupt_entries() {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_cache_legacy_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ResultCache::open(&dir).unwrap();
+        // PR-1 format: a bare point object, no envelope — still a hit
+        let legacy_json = io::point_result_to_json(&result(2)).to_string_pretty();
+        std::fs::write(dir.join("old.json"), &legacy_json).unwrap();
+        let env = cache.lookup_entry("old").unwrap();
+        assert_eq!((env.schema, env.jobs), (0, None));
+        assert!(cache.lookup("old", 2).is_some());
+        // ...but not under trusted-only: provenance is unknown
+        let strict = ResultCache::open(&dir).unwrap().with_trusted_only(true);
+        assert!(strict.lookup("old", 2).is_none());
+        // corrupt / truncated / wrong-schema files are misses, not errors
+        std::fs::write(dir.join("trunc.json"), &legacy_json[..legacy_json.len() / 2]).unwrap();
+        std::fs::write(dir.join("junk.json"), "not json at all").unwrap();
+        std::fs::write(dir.join("schema9.json"), r#"{"schema":9,"jobs":1,"result":{}}"#).unwrap();
+        std::fs::write(dir.join("empty.json"), "").unwrap();
+        for key in ["trunc", "junk", "schema9", "empty"] {
+            assert!(cache.lookup(key, 2).is_none(), "{key}");
+            assert!(cache.lookup_entry(key).is_none(), "{key}");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,347 @@
+//! Cache lifecycle: statistics, garbage collection and clearing for
+//! the engine's content-addressed result cache (the `elaps cache
+//! {stats,gc,clear}` subcommands).
+//!
+//! The cache grows without bound while campaigns run; this module adds
+//! the introspection and eviction the ROADMAP called for: entry/byte
+//! counts with provenance classes and an age histogram, an LRU sweep
+//! (by atime where the filesystem keeps one, mtime fallback) that
+//! deletes oldest entries until the cache fits a byte budget, and a
+//! full clear.
+//!
+//! All operations are safe against concurrent engine runs: entries are
+//! whole files written atomically (temp + rename), so a sweep can only
+//! ever remove complete entries, and an entry that vanishes mid-scan
+//! (deleted by a racing gc/clear, or replaced by a store) is simply
+//! skipped. Deleting an entry a worker is about to re-store is
+//! harmless — the point is re-measured on the next miss.
+
+use crate::coordinator::io;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, SystemTime};
+
+/// Age-histogram buckets: label and exclusive upper bound in seconds.
+pub const AGE_BUCKETS: [(&str, u64); 5] = [
+    ("< 1 min", 60),
+    ("< 1 hour", 3_600),
+    ("< 1 day", 86_400),
+    ("< 7 days", 604_800),
+    ("older", u64::MAX),
+];
+
+/// Writer temp files older than this are considered abandoned by a
+/// crashed process and swept by `gc`/`clear`.
+const STALE_TMP_AGE: Duration = Duration::from_secs(3_600);
+
+/// A snapshot of the cache's contents.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Entry files present.
+    pub entries: usize,
+    /// Total bytes of all entry files.
+    pub total_bytes: u64,
+    /// Entries proven measured without contention (`jobs ≤ 1`).
+    pub trusted: usize,
+    /// Entries measured under worker contention (`jobs > 1`).
+    pub contended: usize,
+    /// Legacy pre-envelope entries (provenance unknown).
+    pub legacy: usize,
+    /// Files that parse as neither envelope nor legacy entry.
+    pub unreadable: usize,
+    /// Writer temp files currently present.
+    pub tmp_files: usize,
+    /// Entry count per [`AGE_BUCKETS`] bucket (by `created_unix` when
+    /// recorded, mtime otherwise).
+    pub ages: [usize; AGE_BUCKETS.len()],
+}
+
+impl CacheStats {
+    /// Multi-line human-readable rendering (the `cache stats` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s += &format!("  entries:     {}\n", self.entries);
+        s += &format!("  bytes:       {}\n", self.total_bytes);
+        s += &format!("  trusted:     {}  (jobs <= 1 — publication-quality timings)\n", self.trusted);
+        s += &format!("  contended:   {}  (jobs > 1 — wall times inflated by contention)\n", self.contended);
+        s += &format!("  legacy:      {}  (pre-envelope, provenance unknown)\n", self.legacy);
+        s += &format!("  unreadable:  {}\n", self.unreadable);
+        s += &format!("  tmp files:   {}\n", self.tmp_files);
+        s += "  age histogram:\n";
+        for (i, (label, _)) in AGE_BUCKETS.iter().enumerate() {
+            s += &format!("    {label:<9} {}\n", self.ages[i]);
+        }
+        s
+    }
+}
+
+/// The outcome of one `gc` sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcOutcome {
+    /// Entries present when the sweep started.
+    pub scanned: usize,
+    /// Entries deleted (oldest recency first).
+    pub deleted: usize,
+    /// Total entry bytes before the sweep.
+    pub bytes_before: u64,
+    /// Total entry bytes after the sweep.
+    pub bytes_after: u64,
+    /// Abandoned writer temp files removed.
+    pub tmp_removed: usize,
+}
+
+/// One scanned entry file.
+struct EntryFile {
+    path: PathBuf,
+    bytes: u64,
+    /// LRU recency: atime where available, mtime fallback.
+    recency: SystemTime,
+    /// Age reference for the stats histogram.
+    mtime: SystemTime,
+}
+
+/// List the cache directory's entry (`*.json`) and temp (`*.tmp`)
+/// files. Errors if `dir` is not a directory; tolerates entries
+/// vanishing mid-scan.
+fn scan(dir: &Path) -> Result<(Vec<EntryFile>, Vec<PathBuf>)> {
+    if !dir.is_dir() {
+        bail!("no cache directory at {}", dir.display());
+    }
+    let mut entries = Vec::new();
+    let mut tmps = Vec::new();
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("reading cache dir {}", dir.display()))?;
+    for e in rd.filter_map(|e| e.ok()) {
+        let path = e.path();
+        match path.extension().and_then(|x| x.to_str()) {
+            Some("json") => {
+                // may vanish between read_dir and metadata (racing gc)
+                let Ok(md) = e.metadata() else { continue };
+                if !md.is_file() {
+                    continue;
+                }
+                let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+                let recency = md.accessed().unwrap_or(mtime);
+                entries.push(EntryFile { path, bytes: md.len(), recency, mtime });
+            }
+            Some("tmp") => tmps.push(path),
+            _ => {}
+        }
+    }
+    Ok((entries, tmps))
+}
+
+/// Gather [`CacheStats`] for the cache at `dir`.
+pub fn cache_stats(dir: &Path) -> Result<CacheStats> {
+    let (entries, tmps) = scan(dir)?;
+    let now = SystemTime::now();
+    let mut st = CacheStats { tmp_files: tmps.len(), ..Default::default() };
+    for ent in &entries {
+        // entries may vanish between scan and read — skip, don't fail
+        let Ok(text) = std::fs::read_to_string(&ent.path) else { continue };
+        st.entries += 1;
+        st.total_bytes += ent.bytes;
+        let env = Json::parse(&text).ok().as_ref().and_then(io::cache_envelope_from_json);
+        let created = env.as_ref().and_then(|e| e.created_unix);
+        match env {
+            None => st.unreadable += 1,
+            Some(e) => match e.jobs {
+                Some(j) if j <= 1 => st.trusted += 1,
+                Some(_) => st.contended += 1,
+                None => st.legacy += 1,
+            },
+        }
+        let age_secs = match created {
+            Some(t) => now
+                .duration_since(SystemTime::UNIX_EPOCH)
+                .map(|d| d.as_secs().saturating_sub(t))
+                .unwrap_or(0),
+            None => now.duration_since(ent.mtime).map(|d| d.as_secs()).unwrap_or(0),
+        };
+        let bucket = AGE_BUCKETS
+            .iter()
+            .position(|&(_, bound)| age_secs < bound)
+            .unwrap_or(AGE_BUCKETS.len() - 1);
+        st.ages[bucket] += 1;
+    }
+    Ok(st)
+}
+
+/// Shrink the cache below `max_bytes`, deleting least-recently-used
+/// entries first (atime recency, mtime fallback; ties broken by path
+/// for determinism). Also sweeps writer temp files abandoned for more
+/// than an hour. Entries deleted concurrently by another process count
+/// as freed.
+pub fn gc_max_bytes(dir: &Path, max_bytes: u64) -> Result<GcOutcome> {
+    let (mut entries, tmps) = scan(dir)?;
+    let mut out = GcOutcome { scanned: entries.len(), ..Default::default() };
+    for tmp in tmps {
+        let stale = std::fs::metadata(&tmp)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age >= STALE_TMP_AGE);
+        if stale && std::fs::remove_file(&tmp).is_ok() {
+            out.tmp_removed += 1;
+        }
+    }
+    entries.sort_by(|a, b| a.recency.cmp(&b.recency).then_with(|| a.path.cmp(&b.path)));
+    let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
+    out.bytes_before = total;
+    for ent in &entries {
+        if total <= max_bytes {
+            break;
+        }
+        match std::fs::remove_file(&ent.path) {
+            Ok(()) => {}
+            // already gone (racing gc/clear): its bytes are freed too
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(e).with_context(|| format!("deleting {}", ent.path.display()))
+            }
+        }
+        total = total.saturating_sub(ent.bytes);
+        out.deleted += 1;
+    }
+    out.bytes_after = total;
+    Ok(out)
+}
+
+/// Delete every cache entry, plus abandoned temp files. Fresh temp
+/// files are left alone — a live writer may be between its write and
+/// rename, and deleting its temp would fail that store. Returns the
+/// number of entries removed.
+pub fn clear_cache(dir: &Path) -> Result<usize> {
+    let (entries, tmps) = scan(dir)?;
+    let mut removed = 0;
+    for ent in &entries {
+        match std::fs::remove_file(&ent.path) {
+            Ok(()) => removed += 1,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(e).with_context(|| format!("deleting {}", ent.path.display()))
+            }
+        }
+    }
+    for tmp in tmps {
+        let stale = std::fs::metadata(&tmp)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age >= STALE_TMP_AGE);
+        if stale {
+            let _ = std::fs::remove_file(&tmp);
+        }
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_gc_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Write a fake entry of `bytes` bytes with atime+mtime `age_secs`
+    /// in the past.
+    fn put_entry(dir: &Path, name: &str, bytes: usize, age_secs: u64) {
+        let path = dir.join(format!("{name}.json"));
+        std::fs::write(&path, "x".repeat(bytes)).unwrap();
+        let t = SystemTime::now() - Duration::from_secs(age_secs);
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_accessed(t).set_modified(t)).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_an_error() {
+        let dir = tmpdir("missing").join("nope");
+        assert!(cache_stats(&dir).is_err());
+        assert!(gc_max_bytes(&dir, 0).is_err());
+        assert!(clear_cache(&dir).is_err());
+    }
+
+    #[test]
+    fn stats_counts_and_age_buckets() {
+        let dir = tmpdir("stats");
+        put_entry(&dir, "fresh", 10, 0);
+        put_entry(&dir, "hour_old", 20, 2_000);
+        put_entry(&dir, "ancient", 30, 2 * 604_800);
+        std::fs::write(dir.join("leftover.tmp"), "partial").unwrap();
+        let st = cache_stats(&dir).unwrap();
+        assert_eq!(st.entries, 3);
+        assert_eq!(st.total_bytes, 60);
+        // raw "xxx…" files are unreadable entries, not errors
+        assert_eq!(st.unreadable, 3);
+        assert_eq!(st.tmp_files, 1);
+        assert_eq!(st.ages[0], 1, "{:?}", st.ages); // < 1 min
+        assert_eq!(st.ages[1], 1); // < 1 hour
+        assert_eq!(st.ages[4], 1); // older
+        assert!(st.render().contains("entries:     3"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_deletes_oldest_first_until_under_budget() {
+        let dir = tmpdir("lru");
+        put_entry(&dir, "oldest", 100, 3_000);
+        put_entry(&dir, "middle", 100, 2_000);
+        put_entry(&dir, "newest", 100, 1_000);
+        let out = gc_max_bytes(&dir, 150).unwrap();
+        assert_eq!(out.scanned, 3);
+        assert_eq!(out.deleted, 2);
+        assert_eq!(out.bytes_before, 300);
+        assert_eq!(out.bytes_after, 100);
+        assert!(!dir.join("oldest.json").exists());
+        assert!(!dir.join("middle.json").exists());
+        assert!(dir.join("newest.json").exists());
+        // already under budget: a second sweep deletes nothing
+        let out2 = gc_max_bytes(&dir, 150).unwrap();
+        assert_eq!(out2.deleted, 0);
+        assert_eq!(out2.bytes_after, 100);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_sweeps_stale_tmp_files_only() {
+        let dir = tmpdir("tmps");
+        std::fs::write(dir.join("fresh.tmp"), "busy writer").unwrap();
+        let stale = dir.join("stale.tmp");
+        std::fs::write(&stale, "crashed writer").unwrap();
+        let t = SystemTime::now() - Duration::from_secs(7_200);
+        let f = std::fs::OpenOptions::new().write(true).open(&stale).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_accessed(t).set_modified(t)).unwrap();
+        let out = gc_max_bytes(&dir, u64::MAX).unwrap();
+        assert_eq!(out.tmp_removed, 1);
+        assert!(dir.join("fresh.tmp").exists());
+        assert!(!stale.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_removes_entries_and_stale_tmps_but_spares_live_writers() {
+        let dir = tmpdir("clear");
+        put_entry(&dir, "a", 10, 0);
+        put_entry(&dir, "b", 10, 0);
+        // a fresh tmp may belong to a live writer mid-store: spared
+        std::fs::write(dir.join("live.tmp"), "x").unwrap();
+        // an hours-old tmp is an abandoned writer: swept
+        let stale = dir.join("stale.tmp");
+        std::fs::write(&stale, "y").unwrap();
+        let t = SystemTime::now() - Duration::from_secs(7_200);
+        let f = std::fs::OpenOptions::new().write(true).open(&stale).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_accessed(t).set_modified(t)).unwrap();
+        assert_eq!(clear_cache(&dir).unwrap(), 2);
+        let st = cache_stats(&dir).unwrap();
+        assert_eq!((st.entries, st.tmp_files), (0, 1));
+        assert!(dir.join("live.tmp").exists());
+        assert!(!stale.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

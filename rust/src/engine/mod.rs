@@ -21,30 +21,45 @@
 //!   keyed by the fingerprint of (library, machine model, nreps,
 //!   unrolled script) lets re-runs and overlapping sweeps skip
 //!   already-measured points;
+//! * **cache-aware scheduling** — [`batch`] probes the cache *before*
+//!   enqueueing: fully-cached experiments bypass the worker pool
+//!   entirely, partially-cached ones enqueue only their misses, and the
+//!   hit/miss/skip accounting comes back in [`BatchStats`];
+//! * **cache lifecycle** ([`gc`]) — `elaps cache {stats,gc,clear}`:
+//!   entry/byte/age statistics and an LRU-by-atime (mtime fallback)
+//!   sweep that keeps the cache under a byte budget;
 //! * **batch submission** — [`Engine::run_batch`] schedules whole
-//!   campaigns (the `elaps batch` command, [`crate::figures`] drivers)
-//!   through one queue instead of one experiment at a time.
+//!   campaigns (the `elaps batch` command, the `elaps figures`
+//!   campaign built by [`crate::figures`]) through one queue instead of
+//!   one experiment at a time.
 //!
 //! [`crate::coordinator::run_local`] routes through the engine with the
 //! process-default configuration ([`default_config`]), which the CLI
 //! sets from `--jobs N --cache DIR` and which honours the `ELAPS_JOBS`
 //! / `ELAPS_CACHE` environment variables (used by the bench binaries).
 //!
-//! **Timing caveat.** Structure is deterministic, wall-clock is not:
-//! with `--jobs > 1` concurrently executing kernels contend for cores
-//! and memory bandwidth, which inflates the measured `seconds`/`cycles`
-//! of each point — and a result cache filled by a parallel run replays
-//! those inflated timings to later runs. Use parallel runs for
-//! campaign exploration and functional sweeps; measure publication
-//! timings (and populate shared caches) with `--jobs 1`. The simulated
-//! PAPI counters, flop counts and record structure are unaffected
-//! either way.
+//! **Timing caveat and provenance.** Structure is deterministic,
+//! wall-clock is not: with `--jobs > 1` concurrently executing kernels
+//! contend for cores and memory bandwidth, which inflates the measured
+//! `seconds`/`cycles` of each point. Use parallel runs for campaign
+//! exploration and functional sweeps; measure publication timings with
+//! `--jobs 1`. The simulated PAPI counters, flop counts and record
+//! structure are unaffected either way. To keep a shared cache honest,
+//! every entry is stored inside a versioned envelope
+//! `{schema, jobs, created_unix, result}` recording the worker-pool
+//! width (`jobs`) that measured it — see [`cache`]. The
+//! timing-provenance rule: **trust only `jobs ≤ 1` entries for
+//! publication timings**. [`EngineConfig::trusted_only`] (CLI
+//! `--trusted-only`, env `ELAPS_TRUSTED_ONLY=1`) enforces the rule at
+//! lookup time, turning contended and legacy (pre-envelope,
+//! provenance-unknown) entries into misses that are re-measured.
 
 pub mod batch;
 pub mod cache;
+pub mod gc;
 pub mod queue;
 
-pub use cache::ResultCache;
+pub use cache::{CacheEnvelope, ResultCache};
 pub use queue::WorkQueue;
 
 use crate::coordinator::experiment::{Experiment, UnrolledPoint};
@@ -56,13 +71,18 @@ use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock, RwLock};
 
-/// Engine configuration: worker-pool width and result-cache location.
+/// Engine configuration: worker-pool width, result-cache location and
+/// cache trust policy.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct EngineConfig {
     /// Worker threads; 0 and 1 both mean serial execution.
     pub jobs: usize,
     /// Result-cache directory; `None` disables caching.
     pub cache_dir: Option<PathBuf>,
+    /// Serve cache hits only from entries proven to be measured without
+    /// worker contention (`jobs ≤ 1`); contended and legacy entries are
+    /// re-measured. See the module docs' timing-provenance rule.
+    pub trusted_only: bool,
 }
 
 impl EngineConfig {
@@ -76,9 +96,15 @@ impl EngineConfig {
         self
     }
 
-    /// Configuration from the `ELAPS_JOBS` / `ELAPS_CACHE` environment
-    /// variables (unset, empty or unparsable values fall back to the
-    /// serial, uncached default).
+    pub fn with_trusted_only(mut self, trusted_only: bool) -> EngineConfig {
+        self.trusted_only = trusted_only;
+        self
+    }
+
+    /// Configuration from the `ELAPS_JOBS` / `ELAPS_CACHE` /
+    /// `ELAPS_TRUSTED_ONLY` environment variables (unset, empty or
+    /// unparsable values fall back to the serial, uncached,
+    /// trust-everything default).
     pub fn from_env() -> EngineConfig {
         let jobs = std::env::var("ELAPS_JOBS")
             .ok()
@@ -88,37 +114,63 @@ impl EngineConfig {
             .ok()
             .filter(|v| !v.trim().is_empty())
             .map(PathBuf::from);
-        EngineConfig { jobs, cache_dir }
+        let trusted_only = std::env::var("ELAPS_TRUSTED_ONLY")
+            .map(|v| {
+                let v = v.trim().to_ascii_lowercase();
+                v == "1" || v == "true" || v == "yes"
+            })
+            .unwrap_or(false);
+        EngineConfig { jobs, cache_dir, trusted_only }
     }
 }
 
-/// Execution statistics of one engine run — the source of the CLI's
-/// cache-statistics summary line.
+/// Execution statistics of one engine run or batch: the hit/miss/skip
+/// accounting behind the CLI's summary line.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct RunStats {
-    /// Points whose sampler scripts were actually executed.
+pub struct BatchStats {
+    /// Experiments submitted.
+    pub experiments: usize,
+    /// Experiments whose every point was served from the cache by the
+    /// pre-enqueue probe — they bypassed the worker pool entirely.
+    pub fully_cached: usize,
+    /// Points whose sampler scripts were actually executed (misses).
     pub executed: usize,
-    /// Points served from the result cache without touching a sampler.
+    /// Points served from the result cache without touching a sampler
+    /// (scheduled probe hits plus hits a worker observed late).
     pub cache_hits: usize,
+    /// The subset of `cache_hits` discovered by the pre-enqueue probe,
+    /// i.e. points that were never enqueued at all.
+    pub scheduled_hits: usize,
     /// Worker threads used.
     pub jobs: usize,
 }
 
-impl RunStats {
+impl BatchStats {
     pub fn total_points(&self) -> usize {
         self.executed + self.cache_hits
     }
 
-    /// The run-summary line, e.g.
-    /// `engine: 12 point(s) on 4 worker(s) — 0 executed, 12 cache hit(s)`.
+    /// The run-summary line, e.g. `engine: 12 point(s) on 1 worker(s) —
+    /// 0 executed, 12 cache hit(s) (12 scheduled), 3/3 experiment(s)
+    /// fully cached`.
     pub fn summary_line(&self) -> String {
-        format!(
+        let mut line = format!(
             "engine: {} point(s) on {} worker(s) — {} executed, {} cache hit(s)",
             self.total_points(),
             self.jobs.max(1),
             self.executed,
             self.cache_hits
-        )
+        );
+        if self.cache_hits > 0 {
+            line += &format!(" ({} scheduled)", self.scheduled_hits);
+        }
+        if self.experiments > 0 {
+            line += &format!(
+                ", {}/{} experiment(s) fully cached",
+                self.fully_cached, self.experiments
+            );
+        }
+        line
     }
 }
 
@@ -149,7 +201,7 @@ impl Engine {
     }
 
     /// Run one experiment, returning execution statistics alongside.
-    pub fn run_stats(&self, exp: &Experiment) -> Result<(Report, RunStats)> {
+    pub fn run_stats(&self, exp: &Experiment) -> Result<(Report, BatchStats)> {
         let (mut reports, stats) =
             batch::run_batch_stats(&self.cfg, std::slice::from_ref(exp))?;
         let report = reports.pop().expect("one report per experiment");
@@ -163,7 +215,7 @@ impl Engine {
     }
 
     /// [`Engine::run_batch`] with execution statistics.
-    pub fn run_batch_stats(&self, exps: &[Experiment]) -> Result<(Vec<Report>, RunStats)> {
+    pub fn run_batch_stats(&self, exps: &[Experiment]) -> Result<(Vec<Report>, BatchStats)> {
         batch::run_batch_stats(&self.cfg, exps)
     }
 }
@@ -247,8 +299,13 @@ mod tests {
 
     #[test]
     fn config_builders() {
-        let cfg = EngineConfig::default().with_jobs(4).with_cache("/tmp/x");
+        let cfg = EngineConfig::default()
+            .with_jobs(4)
+            .with_cache("/tmp/x")
+            .with_trusted_only(true);
         assert_eq!(cfg.jobs, 4);
         assert_eq!(cfg.cache_dir.as_deref(), Some(std::path::Path::new("/tmp/x")));
+        assert!(cfg.trusted_only);
+        assert!(!EngineConfig::default().trusted_only);
     }
 }

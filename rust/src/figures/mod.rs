@@ -9,13 +9,26 @@
 //! --cache DIR` (or `ELAPS_JOBS` / `ELAPS_CACHE` for the bench
 //! binaries) fans the builders' experiment points out over a worker
 //! pool and re-uses cached measurements across overlapping campaigns.
+//!
+//! Builders are written against the [`ExperimentRunner`] abstraction,
+//! which lets [`run_figures_campaign`] run a whole campaign in two
+//! passes: a *plan* pass ([`PlanRunner`]) walks every requested builder
+//! without executing anything to collect its experiments, everything is
+//! then measured through **one** [`crate::engine::Engine::run_batch`]
+//! (campaign-level sharding, one [`crate::engine::BatchStats`]), and a
+//! *replay* pass ([`ReplayRunner`]) hands each builder its measured
+//! reports to assemble the figure outputs.
 
 use crate::coordinator::{
-    run_local, Call, CallArg, DataGen, Experiment, Expr, Figure, Metric, RangeDef, Report,
-    Stat, Vary,
+    run_local, Call, CallArg, DataGen, Experiment, Expr, Figure, Metric, PointResult,
+    RangeDef, Report, Stat, Vary,
 };
+use crate::engine::BatchStats;
 use crate::kernels::ArgRole;
+use crate::sampler::Record;
 use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
 
 /// The output of one reproduced table/figure.
 pub struct FigureOutput {
@@ -48,6 +61,135 @@ impl FigureOutput {
         }
         Ok(())
     }
+}
+
+// ----------------------------------------------------------- runners
+
+/// How a figure builder executes its experiments. Builders construct
+/// their experiments deterministically and never derive one experiment
+/// from another's *measurements*, so a campaign can run every builder
+/// twice — once against [`PlanRunner`] to learn the experiment list,
+/// once against [`ReplayRunner`] to assemble outputs from the batch's
+/// reports.
+pub trait ExperimentRunner {
+    fn run(&self, exp: &Experiment) -> Result<Report>;
+
+    /// Run several experiments; the default runs them one by one.
+    fn run_batch(&self, exps: &[Experiment]) -> Result<Vec<Report>> {
+        exps.iter().map(|e| self.run(e)).collect()
+    }
+}
+
+/// Immediate execution through the process-default engine
+/// configuration — the standalone (`run_figure`, bench binary) path.
+pub struct LocalRunner;
+
+impl ExperimentRunner for LocalRunner {
+    fn run(&self, exp: &Experiment) -> Result<Report> {
+        run_local(exp)
+    }
+
+    fn run_batch(&self, exps: &[Experiment]) -> Result<Vec<Report>> {
+        crate::engine::Engine::with_defaults().run_batch(exps)
+    }
+}
+
+/// The campaign's plan pass: records every experiment a builder
+/// submits and returns a placeholder report of the correct *shape*
+/// (points, record counts, kernel labels) filled with nominal values,
+/// so builder code runs to completion without measuring anything. The
+/// outputs computed during this pass are discarded.
+#[derive(Default)]
+pub struct PlanRunner {
+    collected: RefCell<Vec<Experiment>>,
+}
+
+impl PlanRunner {
+    pub fn into_experiments(self) -> Vec<Experiment> {
+        self.collected.into_inner()
+    }
+}
+
+impl ExperimentRunner for PlanRunner {
+    fn run(&self, exp: &Experiment) -> Result<Report> {
+        self.collected.borrow_mut().push(exp.clone());
+        placeholder_report(exp)
+    }
+}
+
+/// The campaign's replay pass: serves the reports measured by the
+/// campaign batch, matched by the experiment's canonical JSON. A
+/// builder that (unexpectedly) asks for an experiment the plan pass
+/// did not record falls back to local execution.
+pub struct ReplayRunner {
+    by_exp: RefCell<HashMap<String, VecDeque<Report>>>,
+}
+
+impl ReplayRunner {
+    /// Pair the planned experiments with their batch reports (same
+    /// order, as returned by `run_batch`).
+    pub fn new(exps: &[Experiment], reports: Vec<Report>) -> ReplayRunner {
+        let mut by_exp: HashMap<String, VecDeque<Report>> = HashMap::new();
+        for (exp, report) in exps.iter().zip(reports) {
+            by_exp.entry(exp_key(exp)).or_default().push_back(report);
+        }
+        ReplayRunner { by_exp: RefCell::new(by_exp) }
+    }
+}
+
+impl ExperimentRunner for ReplayRunner {
+    fn run(&self, exp: &Experiment) -> Result<Report> {
+        let popped = self.by_exp.borrow_mut().get_mut(&exp_key(exp)).and_then(|q| q.pop_front());
+        match popped {
+            Some(report) => Ok(report),
+            None => run_local(exp),
+        }
+    }
+}
+
+/// Canonical identity of an experiment for plan/replay matching.
+fn exp_key(exp: &Experiment) -> String {
+    crate::coordinator::io::experiment_to_json(exp).to_string_compact()
+}
+
+/// A structurally correct report with nominal (1 ms / 1 flop) records —
+/// the plan pass stand-in. Kernel labels follow the call list so
+/// per-call breakdowns keep their shape.
+fn placeholder_report(exp: &Experiment) -> Result<Report> {
+    let machine = crate::perfmodel::MachineModel::by_name(&exp.machine)
+        .ok_or_else(|| anyhow!("unknown machine '{}'", exp.machine))?;
+    let ncounters = exp.counters.len();
+    let points: Vec<PointResult> = exp
+        .unroll()?
+        .into_iter()
+        .map(|pt| {
+            let records = (0..pt.expected_records(exp.nreps))
+                .map(|i| {
+                    let kernel = exp
+                        .calls
+                        .get(i % pt.calls_per_iter.max(1))
+                        .map(|c| c.kernel.clone())
+                        .unwrap_or_else(|| "planned".into());
+                    Record {
+                        kernel,
+                        seconds: 1e-3,
+                        cycles: machine.cycles(1e-3),
+                        flops: 1.0,
+                        counters: vec![0; ncounters],
+                        omp_group: None,
+                    }
+                })
+                .collect();
+            PointResult {
+                range_value: pt.range_value,
+                nthreads: pt.nthreads,
+                sum_iters: pt.sum_iters,
+                calls_per_iter: pt.calls_per_iter,
+                records,
+            }
+        })
+        .collect();
+    Report::assemble(exp.clone(), machine, points)
 }
 
 /// Build a [`Call`] from compact tokens: `$name` = operand, otherwise
@@ -88,7 +230,7 @@ fn base(name: &str, lib: &str) -> Experiment {
 // T1 + T2 — §2 metrics table and PAPI counter table (Experiment 1)
 // =====================================================================
 
-pub fn t1_dgemm_metrics(quick: bool) -> Result<FigureOutput> {
+pub fn t1_dgemm_metrics(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let n = if quick { 200 } else { 500 };
     let ns = n.to_string();
     let mut exp = base("t1-dgemm-metrics", "rustblocked");
@@ -99,7 +241,7 @@ pub fn t1_dgemm_metrics(quick: bool) -> Result<FigureOutput> {
         "dgemm",
         &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
     )?];
-    let report = run_local(&exp)?;
+    let report = runner.run(&exp)?;
     let mut rows = vec!["metric,value".to_string()];
     for (name, v) in report.metrics_table() {
         rows.push(format!("{name},{v:.4}"));
@@ -124,7 +266,7 @@ pub fn t1_dgemm_metrics(quick: bool) -> Result<FigureOutput> {
 // F1 — Fig. 1: statistics over 10 repetitions, first-rep outlier
 // =====================================================================
 
-pub fn f1_stats(quick: bool) -> Result<FigureOutput> {
+pub fn f1_stats(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let n = if quick { 150 } else { 400 };
     let ns = n.to_string();
     let mut exp = base("f1-stats", "rustblocked");
@@ -134,7 +276,7 @@ pub fn f1_stats(quick: bool) -> Result<FigureOutput> {
         "dgemm",
         &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
     )?];
-    let report = run_local(&exp)?;
+    let report = runner.run(&exp)?;
     let point = &report.points[0];
     let per_rep = report.rep_values(point, Metric::TimeMs);
     let mut rows = vec!["stat,all reps,without first".to_string()];
@@ -173,7 +315,7 @@ pub fn f1_stats(quick: bool) -> Result<FigureOutput> {
 // F2 — Fig. 2: data placement, warm vs cold C (Experiment 3)
 // =====================================================================
 
-pub fn f2_locality(quick: bool) -> Result<FigureOutput> {
+pub fn f2_locality(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     // small fixed A,B; C large enough to stream
     let (mk, n) = if quick { (64, 400) } else { (64, 1500) };
     let mks = mk.to_string();
@@ -191,7 +333,7 @@ pub fn f2_locality(quick: bool) -> Result<FigureOutput> {
         if vary_c {
             exp.vary.insert("C".into(), Vary { with_rep: true, ..Default::default() });
         }
-        run_local(&exp)
+        runner.run(&exp)
     };
     let warm = build(false)?;
     let cold = build(true)?;
@@ -225,7 +367,7 @@ pub fn f2_locality(quick: bool) -> Result<FigureOutput> {
 // F3 — Fig. 3: breakdown of a kernel sequence (Experiment 4)
 // =====================================================================
 
-pub fn f3_breakdown(quick: bool) -> Result<FigureOutput> {
+pub fn f3_breakdown(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let (n, nrhs) = if quick { (200, 40) } else { (600, 120) };
     let ns = n.to_string();
     let rs = nrhs.to_string();
@@ -237,7 +379,7 @@ pub fn f3_breakdown(quick: bool) -> Result<FigureOutput> {
         call("dtrsm", &["L", "L", "N", "U", &ns, &rs, "1.0", "$A", &ns, "$B", &ns])?,
         call("dtrsm", &["L", "U", "N", "N", &ns, &rs, "1.0", "$A", &ns, "$B", &ns])?,
     ];
-    let report = run_local(&exp)?;
+    let report = runner.run(&exp)?;
     let breakdown = &report.call_breakdown(Stat::Median)[0];
     let total: f64 = breakdown.iter().map(|(_, v)| v).sum();
     let mut rows = vec!["kernel,seconds,fraction".to_string()];
@@ -262,7 +404,7 @@ pub fn f3_breakdown(quick: bool) -> Result<FigureOutput> {
 // F4 — Fig. 4: dgesv over a parameter range (Experiment 5)
 // =====================================================================
 
-pub fn f4_gesv_range(quick: bool) -> Result<FigureOutput> {
+pub fn f4_gesv_range(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let (hi, nrhs, step) = if quick { (300, 50, 50) } else { (1000, 150, 50) };
     let rs = nrhs.to_string();
     let mut exp = base("f4-gesv", "rustblocked");
@@ -270,7 +412,7 @@ pub fn f4_gesv_range(quick: bool) -> Result<FigureOutput> {
     exp.range = Some(RangeDef::span("n", 50, step as i64, hi as i64));
     exp.calls = vec![call("dgesv", &["n", &rs, "$A", "n", "$B", "n"])?];
     exp.datagen.insert("A".into(), DataGen::Spd(Expr::sym("n")));
-    let report = run_local(&exp)?;
+    let report = runner.run(&exp)?;
     let series = report.series(Metric::Gflops, Stat::Max);
     let mut rows = vec!["n,gflops_max,gflops_med".to_string()];
     let med = report.series(Metric::Gflops, Stat::Median);
@@ -295,7 +437,7 @@ pub fn f4_gesv_range(quick: bool) -> Result<FigureOutput> {
 // F5 — Fig. 5: eigensolver scalability over threads (Experiment 6)
 // =====================================================================
 
-pub fn f5_eig_scalability(quick: bool) -> Result<FigureOutput> {
+pub fn f5_eig_scalability(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let n = if quick { 100 } else { 300 };
     let ns = n.to_string();
     let mut fig = Figure::new(
@@ -317,7 +459,7 @@ pub fn f5_eig_scalability(quick: bool) -> Result<FigureOutput> {
         // fresh matrix per repetition: the driver overwrites A with
         // eigenvectors, which would otherwise be re-decomposed
         exp.vary.insert("A".into(), Vary { with_rep: true, ..Default::default() });
-        let report = run_local(&exp)?;
+        let report = runner.run(&exp)?;
         let serial = report.series(Metric::TimeS, Stat::Median)[0].1;
         let pf = crate::libraries::by_name("rustblocked")
             .unwrap()
@@ -347,7 +489,7 @@ pub fn f5_eig_scalability(quick: bool) -> Result<FigureOutput> {
 // F6 — Fig. 6: block-size study of triangular inversion (Experiment 7)
 // =====================================================================
 
-pub fn f6_blocksize(quick: bool) -> Result<FigureOutput> {
+pub fn f6_blocksize(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let n: i64 = if quick { 256 } else { 1024 };
     let nbs: Vec<i64> = if quick {
         vec![8, 16, 32, 64, 128]
@@ -380,7 +522,7 @@ pub fn f6_blocksize(quick: bool) -> Result<FigureOutput> {
         ];
         exp.datagen.insert("A22".into(), DataGen::Tri(Expr::parse(&remld).unwrap(), 'L'));
         exp.datagen.insert("A11".into(), DataGen::Tri(Expr::Const(nb), 'L'));
-        let report = run_local(&exp)?;
+        let report = runner.run(&exp)?;
         // report Gflops against the true trtri flop count n³/3
         let secs = report.series(Metric::TimeS, Stat::Median)[0].1;
         let gflops = (n as f64).powi(3) / 3.0 / secs / 1e9;
@@ -411,7 +553,7 @@ pub fn f6_blocksize(quick: bool) -> Result<FigureOutput> {
 // F7 — Fig. 7: threaded dtrsm vs parallel dtrsv's (Experiments 8+9)
 // =====================================================================
 
-pub fn f7_trsm_vs_trsv(quick: bool) -> Result<FigureOutput> {
+pub fn f7_trsm_vs_trsv(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let (hi, step, nrhs) = if quick { (600i64, 200i64, 8usize) } else { (2000, 250, 8) };
     let machine = crate::perfmodel::MachineModel::sandybridge();
     // The paper's observation (Fig. 7) is that the vendor dtrsm
@@ -438,7 +580,7 @@ pub fn f7_trsm_vs_trsv(quick: bool) -> Result<FigureOutput> {
         )?];
         e_trsm.datagen.insert("A".into(), DataGen::Tri(Expr::parse(&nstr).unwrap(), 'L'));
         let serial_trsm =
-            run_local(&e_trsm)?.series(Metric::TimeS, Stat::Median)[0].1;
+            runner.run(&e_trsm)?.series(Metric::TimeS, Stat::Median)[0].1;
         // serial dtrsv (one column)
         let mut e_trsv = base(&format!("f7-trsv-{n}"), "rustblocked");
         e_trsv.machine = "sandybridge".into();
@@ -446,7 +588,7 @@ pub fn f7_trsm_vs_trsv(quick: bool) -> Result<FigureOutput> {
         e_trsv.calls = vec![call("dtrsv", &["L", "N", "N", &nstr, "$A", &nstr, "$x", "1"])?];
         e_trsv.datagen.insert("A".into(), DataGen::Tri(Expr::parse(&nstr).unwrap(), 'L'));
         let serial_trsv =
-            run_local(&e_trsv)?.series(Metric::TimeS, Stat::Median)[0].1;
+            runner.run(&e_trsv)?.series(Metric::TimeS, Stat::Median)[0].1;
         let t_trsm = crate::perfmodel::scaling::library_threads_time(
             serial_trsm, TRSM_SKEWED_PF, 8, &machine,
         );
@@ -490,7 +632,10 @@ pub const TC_K: i64 = 188;
 pub const TC_B: i64 = 125;
 pub const TC_N_SWEEP: &[i64] = &[25, 50, 75, 100, 150, 200, 300, 400, 500, 625];
 
-pub fn f11_tensor_contraction(quick: bool) -> Result<FigureOutput> {
+pub fn f11_tensor_contraction(
+    runner: &dyn ExperimentRunner,
+    quick: bool,
+) -> Result<FigureOutput> {
     // prefer the xla (PJRT vendor) backend; fall back to rustblocked
     let lib = if crate::libraries::by_name("xla").is_some() { "xla" } else { "rustblocked" };
     let sweep: Vec<i64> = if quick {
@@ -510,7 +655,7 @@ pub fn f11_tensor_contraction(quick: bool) -> Result<FigureOutput> {
     )?];
     eb.vary.insert("B".into(), Vary { with_rep: true, ..Default::default() });
     eb.vary.insert("C".into(), Vary { with_rep: true, ..Default::default() });
-    let rb = run_local(&eb)?;
+    let rb = runner.run(&eb)?;
     let gb = rb.series(Metric::Gflops, Stat::Median)[0].1;
     // ∀c: 125 gemms of (312×188)·(188×n) — n-dependent efficiency
     let mut ec = base("f11-forall-c", lib);
@@ -522,7 +667,7 @@ pub fn f11_tensor_contraction(quick: bool) -> Result<FigureOutput> {
     )?];
     ec.vary.insert("B".into(), Vary { with_rep: true, ..Default::default() });
     ec.vary.insert("C".into(), Vary { with_rep: true, ..Default::default() });
-    let rc = run_local(&ec)?;
+    let rc = runner.run(&ec)?;
     let sc = rc.series(Metric::Gflops, Stat::Median);
     let mut rows = vec!["n,forall_b_gflops,forall_c_gflops".to_string()];
     let sb: Vec<(i64, f64)> = sweep.iter().map(|&n| (n, gb)).collect();
@@ -561,7 +706,7 @@ pub fn f11_tensor_contraction(quick: bool) -> Result<FigureOutput> {
 // F12 — Fig. 12: library selection for the Sylvester equation (Exp 12)
 // =====================================================================
 
-pub fn f12_sylvester(quick: bool) -> Result<FigureOutput> {
+pub fn f12_sylvester(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let (hi, step) = if quick { (200i64, 50i64) } else { (600, 50) };
     let libs: &[(&str, &str)] = &[
         ("rustref", "LAPACK-analog (unblocked; also the paper's MKL)"),
@@ -591,7 +736,7 @@ pub fn f12_sylvester(quick: bool) -> Result<FigureOutput> {
         exp.datagen.insert("B".into(), DataGen::Tri(Expr::sym("n"), 'U'));
         exps.push(exp);
     }
-    let reports = crate::engine::Engine::with_defaults().run_batch(&exps)?;
+    let reports = runner.run_batch(&exps)?;
     for ((_, label), report) in libs.iter().zip(&reports) {
         let s = report.series(Metric::Gflops, Stat::Median);
         if xs.is_empty() {
@@ -624,7 +769,7 @@ pub fn f12_sylvester(quick: bool) -> Result<FigureOutput> {
 // F13 — Fig. 13: multi-threading paradigms for a sequence of LUs
 // =====================================================================
 
-pub fn f13_lu_threading(quick: bool) -> Result<FigureOutput> {
+pub fn f13_lu_threading(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let n: i64 = if quick { 128 } else { 320 };
     let counts: Vec<usize> = (1..=16).collect();
     let ns = n.to_string();
@@ -637,7 +782,7 @@ pub fn f13_lu_threading(quick: bool) -> Result<FigureOutput> {
     exp.nreps = if quick { 4 } else { 6 };
     exp.calls = vec![call("dgetrf", &[&ns, &ns, "$A", &ns])?];
     exp.vary.insert("A".into(), Vary { with_rep: true, ..Default::default() });
-    let report = run_local(&exp)?;
+    let report = runner.run(&exp)?;
     let serial = report.series(Metric::TimeS, Stat::Median)[0].1;
     let task_flops = report.points[0].records[0].flops;
     let pf = crate::libraries::by_name("rustblocked").unwrap().parallel_fraction("dgetrf");
@@ -692,7 +837,7 @@ pub fn f13_lu_threading(quick: bool) -> Result<FigureOutput> {
 // F14 — Fig. 14: GWAS generalized least squares (Experiments 15+16)
 // =====================================================================
 
-pub fn f14_gwas(quick: bool) -> Result<FigureOutput> {
+pub fn f14_gwas(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
     let n: i64 = if quick { 150 } else { 500 };
     let p: i64 = 4;
     let ms: Vec<usize> = if quick { vec![2, 4, 8] } else { vec![2, 4, 8, 16, 32] };
@@ -726,7 +871,7 @@ pub fn f14_gwas(quick: bool) -> Result<FigureOutput> {
         // would shrink it towards zero over the m iterations (‖M⁻¹‖≪1)
         exp.vary
             .insert("V".into(), Vary { with_sumrange: true, with_rep: true, pad_elems: 0 });
-        let rn = run_local(&exp)?;
+        let rn = runner.run(&exp)?;
         let tn = rn.series(Metric::TimeS, Stat::Median)[0].1;
         naive_pts.push((m as i64, tn));
         if m == *ms.last().unwrap() {
@@ -743,7 +888,7 @@ pub fn f14_gwas(quick: bool) -> Result<FigureOutput> {
         ];
         opt.datagen.insert("M".into(), DataGen::Spd(Expr::parse(&ns).unwrap()));
         opt.vary.insert("M".into(), Vary { with_rep: true, ..Default::default() });
-        let ro = run_local(&opt)?;
+        let ro = runner.run(&opt)?;
         let to = ro.series(Metric::TimeS, Stat::Median)[0].1;
         opt_pts.push((m as i64, to));
         rows.push(format!("{m},{tn:.5},{to:.5},{:.1}", tn / to));
@@ -774,8 +919,12 @@ pub fn f14_gwas(quick: bool) -> Result<FigureOutput> {
 
 // =====================================================================
 
+/// A figure builder: assembles one figure's output through the given
+/// runner.
+pub type FigureBuilder = fn(&dyn ExperimentRunner, bool) -> Result<FigureOutput>;
+
 /// All figure builders in paper order.
-pub fn all_builders() -> Vec<(&'static str, fn(bool) -> Result<FigureOutput>)> {
+pub fn all_builders() -> Vec<(&'static str, FigureBuilder)> {
     vec![
         ("T1", t1_dgemm_metrics),
         ("F1", f1_stats),
@@ -792,13 +941,69 @@ pub fn all_builders() -> Vec<(&'static str, fn(bool) -> Result<FigureOutput>)> {
     ]
 }
 
-/// Run one figure by id.
+/// Run one figure by id, executing immediately (the standalone path).
 pub fn run_figure(id: &str, quick: bool) -> Result<FigureOutput> {
     let builder = all_builders()
         .into_iter()
         .find(|(fid, _)| fid.eq_ignore_ascii_case(id))
         .ok_or_else(|| anyhow!("unknown figure id '{id}'"))?;
-    (builder.1)(quick).with_context(|| format!("figure {id}"))
+    (builder.1)(&LocalRunner, quick).with_context(|| format!("figure {id}"))
+}
+
+/// The result of one figure campaign: the completed outputs, the one
+/// batch's statistics, and any per-figure failures from the replay
+/// pass (the measurements those figures consumed are not lost — with a
+/// cache configured they replay for free on the next attempt).
+pub struct CampaignOutcome {
+    /// Completed figure outputs, in request order (failed ones absent).
+    pub outputs: Vec<FigureOutput>,
+    /// Statistics of the campaign's single engine batch.
+    pub stats: BatchStats,
+    /// Figures whose replay pass failed: (figure id, error).
+    pub failures: Vec<(String, anyhow::Error)>,
+}
+
+/// Run a whole figure campaign through **one** engine batch: plan every
+/// requested builder, measure all collected experiments via a single
+/// [`crate::engine::Engine::run_batch_stats`] (campaign-level sharding
+/// and cache probing), then replay the builders against the measured
+/// reports. Errors before measurement (unknown id, plan-pass or batch
+/// failure) abort the whole campaign; a failure while assembling one
+/// figure's output does **not** discard the other figures — it is
+/// reported in [`CampaignOutcome::failures`] instead.
+pub fn run_figures_campaign(ids: &[String], quick: bool) -> Result<CampaignOutcome> {
+    let registry = all_builders();
+    let mut builders: Vec<(&'static str, FigureBuilder)> = Vec::new();
+    for id in ids {
+        let found = registry
+            .iter()
+            .find(|(fid, _)| fid.eq_ignore_ascii_case(id))
+            .ok_or_else(|| anyhow!("unknown figure id '{id}'"))?;
+        builders.push(*found);
+    }
+    // pass 1: collect every builder's experiments without measuring
+    let plan = PlanRunner::default();
+    for (id, builder) in &builders {
+        builder(&plan, quick).with_context(|| format!("planning figure {id}"))?;
+    }
+    let exps = plan.into_experiments();
+    // the campaign's single batch submission
+    let (reports, stats) =
+        crate::engine::Engine::with_defaults().run_batch_stats(&exps)?;
+    // pass 2: assemble outputs from the measured reports
+    let replay = ReplayRunner::new(&exps, reports);
+    let mut outcome = CampaignOutcome {
+        outputs: Vec::with_capacity(builders.len()),
+        stats,
+        failures: Vec::new(),
+    };
+    for (id, builder) in &builders {
+        match builder(&replay, quick).with_context(|| format!("figure {id}")) {
+            Ok(out) => outcome.outputs.push(out),
+            Err(e) => outcome.failures.push((id.to_string(), e)),
+        }
+    }
+    Ok(outcome)
 }
 
 /// Entry point shared by the `rust/benches/fig_*.rs` bench binaries
@@ -861,7 +1066,7 @@ mod tests {
 
     #[test]
     fn t1_runs_quick() {
-        let out = t1_dgemm_metrics(true).unwrap();
+        let out = t1_dgemm_metrics(&LocalRunner, true).unwrap();
         assert!(out.rows.iter().any(|r| r.starts_with("Gflops")));
         assert!(out.rows.iter().any(|r| r.starts_with("PAPI_L1_TCM")));
         let gflops: f64 = out
@@ -876,7 +1081,7 @@ mod tests {
 
     #[test]
     fn f1_first_rep_is_outlier_shaped() {
-        let out = f1_stats(true).unwrap();
+        let out = f1_stats(&LocalRunner, true).unwrap();
         // with-first max ≥ without-first max
         let maxrow = out.rows.iter().find(|r| r.starts_with("max,")).unwrap();
         let parts: Vec<f64> =
@@ -886,7 +1091,7 @@ mod tests {
 
     #[test]
     fn f6_has_interior_shape() {
-        let out = f6_blocksize(true).unwrap();
+        let out = f6_blocksize(&LocalRunner, true).unwrap();
         // all rows parse and are positive
         for r in &out.rows[1..] {
             let g: f64 = r.split(',').nth(1).unwrap().parse().unwrap();
@@ -897,5 +1102,41 @@ mod tests {
     #[test]
     fn unknown_figure_id_rejected() {
         assert!(run_figure("F99", true).is_err());
+        assert!(run_figures_campaign(&["F99".into()], true).is_err());
+    }
+
+    #[test]
+    fn plan_runner_collects_without_measuring() {
+        let plan = PlanRunner::default();
+        // T1 through the plan pass finishes instantly and records its
+        // single experiment; the placeholder output is shaped but fake
+        let out = t1_dgemm_metrics(&plan, true).unwrap();
+        assert!(out.rows.iter().any(|r| r.starts_with("Gflops")));
+        let exps = plan.into_experiments();
+        assert_eq!(exps.len(), 1);
+        assert_eq!(exps[0].name, "t1-dgemm-metrics");
+    }
+
+    #[test]
+    fn campaign_matches_standalone_outputs() {
+        let ids: Vec<String> = vec!["T1".into(), "F1".into()];
+        let outcome = run_figures_campaign(&ids, true).unwrap();
+        assert!(outcome.failures.is_empty());
+        let (outs, stats) = (&outcome.outputs, &outcome.stats);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].id, "T1");
+        assert_eq!(outs[1].id, "F1");
+        // every point of both builders went through the one batch
+        assert_eq!(stats.experiments, 2);
+        assert!(stats.total_points() >= 2);
+        assert_eq!(stats.executed, stats.total_points(), "no cache configured");
+        // deterministic columns (simulated counters — wall times are
+        // not comparable across runs) agree with the standalone path
+        let solo = t1_dgemm_metrics(&LocalRunner, true).unwrap();
+        let pick = |out: &FigureOutput, prefix: &str| -> String {
+            out.rows.iter().find(|r| r.starts_with(prefix)).unwrap().clone()
+        };
+        assert_eq!(pick(&outs[0], "PAPI_L1_TCM"), pick(&solo, "PAPI_L1_TCM"));
+        assert_eq!(pick(&outs[0], "PAPI_BR_MSP"), pick(&solo, "PAPI_BR_MSP"));
     }
 }

@@ -40,4 +40,4 @@ pub mod runtime;
 pub mod figures;
 
 pub use coordinator::{Experiment, Report};
-pub use engine::{Engine, EngineConfig, RunStats};
+pub use engine::{BatchStats, Engine, EngineConfig};

@@ -8,6 +8,7 @@
 //!   view <report.json>    metrics/statistics of a stored report
 //!   plot <report.json>    ASCII + SVG plot of a stored report
 //!   figures [ids…]        regenerate the paper's tables/figures
+//!   cache stats|gc|clear  result-cache lifecycle (sizes, LRU eviction)
 //!   sampler               stdin/stdout sampler (the paper's §3.1 tool)
 //!   worker --spool <dir>  batch-queue worker
 //!   kernels               list the kernel signature database
@@ -15,7 +16,8 @@
 //!
 //! `--jobs N` fans experiment points out over N engine worker threads;
 //! `--cache DIR` enables the content-addressed result cache, so re-runs
-//! and overlapping sweeps skip already-measured points.
+//! and overlapping sweeps skip already-measured points; `--trusted-only`
+//! serves hits only from entries measured without contention (jobs ≤ 1).
 
 use anyhow::{anyhow, bail, Context, Result};
 use elaps::coordinator::{io, Metric, Spooler, Stat};
@@ -37,6 +39,9 @@ USAGE:
   elaps plot <report.json> [--metric M] [--stat S] [--svg out.svg]
   elaps figures [T1 F1 F2 …|all] [--full] [--jobs N] [--cache DIR]
                 [--out-dir figures_out]
+  elaps cache stats [--cache DIR]
+  elaps cache gc --max-bytes N[K|M|G] [--cache DIR]
+  elaps cache clear [--cache DIR]
   elaps sampler [--library L] [--machine M]
   elaps worker --spool DIR [--once] [--jobs N] [--recover SECS|0=off]
   elaps kernels
@@ -45,10 +50,13 @@ USAGE:
 metrics: cycles time_s time_ms gflops flops_per_cycle efficiency
 stats:   min max avg med std
 
---jobs N    engine worker threads (default 1; env ELAPS_JOBS). Note:
-            parallel kernels contend for the CPU, so measure final
-            timings (and fill shared caches) with --jobs 1.
---cache DIR content-addressed result cache (env ELAPS_CACHE)
+--jobs N       engine worker threads (default 1; env ELAPS_JOBS). Note:
+               parallel kernels contend for the CPU, so measure final
+               timings (and fill shared caches) with --jobs 1.
+--cache DIR    content-addressed result cache (env ELAPS_CACHE)
+--trusted-only serve cache hits only from entries measured with jobs <= 1
+               (publication-quality timings; env ELAPS_TRUSTED_ONLY=1)
+--max-bytes N  cache gc byte budget; K/M/G suffixes are powers of 1024
 ";
 
 fn main() {
@@ -73,13 +81,17 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(raw[1..].iter().cloned(), &["batch", "once", "full", "help"]);
+    let args = Args::parse(
+        raw[1..].iter().cloned(),
+        &["batch", "once", "full", "help", "trusted-only"],
+    );
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "batch" => cmd_batch(&args),
         "view" => cmd_view(&args),
         "plot" => cmd_plot(&args),
         "figures" => cmd_figures(&args),
+        "cache" => cmd_cache(&args),
         "sampler" => cmd_sampler(&args),
         "worker" => cmd_worker(&args),
         "kernels" => cmd_kernels(),
@@ -116,7 +128,50 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     } else if args.flag("cache") {
         bail!("--cache requires a directory");
     }
+    if args.flag("trusted-only") {
+        cfg.trusted_only = true;
+    }
     Ok(cfg)
+}
+
+/// The `elaps cache {stats,gc,clear}` lifecycle subcommands, operating
+/// on the cache directory from `--cache` / `ELAPS_CACHE`.
+fn cmd_cache(args: &Args) -> Result<()> {
+    let sub = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: elaps cache <stats|gc|clear> [--cache DIR]"))?;
+    let cfg = engine_config(args)?;
+    let dir = cfg
+        .cache_dir
+        .ok_or_else(|| anyhow!("no cache directory: pass --cache DIR or set ELAPS_CACHE"))?;
+    match sub {
+        "stats" => {
+            let st = elaps::engine::gc::cache_stats(&dir)?;
+            println!("cache at {}:", dir.display());
+            print!("{}", st.render());
+        }
+        "gc" => {
+            let budget = match args.opt("max-bytes") {
+                Some(v) => elaps::util::cli::parse_byte_size(v)
+                    .map_err(|e| anyhow!("--max-bytes: {e}"))?,
+                None => bail!("cache gc requires --max-bytes N (K/M/G suffixes allowed)"),
+            };
+            let out = elaps::engine::gc::gc_max_bytes(&dir, budget)?;
+            println!(
+                "gc: deleted {}/{} entries — {} → {} bytes (budget {budget}); \
+                 {} stale tmp file(s) removed",
+                out.deleted, out.scanned, out.bytes_before, out.bytes_after, out.tmp_removed
+            );
+        }
+        "clear" => {
+            let removed = elaps::engine::gc::clear_cache(&dir)?;
+            println!("cleared {removed} entries from {}", dir.display());
+        }
+        other => bail!("unknown cache subcommand '{other}' (expected stats, gc or clear)"),
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -273,8 +328,8 @@ fn cmd_plot(args: &Args) -> Result<()> {
 
 fn cmd_figures(args: &Args) -> Result<()> {
     try_register_xla();
-    // figure builders call run_local internally; route them through the
-    // requested pool/cache via the process-default engine config
+    // figure builders execute through the process-default engine
+    // config; route them through the requested pool/cache
     elaps::engine::set_default_config(engine_config(args)?);
     let quick = !args.flag("full");
     let out_dir = std::path::PathBuf::from(args.opt_or("out-dir", "figures_out"));
@@ -285,20 +340,35 @@ fn cmd_figures(args: &Args) -> Result<()> {
     } else {
         args.positional.clone()
     };
-    for id in &ids {
-        println!("--- running {id} (quick={quick}) ---");
-        let t0 = std::time::Instant::now();
-        let out = elaps::figures::run_figure(id, quick)?;
+    // every builder's experiments go through ONE engine batch, so
+    // campaign-level sharding and the cache probe cover them all
+    println!("--- running {} figure(s) as one campaign (quick={quick}) ---", ids.len());
+    let t0 = std::time::Instant::now();
+    let outcome = elaps::figures::run_figures_campaign(&ids, quick)?;
+    // write every completed figure before reporting any failure, so a
+    // late builder error cannot discard hours of finished output
+    for out in &outcome.outputs {
         out.write_to(&out_dir)?;
         println!(
-            "{}: {} rows, {:.1}s → {}/{}.{{csv,svg,txt}}",
+            "{}: {} rows → {}/{}.{{csv,svg,txt}}",
             out.id,
             out.rows.len(),
-            t0.elapsed().as_secs_f64(),
             out_dir.display(),
             out.id
         );
         println!("    {}", out.notes.replace('\n', "\n    "));
+    }
+    println!("{} ({:.1}s)", outcome.stats.summary_line(), t0.elapsed().as_secs_f64());
+    if !outcome.failures.is_empty() {
+        for (id, e) in &outcome.failures {
+            eprintln!("figure {id} failed: {e:#}");
+        }
+        bail!(
+            "{} of {} figure(s) failed ({} completed and written)",
+            outcome.failures.len(),
+            ids.len(),
+            outcome.outputs.len()
+        );
     }
     Ok(())
 }

@@ -79,6 +79,28 @@ impl Args {
     }
 }
 
+/// Parse a byte-size argument: a non-negative integer with an optional
+/// `K`/`M`/`G` suffix (powers of 1024, case-insensitive), e.g. `4096`,
+/// `64K`, `2M`, `1G`. Strict: empty, negative, fractional or otherwise
+/// malformed input is an error, never a silent default — the callers
+/// (`elaps cache gc --max-bytes`) delete data based on this value.
+pub fn parse_byte_size(s: &str) -> Result<u64, String> {
+    let t = s.trim();
+    let bad = || format!("'{s}' is not a byte size (expected N, NK, NM or NG)");
+    let (digits, mult): (&str, u64) = match t.chars().last() {
+        Some('k') | Some('K') => (&t[..t.len() - 1], 1 << 10),
+        Some('m') | Some('M') => (&t[..t.len() - 1], 1 << 20),
+        Some('g') | Some('G') => (&t[..t.len() - 1], 1 << 30),
+        Some(_) => (t, 1),
+        None => return Err(bad()),
+    };
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(bad());
+    }
+    let v: u64 = digits.parse().map_err(|_| bad())?;
+    v.checked_mul(mult).ok_or_else(|| format!("'{s}' overflows a 64-bit byte count"))
+}
+
 /// Parse a range spec of the form `lo:hi` or `lo:step:hi` (inclusive),
 /// e.g. `50:50:2000` → 50, 100, ..., 2000. Mirrors the paper's
 /// parameter-range notation "n = 50:50:2000".
@@ -151,6 +173,23 @@ mod tests {
         // bare flag: strict parsing reports the missing value
         let missing = Args::parse(sv(&["--jobs", "--cache", "dir"]), &[]);
         assert!(missing.opt_usize_strict("jobs").is_err());
+    }
+
+    #[test]
+    fn byte_sizes() {
+        assert_eq!(parse_byte_size("0"), Ok(0));
+        assert_eq!(parse_byte_size("4096"), Ok(4096));
+        assert_eq!(parse_byte_size("64K"), Ok(64 * 1024));
+        assert_eq!(parse_byte_size("64k"), Ok(64 * 1024));
+        assert_eq!(parse_byte_size("2M"), Ok(2 * 1024 * 1024));
+        assert_eq!(parse_byte_size("1g"), Ok(1024 * 1024 * 1024));
+        assert_eq!(parse_byte_size(" 10K "), Ok(10 * 1024));
+        for bad in ["", "   ", "-5", "-5K", "1.5M", "K", "10KB", "ten", "1e6", "+3"] {
+            assert!(parse_byte_size(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // overflow is an error, not a wrap
+        assert!(parse_byte_size("99999999999999999999").is_err());
+        assert!(parse_byte_size("18446744073709551615G").is_err());
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! End-to-end tests of the `elaps cache {stats,gc,clear}` subcommands
+//! through real process boundaries: exit codes, output, strict
+//! `--max-bytes` parsing, and the fully-cached `elaps batch` re-run.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+fn elaps_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_elaps")
+}
+
+/// Run `elaps` with the given args, the environment scrubbed of engine
+/// variables so each test controls its own cache.
+fn elaps(args: &[&str]) -> Output {
+    Command::new(elaps_bin())
+        .args(args)
+        .env_remove("ELAPS_CACHE")
+        .env_remove("ELAPS_JOBS")
+        .env_remove("ELAPS_TRUSTED_ONLY")
+        .output()
+        .unwrap()
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("elaps_cli_cache_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a small two-point experiment file and return its path.
+fn write_exp(dir: &Path) -> PathBuf {
+    let exp = dir.join("exp.json");
+    std::fs::write(
+        &exp,
+        r#"{"name":"cache-cli","library":"rustblocked","machine":"localhost",
+           "nreps":2,
+           "range":{"sym":"n","values":[16,24]},
+           "calls":[["dgemm","N","N","n","n","n",1,"$A","n","$B","n",0,"$C","n"]]}"#,
+    )
+    .unwrap();
+    exp
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn stats_gc_clear_workflow() {
+    let dir = tmpdir("workflow");
+    let exp = write_exp(&dir);
+    let cache = dir.join("cache");
+    let cache_s = cache.to_str().unwrap();
+    // seed the cache through a run
+    let out = elaps(&[
+        "run",
+        exp.to_str().unwrap(),
+        "--cache",
+        cache_s,
+        "--out",
+        dir.join("r.json").to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // stats reports entries and bytes
+    let out = elaps(&["cache", "stats", "--cache", cache_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("entries:     2"), "{text}");
+    assert!(text.contains("bytes:"), "{text}");
+    assert!(text.contains("trusted:     2"), "{text}");
+    assert!(text.contains("age histogram"), "{text}");
+    // a generous budget deletes nothing
+    let out = elaps(&["cache", "gc", "--max-bytes", "1G", "--cache", cache_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("deleted 0/2"), "{}", stdout(&out));
+    // a zero budget deletes everything, oldest first
+    let out = elaps(&["cache", "gc", "--max-bytes", "0", "--cache", cache_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("deleted 2/2"), "{}", stdout(&out));
+    let out = elaps(&["cache", "stats", "--cache", cache_s]);
+    assert!(stdout(&out).contains("entries:     0"), "{}", stdout(&out));
+    // reseed, then clear
+    let out = elaps(&[
+        "run",
+        exp.to_str().unwrap(),
+        "--cache",
+        cache_s,
+        "--out",
+        dir.join("r2.json").to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let out = elaps(&["cache", "clear", "--cache", cache_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("cleared 2 entries"), "{}", stdout(&out));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_rejects_bad_max_bytes_strictly() {
+    let dir = tmpdir("badbytes");
+    let cache = dir.join("cache");
+    std::fs::create_dir_all(&cache).unwrap();
+    let cache_s = cache.to_str().unwrap();
+    for bad in ["-5", "garbage", "1.5M", "10KB", ""] {
+        let out = elaps(&["cache", "gc", "--max-bytes", bad, "--cache", cache_s]);
+        assert!(!out.status.success(), "--max-bytes {bad:?} must fail");
+        assert!(stderr(&out).contains("max-bytes"), "{}", stderr(&out));
+    }
+    // missing entirely
+    let out = elaps(&["cache", "gc", "--cache", cache_s]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("--max-bytes"), "{}", stderr(&out));
+    // K/M/G suffixes parse
+    for good in ["4096", "64K", "2m", "1G"] {
+        let out = elaps(&["cache", "gc", "--max-bytes", good, "--cache", cache_s]);
+        assert!(out.status.success(), "--max-bytes {good:?}: {}", stderr(&out));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cache_command_requires_a_directory_and_known_subcommand() {
+    // no --cache and no ELAPS_CACHE
+    let out = elaps(&["cache", "stats"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("no cache directory"), "{}", stderr(&out));
+    // unknown subcommand
+    let dir = tmpdir("unknown");
+    let out = elaps(&["cache", "shrink", "--cache", dir.to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown cache subcommand"), "{}", stderr(&out));
+    // missing subcommand
+    let out = elaps(&["cache", "--cache", dir.to_str().unwrap()]);
+    assert!(!out.status.success());
+    // stats on a cache dir that was never created
+    let out = elaps(&["cache", "stats", "--cache", dir.join("nope").to_str().unwrap()]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("no cache directory"), "{}", stderr(&out));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fully_cached_batch_rerun_enqueues_nothing() {
+    let dir = tmpdir("rerun");
+    let exp = write_exp(&dir);
+    let cache = dir.join("cache");
+    let cache_s = cache.to_str().unwrap();
+    let run = || {
+        elaps(&[
+            "batch",
+            exp.to_str().unwrap(),
+            "--jobs",
+            "2",
+            "--cache",
+            cache_s,
+            "--out-dir",
+            dir.join("out").to_str().unwrap(),
+        ])
+    };
+    let out = run();
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("2 executed, 0 cache hit(s)"), "{text}");
+    // the re-run probes the cache before enqueueing: zero jobs, 100%
+    // hits, the experiment counted as fully cached
+    let out = run();
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("0 executed, 2 cache hit(s) (2 scheduled)"), "{text}");
+    assert!(text.contains("1/1 experiment(s) fully cached"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,272 @@
+//! Integration tests for the cache lifecycle subsystem: the versioned
+//! entry envelope (round-trip, legacy compatibility, corruption
+//! tolerance), the stats/gc/clear operations, and gc running
+//! concurrently with a multi-worker batch.
+
+use elaps::coordinator::{Experiment, Metric, PointResult, RangeDef, Stat};
+use elaps::engine::gc::{cache_stats, clear_cache, gc_max_bytes};
+use elaps::engine::{Engine, EngineConfig, ResultCache};
+use elaps::figures::call;
+use elaps::sampler::Record;
+use elaps::util::json::Json;
+use elaps::util::prop::forall;
+use elaps::Report;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("elaps_lifecycle_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A dgemm range experiment (one point per value, `nreps` records).
+fn range_experiment(name: &str, values: Vec<i64>, nreps: usize) -> Experiment {
+    let mut exp = Experiment {
+        name: name.into(),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps,
+        range: Some(RangeDef::new("n", values)),
+        counters: vec!["PAPI_L1_TCM".into()],
+        ..Default::default()
+    };
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+    )
+    .unwrap()];
+    exp
+}
+
+fn synthetic_result(nrecords: usize, seed: u64) -> PointResult {
+    PointResult {
+        range_value: seed as i64 % 97,
+        nthreads: 1,
+        sum_iters: 1,
+        calls_per_iter: 1,
+        records: (0..nrecords)
+            .map(|i| Record {
+                kernel: "dgemm".into(),
+                seconds: 1e-4 * (i + 1) as f64,
+                cycles: 2.6e5 * (i + 1) as f64,
+                counters: vec![seed ^ i as u64],
+                omp_group: None,
+                flops: 1000.0,
+            })
+            .collect(),
+    }
+}
+
+/// Everything deterministic about a report (wall times are not).
+fn assert_structurally_identical(a: &Report, b: &Report) {
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.range_value, pb.range_value);
+        assert_eq!(pa.records.len(), pb.records.len());
+        for (ra, rb) in pa.records.iter().zip(&pb.records) {
+            assert_eq!(ra.kernel, rb.kernel);
+            assert_eq!(ra.counters, rb.counters, "point {}", pa.range_value);
+            assert_eq!(ra.flops, rb.flops);
+        }
+    }
+}
+
+#[test]
+fn prop_envelope_roundtrip_preserves_provenance_and_records() {
+    let dir = tmpdir("prop");
+    let cache_base = ResultCache::open(&dir).unwrap();
+    forall(
+        0xCAFE,
+        24,
+        |r, size| {
+            let nrecords = r.range_usize(1, 4 + size);
+            let jobs = r.range_usize(1, 16);
+            let seed = r.next_u64();
+            (nrecords, jobs, seed)
+        },
+        |&(nrecords, jobs, seed)| {
+            let key = format!("prop{seed:016x}");
+            let cache = ResultCache::open(&dir).unwrap().with_provenance(jobs);
+            let point = synthetic_result(nrecords, seed);
+            cache.store(&key, &point).map_err(|e| e.to_string())?;
+            let env = cache_base
+                .lookup_entry(&key)
+                .ok_or_else(|| "stored entry must parse".to_string())?;
+            if env.jobs != Some(jobs) {
+                return Err(format!("jobs {:?} != {jobs}", env.jobs));
+            }
+            if env.trusted() != (jobs <= 1) {
+                return Err(format!("trust rule broken for jobs={jobs}"));
+            }
+            let hit = cache_base
+                .lookup(&key, nrecords)
+                .ok_or_else(|| "entry must hit with its own count".to_string())?;
+            if hit.records.len() != nrecords {
+                return Err("record count changed in roundtrip".into());
+            }
+            if hit.records[0].counters != point.records[0].counters {
+                return Err("counters changed in roundtrip".into());
+            }
+            // off-by-one expected count must miss, not mis-serve
+            if cache_base.lookup(&key, nrecords + 1).is_some() {
+                return Err("wrong expected count must miss".into());
+            }
+            Ok(())
+        },
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_pre_envelope_entries_still_hit_the_engine() {
+    let dir = tmpdir("legacy");
+    let exp = range_experiment("legacy", vec![16, 24], 2);
+    let engine = Engine::new(EngineConfig::default().with_cache(&dir));
+    let (first, s1) = engine.run_stats(&exp).unwrap();
+    assert_eq!((s1.executed, s1.cache_hits), (2, 0));
+    // strip every entry down to the PR-1 format: the bare result object
+    let mut stripped = 0;
+    for e in std::fs::read_dir(&dir).unwrap().filter_map(|e| e.ok()) {
+        let path = e.path();
+        if path.extension().is_some_and(|x| x == "json") {
+            let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+            let bare = j.get("result").clone();
+            assert!(!bare.is_null(), "entry must carry an envelope");
+            std::fs::write(&path, bare.to_string_pretty()).unwrap();
+            stripped += 1;
+        }
+    }
+    assert_eq!(stripped, 2);
+    // legacy entries still hit…
+    let (second, s2) = engine.run_stats(&exp).unwrap();
+    assert_eq!((s2.executed, s2.cache_hits), (0, 2));
+    assert_structurally_identical(&first, &second);
+    // …and stats classifies them as legacy
+    let st = cache_stats(&dir).unwrap();
+    assert_eq!(st.legacy, 2);
+    assert_eq!(st.unreadable, 0);
+    // but a trusted-only engine re-measures them (provenance unknown)
+    let strict = Engine::new(
+        EngineConfig::default().with_cache(&dir).with_trusted_only(true),
+    );
+    let (_, s3) = strict.run_stats(&exp).unwrap();
+    assert_eq!((s3.executed, s3.cache_hits), (2, 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_entries_are_misses_and_counted_unreadable() {
+    let dir = tmpdir("corrupt");
+    let exp = range_experiment("corrupt", vec![16], 2);
+    let engine = Engine::new(EngineConfig::default().with_cache(&dir));
+    engine.run(&exp).unwrap();
+    // truncate the single entry mid-file
+    let entry = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "json"))
+        .unwrap();
+    let text = std::fs::read_to_string(&entry).unwrap();
+    std::fs::write(&entry, &text[..text.len() / 2]).unwrap();
+    let st = cache_stats(&dir).unwrap();
+    assert_eq!((st.entries, st.unreadable), (1, 1));
+    // the engine treats it as a miss and repairs it by re-measuring
+    let (_, s) = engine.run_stats(&exp).unwrap();
+    assert_eq!((s.executed, s.cache_hits), (1, 0));
+    assert_eq!(cache_stats(&dir).unwrap().unreadable, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_brings_real_cache_under_budget_oldest_first() {
+    let dir = tmpdir("budget");
+    let engine = Engine::new(EngineConfig::default().with_cache(&dir));
+    engine.run(&range_experiment("sweep", vec![16, 20, 24, 28, 32, 36], 1)).unwrap();
+    let st = cache_stats(&dir).unwrap();
+    assert_eq!(st.entries, 6);
+    assert!(st.total_bytes > 0);
+    // budget for roughly half the entries
+    let budget = st.total_bytes / 2;
+    let out = gc_max_bytes(&dir, budget).unwrap();
+    assert!(out.deleted >= 3, "{out:?}");
+    assert!(out.bytes_after <= budget, "{out:?}");
+    let st2 = cache_stats(&dir).unwrap();
+    assert_eq!(st2.entries, 6 - out.deleted);
+    assert_eq!(st2.total_bytes, out.bytes_after);
+    // every survivor still parses
+    assert_eq!(st2.unreadable, 0);
+    // clear empties the rest
+    assert_eq!(clear_cache(&dir).unwrap(), st2.entries);
+    assert_eq!(cache_stats(&dir).unwrap().entries, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gc_racing_a_parallel_batch_is_safe() {
+    let dir = tmpdir("race");
+    std::fs::create_dir_all(&dir).unwrap();
+    let exps = vec![
+        range_experiment("race-a", vec![16, 20, 24, 28], 2),
+        range_experiment("race-b", vec![16, 32, 36], 2),
+        range_experiment("race-c", vec![24, 40], 2),
+    ];
+    // the reference: serial, uncached
+    let serial = Engine::new(EngineConfig::default()).run_batch(&exps).unwrap();
+
+    let stop = AtomicBool::new(false);
+    let (reports, stats) = std::thread::scope(|s| {
+        // an adversarial collector deleting everything it sees, plus a
+        // stats reader, racing the workers' stores
+        s.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                let _ = gc_max_bytes(&dir, 0);
+                let _ = cache_stats(&dir);
+                std::thread::yield_now();
+            }
+        });
+        let engine =
+            Engine::new(EngineConfig::default().with_jobs(4).with_cache(&dir));
+        let result = engine.run_batch_stats(&exps);
+        stop.store(true, Ordering::Relaxed);
+        result
+    })
+    .unwrap();
+
+    // no worker panicked or errored, and the merged output is
+    // bit-identical (in its deterministic parts) to the serial run
+    assert_eq!(reports.len(), 3);
+    for (a, b) in serial.iter().zip(&reports) {
+        assert_structurally_identical(a, b);
+    }
+    assert_eq!(stats.total_points(), 9);
+    // whatever survived the sweeps must be whole entries — the atomic
+    // temp+rename store means a reader can never observe a partial one
+    let st = cache_stats(&dir).unwrap();
+    assert_eq!(st.unreadable, 0, "partially-deleted/written entry observed");
+    // and a quiet follow-up run still works, re-measuring what gc ate
+    let engine = Engine::new(EngineConfig::default().with_cache(&dir));
+    let (again, s2) = engine.run_batch_stats(&exps).unwrap();
+    assert_eq!(s2.total_points(), 9);
+    for (a, b) in serial.iter().zip(&again) {
+        assert_structurally_identical(a, b);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn deterministic_metric_survives_cache_replay() {
+    // counters are simulated and deterministic: a cache round-trip must
+    // reproduce them exactly
+    let dir = tmpdir("replay");
+    let exp = range_experiment("replay", vec![16, 24, 32], 2);
+    let engine = Engine::new(EngineConfig::default().with_jobs(2).with_cache(&dir));
+    let (first, _) = engine.run_stats(&exp).unwrap();
+    let (second, s2) = engine.run_stats(&exp).unwrap();
+    assert_eq!(s2.executed, 0);
+    let a = first.series(Metric::Counter(0), Stat::Median);
+    let b = second.series(Metric::Counter(0), Stat::Median);
+    assert_eq!(a, b);
+    let _ = std::fs::remove_dir_all(&dir);
+}

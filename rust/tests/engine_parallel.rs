@@ -77,8 +77,14 @@ fn cached_rerun_executes_zero_sampler_scripts() {
     let (second, stats2) = engine.run_stats(&exp).unwrap();
     assert_eq!(stats2.executed, 0, "second run must touch zero samplers");
     assert_eq!(stats2.cache_hits, 3);
+    // the probe finds every hit before enqueueing: the experiment
+    // bypasses the worker pool entirely
+    assert_eq!(stats2.scheduled_hits, 3);
+    assert_eq!(stats2.fully_cached, 1);
+    assert_eq!(stats2.experiments, 1);
     assert!(stats2.summary_line().contains("0 executed"));
     assert!(stats2.summary_line().contains("3 cache hit(s)"));
+    assert!(stats2.summary_line().contains("1/1 experiment(s) fully cached"));
 
     // the replayed report matches the stored measurements, times included
     assert_structurally_identical(&first, &second);
@@ -101,6 +107,10 @@ fn overlapping_sweeps_share_cached_points() {
     // fingerprint is content-addressed, so the shared points hit
     let (_, s2) = engine.run_stats(&range_experiment("b", vec![16, 24, 32])).unwrap();
     assert_eq!((s2.executed, s2.cache_hits), (1, 2));
+    // a partially-cached experiment enqueues only its misses
+    assert_eq!(s2.scheduled_hits, 2);
+    assert_eq!(s2.fully_cached, 0);
+    assert_eq!(s2.jobs, 1, "one miss needs exactly one worker");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

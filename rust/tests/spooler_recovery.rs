@@ -1,0 +1,133 @@
+//! Regression tests for the spooler's crashed-worker recovery path
+//! (PR 1's hardening, previously without dedicated coverage): a
+//! crashed worker's claimed job is requeued exactly once, recovery
+//! racing live workers never duplicates or loses jobs, and reports are
+//! only ever published atomically (no partial files visible in done/).
+
+use elaps::coordinator::{Experiment, Spooler};
+use elaps::figures::call;
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("elaps_recover_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_exp(n: i64) -> Experiment {
+    let ns = n.to_string();
+    let mut exp = Experiment {
+        name: format!("rec{n}"),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps: 2,
+        ..Default::default()
+    };
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+    )
+    .unwrap()];
+    exp
+}
+
+/// Count the spool files under a subdirectory, by extension.
+fn count(dir: &std::path::Path, sub: &str, ext: &str) -> usize {
+    std::fs::read_dir(dir.join(sub))
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.path().extension().is_some_and(|x| x == ext))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+#[test]
+fn crashed_claim_is_requeued_exactly_once() {
+    let dir = tmpdir("once");
+    let spool = Spooler::new(&dir).unwrap();
+    let id = spool.submit(&small_exp(16)).unwrap();
+    // simulate a worker that claimed the job and died
+    std::fs::rename(
+        dir.join("queue").join(format!("{id}.json")),
+        dir.join("running").join(format!("{id}.json")),
+    )
+    .unwrap();
+    assert_eq!(spool.queued().unwrap(), 0);
+    // first recovery requeues it…
+    assert_eq!(spool.recover_stale(Duration::ZERO).unwrap(), 1);
+    assert_eq!(spool.queued().unwrap(), 1);
+    assert_eq!(count(&dir, "running", "json"), 0);
+    // …the second finds nothing: exactly once, no duplicate copies
+    assert_eq!(spool.recover_stale(Duration::ZERO).unwrap(), 0);
+    assert_eq!(spool.queued().unwrap(), 1);
+    // the recovered job runs and publishes exactly one report
+    assert_eq!(spool.serve_one().unwrap().as_deref(), Some(id.as_str()));
+    assert!(spool.fetch(&id).unwrap().is_some());
+    assert_eq!(count(&dir, "done", "json"), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn concurrent_recovery_and_drain_neither_lose_nor_duplicate_jobs() {
+    let dir = tmpdir("race");
+    let spool = Spooler::new(&dir).unwrap();
+    let ids: Vec<String> =
+        (0..6).map(|i| spool.submit(&small_exp(12 + 4 * i)).unwrap()).collect();
+    // strand every job in running/, as if a whole pool crashed
+    for id in &ids {
+        std::fs::rename(
+            dir.join("queue").join(format!("{id}.json")),
+            dir.join("running").join(format!("{id}.json")),
+        )
+        .unwrap();
+    }
+    // two recoverers race each other and a pool of workers draining
+    // whatever reappears in the queue
+    let total_recovered = std::thread::scope(|s| {
+        let r1 = s.spawn(|| spool.recover_stale(Duration::ZERO).unwrap());
+        let r2 = s.spawn(|| spool.recover_stale(Duration::ZERO).unwrap());
+        r1.join().unwrap() + r2.join().unwrap()
+    });
+    assert_eq!(total_recovered, 6, "each job requeued exactly once across racers");
+    let served = spool.drain(3).unwrap();
+    assert_eq!(served, 6);
+    for id in &ids {
+        assert!(spool.fetch(id).unwrap().is_some(), "{id}");
+    }
+    // nothing left anywhere, and no half-published reports
+    assert_eq!(spool.queued().unwrap(), 0);
+    assert_eq!(count(&dir, "running", "json"), 0);
+    assert_eq!(count(&dir, "done", "json"), 6);
+    assert_eq!(count(&dir, "done", "tmp"), 0, "publish must be atomic");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn report_is_published_atomically_even_when_job_runs_twice() {
+    // at-least-once semantics: a job recovered while still running is
+    // executed twice; both publishes are whole-file renames, so readers
+    // only ever see one complete report
+    let dir = tmpdir("twice");
+    let spool = Spooler::new(&dir).unwrap();
+    let id = spool.submit(&small_exp(16)).unwrap();
+    // first execution
+    assert_eq!(spool.serve_one().unwrap().as_deref(), Some(id.as_str()));
+    let first = spool.fetch(&id).unwrap().unwrap();
+    // resubmit the same job file into the queue, as recover_stale would
+    // for a worker presumed dead that actually finishes
+    std::fs::write(
+        dir.join("queue").join(format!("{id}.json")),
+        elaps::coordinator::io::experiment_to_json(&small_exp(16)).to_string_pretty(),
+    )
+    .unwrap();
+    assert_eq!(spool.serve_one().unwrap().as_deref(), Some(id.as_str()));
+    let second = spool.fetch(&id).unwrap().unwrap();
+    // last writer wins; both are complete, well-formed reports
+    assert_eq!(first.points.len(), second.points.len());
+    assert_eq!(first.points[0].records.len(), second.points[0].records.len());
+    assert_eq!(count(&dir, "done", "json"), 1);
+    assert_eq!(count(&dir, "done", "tmp"), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
