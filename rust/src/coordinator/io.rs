@@ -278,7 +278,13 @@ pub fn point_result_from_json(pj: &Json) -> PointResult {
 /// Schema version of the engine's result-cache entry envelope
 /// ([`crate::engine::cache`]). Bump on incompatible layout changes;
 /// readers treat unknown schemas as cache misses, never as errors.
-pub const CACHE_ENTRY_SCHEMA: u64 = 1;
+///
+/// History: schema 1 added `{jobs, created_unix}` provenance over the
+/// legacy bare point object; schema 2 added the `warm` flag (whether
+/// the measuring sampler carried simulated cache state from previous
+/// points). Schema-1 entries still parse, as `warm: false` — a cold
+/// measurement is exactly what a schema-1 run produced.
+pub const CACHE_ENTRY_SCHEMA: u64 = 2;
 
 /// A parsed result-cache entry: the stored [`PointResult`] plus the
 /// provenance the storing run recorded. `schema == 0` (with `jobs` and
@@ -293,6 +299,10 @@ pub struct CacheEnvelope {
     pub jobs: Option<usize>,
     /// Unix seconds when the entry was stored; `None` means unknown.
     pub created_unix: Option<u64>,
+    /// Whether the measuring sampler carried simulated cache state from
+    /// previous points (the engine's warm execution mode). Legacy and
+    /// schema-1 entries are cold by construction.
+    pub warm: bool,
     /// The cached measurement.
     pub result: PointResult,
 }
@@ -307,11 +317,17 @@ impl CacheEnvelope {
 }
 
 /// Serialize a result-cache entry as the versioned envelope
-/// `{schema, jobs, created_unix, result}`.
-pub fn cache_envelope_to_json(p: &PointResult, jobs: usize, created_unix: Option<u64>) -> Json {
+/// `{schema, jobs, warm, created_unix, result}`.
+pub fn cache_envelope_to_json(
+    p: &PointResult,
+    jobs: usize,
+    created_unix: Option<u64>,
+    warm: bool,
+) -> Json {
     let mut j = Json::obj();
     j.set("schema", CACHE_ENTRY_SCHEMA)
         .set("jobs", jobs)
+        .set("warm", warm)
         .set("result", point_result_to_json(p));
     if let Some(t) = created_unix {
         j.set("created_unix", t);
@@ -320,9 +336,9 @@ pub fn cache_envelope_to_json(p: &PointResult, jobs: usize, created_unix: Option
 }
 
 /// Parse a result-cache entry. Envelopes with an unknown `schema` are
-/// rejected (`None` — a miss, not an error); a bare point object (the
-/// pre-envelope format) parses as a legacy entry with unknown
-/// provenance.
+/// rejected (`None` — a miss, not an error); schema-1 envelopes parse
+/// as cold (`warm: false`); a bare point object (the pre-envelope
+/// format) parses as a legacy entry with unknown provenance.
 pub fn cache_envelope_from_json(j: &Json) -> Option<CacheEnvelope> {
     if j.get("schema").is_null() {
         // legacy bare entry: require at least a records array so that
@@ -332,11 +348,12 @@ pub fn cache_envelope_from_json(j: &Json) -> Option<CacheEnvelope> {
             schema: 0,
             jobs: None,
             created_unix: None,
+            warm: false,
             result: point_result_from_json(j),
         });
     }
     let schema = j.get("schema").as_u64()?;
-    if schema != CACHE_ENTRY_SCHEMA {
+    if schema != 1 && schema != CACHE_ENTRY_SCHEMA {
         return None;
     }
     // same guard as the legacy branch: a payload without a records
@@ -346,6 +363,8 @@ pub fn cache_envelope_from_json(j: &Json) -> Option<CacheEnvelope> {
         schema,
         jobs: j.get("jobs").as_u64().map(|v| v as usize),
         created_unix: j.get("created_unix").as_u64(),
+        // schema 1 predates warm execution: those entries are cold
+        warm: schema >= 2 && j.get("warm").as_bool().unwrap_or(false),
         result: point_result_from_json(j.get("result")),
     })
 }
@@ -458,32 +477,46 @@ mod tests {
                 omp_group: None,
             }],
         };
-        let j = cache_envelope_to_json(&p, 8, Some(1_700_000_000));
+        let j = cache_envelope_to_json(&p, 8, Some(1_700_000_000), true);
         let env = cache_envelope_from_json(&j).unwrap();
         assert_eq!(env.schema, CACHE_ENTRY_SCHEMA);
         assert_eq!(env.jobs, Some(8));
         assert_eq!(env.created_unix, Some(1_700_000_000));
+        assert!(env.warm);
         assert!(!env.trusted());
         assert_eq!(env.result.records.len(), 1);
         assert_eq!(env.result.records[0].counters, vec![3, 4]);
         // jobs ≤ 1 is trusted
-        let env1 = cache_envelope_from_json(&cache_envelope_to_json(&p, 1, None)).unwrap();
+        let env1 = cache_envelope_from_json(&cache_envelope_to_json(&p, 1, None, false)).unwrap();
         assert!(env1.trusted());
+        assert!(!env1.warm);
+        // a schema-1 envelope (pre-warm) still parses, as cold
+        let mut v1 = cache_envelope_to_json(&p, 1, Some(1_700_000_000), false);
+        v1.set("schema", 1u64);
+        let env_v1 = cache_envelope_from_json(&v1).unwrap();
+        assert_eq!(env_v1.schema, 1);
+        assert_eq!(env_v1.jobs, Some(1));
+        assert!(!env_v1.warm);
+        assert!(env_v1.trusted());
+        // ...even if some (corrupt) writer put a warm flag on it
+        v1.set("warm", true);
+        assert!(!cache_envelope_from_json(&v1).unwrap().warm);
         // legacy bare point: readable, provenance unknown, untrusted
         let legacy = cache_envelope_from_json(&point_result_to_json(&p)).unwrap();
         assert_eq!(legacy.schema, 0);
         assert_eq!(legacy.jobs, None);
+        assert!(!legacy.warm);
         assert!(!legacy.trusted());
         assert_eq!(legacy.result.records.len(), 1);
         // unknown schema and non-entry JSON are rejected, not errors
-        let mut wrong = cache_envelope_to_json(&p, 1, None);
+        let mut wrong = cache_envelope_to_json(&p, 1, None, false);
         wrong.set("schema", CACHE_ENTRY_SCHEMA + 1);
         assert!(cache_envelope_from_json(&wrong).is_none());
         assert!(cache_envelope_from_json(&Json::parse("{}").unwrap()).is_none());
         assert!(cache_envelope_from_json(&Json::parse("[1,2]").unwrap()).is_none());
         // a right-schema envelope missing its result payload is junk
         // too, never a trusted empty measurement
-        let hollow = Json::parse(r#"{"schema":1,"jobs":1}"#).unwrap();
+        let hollow = Json::parse(r#"{"schema":2,"jobs":1}"#).unwrap();
         assert!(cache_envelope_from_json(&hollow).is_none());
         let hollow2 = Json::parse(r#"{"schema":1,"jobs":1,"result":{}}"#).unwrap();
         assert!(cache_envelope_from_json(&hollow2).is_none());

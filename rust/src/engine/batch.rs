@@ -1,19 +1,33 @@
 //! Batch scheduling: the core fan-out/merge loop shared by single-
 //! experiment runs and whole-campaign batches. Every experiment is
 //! validated and unrolled up front; the result cache is probed *before*
-//! anything is enqueued, so fully-cached experiments bypass the worker
+//! anything is enqueued (the probe itself fans out across the worker
+//! pool — reading and parsing thousands of entries serially was the
+//! NFS-cache bottleneck), so fully-cached experiments bypass the worker
 //! pool entirely and partially-cached ones enqueue only their misses;
 //! the remaining points of all experiments go into one [`WorkQueue`];
 //! a pool of OS threads drains it; results are merged back into
 //! per-experiment [`Report`]s strictly in point order, so parallel
 //! output is structurally identical to serial execution.
+//!
+//! **Warm mode** ([`EngineConfig::warm`]) replaces the dynamic FIFO
+//! with deterministic contiguous-block sharding ([`shard_contiguous`]):
+//! worker `w` owns block `w` of the full point sequence and executes it
+//! in order on one long-lived sampler that carries simulated cache
+//! state between points. Because a warm measurement depends on the
+//! whole executed prefix of its shard, warm cache keys chain on the
+//! predecessor's key and a shard replays from the cache only
+//! all-or-nothing: serving a mid-chain hit without executing its
+//! predecessors would leave the carried sampler state wrong for the
+//! next miss.
 
 use super::cache::ResultCache;
-use super::queue::WorkQueue;
-use super::{execute_point, BatchStats, EngineConfig};
+use super::queue::{shard_contiguous, WorkQueue};
+use super::{execute_point_on, execute_point_with, BatchStats, EngineConfig};
 use crate::coordinator::experiment::{Experiment, UnrolledPoint};
 use crate::coordinator::report::{PointResult, Report};
 use crate::perfmodel::MachineModel;
+use crate::sampler::Sampler;
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -30,6 +44,118 @@ struct Plan<'a> {
 struct Item {
     exp_i: usize,
     pt_i: usize,
+}
+
+/// Registered backends (e.g. xla) are one shared instance whose
+/// `set_threads` would race across workers — points on such libraries
+/// are serialized so their measurements stay identical to serial
+/// execution. The three built-in rust libraries are constructed fresh
+/// per `by_name` call (cold mode) or owned by one worker (warm mode)
+/// and need no lock.
+static SHARED_BACKEND_LOCK: Mutex<()> = Mutex::new(());
+
+/// Per-point result slots, one per (experiment, point): the probe and
+/// the workers fill them by index, which makes the merge deterministic
+/// regardless of completion order.
+type Slots = Vec<Vec<Mutex<Option<PointResult>>>>;
+
+fn make_slots(plans: &[Plan]) -> Slots {
+    plans
+        .iter()
+        .map(|p| (0..p.points.len()).map(|_| Mutex::new(None)).collect())
+        .collect()
+}
+
+/// Deterministic in-order merge of the filled slots into one report per
+/// experiment.
+fn merge_reports(plans: &[Plan], slots: &Slots) -> Result<Vec<Report>> {
+    let mut reports = Vec::with_capacity(plans.len());
+    for (plan, row) in plans.iter().zip(slots) {
+        let mut results = Vec::with_capacity(row.len());
+        for (pt_i, slot) in row.iter().enumerate() {
+            let r = slot.lock().unwrap().take().ok_or_else(|| {
+                anyhow!("engine produced no result for point {pt_i} of '{}'", plan.exp.name)
+            })?;
+            results.push(r);
+        }
+        reports.push(Report::assemble(plan.exp.clone(), plan.machine.clone(), results)?);
+    }
+    Ok(reports)
+}
+
+/// Keep only the failure at the lowest (experiment, point) index, so a
+/// parallel run reports the same error a serial run would hit first.
+fn record_first_err(
+    first_err: &Mutex<Option<(usize, usize, anyhow::Error)>>,
+    exp_i: usize,
+    pt_i: usize,
+    e: anyhow::Error,
+) {
+    let mut guard = first_err.lock().unwrap();
+    let replace = match &*guard {
+        None => true,
+        Some((ei, pi, _)) => (exp_i, pt_i) < (*ei, *pi),
+    };
+    if replace {
+        *guard = Some((exp_i, pt_i, e));
+    }
+}
+
+/// Probe the cache for every keyed point, fanning the lookups out over
+/// up to `jobs` threads. Lookups are independent reads, so the combined
+/// result is identical to the serial probe — only the wall time
+/// changes (the ROADMAP's "serial on the caller thread" bottleneck for
+/// 10k-point campaigns on NFS cache dirs).
+fn probe_cache(
+    cache: &Option<ResultCache>,
+    plans: &[Plan],
+    keys: &[Vec<Option<String>>],
+    jobs: usize,
+) -> Vec<Vec<Option<PointResult>>> {
+    let mut out: Vec<Vec<Option<PointResult>>> =
+        plans.iter().map(|p| (0..p.points.len()).map(|_| None).collect()).collect();
+    let Some(cache) = cache else { return out };
+    let tasks: Vec<Item> = keys
+        .iter()
+        .enumerate()
+        .flat_map(|(exp_i, row)| {
+            row.iter()
+                .enumerate()
+                .filter(|(_, k)| k.is_some())
+                .map(move |(pt_i, _)| Item { exp_i, pt_i })
+        })
+        .collect();
+    if tasks.is_empty() {
+        return out;
+    }
+    let lookup = |it: &Item| {
+        let plan = &plans[it.exp_i];
+        let key = keys[it.exp_i][it.pt_i].as_ref().unwrap();
+        cache.lookup(key, plan.points[it.pt_i].expected_records(plan.exp.nreps))
+    };
+    let jobs = jobs.max(1).min(tasks.len());
+    if jobs <= 1 {
+        for it in &tasks {
+            out[it.exp_i][it.pt_i] = lookup(it);
+        }
+        return out;
+    }
+    let found: Vec<Mutex<Option<PointResult>>> =
+        (0..tasks.len()).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let Some(it) = tasks.get(i) else { break };
+                *found[i].lock().unwrap() = lookup(it);
+            });
+        }
+    });
+    for (it, slot) in tasks.iter().zip(found) {
+        out[it.exp_i][it.pt_i] = slot.into_inner().unwrap();
+    }
+    out
 }
 
 /// Run a batch of experiments through the worker pool; returns one
@@ -55,14 +181,11 @@ pub fn run_batch_stats(
         Some(dir) => Some(ResultCache::open(dir)?.with_trusted_only(cfg.trusted_only)),
         None => None,
     };
+    if cfg.warm {
+        return run_batch_warm(cfg, &plans, cache);
+    }
 
-    // One slot per point: the probe and the workers fill them by index,
-    // which makes the merge deterministic regardless of completion
-    // order.
-    let slots: Vec<Vec<Mutex<Option<PointResult>>>> = plans
-        .iter()
-        .map(|p| (0..p.points.len()).map(|_| Mutex::new(None)).collect())
-        .collect();
+    let slots = make_slots(&plans);
     // Fingerprints, computed once and shared by the probe and the
     // workers' store path.
     let keys: Vec<Vec<Option<String>>> = plans
@@ -72,11 +195,12 @@ pub fn run_batch_stats(
                 .iter()
                 .map(|pt| {
                     cache.as_ref().map(|_| {
-                        ResultCache::fingerprint(
+                        ResultCache::fingerprint_with(
                             &p.exp.library,
                             p.machine.name,
                             p.exp.nreps,
                             pt,
+                            cfg.seed,
                         )
                     })
                 })
@@ -84,18 +208,16 @@ pub fn run_batch_stats(
         })
         .collect();
 
-    // -- phase 2: probe the cache, then shard only the misses
+    // -- phase 2: probe the cache (lookups fan out across the pool),
+    // account serially in point order, then shard only the misses
+    let mut probe = probe_cache(&cache, &plans, &keys, cfg.jobs);
     let mut scheduled_hits = 0usize;
     let mut fully_cached = 0usize;
     let mut items: Vec<Item> = Vec::new();
     for (exp_i, plan) in plans.iter().enumerate() {
         let mut misses = 0usize;
-        for (pt_i, point) in plan.points.iter().enumerate() {
-            let hit = match (&cache, &keys[exp_i][pt_i]) {
-                (Some(c), Some(k)) => c.lookup(k, point.expected_records(plan.exp.nreps)),
-                _ => None,
-            };
-            match hit {
+        for pt_i in 0..plan.points.len() {
+            match probe[exp_i][pt_i].take() {
                 Some(r) => {
                     *slots[exp_i][pt_i].lock().unwrap() = Some(r);
                     scheduled_hits += 1;
@@ -120,8 +242,6 @@ pub fn run_batch_stats(
     let executed = AtomicUsize::new(0);
     let worker_hits = AtomicUsize::new(0);
     let failed = AtomicBool::new(false);
-    // Keep the failure at the lowest (experiment, point) index so a
-    // parallel run reports the same error a serial run would hit first.
     let first_err: Mutex<Option<(usize, usize, anyhow::Error)>> = Mutex::new(None);
 
     let process = |item: Item| -> Result<()> {
@@ -131,17 +251,10 @@ pub fn run_batch_stats(
         let run = || -> Result<PointResult> {
             let library = crate::libraries::by_name(&plan.exp.library)
                 .ok_or_else(|| anyhow!("unknown library '{}'", plan.exp.library))?;
-            // The three built-in rust libraries are constructed fresh
-            // per by_name call, so each point owns its thread-count
-            // state. Registered backends (e.g. xla) are one shared
-            // instance whose set_threads would race across workers —
-            // serialize those points so their measurements stay
-            // identical to serial execution.
-            static SHARED_BACKEND_LOCK: Mutex<()> = Mutex::new(());
             let shared = !crate::libraries::RUST_LIBRARIES
                 .contains(&plan.exp.library.as_str());
             let _guard = shared.then(|| SHARED_BACKEND_LOCK.lock().unwrap());
-            let r = execute_point(&library, &plan.machine, plan.exp, point)?;
+            let r = execute_point_with(&library, &plan.machine, plan.exp, point, cfg.seed)?;
             executed.fetch_add(1, Ordering::Relaxed);
             Ok(r)
         };
@@ -173,14 +286,7 @@ pub fn run_batch_stats(
             }
             if let Err(e) = process(item) {
                 failed.store(true, Ordering::Relaxed);
-                let mut guard = first_err.lock().unwrap();
-                let replace = match &*guard {
-                    None => true,
-                    Some((ei, pi, _)) => (item.exp_i, item.pt_i) < (*ei, *pi),
-                };
-                if replace {
-                    *guard = Some((item.exp_i, item.pt_i, e));
-                }
+                record_first_err(&first_err, item.exp_i, item.pt_i, e);
             }
         }
     };
@@ -203,17 +309,7 @@ pub fn run_batch_stats(
     }
 
     // -- phase 3: deterministic in-order merge
-    let mut reports = Vec::with_capacity(plans.len());
-    for (plan, row) in plans.iter().zip(&slots) {
-        let mut results = Vec::with_capacity(row.len());
-        for (pt_i, slot) in row.iter().enumerate() {
-            let r = slot.lock().unwrap().take().ok_or_else(|| {
-                anyhow!("engine produced no result for point {pt_i} of '{}'", plan.exp.name)
-            })?;
-            results.push(r);
-        }
-        reports.push(Report::assemble(plan.exp.clone(), plan.machine.clone(), results)?);
-    }
+    let reports = merge_reports(&plans, &slots)?;
     let stats = BatchStats {
         experiments: plans.len(),
         fully_cached,
@@ -221,6 +317,187 @@ pub fn run_batch_stats(
         cache_hits: scheduled_hits + worker_hits.load(Ordering::Relaxed),
         scheduled_hits,
         jobs,
+        warm: false,
+    };
+    Ok((reports, stats))
+}
+
+/// The warm-mode scheduler: deterministic contiguous-block sharding
+/// with one carried sampler per worker.
+fn run_batch_warm(
+    cfg: &EngineConfig,
+    plans: &[Plan],
+    cache: Option<ResultCache>,
+) -> Result<(Vec<Report>, BatchStats)> {
+    // All points in (experiment, point) order — the strict serial
+    // back-to-back sequence. The shard layout is a pure function of
+    // (experiments, jobs): unlike cold mode it must NOT depend on cache
+    // contents, or the determinism contract would break.
+    let items: Vec<Item> = plans
+        .iter()
+        .enumerate()
+        .flat_map(|(exp_i, p)| (0..p.points.len()).map(move |pt_i| Item { exp_i, pt_i }))
+        .collect();
+    let total = items.len();
+    let jobs = cfg.jobs.max(1).min(total.max(1));
+    let shards = shard_contiguous(items, jobs);
+    let cache = cache.map(|c| c.with_provenance(jobs).with_warm(true));
+
+    // Chained warm keys: each point's key hashes its own content plus
+    // its predecessor's key within the shard, so a warm entry can only
+    // hit when the whole executed prefix matches. The chain resets
+    // exactly where execution starts a fresh sampler — at a
+    // (library, machine) switch — so keys encode precisely the state
+    // the sampler actually carries, and an experiment's warm entries
+    // are reusable across batch compositions that share the stretch.
+    let keys: Vec<Vec<Option<String>>> = shards
+        .iter()
+        .map(|shard| {
+            let mut prev: Option<String> = None;
+            let mut prev_chain: Option<(&str, &str)> = None;
+            shard
+                .iter()
+                .map(|it| {
+                    cache.as_ref().map(|_| {
+                        let plan = &plans[it.exp_i];
+                        let chain = (plan.exp.library.as_str(), plan.machine.name);
+                        if prev_chain != Some(chain) {
+                            prev = None;
+                            prev_chain = Some(chain);
+                        }
+                        let k = ResultCache::warm_fingerprint(
+                            &plan.exp.library,
+                            plan.machine.name,
+                            plan.exp.nreps,
+                            &plan.points[it.pt_i],
+                            cfg.seed,
+                            prev.as_deref(),
+                        );
+                        prev = Some(k.clone());
+                        k
+                    })
+                })
+                .collect()
+        })
+        .collect();
+
+    let slots = make_slots(plans);
+    // per-experiment probe-hit counts, for the fully-cached accounting
+    let probe_hits: Vec<AtomicUsize> = plans.iter().map(|_| AtomicUsize::new(0)).collect();
+    let executed = AtomicUsize::new(0);
+    let failed = AtomicBool::new(false);
+    let first_err: Mutex<Option<(usize, usize, anyhow::Error)>> = Mutex::new(None);
+
+    let run_shard = |shard_i: usize| {
+        let shard = &shards[shard_i];
+        // probe: a warm shard replays from the cache all-or-nothing. A
+        // mid-chain hit served without executing its predecessors would
+        // leave the carried sampler state wrong for the next miss, so a
+        // single miss re-executes the whole shard.
+        if let Some(c) = &cache {
+            let hits: Vec<Option<PointResult>> = shard
+                .iter()
+                .enumerate()
+                .map(|(i, it)| {
+                    let plan = &plans[it.exp_i];
+                    let key = keys[shard_i][i].as_ref().unwrap();
+                    c.lookup(key, plan.points[it.pt_i].expected_records(plan.exp.nreps))
+                })
+                .collect();
+            if hits.iter().all(Option::is_some) {
+                for (it, hit) in shard.iter().zip(hits) {
+                    probe_hits[it.exp_i].fetch_add(1, Ordering::Relaxed);
+                    *slots[it.exp_i][it.pt_i].lock().unwrap() = hit;
+                }
+                return;
+            }
+        }
+        // execute the whole shard in order, one carried sampler per
+        // (library, machine) stretch
+        let mut current: Option<(String, &'static str, Sampler)> = None;
+        for (i, it) in shard.iter().enumerate() {
+            if failed.load(Ordering::Relaxed) {
+                return;
+            }
+            let plan = &plans[it.exp_i];
+            let point = &plan.points[it.pt_i];
+            let mut run = || -> Result<PointResult> {
+                let same = current
+                    .as_ref()
+                    .is_some_and(|(l, m, _)| *l == plan.exp.library && *m == plan.machine.name);
+                if same {
+                    // carry simulated cache state into the next point
+                    current.as_mut().unwrap().2.reset_warm();
+                } else {
+                    // a library/machine switch starts a fresh chain
+                    let library = crate::libraries::by_name(&plan.exp.library)
+                        .ok_or_else(|| anyhow!("unknown library '{}'", plan.exp.library))?;
+                    let mut s = Sampler::new(library, plan.machine.clone());
+                    if let Some(seed) = cfg.seed {
+                        s = s.deterministic(seed);
+                    }
+                    current = Some((plan.exp.library.clone(), plan.machine.name, s));
+                }
+                let sampler = &mut current.as_mut().unwrap().2;
+                let shared = !crate::libraries::RUST_LIBRARIES
+                    .contains(&plan.exp.library.as_str());
+                let _guard = shared.then(|| SHARED_BACKEND_LOCK.lock().unwrap());
+                let r = execute_point_on(sampler, plan.exp, point)?;
+                executed.fetch_add(1, Ordering::Relaxed);
+                Ok(r)
+            };
+            match run() {
+                Ok(r) => {
+                    if let (Some(c), Some(key)) = (&cache, keys[shard_i][i].as_ref()) {
+                        if let Err(e) = c.store(key, &r) {
+                            eprintln!(
+                                "warning: result-cache write failed ({e:#}); continuing uncached"
+                            );
+                        }
+                    }
+                    *slots[it.exp_i][it.pt_i].lock().unwrap() = Some(r);
+                }
+                Err(e) => {
+                    failed.store(true, Ordering::Relaxed);
+                    record_first_err(&first_err, it.exp_i, it.pt_i, e);
+                    return;
+                }
+            }
+        }
+    };
+    if shards.len() <= 1 {
+        if !shards.is_empty() {
+            run_shard(0);
+        }
+    } else {
+        std::thread::scope(|s| {
+            for i in 0..shards.len() {
+                let f = &run_shard;
+                s.spawn(move || f(i));
+            }
+        });
+    }
+
+    if let Some((_, _, e)) = first_err.lock().unwrap().take() {
+        return Err(e);
+    }
+
+    let reports = merge_reports(plans, &slots)?;
+    let scheduled_hits: usize =
+        probe_hits.iter().map(|h| h.load(Ordering::Relaxed)).sum();
+    let fully_cached = plans
+        .iter()
+        .zip(&probe_hits)
+        .filter(|(p, h)| h.load(Ordering::Relaxed) == p.points.len())
+        .count();
+    let stats = BatchStats {
+        experiments: plans.len(),
+        fully_cached,
+        executed: executed.load(Ordering::Relaxed),
+        cache_hits: scheduled_hits,
+        scheduled_hits,
+        jobs,
+        warm: true,
     };
     Ok((reports, stats))
 }
@@ -251,6 +528,7 @@ mod tests {
         assert_eq!(stats.experiments, 3);
         assert_eq!(stats.fully_cached, 0);
         assert_eq!(stats.jobs, 3);
+        assert!(!stats.warm);
     }
 
     #[test]
@@ -319,6 +597,56 @@ mod tests {
         let (_, s4) = run_batch_stats(&serial, &exps).unwrap();
         assert_eq!((s4.executed, s4.cache_hits), (0, 3));
         assert_eq!(s4.fully_cached, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_batch_counts_and_marks_its_stats() {
+        let mut exps = Vec::new();
+        for n in [16i64, 24, 32, 40] {
+            let mut e = dgemm_experiment(n);
+            e.nreps = 2;
+            exps.push(e);
+        }
+        let cfg = EngineConfig::default().with_jobs(2).with_warm(true).with_seed(1);
+        let (reports, stats) = run_batch_stats(&cfg, &exps).unwrap();
+        assert_eq!(reports.len(), 4);
+        assert_eq!(stats.executed, 4);
+        assert_eq!(stats.cache_hits, 0);
+        assert_eq!(stats.jobs, 2);
+        assert!(stats.warm);
+        assert!(stats.summary_line().contains("[warm]"));
+    }
+
+    #[test]
+    fn warm_shard_replays_from_cache_all_or_nothing() {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_batch_warmcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut exps = Vec::new();
+        for n in [16i64, 24, 32] {
+            exps.push(dgemm_experiment(n));
+        }
+        let cfg = EngineConfig::default().with_warm(true).with_seed(3).with_cache(&dir);
+        let (first, s1) = run_batch_stats(&cfg, &exps).unwrap();
+        assert_eq!((s1.executed, s1.cache_hits), (3, 0));
+        // full replay: the single jobs=1 shard is entirely cached
+        let (second, s2) = run_batch_stats(&cfg, &exps).unwrap();
+        assert_eq!((s2.executed, s2.cache_hits), (0, 3));
+        assert_eq!(s2.fully_cached, 3);
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(
+                crate::coordinator::io::report_to_json(a).to_string_pretty(),
+                crate::coordinator::io::report_to_json(b).to_string_pretty(),
+                "seeded warm replay must be byte-identical"
+            );
+        }
+        // breaking the chain anywhere re-executes the whole shard: a
+        // different experiment list means different chained keys
+        let extended: Vec<Experiment> =
+            [24i64, 16, 32].iter().map(|&n| dgemm_experiment(n)).collect();
+        let (_, s3) = run_batch_stats(&cfg, &extended).unwrap();
+        assert_eq!((s3.executed, s3.cache_hits), (3, 0), "reordered prefix must miss");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -38,6 +38,13 @@ pub struct ResultCache {
     /// Provenance recorded on every `store`: the worker-pool width of
     /// the run producing the entries.
     store_jobs: usize,
+    /// Whether this handle operates in warm-execution mode: entries are
+    /// stored with `warm` provenance, and `lookup` serves only entries
+    /// whose flag matches — warm and cold measurements never
+    /// cross-contaminate (their keys are already disjoint, see
+    /// [`ResultCache::warm_fingerprint`]; the flag check is the
+    /// belt-and-braces for hand-edited caches).
+    warm: bool,
     /// When set, `lookup` serves only entries proven to be measured
     /// without worker contention (`jobs ≤ 1`).
     trusted_only: bool,
@@ -64,12 +71,20 @@ impl ResultCache {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
-        Ok(ResultCache { dir, store_jobs: 1, trusted_only: false })
+        Ok(ResultCache { dir, store_jobs: 1, warm: false, trusted_only: false })
     }
 
     /// Record `jobs` as the provenance of every entry this cache stores.
     pub fn with_provenance(mut self, jobs: usize) -> ResultCache {
         self.store_jobs = jobs;
+        self
+    }
+
+    /// Put this handle in warm mode: stores record `warm: true`
+    /// provenance, and lookups serve only warm entries (a cold handle
+    /// symmetrically serves only cold ones).
+    pub fn with_warm(mut self, warm: bool) -> ResultCache {
+        self.warm = warm;
         self
     }
 
@@ -85,6 +100,36 @@ impl ResultCache {
         &self.dir
     }
 
+    /// The canonical description text the fingerprints hash.
+    fn fingerprint_desc(
+        library: &str,
+        machine: &str,
+        nreps: usize,
+        point: &UnrolledPoint,
+        seed: Option<u64>,
+    ) -> String {
+        let mut desc = format!(
+            "library={library}\nmachine={machine}\nnreps={nreps}\n\
+             range_value={}\nnthreads={}\nsum_iters={}\ncalls_per_iter={}\nscript:\n{}",
+            point.range_value, point.nthreads, point.sum_iters, point.calls_per_iter,
+            point.script
+        );
+        // fixed-seed runs report modeled (deterministic) timings —
+        // never interchangeable with wall-clock measurements, so the
+        // seed is part of the identity. Unseeded keys are unchanged
+        // from the pre-seed format: existing caches stay valid.
+        if let Some(s) = seed {
+            desc.push_str(&format!("\nseed={s}\nmodeled_time=1"));
+        }
+        desc
+    }
+
+    fn hash_desc(desc: &str) -> String {
+        let lo = fnv1a64(0xcbf2_9ce4_8422_2325, desc.as_bytes());
+        let hi = fnv1a64(lo ^ 0x9e37_79b9_7f4a_7c15, desc.as_bytes());
+        format!("{hi:016x}{lo:016x}")
+    }
+
     /// Content fingerprint of one measurement point. Two independent
     /// FNV-1a passes (the second chained on the first) give a 128-bit
     /// key — ample for campaign-scale point counts.
@@ -94,15 +139,44 @@ impl ResultCache {
         nreps: usize,
         point: &UnrolledPoint,
     ) -> String {
-        let desc = format!(
-            "library={library}\nmachine={machine}\nnreps={nreps}\n\
-             range_value={}\nnthreads={}\nsum_iters={}\ncalls_per_iter={}\nscript:\n{}",
-            point.range_value, point.nthreads, point.sum_iters, point.calls_per_iter,
-            point.script
-        );
-        let lo = fnv1a64(0xcbf2_9ce4_8422_2325, desc.as_bytes());
-        let hi = fnv1a64(lo ^ 0x9e37_79b9_7f4a_7c15, desc.as_bytes());
-        format!("{hi:016x}{lo:016x}")
+        Self::fingerprint_with(library, machine, nreps, point, None)
+    }
+
+    /// [`ResultCache::fingerprint`] extended with the run's
+    /// deterministic seed (if any). `seed: None` reproduces the classic
+    /// key byte-for-byte.
+    pub fn fingerprint_with(
+        library: &str,
+        machine: &str,
+        nreps: usize,
+        point: &UnrolledPoint,
+        seed: Option<u64>,
+    ) -> String {
+        Self::hash_desc(&Self::fingerprint_desc(library, machine, nreps, point, seed))
+    }
+
+    /// Fingerprint of one point measured in **warm** execution mode.
+    ///
+    /// A warm measurement depends on the simulated cache state the
+    /// worker's previous points left behind, so the key chains: it
+    /// hashes the point's own description *plus the warm key of the
+    /// predecessor point in the same worker shard* (`prev`, `None` for
+    /// the shard's first point, which starts from cold state). A warm
+    /// entry therefore only ever hits when the entire executed prefix
+    /// matches — and the `w` prefix keeps warm keys visibly (and
+    /// structurally) disjoint from cold ones.
+    pub fn warm_fingerprint(
+        library: &str,
+        machine: &str,
+        nreps: usize,
+        point: &UnrolledPoint,
+        seed: Option<u64>,
+        prev: Option<&str>,
+    ) -> String {
+        let mut desc = Self::fingerprint_desc(library, machine, nreps, point, seed);
+        desc.push_str("\nwarm=1\nprev=");
+        desc.push_str(prev.unwrap_or("cold-start"));
+        format!("w{}", Self::hash_desc(&desc))
     }
 
     fn entry_path(&self, key: &str) -> PathBuf {
@@ -126,6 +200,11 @@ impl ResultCache {
     /// ordering works even on `noatime`/`relatime` mounts.
     pub fn lookup(&self, key: &str, expected_records: usize) -> Option<PointResult> {
         let env = self.lookup_entry(key)?;
+        // warm and cold measurements are never interchangeable: a
+        // mismatched flag is a miss even if the key somehow matched
+        if env.warm != self.warm {
+            return None;
+        }
         if self.trusted_only && !env.trusted() {
             return None;
         }
@@ -163,7 +242,7 @@ impl ResultCache {
             .duration_since(std::time::UNIX_EPOCH)
             .ok()
             .map(|d| d.as_secs());
-        let j = io::cache_envelope_to_json(point, self.store_jobs, created);
+        let j = io::cache_envelope_to_json(point, self.store_jobs, created, self.warm);
         std::fs::write(&tmp, j.to_string_pretty())?;
         std::fs::rename(&tmp, &path)?;
         Ok(())
@@ -223,6 +302,55 @@ mod tests {
         assert_ne!(k1, ResultCache::fingerprint("rustblocked", "localhost", 4, &p));
         let other = dgemm_experiment(32).unroll().unwrap().remove(0);
         assert_ne!(k1, ResultCache::fingerprint("rustblocked", "localhost", 3, &other));
+    }
+
+    #[test]
+    fn seed_and_warmth_change_the_key_but_unseeded_keys_are_stable() {
+        let p = point();
+        let classic = ResultCache::fingerprint("rustblocked", "localhost", 3, &p);
+        // seed: None is byte-for-byte the classic key (old caches valid)
+        assert_eq!(
+            classic,
+            ResultCache::fingerprint_with("rustblocked", "localhost", 3, &p, None)
+        );
+        let seeded = ResultCache::fingerprint_with("rustblocked", "localhost", 3, &p, Some(7));
+        assert_ne!(classic, seeded);
+        assert_ne!(
+            seeded,
+            ResultCache::fingerprint_with("rustblocked", "localhost", 3, &p, Some(8))
+        );
+        // warm keys: disjoint from cold, chained on the predecessor
+        let w0 = ResultCache::warm_fingerprint("rustblocked", "localhost", 3, &p, None, None);
+        assert!(w0.starts_with('w'));
+        assert_eq!(w0.len(), 33);
+        assert_ne!(&w0[1..], classic.as_str());
+        let w1 =
+            ResultCache::warm_fingerprint("rustblocked", "localhost", 3, &p, None, Some(&w0));
+        assert_ne!(w0, w1, "a different prefix is a different measurement");
+        assert_eq!(
+            w1,
+            ResultCache::warm_fingerprint("rustblocked", "localhost", 3, &p, None, Some(&w0)),
+            "chained keys are deterministic"
+        );
+    }
+
+    #[test]
+    fn warm_and_cold_lookups_never_cross_contaminate() {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_cache_warmflag_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cold = ResultCache::open(&dir).unwrap();
+        let warm = ResultCache::open(&dir).unwrap().with_warm(true);
+        cold.store("coldkey", &result(2)).unwrap();
+        warm.store("warmkey", &result(2)).unwrap();
+        assert!(cold.lookup_entry("warmkey").unwrap().warm);
+        assert!(!cold.lookup_entry("coldkey").unwrap().warm);
+        // each handle serves only its own kind — even on the "wrong" key
+        assert!(cold.lookup("coldkey", 2).is_some());
+        assert!(cold.lookup("warmkey", 2).is_none());
+        assert!(warm.lookup("warmkey", 2).is_some());
+        assert!(warm.lookup("coldkey", 2).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -46,6 +46,9 @@ pub struct CacheStats {
     pub trusted: usize,
     /// Entries measured under worker contention (`jobs > 1`).
     pub contended: usize,
+    /// Entries measured in warm execution mode (sampler state carried
+    /// across points; disjoint key space from cold entries).
+    pub warm: usize,
     /// Legacy pre-envelope entries (provenance unknown).
     pub legacy: usize,
     /// Files that parse as neither envelope nor legacy entry.
@@ -65,6 +68,7 @@ impl CacheStats {
         s += &format!("  bytes:       {}\n", self.total_bytes);
         s += &format!("  trusted:     {}  (jobs <= 1 — publication-quality timings)\n", self.trusted);
         s += &format!("  contended:   {}  (jobs > 1 — wall times inflated by contention)\n", self.contended);
+        s += &format!("  warm:        {}  (sampler state carried across points)\n", self.warm);
         s += &format!("  legacy:      {}  (pre-envelope, provenance unknown)\n", self.legacy);
         s += &format!("  unreadable:  {}\n", self.unreadable);
         s += &format!("  tmp files:   {}\n", self.tmp_files);
@@ -146,11 +150,16 @@ pub fn cache_stats(dir: &Path) -> Result<CacheStats> {
         let created = env.as_ref().and_then(|e| e.created_unix);
         match env {
             None => st.unreadable += 1,
-            Some(e) => match e.jobs {
-                Some(j) if j <= 1 => st.trusted += 1,
-                Some(_) => st.contended += 1,
-                None => st.legacy += 1,
-            },
+            Some(e) => {
+                if e.warm {
+                    st.warm += 1;
+                }
+                match e.jobs {
+                    Some(j) if j <= 1 => st.trusted += 1,
+                    Some(_) => st.contended += 1,
+                    None => st.legacy += 1,
+                }
+            }
         }
         let age_secs = match created {
             Some(t) => now
@@ -168,6 +177,24 @@ pub fn cache_stats(dir: &Path) -> Result<CacheStats> {
     Ok(st)
 }
 
+/// Remove writer temp files abandoned for more than [`STALE_TMP_AGE`];
+/// fresh ones are spared — a live writer may be between its write and
+/// rename. Returns the number removed.
+fn sweep_stale_tmps(tmps: Vec<PathBuf>) -> usize {
+    let mut removed = 0;
+    for tmp in tmps {
+        let stale = std::fs::metadata(&tmp)
+            .and_then(|m| m.modified())
+            .ok()
+            .and_then(|t| t.elapsed().ok())
+            .is_some_and(|age| age >= STALE_TMP_AGE);
+        if stale && std::fs::remove_file(&tmp).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
 /// Shrink the cache below `max_bytes`, deleting least-recently-used
 /// entries first (atime recency, mtime fallback; ties broken by path
 /// for determinism). Also sweeps writer temp files abandoned for more
@@ -176,22 +203,63 @@ pub fn cache_stats(dir: &Path) -> Result<CacheStats> {
 pub fn gc_max_bytes(dir: &Path, max_bytes: u64) -> Result<GcOutcome> {
     let (mut entries, tmps) = scan(dir)?;
     let mut out = GcOutcome { scanned: entries.len(), ..Default::default() };
-    for tmp in tmps {
-        let stale = std::fs::metadata(&tmp)
-            .and_then(|m| m.modified())
-            .ok()
-            .and_then(|t| t.elapsed().ok())
-            .is_some_and(|age| age >= STALE_TMP_AGE);
-        if stale && std::fs::remove_file(&tmp).is_ok() {
-            out.tmp_removed += 1;
-        }
-    }
+    out.tmp_removed = sweep_stale_tmps(tmps);
     entries.sort_by(|a, b| a.recency.cmp(&b.recency).then_with(|| a.path.cmp(&b.path)));
     let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
     out.bytes_before = total;
     for ent in &entries {
         if total <= max_bytes {
             break;
+        }
+        match std::fs::remove_file(&ent.path) {
+            Ok(()) => {}
+            // already gone (racing gc/clear): its bytes are freed too
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                return Err(e).with_context(|| format!("deleting {}", ent.path.display()))
+            }
+        }
+        total = total.saturating_sub(ent.bytes);
+        out.deleted += 1;
+    }
+    out.bytes_after = total;
+    Ok(out)
+}
+
+/// Delete entries older than `max_age` — age measured from the
+/// envelope's `created_unix` (the store time the measuring run
+/// recorded) where present, file mtime otherwise (legacy and unreadable
+/// entries). The `elaps cache gc --max-age DUR` sweep: unlike the LRU
+/// byte-budget sweep, this one expires *measurements*, so a stale
+/// library build's timings age out of a shared cache even while re-runs
+/// keep touching (and thereby LRU-refreshing) them. Also sweeps
+/// abandoned writer temp files.
+pub fn gc_max_age(dir: &Path, max_age: Duration) -> Result<GcOutcome> {
+    let (entries, tmps) = scan(dir)?;
+    let mut out = GcOutcome { scanned: entries.len(), ..Default::default() };
+    out.tmp_removed = sweep_stale_tmps(tmps);
+    let now = SystemTime::now();
+    let now_unix = now
+        .duration_since(SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut total: u64 = entries.iter().map(|e| e.bytes).sum();
+    out.bytes_before = total;
+    for ent in &entries {
+        // prefer the recorded store time; a future-dated created_unix
+        // (clock skew) counts as age 0, never as expired
+        let age_secs = std::fs::read_to_string(&ent.path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .as_ref()
+            .and_then(io::cache_envelope_from_json)
+            .and_then(|env| env.created_unix)
+            .map(|t| now_unix.saturating_sub(t))
+            .unwrap_or_else(|| {
+                now.duration_since(ent.mtime).map(|d| d.as_secs()).unwrap_or(0)
+            });
+        if age_secs <= max_age.as_secs() {
+            continue;
         }
         match std::fs::remove_file(&ent.path) {
             Ok(()) => {}
@@ -224,16 +292,7 @@ pub fn clear_cache(dir: &Path) -> Result<usize> {
             }
         }
     }
-    for tmp in tmps {
-        let stale = std::fs::metadata(&tmp)
-            .and_then(|m| m.modified())
-            .ok()
-            .and_then(|t| t.elapsed().ok())
-            .is_some_and(|age| age >= STALE_TMP_AGE);
-        if stale {
-            let _ = std::fs::remove_file(&tmp);
-        }
-    }
+    sweep_stale_tmps(tmps);
     Ok(removed)
 }
 
@@ -305,6 +364,60 @@ mod tests {
         let out2 = gc_max_bytes(&dir, 150).unwrap();
         assert_eq!(out2.deleted, 0);
         assert_eq!(out2.bytes_after, 100);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A minimal valid schema-2 envelope with the given store time.
+    fn envelope_json(created_unix: u64) -> String {
+        format!(
+            r#"{{"schema":2,"jobs":1,"warm":false,"created_unix":{created_unix},
+               "result":{{"range_value":0,"nthreads":1,"sum_iters":1,
+                          "calls_per_iter":1,"records":[]}}}}"#
+        )
+    }
+
+    #[test]
+    fn gc_max_age_expires_by_created_unix_with_mtime_fallback() {
+        let dir = tmpdir("maxage");
+        let now = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .unwrap()
+            .as_secs();
+        std::fs::write(dir.join("old.json"), envelope_json(now - 10_000)).unwrap();
+        std::fs::write(dir.join("fresh.json"), envelope_json(now)).unwrap();
+        // created_unix takes precedence over file times: a *recently
+        // touched* file with an old store time still expires
+        let touched = dir.join("touched.json");
+        std::fs::write(&touched, envelope_json(now - 10_000)).unwrap();
+        // (fs write just set mtime to now)
+        // mtime fallback: a non-envelope entry ages by its file time
+        put_entry(&dir, "legacyold", 10, 10_000);
+        let out = gc_max_age(&dir, Duration::from_secs(3_600)).unwrap();
+        assert_eq!(out.scanned, 4);
+        assert_eq!(out.deleted, 3, "old, touched and legacyold expire");
+        assert!(dir.join("fresh.json").exists());
+        assert!(!dir.join("old.json").exists());
+        assert!(!touched.exists());
+        assert!(!dir.join("legacyold.json").exists());
+        // nothing left past the cutoff: a second sweep is a no-op
+        let out2 = gc_max_age(&dir, Duration::from_secs(3_600)).unwrap();
+        assert_eq!(out2.deleted, 0);
+        assert_eq!(out2.bytes_after, out2.bytes_before);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_max_age_sweeps_stale_tmps_and_errors_on_missing_dir() {
+        let dir = tmpdir("maxage_tmps");
+        let stale = dir.join("stale.tmp");
+        std::fs::write(&stale, "crashed writer").unwrap();
+        let t = SystemTime::now() - Duration::from_secs(7_200);
+        let f = std::fs::OpenOptions::new().write(true).open(&stale).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_accessed(t).set_modified(t)).unwrap();
+        let out = gc_max_age(&dir, Duration::from_secs(60)).unwrap();
+        assert_eq!(out.tmp_removed, 1);
+        assert!(!stale.exists());
+        assert!(gc_max_age(&dir.join("nope"), Duration::ZERO).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

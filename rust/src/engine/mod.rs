@@ -17,6 +17,27 @@
 //!   count), and results are merged back by point index, so a parallel
 //!   run is structurally identical — same point order, record counts,
 //!   simulated counters, flop counts and OpenMP groups — to `--jobs 1`;
+//! * **warm execution** ([`EngineConfig::warm`], CLI `--warm`, env
+//!   `ELAPS_WARM=1`) — each worker instead reuses one long-lived
+//!   sampler across the points it executes, carrying simulated cache
+//!   state between points ([`crate::sampler::Sampler::reset_warm`]) to
+//!   model back-to-back campaign runs (the warm/cold distinction the
+//!   paper controls with operand variation and `flush_caches`). Because
+//!   results now depend on execution order, warm scheduling abandons
+//!   the dynamic FIFO for deterministic contiguous-block sharding by
+//!   worker index ([`queue::shard_contiguous`]): the point sequence
+//!   each worker executes is a pure function of `(experiments, jobs)`,
+//!   two warm runs with the same seed and the same `--jobs` are
+//!   byte-identical, and `--jobs 1` reproduces strict serial
+//!   back-to-back order. Warm cache entries use chained, `w`-prefixed
+//!   keys and `warm` envelope provenance so they never mix with cold
+//!   entries;
+//! * **fixed-seed reproducibility** ([`EngineConfig::seed`], CLI
+//!   `--seed S`, env `ELAPS_SEED`) — samplers are seeded and report the
+//!   machine model's cache-aware time prediction instead of measured
+//!   wall time, making whole runs bit-reproducible (the foundation of
+//!   the warm determinism contract above and of the differential test
+//!   harness in `rust/tests/warm_determinism.rs`);
 //! * **result caching** ([`cache`]) — a content-addressed on-disk cache
 //!   keyed by the fingerprint of (library, machine model, nreps,
 //!   unrolled script) lets re-runs and overlapping sweeps skip
@@ -60,7 +81,7 @@ pub mod gc;
 pub mod queue;
 
 pub use cache::{CacheEnvelope, ResultCache};
-pub use queue::WorkQueue;
+pub use queue::{shard_contiguous, WorkQueue};
 
 use crate::coordinator::experiment::{Experiment, UnrolledPoint};
 use crate::coordinator::report::{PointResult, Report};
@@ -71,8 +92,9 @@ use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock, RwLock};
 
-/// Engine configuration: worker-pool width, result-cache location and
-/// cache trust policy.
+/// Engine configuration: worker-pool width, result-cache location,
+/// cache trust policy, and the warm-execution / deterministic-seed
+/// axes.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct EngineConfig {
     /// Worker threads; 0 and 1 both mean serial execution.
@@ -83,6 +105,23 @@ pub struct EngineConfig {
     /// worker contention (`jobs ≤ 1`); contended and legacy entries are
     /// re-measured. See the module docs' timing-provenance rule.
     pub trusted_only: bool,
+    /// Warm execution: each worker reuses one long-lived sampler across
+    /// the points it executes, carrying simulated cache state between
+    /// points ([`crate::sampler::Sampler::reset_warm`]) to model
+    /// back-to-back campaign runs. Scheduling switches from the dynamic
+    /// FIFO to deterministic contiguous-block sharding by worker index
+    /// ([`queue::shard_contiguous`]), so each worker's point sequence —
+    /// and therefore its carried state — is a pure function of
+    /// `(experiments, jobs)`.
+    pub warm: bool,
+    /// Fully deterministic runs: samplers are seeded with this value
+    /// and report the machine model's cache-aware time prediction
+    /// instead of measured wall time
+    /// ([`crate::sampler::Sampler::deterministic`]). Two runs with the
+    /// same seed, experiments, `warm` and `jobs` produce byte-identical
+    /// reports. Seeded measurements are cached under seed-specific keys
+    /// so they never mix with wall-clock entries.
+    pub seed: Option<u64>,
 }
 
 impl EngineConfig {
@@ -101,11 +140,29 @@ impl EngineConfig {
         self
     }
 
+    pub fn with_warm(mut self, warm: bool) -> EngineConfig {
+        self.warm = warm;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> EngineConfig {
+        self.seed = Some(seed);
+        self
+    }
+
     /// Configuration from the `ELAPS_JOBS` / `ELAPS_CACHE` /
-    /// `ELAPS_TRUSTED_ONLY` environment variables (unset, empty or
-    /// unparsable values fall back to the serial, uncached,
-    /// trust-everything default).
+    /// `ELAPS_TRUSTED_ONLY` / `ELAPS_WARM` / `ELAPS_SEED` environment
+    /// variables (unset, empty or unparsable values fall back to the
+    /// serial, uncached, cold, trust-everything default).
     pub fn from_env() -> EngineConfig {
+        let truthy = |name: &str| {
+            std::env::var(name)
+                .map(|v| {
+                    let v = v.trim().to_ascii_lowercase();
+                    v == "1" || v == "true" || v == "yes"
+                })
+                .unwrap_or(false)
+        };
         let jobs = std::env::var("ELAPS_JOBS")
             .ok()
             .and_then(|v| v.trim().parse().ok())
@@ -114,13 +171,14 @@ impl EngineConfig {
             .ok()
             .filter(|v| !v.trim().is_empty())
             .map(PathBuf::from);
-        let trusted_only = std::env::var("ELAPS_TRUSTED_ONLY")
-            .map(|v| {
-                let v = v.trim().to_ascii_lowercase();
-                v == "1" || v == "true" || v == "yes"
-            })
-            .unwrap_or(false);
-        EngineConfig { jobs, cache_dir, trusted_only }
+        let seed = std::env::var("ELAPS_SEED").ok().and_then(|v| v.trim().parse().ok());
+        EngineConfig {
+            jobs,
+            cache_dir,
+            trusted_only: truthy("ELAPS_TRUSTED_ONLY"),
+            warm: truthy("ELAPS_WARM"),
+            seed,
+        }
     }
 }
 
@@ -143,6 +201,9 @@ pub struct BatchStats {
     pub scheduled_hits: usize,
     /// Worker threads used.
     pub jobs: usize,
+    /// Whether the run executed in warm mode (per-worker sampler reuse
+    /// with deterministic sharding).
+    pub warm: bool,
 }
 
 impl BatchStats {
@@ -169,6 +230,9 @@ impl BatchStats {
                 ", {}/{} experiment(s) fully cached",
                 self.fully_cached, self.experiments
             );
+        }
+        if self.warm {
+            line += " [warm]";
         }
         line
     }
@@ -222,9 +286,9 @@ impl Engine {
 
 /// Execute one unrolled point on a fresh sampler.
 ///
-/// This is the single point-execution primitive: the serial path, every
-/// engine worker and the spooler all funnel through it. A *fresh*
-/// sampler per point (not per worker) keeps the simulated cache
+/// This is the cold-mode point-execution primitive: the serial path,
+/// every cold engine worker and the spooler all funnel through it. A
+/// *fresh* sampler per point (not per worker) keeps the simulated cache
 /// counters, RNG stream and OpenMP group ids bit-identical to serial
 /// execution regardless of which worker picks the point up.
 pub fn execute_point(
@@ -233,7 +297,36 @@ pub fn execute_point(
     exp: &Experiment,
     point: &UnrolledPoint,
 ) -> Result<PointResult> {
+    execute_point_with(library, machine, exp, point, None)
+}
+
+/// [`execute_point`] with an optional deterministic seed: seeded runs
+/// use seeded operand data and the machine model's deterministic time
+/// prediction ([`crate::sampler::Sampler::deterministic`]), so they are
+/// bit-reproducible.
+pub fn execute_point_with(
+    library: &Arc<dyn KernelLibrary>,
+    machine: &MachineModel,
+    exp: &Experiment,
+    point: &UnrolledPoint,
+    seed: Option<u64>,
+) -> Result<PointResult> {
     let mut sampler = Sampler::new(Arc::clone(library), machine.clone());
+    if let Some(seed) = seed {
+        sampler = sampler.deterministic(seed);
+    }
+    execute_point_on(&mut sampler, exp, point)
+}
+
+/// Execute one unrolled point on an existing sampler — the warm-mode
+/// primitive. The caller controls the sampler's state: fresh (cold
+/// semantics) or carrying simulated cache contents from the previous
+/// point via [`crate::sampler::Sampler::reset_warm`].
+pub fn execute_point_on(
+    sampler: &mut Sampler,
+    exp: &Experiment,
+    point: &UnrolledPoint,
+) -> Result<PointResult> {
     let records = sampler
         .run_script(&point.script)
         .with_context(|| format!("point {} of '{}'", point.range_value, exp.name))?;
@@ -302,10 +395,24 @@ mod tests {
         let cfg = EngineConfig::default()
             .with_jobs(4)
             .with_cache("/tmp/x")
-            .with_trusted_only(true);
+            .with_trusted_only(true)
+            .with_warm(true)
+            .with_seed(7);
         assert_eq!(cfg.jobs, 4);
         assert_eq!(cfg.cache_dir.as_deref(), Some(std::path::Path::new("/tmp/x")));
         assert!(cfg.trusted_only);
-        assert!(!EngineConfig::default().trusted_only);
+        assert!(cfg.warm);
+        assert_eq!(cfg.seed, Some(7));
+        let default = EngineConfig::default();
+        assert!(!default.trusted_only);
+        assert!(!default.warm, "cold execution stays the default");
+        assert_eq!(default.seed, None);
+    }
+
+    #[test]
+    fn warm_summary_line_is_marked() {
+        let stats = BatchStats { warm: true, ..Default::default() };
+        assert!(stats.summary_line().ends_with("[warm]"));
+        assert!(!BatchStats::default().summary_line().contains("[warm]"));
     }
 }

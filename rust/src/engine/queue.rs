@@ -2,9 +2,41 @@
 //! from concurrently. Items are enqueued up front (the unrolled points
 //! of one or more experiments), so the queue doubles as the engine's
 //! scheduler: whichever worker is free takes the next point.
+//!
+//! Cold execution uses the dynamic FIFO ([`WorkQueue`]): which worker
+//! runs which point is a race, and that is fine because every point
+//! runs on a fresh sampler. Warm execution instead uses deterministic
+//! contiguous-block sharding ([`shard_contiguous`]): each worker owns a
+//! fixed block of the point sequence, so the per-worker order — and
+//! with it the carried sampler state — is a pure function of
+//! `(experiments, jobs)`, never of thread scheduling.
 
 use std::collections::VecDeque;
 use std::sync::Mutex;
+
+/// Split `items` into at most `jobs` contiguous blocks, in order: block
+/// `w` holds the `w`-th run of consecutive items, block sizes differing
+/// by at most one (the first `len % jobs` blocks get the extra item).
+/// The split is a pure function of `(items order, jobs)` — the warm
+/// engine's determinism contract. `jobs = 1` yields the whole sequence
+/// as one block (strict serial back-to-back order); an empty input
+/// yields no blocks.
+pub fn shard_contiguous<T>(mut items: Vec<T>, jobs: usize) -> Vec<Vec<T>> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let shards = jobs.max(1).min(n);
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut drain = items.drain(..);
+    for w in 0..shards {
+        let len = base + usize::from(w < extra);
+        out.push(drain.by_ref().take(len).collect());
+    }
+    out
+}
 
 /// A multi-consumer FIFO work queue.
 ///
@@ -36,7 +68,7 @@ impl<T> WorkQueue<T> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.items.lock().unwrap().is_empty()
     }
 }
 
@@ -54,6 +86,30 @@ mod tests {
         assert_eq!(q.pop(), Some(3));
         assert_eq!(q.pop(), None);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn contiguous_sharding_is_deterministic_and_complete() {
+        // every item exactly once, order preserved within and across
+        // shards, sizes differ by at most one
+        for (n, jobs) in [(0usize, 3usize), (1, 4), (5, 1), (7, 3), (8, 4), (3, 9)] {
+            let shards = shard_contiguous((0..n).collect::<Vec<_>>(), jobs);
+            let flat: Vec<usize> = shards.iter().flatten().copied().collect();
+            assert_eq!(flat, (0..n).collect::<Vec<_>>(), "n={n} jobs={jobs}");
+            if n == 0 {
+                assert!(shards.is_empty());
+                continue;
+            }
+            assert_eq!(shards.len(), jobs.min(n).max(1));
+            let min = shards.iter().map(Vec::len).min().unwrap();
+            let max = shards.iter().map(Vec::len).max().unwrap();
+            assert!(max - min <= 1, "n={n} jobs={jobs}: {shards:?}");
+            assert!(min >= 1, "no shard may be empty");
+            // pure function of the input: same call, same layout
+            assert_eq!(shards, shard_contiguous((0..n).collect::<Vec<_>>(), jobs));
+        }
+        // jobs=1 is the strict serial back-to-back order
+        assert_eq!(shard_contiguous(vec![4, 2, 9], 1), vec![vec![4, 2, 9]]);
     }
 
     #[test]

@@ -78,6 +78,29 @@ pub trait ExperimentRunner {
     fn run_batch(&self, exps: &[Experiment]) -> Result<Vec<Report>> {
         exps.iter().map(|e| self.run(e)).collect()
     }
+
+    /// Run one experiment in **warm** execution mode (per-worker
+    /// sampler reuse, [`crate::engine::EngineConfig::warm`]). Warmth is
+    /// an engine-level axis, not an experiment-level one, so warm legs
+    /// cannot ride the campaign's shared batch: the default runs a
+    /// dedicated serial warm engine on top of the process-default
+    /// config. [`PlanRunner`] overrides this with a placeholder so the
+    /// plan pass stays measurement-free.
+    fn run_warm(&self, exp: &Experiment) -> Result<Report> {
+        let cfg = crate::engine::default_config().with_warm(true).with_jobs(1);
+        crate::engine::Engine::new(cfg).run(exp)
+    }
+
+    /// Run one experiment in explicitly **cold** execution mode (a
+    /// fresh sampler per point) regardless of the process-default
+    /// engine config — the counterpart of [`ExperimentRunner::run_warm`]
+    /// for builders that *compare* the two modes and must not let an
+    /// `ELAPS_WARM=1` / `--warm` default silently warm up their cold
+    /// leg.
+    fn run_cold(&self, exp: &Experiment) -> Result<Report> {
+        let cfg = crate::engine::default_config().with_warm(false);
+        crate::engine::Engine::new(cfg).run(exp)
+    }
 }
 
 /// Immediate execution through the process-default engine
@@ -113,6 +136,17 @@ impl PlanRunner {
 impl ExperimentRunner for PlanRunner {
     fn run(&self, exp: &Experiment) -> Result<Report> {
         self.collected.borrow_mut().push(exp.clone());
+        placeholder_report(exp)
+    }
+
+    /// Warm and forced-cold legs are not batchable (engine-level axis),
+    /// so the plan pass neither collects nor measures them — the replay
+    /// pass runs them live through the default implementations.
+    fn run_warm(&self, exp: &Experiment) -> Result<Report> {
+        placeholder_report(exp)
+    }
+
+    fn run_cold(&self, exp: &Experiment) -> Result<Report> {
         placeholder_report(exp)
     }
 }
@@ -918,6 +952,77 @@ pub fn f14_gwas(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutp
 }
 
 // =====================================================================
+// W1 — warm vs cold execution (engine warm mode; the paper's Fig. 2
+// cache-locality scenario, carried *across* campaign points)
+// =====================================================================
+
+/// Back-to-back campaign execution: the same cache-resident dgemm point
+/// repeated over a sweep, measured cold (the paper's default — a fresh
+/// sampler per point, every point starts from empty simulated caches)
+/// and warm (engine warm mode — one sampler carries simulated cache
+/// state from point to point, as if the campaign ran back-to-back on a
+/// live machine).
+pub fn w1_warm_execution(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
+    let (n, npoints): (i64, i64) = if quick { (64, 4) } else { (128, 8) };
+    let ns = n.to_string();
+    let mut exp = base("w1-warm-vs-cold", "rustblocked");
+    exp.nreps = 2;
+    // the cold-start cost of each point IS the signal here — keep the
+    // first repetition in the statistics
+    exp.discard_first = false;
+    exp.counters = vec!["PAPI_L1_TCM".into(), "PAPI_L3_TCM".into()];
+    // the same point repeated: range_value is a run index; the script
+    // (and therefore the operand working set) is identical per point
+    exp.range = Some(RangeDef::new("run", (1..=npoints).collect()));
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+    )?];
+    let cold = runner.run_cold(&exp)?;
+    let warm = runner.run_warm(&exp)?;
+    let cold_l3 = cold.series(Metric::Counter(1), Stat::Max);
+    let warm_l3 = warm.series(Metric::Counter(1), Stat::Max);
+    let cold_l1 = cold.series(Metric::Counter(0), Stat::Max);
+    let warm_l1 = warm.series(Metric::Counter(0), Stat::Max);
+    let mut rows = vec!["point,cold_L3_TCM,warm_L3_TCM,cold_L1_TCM,warm_L1_TCM".to_string()];
+    for i in 0..cold_l3.len() {
+        rows.push(format!(
+            "{},{:.0},{:.0},{:.0},{:.0}",
+            i + 1,
+            cold_l3[i].1,
+            warm_l3[i].1,
+            cold_l1[i].1,
+            warm_l1[i].1
+        ));
+    }
+    let mut fig = Figure::new(
+        "W1 — warm vs cold execution across campaign points",
+        "point index",
+        "sim. L3 misses (max over reps)",
+    );
+    fig.add_series(
+        "cold (fresh sampler per point)",
+        cold_l3.iter().enumerate().map(|(i, &(_, v))| ((i + 1) as f64, v)).collect(),
+    );
+    fig.add_series(
+        "warm (carried sampler state)",
+        warm_l3.iter().enumerate().map(|(i, &(_, v))| ((i + 1) as f64, v)).collect(),
+    );
+    Ok(FigureOutput {
+        id: "W1",
+        title: "W1 — warm vs cold back-to-back execution".into(),
+        figure: Some(fig),
+        rows,
+        notes: format!(
+            "dgemm n={n}, {npoints} identical points. Cold: every point re-misses its \
+             operands (the paper's per-point sampler start). Warm: point 1 matches cold \
+             (no carried state yet), later points find A/B/C simulated-resident — the \
+             cache-locality effect of Fig. 2, carried across campaign points."
+        ),
+    })
+}
+
+// =====================================================================
 
 /// A figure builder: assembles one figure's output through the given
 /// runner.
@@ -938,6 +1043,7 @@ pub fn all_builders() -> Vec<(&'static str, FigureBuilder)> {
         ("F12", f12_sylvester),
         ("F13", f13_lu_threading),
         ("F14", f14_gwas),
+        ("W1", w1_warm_execution),
     ]
 }
 
@@ -1097,6 +1203,33 @@ mod tests {
             let g: f64 = r.split(',').nth(1).unwrap().parse().unwrap();
             assert!(g > 0.0);
         }
+    }
+
+    #[test]
+    fn w1_warm_mode_is_observable() {
+        let out = w1_warm_execution(&LocalRunner, true).unwrap();
+        assert_eq!(out.id, "W1");
+        // rows: header + one per point; columns are simulated counters
+        // (deterministic), so the warm/cold relationship is exact
+        let mut cold_sum = 0.0;
+        let mut warm_sum = 0.0;
+        let mut first = true;
+        for r in &out.rows[1..] {
+            let cols: Vec<f64> =
+                r.split(',').skip(1).map(|v| v.parse().unwrap()).collect();
+            if first {
+                // point 1: no carried state yet — warm ≡ cold
+                assert_eq!(cols[0], cols[1], "{r}");
+                first = false;
+            }
+            cold_sum += cols[0];
+            warm_sum += cols[1];
+        }
+        assert!(cold_sum > 0.0, "cold points must miss");
+        assert!(
+            warm_sum < cold_sum,
+            "carried state must reduce misses: warm {warm_sum} vs cold {cold_sum}"
+        );
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //! multi-core platforms, and a PJRT runtime ([`runtime`]) that executes
 //! JAX/Pallas kernels AOT-compiled to HLO.
 
+// The CI clippy gate runs with -D warnings; these two stylistic lints
+// fire on long-standing idioms of this codebase (nested slot/result
+// type aliases and the kernels' BLAS-shaped signatures) and are not
+// worth churning every call site over.
+#![allow(clippy::type_complexity)]
+#![allow(clippy::too_many_arguments)]
+
 pub mod util;
 pub mod linalg;
 pub mod kernels;

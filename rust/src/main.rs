@@ -33,14 +33,14 @@ elaps — Experimental Linear Algebra Performance Studies (rust+JAX/Pallas)
 
 USAGE:
   elaps run <experiment.json> [--jobs N] [--cache DIR] [--out report.json]
-            [--batch --spool DIR]
+            [--warm] [--seed S] [--batch --spool DIR]
   elaps batch <exp.json>… [--jobs N] [--cache DIR] [--out-dir batch_out]
   elaps view <report.json> [--metric M] [--stat S]
   elaps plot <report.json> [--metric M] [--stat S] [--svg out.svg]
-  elaps figures [T1 F1 F2 …|all] [--full] [--jobs N] [--cache DIR]
+  elaps figures [T1 F1 F2 … W1|all] [--full] [--jobs N] [--cache DIR]
                 [--out-dir figures_out]
   elaps cache stats [--cache DIR]
-  elaps cache gc --max-bytes N[K|M|G] [--cache DIR]
+  elaps cache gc [--max-bytes N[K|M|G]] [--max-age DUR] [--cache DIR]
   elaps cache clear [--cache DIR]
   elaps sampler [--library L] [--machine M]
   elaps worker --spool DIR [--once] [--jobs N] [--recover SECS|0=off]
@@ -56,7 +56,15 @@ stats:   min max avg med std
 --cache DIR    content-addressed result cache (env ELAPS_CACHE)
 --trusted-only serve cache hits only from entries measured with jobs <= 1
                (publication-quality timings; env ELAPS_TRUSTED_ONLY=1)
+--warm         warm execution: each worker reuses one sampler across its
+               points, carrying simulated cache state (back-to-back
+               campaign semantics); scheduling becomes deterministic
+               contiguous-block sharding by worker index (env ELAPS_WARM=1)
+--seed S       fully deterministic run: seeded operand data + modeled
+               (machine-model) timings; two runs with the same seed,
+               --warm and --jobs are byte-identical (env ELAPS_SEED)
 --max-bytes N  cache gc byte budget; K/M/G suffixes are powers of 1024
+--max-age DUR  cache gc age cutoff by store time: N[s|m|h|d], e.g. 7d
 ";
 
 fn main() {
@@ -83,7 +91,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     };
     let args = Args::parse(
         raw[1..].iter().cloned(),
-        &["batch", "once", "full", "help", "trusted-only"],
+        &["batch", "once", "full", "help", "trusted-only", "warm"],
     );
     match cmd.as_str() {
         "run" => cmd_run(&args),
@@ -131,6 +139,12 @@ fn engine_config(args: &Args) -> Result<EngineConfig> {
     if args.flag("trusted-only") {
         cfg.trusted_only = true;
     }
+    if args.flag("warm") {
+        cfg.warm = true;
+    }
+    if let Some(seed) = args.opt_usize_strict("seed").map_err(|e| anyhow!(e))? {
+        cfg.seed = Some(seed as u64);
+    }
     Ok(cfg)
 }
 
@@ -153,17 +167,47 @@ fn cmd_cache(args: &Args) -> Result<()> {
             print!("{}", st.render());
         }
         "gc" => {
-            let budget = match args.opt("max-bytes") {
-                Some(v) => elaps::util::cli::parse_byte_size(v)
-                    .map_err(|e| anyhow!("--max-bytes: {e}"))?,
-                None => bail!("cache gc requires --max-bytes N (K/M/G suffixes allowed)"),
-            };
-            let out = elaps::engine::gc::gc_max_bytes(&dir, budget)?;
-            println!(
-                "gc: deleted {}/{} entries — {} → {} bytes (budget {budget}); \
-                 {} stale tmp file(s) removed",
-                out.deleted, out.scanned, out.bytes_before, out.bytes_after, out.tmp_removed
-            );
+            let budget = args
+                .opt("max-bytes")
+                .map(|v| {
+                    elaps::util::cli::parse_byte_size(v).map_err(|e| anyhow!("--max-bytes: {e}"))
+                })
+                .transpose()?;
+            let max_age = args
+                .opt("max-age")
+                .map(|v| {
+                    elaps::util::cli::parse_duration(v).map_err(|e| anyhow!("--max-age: {e}"))
+                })
+                .transpose()?;
+            if budget.is_none() && max_age.is_none() {
+                bail!(
+                    "cache gc requires --max-bytes N (K/M/G suffixes allowed) \
+                     and/or --max-age DUR (s/m/h/d suffixes allowed)"
+                );
+            }
+            // expire by age first, then enforce the byte budget on the
+            // survivors
+            if let Some(age) = max_age {
+                let out = elaps::engine::gc::gc_max_age(&dir, age)?;
+                println!(
+                    "gc: deleted {}/{} entries older than {}s — {} → {} bytes; \
+                     {} stale tmp file(s) removed",
+                    out.deleted,
+                    out.scanned,
+                    age.as_secs(),
+                    out.bytes_before,
+                    out.bytes_after,
+                    out.tmp_removed
+                );
+            }
+            if let Some(budget) = budget {
+                let out = elaps::engine::gc::gc_max_bytes(&dir, budget)?;
+                println!(
+                    "gc: deleted {}/{} entries — {} → {} bytes (budget {budget}); \
+                     {} stale tmp file(s) removed",
+                    out.deleted, out.scanned, out.bytes_before, out.bytes_after, out.tmp_removed
+                );
+            }
         }
         "clear" => {
             let removed = elaps::engine::gc::clear_cache(&dir)?;

@@ -138,6 +138,13 @@ impl CacheSim {
         }
     }
 
+    /// Per-level line-miss counts since the last
+    /// [`CacheSim::reset_counters`], innermost level first. This is the
+    /// memory-traffic input of [`super::MachineModel::modeled_seconds`].
+    pub fn level_misses(&self) -> Vec<u64> {
+        self.levels.iter().map(|l| l.misses).collect()
+    }
+
     /// All supported counter names.
     pub fn counter_names(&self) -> Vec<String> {
         let mut v: Vec<String> = self

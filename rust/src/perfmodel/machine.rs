@@ -44,6 +44,40 @@ impl MachineModel {
         seconds * self.freq_hz
     }
 
+    /// Deterministic wall-time prediction for one kernel call: compute
+    /// time at per-core peak plus a memory term from the simulated
+    /// cache misses (the cache-aware prediction approach of Peise &
+    /// Bientinesi, arXiv:1409.8602 — warm operands make small problems
+    /// much faster). `miss_lines` is the per-level line-miss vector of
+    /// [`super::CacheSim::level_misses`], innermost first.
+    ///
+    /// Fixed-seed ("deterministic") sampler runs report this instead of
+    /// measured wall time, which makes whole experiment campaigns
+    /// bit-reproducible: the prediction is a pure function of the
+    /// script and the (simulated) cache state it runs against.
+    ///
+    /// Like a measured time, this is the **serial** time of the call —
+    /// on this 1-core host kernels always execute serially and the
+    /// report layer applies the thread-scaling model
+    /// ([`super::scaling`]) downstream, identically for measured and
+    /// modeled records.
+    pub fn modeled_seconds(&self, flops: f64, miss_lines: &[u64]) -> f64 {
+        // Latency charge per line miss at level i (cycles): a miss at
+        // L1 that hits L2, a miss at L2 that hits L3, and a miss in
+        // the last level that goes to memory. Deeper-than-modeled
+        // levels reuse the memory charge.
+        const LINE_MISS_PENALTY_CYCLES: [f64; 3] = [12.0, 40.0, 200.0];
+        let compute_cycles = flops / self.flops_per_cycle;
+        let mem_cycles: f64 = miss_lines
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| {
+                m as f64 * LINE_MISS_PENALTY_CYCLES[i.min(LINE_MISS_PENALTY_CYCLES.len() - 1)]
+            })
+            .sum();
+        (compute_cycles + mem_cycles) / self.freq_hz
+    }
+
     /// An Intel SandyBridge E5-2670-like node (the paper's §2 machine):
     /// 2.6 GHz, 8 DP flops/cycle (AVX), 8 cores.
     pub fn sandybridge() -> MachineModel {
@@ -177,6 +211,22 @@ mod tests {
         // paper: 272551028 cycles ↔ 104.8 ms
         let cycles = m.cycles(0.1048);
         assert!((cycles - 272_480_000.0).abs() / cycles < 0.01);
+    }
+
+    #[test]
+    fn modeled_seconds_is_deterministic_and_miss_sensitive() {
+        let m = MachineModel::sandybridge();
+        let flops = 2.0 * 64.0 * 64.0 * 64.0;
+        let warm = m.modeled_seconds(flops, &[0, 0, 0]);
+        let cold = m.modeled_seconds(flops, &[512, 512, 512]);
+        assert!(warm > 0.0, "compute term must be non-zero");
+        assert!(cold > warm, "misses must cost time");
+        // pure function: identical inputs, identical output bits
+        assert_eq!(cold.to_bits(), m.modeled_seconds(flops, &[512, 512, 512]).to_bits());
+        // deeper-than-modeled levels reuse the last (memory) charge
+        let two = m.modeled_seconds(flops, &[0, 0, 0, 7]);
+        let last = m.modeled_seconds(flops, &[0, 0, 7]);
+        assert_eq!(two.to_bits(), last.to_bits());
     }
 
     #[test]

@@ -68,6 +68,11 @@ impl Record {
     }
 }
 
+/// The RNG seed of a default-constructed sampler (operand data from
+/// `dgerand` & co. is always deterministic; [`Sampler::deterministic`]
+/// additionally makes the *timing* deterministic).
+pub const DEFAULT_RNG_SEED: u64 = 0xE1A5;
+
 /// The sampler.
 pub struct Sampler {
     pub library: Arc<dyn KernelLibrary>,
@@ -79,6 +84,13 @@ pub struct Sampler {
     omp_depth: Option<usize>,
     next_group: usize,
     rng: Xoshiro256,
+    /// Seed the RNG stream restarts from at every script boundary
+    /// ([`Sampler::reset_warm`]).
+    rng_seed: u64,
+    /// When set, `seconds` is the machine model's deterministic
+    /// prediction ([`MachineModel::modeled_seconds`]) instead of
+    /// measured wall time.
+    modeled_time: bool,
 }
 
 impl Sampler {
@@ -93,8 +105,42 @@ impl Sampler {
             queue: Vec::new(),
             omp_depth: None,
             next_group: 0,
-            rng: Xoshiro256::seeded(0xE1A5),
+            rng: Xoshiro256::seeded(DEFAULT_RNG_SEED),
+            rng_seed: DEFAULT_RNG_SEED,
+            modeled_time: false,
         }
+    }
+
+    /// Switch this sampler into fully deterministic mode: the operand
+    /// RNG is reseeded with `seed`, and every record's `seconds` is the
+    /// machine model's cache-aware prediction instead of measured wall
+    /// time. Two deterministic samplers fed the same scripts produce
+    /// bit-identical records — the reproducibility contract behind the
+    /// engine's fixed-seed runs (`elaps run --seed S`).
+    pub fn deterministic(mut self, seed: u64) -> Sampler {
+        self.rng_seed = seed;
+        self.rng = Xoshiro256::seeded(seed);
+        self.modeled_time = true;
+        self
+    }
+
+    /// Begin the next script in warm-execution mode. Everything
+    /// per-script — memory arena (buffer ids restart, so re-allocated
+    /// operands keep their simulated-cache identity), queued calls, omp
+    /// grouping, counter selection and the RNG stream — is reset
+    /// exactly as a fresh sampler would have it, but the simulated
+    /// cache *contents* carry over: operands the previous script left
+    /// resident stay resident, modeling back-to-back campaign execution
+    /// (the paper's warm-cache experiment state; flushing is still the
+    /// script's own `flush_caches` decision).
+    pub fn reset_warm(&mut self) {
+        self.mem = Memory::new();
+        self.queue.clear();
+        self.omp_depth = None;
+        self.next_group = 0;
+        self.counters.clear();
+        self.rng = Xoshiro256::seeded(self.rng_seed);
+        self.cache.reset_counters();
     }
 
     /// Direct access to the memory arena (used by tests/examples).
@@ -323,10 +369,19 @@ impl Sampler {
             .iter()
             .map(|c| self.cache.counter(c).unwrap_or(0))
             .collect();
+        let level_misses = self.cache.level_misses();
         // execute + time
         let t0 = Instant::now();
         self.library.execute(av, &ops)?;
-        let seconds = t0.elapsed().as_secs_f64();
+        let measured = t0.elapsed().as_secs_f64();
+        // deterministic mode reports the model's prediction for this
+        // call (a pure function of script + simulated cache state); the
+        // kernel still executes so numerical state and errors are real
+        let seconds = if self.modeled_time {
+            self.machine.modeled_seconds(av.flops(), &level_misses)
+        } else {
+            measured
+        };
         Ok(Record {
             kernel: av.sig.name.to_string(),
             seconds,
@@ -413,6 +468,55 @@ mod tests {
             .run_script("dgemm N N 20 20 20 1.0 A 20 B 20 0.0 C 20\ngo")
             .unwrap();
         assert!(r3[0].counters[0] > 0);
+    }
+
+    #[test]
+    fn deterministic_mode_is_bit_reproducible() {
+        let script = "set_counters PAPI_L1_TCM\n\
+                      dmalloc A 400\ndmalloc B 400\ndmalloc C 400\n\
+                      dgerand A\ndgerand B\n\
+                      dgemm N N 20 20 20 1.0 A 20 B 20 0.0 C 20\ngo";
+        let run = || {
+            let mut s = Sampler::new(
+                libraries::by_name("rustblocked").unwrap(),
+                MachineModel::sandybridge(),
+            )
+            .deterministic(7);
+            s.run_script(script).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].seconds.to_bits(), b[0].seconds.to_bits());
+        assert_eq!(a[0].cycles.to_bits(), b[0].cycles.to_bits());
+        assert_eq!(a[0].counters, b[0].counters);
+        assert!(a[0].seconds > 0.0);
+    }
+
+    #[test]
+    fn reset_warm_carries_cache_state_but_nothing_else() {
+        let script = "set_counters PAPI_L1_TCM\n\
+                      dmalloc A 400\ndmalloc B 400\ndmalloc C 400\n\
+                      dgerand A\ndgerand B\n\
+                      dgemm N N 20 20 20 1.0 A 20 B 20 0.0 C 20\ngo";
+        let mut s = sampler();
+        let cold = s.run_script(script).unwrap();
+        assert!(cold[0].counters[0] > 0, "first script must run cold");
+        // warm reset: the memory arena restarts (same names re-malloc
+        // cleanly, same buffer ids), but A/B/C stay simulated-resident
+        s.reset_warm();
+        let warm = s.run_script(script).unwrap();
+        assert_eq!(warm[0].counters[0], 0, "carried state must hit");
+        // a reset sampler numbers {omp groups from 0 again, and its
+        // counter selection is back to empty (per-script state)
+        s.reset_warm();
+        let recs = s
+            .run_script(
+                "dmalloc T 100\ndmalloc x 10\ndtrrand T 10 L\n\
+                 {omp\ndtrsv L N N 10 T 10 x 1\n}\ngo",
+            )
+            .unwrap();
+        assert_eq!(recs[0].omp_group, Some(0));
+        assert!(recs[0].counters.is_empty(), "set_counters must not carry over");
     }
 
     #[test]

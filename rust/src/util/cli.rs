@@ -101,6 +101,33 @@ pub fn parse_byte_size(s: &str) -> Result<u64, String> {
     v.checked_mul(mult).ok_or_else(|| format!("'{s}' overflows a 64-bit byte count"))
 }
 
+/// Parse a duration argument: a non-negative integer with an optional
+/// `s`/`m`/`h`/`d` suffix (case-insensitive), e.g. `90`, `90s`, `30m`,
+/// `12h`, `7d`. A bare integer means seconds. Strict, like
+/// [`parse_byte_size`]: empty, negative, fractional or otherwise
+/// malformed input is an error, never a silent default — the caller
+/// (`elaps cache gc --max-age`) deletes data based on this value.
+pub fn parse_duration(s: &str) -> Result<std::time::Duration, String> {
+    let t = s.trim();
+    let bad = || format!("'{s}' is not a duration (expected N, Ns, Nm, Nh or Nd)");
+    let (digits, mult): (&str, u64) = match t.chars().last() {
+        Some('s') | Some('S') => (&t[..t.len() - 1], 1),
+        Some('m') | Some('M') => (&t[..t.len() - 1], 60),
+        Some('h') | Some('H') => (&t[..t.len() - 1], 3_600),
+        Some('d') | Some('D') => (&t[..t.len() - 1], 86_400),
+        Some(_) => (t, 1),
+        None => return Err(bad()),
+    };
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(bad());
+    }
+    let v: u64 = digits.parse().map_err(|_| bad())?;
+    let secs = v
+        .checked_mul(mult)
+        .ok_or_else(|| format!("'{s}' overflows a 64-bit second count"))?;
+    Ok(std::time::Duration::from_secs(secs))
+}
+
 /// Parse a range spec of the form `lo:hi` or `lo:step:hi` (inclusive),
 /// e.g. `50:50:2000` → 50, 100, ..., 2000. Mirrors the paper's
 /// parameter-range notation "n = 50:50:2000".
@@ -190,6 +217,24 @@ mod tests {
         // overflow is an error, not a wrap
         assert!(parse_byte_size("99999999999999999999").is_err());
         assert!(parse_byte_size("18446744073709551615G").is_err());
+    }
+
+    #[test]
+    fn durations() {
+        use std::time::Duration;
+        assert_eq!(parse_duration("0"), Ok(Duration::ZERO));
+        assert_eq!(parse_duration("90"), Ok(Duration::from_secs(90)));
+        assert_eq!(parse_duration("90s"), Ok(Duration::from_secs(90)));
+        assert_eq!(parse_duration("30m"), Ok(Duration::from_secs(1_800)));
+        assert_eq!(parse_duration("12H"), Ok(Duration::from_secs(43_200)));
+        assert_eq!(parse_duration("7d"), Ok(Duration::from_secs(604_800)));
+        assert_eq!(parse_duration(" 5m "), Ok(Duration::from_secs(300)));
+        for bad in ["", "   ", "-5", "-5h", "1.5h", "h", "10min", "ten", "1e3", "+3d"] {
+            assert!(parse_duration(bad).is_err(), "{bad:?} must be rejected");
+        }
+        // overflow is an error, not a wrap
+        assert!(parse_duration("99999999999999999999").is_err());
+        assert!(parse_duration("18446744073709551615d").is_err());
     }
 
     #[test]

@@ -17,6 +17,8 @@ fn elaps(args: &[&str]) -> Output {
         .env_remove("ELAPS_CACHE")
         .env_remove("ELAPS_JOBS")
         .env_remove("ELAPS_TRUSTED_ONLY")
+        .env_remove("ELAPS_WARM")
+        .env_remove("ELAPS_SEED")
         .output()
         .unwrap()
 }
@@ -121,6 +123,58 @@ fn gc_rejects_bad_max_bytes_strictly() {
         let out = elaps(&["cache", "gc", "--max-bytes", good, "--cache", cache_s]);
         assert!(out.status.success(), "--max-bytes {good:?}: {}", stderr(&out));
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A minimal valid schema-2 cache entry with the given store time.
+fn write_entry(dir: &Path, name: &str, created_unix: u64) {
+    std::fs::write(
+        dir.join(format!("{name}.json")),
+        format!(
+            r#"{{"schema":2,"jobs":1,"warm":false,"created_unix":{created_unix},
+               "result":{{"range_value":0,"nthreads":1,"sum_iters":1,
+                          "calls_per_iter":1,"records":[]}}}}"#
+        ),
+    )
+    .unwrap();
+}
+
+#[test]
+fn gc_max_age_parses_strictly_and_expires_by_store_time() {
+    let dir = tmpdir("maxage");
+    let cache = dir.join("cache");
+    std::fs::create_dir_all(&cache).unwrap();
+    let cache_s = cache.to_str().unwrap();
+    // strict parsing: malformed durations are hard errors
+    for bad in ["-5", "1.5h", "garbage", "10min", ""] {
+        let out = elaps(&["cache", "gc", "--max-age", bad, "--cache", cache_s]);
+        assert!(!out.status.success(), "--max-age {bad:?} must fail");
+        assert!(stderr(&out).contains("max-age"), "{}", stderr(&out));
+    }
+    // s/m/h/d suffixes (and bare seconds) parse
+    for good in ["3600", "60m", "24h", "7d", "90s"] {
+        let out = elaps(&["cache", "gc", "--max-age", good, "--cache", cache_s]);
+        assert!(out.status.success(), "--max-age {good:?}: {}", stderr(&out));
+    }
+    // an old entry expires, a fresh one survives
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap()
+        .as_secs();
+    write_entry(&cache, "old", now - 14 * 86_400);
+    write_entry(&cache, "fresh", now);
+    let out = elaps(&["cache", "gc", "--max-age", "7d", "--cache", cache_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("deleted 1/2"), "{}", stdout(&out));
+    assert!(!cache.join("old.json").exists());
+    assert!(cache.join("fresh.json").exists());
+    // combined sweep: age cutoff first, then the byte budget finishes
+    // the job — here budget 0 deletes the survivor
+    let out = elaps(&[
+        "cache", "gc", "--max-age", "7d", "--max-bytes", "0", "--cache", cache_s,
+    ]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(!cache.join("fresh.json").exists());
     let _ = std::fs::remove_dir_all(&dir);
 }
 

@@ -82,26 +82,41 @@ fn prop_envelope_roundtrip_preserves_provenance_and_records() {
         |r, size| {
             let nrecords = r.range_usize(1, 4 + size);
             let jobs = r.range_usize(1, 16);
+            let warm = r.next_u64() % 2 == 1;
             let seed = r.next_u64();
-            (nrecords, jobs, seed)
+            (nrecords, jobs, warm, seed)
         },
-        |&(nrecords, jobs, seed)| {
+        |&(nrecords, jobs, warm, seed)| {
             let key = format!("prop{seed:016x}");
-            let cache = ResultCache::open(&dir).unwrap().with_provenance(jobs);
+            let cache =
+                ResultCache::open(&dir).unwrap().with_provenance(jobs).with_warm(warm);
             let point = synthetic_result(nrecords, seed);
             cache.store(&key, &point).map_err(|e| e.to_string())?;
             let env = cache_base
                 .lookup_entry(&key)
                 .ok_or_else(|| "stored entry must parse".to_string())?;
+            if env.schema != elaps::coordinator::io::CACHE_ENTRY_SCHEMA {
+                return Err(format!("stored schema {} is stale", env.schema));
+            }
             if env.jobs != Some(jobs) {
                 return Err(format!("jobs {:?} != {jobs}", env.jobs));
+            }
+            if env.warm != warm {
+                return Err(format!("warm flag lost: {} != {warm}", env.warm));
             }
             if env.trusted() != (jobs <= 1) {
                 return Err(format!("trust rule broken for jobs={jobs}"));
             }
-            let hit = cache_base
+            // a matching-mode handle hits; the opposite mode must miss
+            // (warm and cold measurements never serve each other)
+            let same_mode = ResultCache::open(&dir).unwrap().with_warm(warm);
+            let cross_mode = ResultCache::open(&dir).unwrap().with_warm(!warm);
+            let hit = same_mode
                 .lookup(&key, nrecords)
                 .ok_or_else(|| "entry must hit with its own count".to_string())?;
+            if cross_mode.lookup(&key, nrecords).is_some() {
+                return Err("cross-mode lookup must miss".into());
+            }
             if hit.records.len() != nrecords {
                 return Err("record count changed in roundtrip".into());
             }
@@ -109,12 +124,95 @@ fn prop_envelope_roundtrip_preserves_provenance_and_records() {
                 return Err("counters changed in roundtrip".into());
             }
             // off-by-one expected count must miss, not mis-serve
-            if cache_base.lookup(&key, nrecords + 1).is_some() {
+            if same_mode.lookup(&key, nrecords + 1).is_some() {
                 return Err("wrong expected count must miss".into());
             }
             Ok(())
         },
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prop_warm_keys_are_disjoint_and_chain_on_their_prefix() {
+    let exp = range_experiment("warmkeys", vec![16, 24], 2);
+    let points = exp.unroll().unwrap();
+    forall(
+        0xBEEF,
+        24,
+        |r, _| (r.next_u64() % 2 == 1, r.next_u64() % 3, r.next_u64()),
+        |&(seeded, which, seed)| {
+            let pt = &points[(which % 2) as usize];
+            let s = seeded.then_some(seed);
+            let cold = ResultCache::fingerprint_with("rustblocked", "localhost", 2, pt, s);
+            let w0 =
+                ResultCache::warm_fingerprint("rustblocked", "localhost", 2, pt, s, None);
+            let w1 = ResultCache::warm_fingerprint(
+                "rustblocked",
+                "localhost",
+                2,
+                pt,
+                s,
+                Some(&w0),
+            );
+            if !w0.starts_with('w') || !w1.starts_with('w') {
+                return Err("warm keys must carry the w prefix".into());
+            }
+            if w0 == cold || w1 == cold || w0 == w1 {
+                return Err(format!("keys must be pairwise distinct: {cold} {w0} {w1}"));
+            }
+            // pure functions: recomputing yields the same key
+            if w1
+                != ResultCache::warm_fingerprint(
+                    "rustblocked",
+                    "localhost",
+                    2,
+                    pt,
+                    s,
+                    Some(&w0),
+                )
+            {
+                return Err("warm key must be deterministic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn schema1_entries_parse_as_cold_and_unknown_schemas_miss() {
+    let dir = tmpdir("schema1");
+    let cache = ResultCache::open(&dir).unwrap();
+    let point = synthetic_result(2, 11);
+    // a schema-1 entry, as a PR-2 build would have written it
+    let mut v1 = elaps::coordinator::io::cache_envelope_to_json(&point, 1, Some(1_700_000_000), false);
+    v1.set("schema", 1u64);
+    let v1 = {
+        let mut j = v1;
+        // schema 1 had no warm field at all
+        if let Json::Obj(m) = &mut j {
+            m.remove("warm");
+        }
+        j
+    };
+    std::fs::write(dir.join("v1.json"), v1.to_string_pretty()).unwrap();
+    let env = cache.lookup_entry("v1").unwrap();
+    assert_eq!(env.schema, 1);
+    assert_eq!(env.jobs, Some(1));
+    assert!(!env.warm, "schema-1 entries are cold by construction");
+    assert!(env.trusted());
+    // cold lookups serve it; warm-mode lookups must not
+    assert!(cache.lookup("v1", 2).is_some());
+    let warm = ResultCache::open(&dir).unwrap().with_warm(true);
+    assert!(warm.lookup("v1", 2).is_none());
+    // unknown/corrupt schemas stay misses, never errors
+    std::fs::write(dir.join("v9.json"), r#"{"schema":9,"jobs":1,"result":{"records":[]}}"#)
+        .unwrap();
+    std::fs::write(dir.join("junk.json"), "not json").unwrap();
+    for key in ["v9", "junk"] {
+        assert!(cache.lookup_entry(key).is_none(), "{key}");
+        assert!(cache.lookup(key, 0).is_none(), "{key}");
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 

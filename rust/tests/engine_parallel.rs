@@ -139,6 +139,47 @@ fn batch_submission_reports_in_input_order() {
 }
 
 #[test]
+fn parallel_probe_matches_serial_probe_exactly() {
+    // the pre-enqueue cache probe fans out across the worker pool; its
+    // combined result must be identical to the serial probe. Two cache
+    // dirs are populated by identical serial runs, then the same
+    // partially-cached batch is probed serially (jobs=1) in one dir and
+    // in parallel (jobs=4) in the other.
+    let exps = vec![
+        range_experiment("probe-a", vec![16, 24, 32]),
+        range_experiment("probe-b", vec![24, 40]),
+        range_experiment("probe-c", vec![48]),
+    ];
+    // only the first two experiments are pre-cached: the batch below is
+    // a mix of scheduled hits and misses
+    let seeded: Vec<Experiment> = exps[..2].to_vec();
+    let mut outcomes = Vec::new();
+    for (tag, jobs) in [("serial", 1usize), ("parallel", 4)] {
+        let dir = tmpdir(&format!("probe_{tag}"));
+        let seed_engine = Engine::new(EngineConfig::default().with_cache(&dir));
+        seed_engine.run_batch(&seeded).unwrap();
+        let engine = Engine::new(EngineConfig::default().with_jobs(jobs).with_cache(&dir));
+        outcomes.push((dir, engine.run_batch_stats(&exps).unwrap()));
+    }
+    let (serial, parallel) = (&outcomes[0].1, &outcomes[1].1);
+    // identical accounting: same hits, same scheduled hits, same
+    // misses, same fully-cached experiments
+    assert_eq!(serial.1.scheduled_hits, parallel.1.scheduled_hits);
+    assert_eq!(serial.1.cache_hits, parallel.1.cache_hits);
+    assert_eq!(serial.1.executed, parallel.1.executed);
+    assert_eq!(serial.1.fully_cached, parallel.1.fully_cached);
+    assert_eq!(serial.1.scheduled_hits, 5, "the five pre-cached points must hit");
+    assert_eq!(serial.1.executed, 1, "the one uncached point must execute");
+    // identical reports (in their deterministic parts)
+    for (a, b) in serial.0.iter().zip(&parallel.0) {
+        assert_structurally_identical(a, b);
+    }
+    for (dir, _) in &outcomes {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+#[test]
 fn engine_surfaces_sampler_failures() {
     let mut exp = range_experiment("bad", vec![16]);
     exp.machine = "nosuchmachine".into();

@@ -1,0 +1,277 @@
+//! Differential determinism harness for the engine's execution modes.
+//!
+//! The contracts under test (see `engine` module docs):
+//! * cold mode: parallel runs are structurally identical to serial for
+//!   any worker count (fresh sampler per point — scheduling is a race,
+//!   results are not);
+//! * warm mode: per-worker sampler reuse over deterministic
+//!   contiguous-block shards — with a fixed seed, two runs at the same
+//!   `--jobs` are **byte-identical**, and `--jobs 1` reproduces strict
+//!   serial back-to-back execution (one sampler carried across the
+//!   whole point sequence, checked against a hand-rolled reference);
+//! * warm is observable: on a cache-resident sweep the carried
+//!   simulated cache state changes counters and modeled timings;
+//! * warm and cold cache entries never serve each other.
+
+use elaps::coordinator::{io, Experiment, RangeDef};
+use elaps::engine::{Engine, EngineConfig};
+use elaps::figures::call;
+use elaps::perfmodel::MachineModel;
+use elaps::sampler::Sampler;
+use elaps::Report;
+use std::process::{Command, Output};
+
+/// A dgemm range experiment: one point per value, `nreps` records each.
+fn range_experiment(name: &str, values: Vec<i64>) -> Experiment {
+    let mut exp = Experiment {
+        name: name.into(),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps: 2,
+        range: Some(RangeDef::new("n", values)),
+        counters: vec!["PAPI_L1_TCM".into(), "PAPI_L3_TCM".into()],
+        ..Default::default()
+    };
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+    )
+    .unwrap()];
+    exp
+}
+
+/// The same cache-resident point repeated `npoints` times: the range
+/// symbol is a run index the call does not use, so every point unrolls
+/// to an identical script — the purest back-to-back scenario.
+fn repeated_point_experiment(name: &str, n: i64, npoints: i64) -> Experiment {
+    let ns = n.to_string();
+    let mut exp = Experiment {
+        name: name.into(),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps: 2,
+        range: Some(RangeDef::new("run", (1..=npoints).collect())),
+        counters: vec!["PAPI_L1_TCM".into(), "PAPI_L3_TCM".into()],
+        ..Default::default()
+    };
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+    )
+    .unwrap()];
+    exp
+}
+
+fn report_bytes(r: &Report) -> String {
+    io::report_to_json(r).to_string_pretty()
+}
+
+/// Everything about a report that is deterministic in *cold* mode
+/// (wall times are not): point order and shape, kernels, simulated
+/// counters, flop counts and OpenMP groups.
+fn assert_structurally_identical(a: &Report, b: &Report) {
+    assert_eq!(a.points.len(), b.points.len());
+    for (pa, pb) in a.points.iter().zip(&b.points) {
+        assert_eq!(pa.range_value, pb.range_value);
+        assert_eq!(pa.nthreads, pb.nthreads);
+        assert_eq!(pa.sum_iters, pb.sum_iters);
+        assert_eq!(pa.calls_per_iter, pb.calls_per_iter);
+        assert_eq!(pa.records.len(), pb.records.len());
+        for (ra, rb) in pa.records.iter().zip(&pb.records) {
+            assert_eq!(ra.kernel, rb.kernel);
+            assert_eq!(ra.counters, rb.counters, "point {}", pa.range_value);
+            assert_eq!(ra.flops, rb.flops);
+            assert_eq!(ra.omp_group, rb.omp_group);
+        }
+    }
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("elaps_warm_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+// ------------------------------------------------------------- cold
+
+#[test]
+fn cold_parallel_matches_serial_for_jobs_matrix() {
+    let exp = range_experiment("cold-matrix", vec![16, 24, 32, 40, 48]);
+    let serial = Engine::new(EngineConfig::default().with_jobs(1)).run(&exp).unwrap();
+    for jobs in [1usize, 2, 4] {
+        let parallel =
+            Engine::new(EngineConfig::default().with_jobs(jobs)).run(&exp).unwrap();
+        assert_structurally_identical(&serial, &parallel);
+    }
+}
+
+// ------------------------------------------------------------- warm
+
+#[test]
+fn warm_runs_are_byte_identical_at_fixed_jobs() {
+    let exp = range_experiment("warm-bytes", vec![16, 24, 32, 40, 48, 56]);
+    for jobs in [1usize, 4] {
+        let cfg = EngineConfig::default().with_jobs(jobs).with_warm(true).with_seed(42);
+        let a = Engine::new(cfg.clone()).run(&exp).unwrap();
+        let b = Engine::new(cfg).run(&exp).unwrap();
+        assert_eq!(
+            report_bytes(&a),
+            report_bytes(&b),
+            "warm+seed at jobs={jobs} must be byte-identical"
+        );
+    }
+}
+
+#[test]
+fn warm_jobs1_reproduces_strict_serial_back_to_back() {
+    const SEED: u64 = 7;
+    let exp = range_experiment("warm-serial", vec![16, 24, 32, 40]);
+    // hand-rolled reference: ONE sampler carried across all points in
+    // order, warm-reset at every script boundary
+    let machine = MachineModel::by_name(&exp.machine).unwrap();
+    let mut sampler: Option<Sampler> = None;
+    let mut expected = Vec::new();
+    for point in exp.unroll().unwrap() {
+        if sampler.is_none() {
+            let lib = elaps::libraries::by_name(&exp.library).unwrap();
+            sampler = Some(Sampler::new(lib, machine.clone()).deterministic(SEED));
+        } else {
+            sampler.as_mut().unwrap().reset_warm();
+        }
+        let s = sampler.as_mut().unwrap();
+        expected.push(s.run_script(&point.script).unwrap());
+    }
+    let cfg = EngineConfig::default().with_jobs(1).with_warm(true).with_seed(SEED);
+    let report = Engine::new(cfg).run(&exp).unwrap();
+    assert_eq!(report.points.len(), expected.len());
+    for (point, recs) in report.points.iter().zip(&expected) {
+        assert_eq!(point.records.len(), recs.len());
+        for (a, b) in point.records.iter().zip(recs) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.counters, b.counters, "point {}", point.range_value);
+            assert_eq!(a.flops, b.flops);
+            assert_eq!(a.omp_group, b.omp_group);
+            // modeled timings: bit-equal, not approximately equal
+            assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+            assert_eq!(a.cycles.to_bits(), b.cycles.to_bits());
+        }
+    }
+}
+
+#[test]
+fn warm_differs_from_cold_on_cache_resident_sweep() {
+    let exp = repeated_point_experiment("warm-observable", 32, 4);
+    let cold_cfg = EngineConfig::default().with_seed(5);
+    let warm_cfg = EngineConfig::default().with_seed(5).with_warm(true);
+    let cold = Engine::new(cold_cfg).run(&exp).unwrap();
+    let warm = Engine::new(warm_cfg).run(&exp).unwrap();
+
+    // cold: every point starts from empty simulated caches, so all
+    // points are bit-identical repetitions of the same measurement
+    for p in &cold.points[1..] {
+        assert_eq!(p.records[0].counters, cold.points[0].records[0].counters);
+    }
+    let cold_first = &cold.points[0].records[0];
+    assert!(cold_first.counters[0] > 0, "a cold point must miss L1");
+
+    // warm point 1 carries no state yet: identical to cold
+    let warm_first = &warm.points[0].records[0];
+    assert_eq!(warm_first.counters, cold_first.counters);
+    assert_eq!(warm_first.seconds.to_bits(), cold_first.seconds.to_bits());
+
+    // warm points 2+: operands are simulated-resident — fewer misses,
+    // and the modeled time is strictly smaller. The mode is observable.
+    for p in &warm.points[1..] {
+        let r = &p.records[0];
+        assert!(
+            r.counters[0] < cold_first.counters[0],
+            "carried state must reduce L1 misses (point {})",
+            p.range_value
+        );
+        assert!(
+            r.seconds < cold_first.seconds,
+            "warm modeled time must undercut cold (point {})",
+            p.range_value
+        );
+    }
+}
+
+#[test]
+fn warm_and_cold_cache_entries_never_cross_contaminate() {
+    let dir = tmpdir("cache_disjoint");
+    let exp = range_experiment("warm-cache", vec![16, 24, 32]);
+    let cold_cfg = EngineConfig::default().with_seed(9).with_cache(&dir);
+    let warm_cfg = cold_cfg.clone().with_warm(true);
+
+    let cold_engine = Engine::new(cold_cfg);
+    let warm_engine = Engine::new(warm_cfg);
+
+    let (_, s1) = cold_engine.run_stats(&exp).unwrap();
+    assert_eq!((s1.executed, s1.cache_hits), (3, 0));
+    // cold entries must not serve the warm run...
+    let (warm1, s2) = warm_engine.run_stats(&exp).unwrap();
+    assert_eq!((s2.executed, s2.cache_hits), (3, 0), "cold entries served warm");
+    // ...but the warm re-run replays its own entries byte-identically
+    let (warm2, s3) = warm_engine.run_stats(&exp).unwrap();
+    assert_eq!((s3.executed, s3.cache_hits), (0, 3));
+    assert_eq!(s3.fully_cached, 1);
+    assert_eq!(report_bytes(&warm1), report_bytes(&warm2));
+    // ...and the cold entries are still intact for cold lookups
+    let (_, s4) = cold_engine.run_stats(&exp).unwrap();
+    assert_eq!((s4.executed, s4.cache_hits), (0, 3), "warm run disturbed cold entries");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------- CLI
+
+fn elaps(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_elaps"))
+        .args(args)
+        .env_remove("ELAPS_CACHE")
+        .env_remove("ELAPS_JOBS")
+        .env_remove("ELAPS_TRUSTED_ONLY")
+        .env_remove("ELAPS_WARM")
+        .env_remove("ELAPS_SEED")
+        .output()
+        .unwrap()
+}
+
+#[test]
+fn warm_cli_runs_are_byte_identical_per_jobs() {
+    let dir = tmpdir("cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let exp = dir.join("exp.json");
+    std::fs::write(
+        &exp,
+        r#"{"name":"warm-cli","library":"rustblocked","machine":"localhost",
+           "nreps":2,
+           "range":{"sym":"n","values":[16,24,32,40]},
+           "calls":[["dgemm","N","N","n","n","n",1,"$A","n","$B","n",0,"$C","n"]]}"#,
+    )
+    .unwrap();
+    for jobs in ["1", "4"] {
+        let run = |out: &str| {
+            let out_path = dir.join(out);
+            let o = elaps(&[
+                "run",
+                exp.to_str().unwrap(),
+                "--warm",
+                "--seed",
+                "1",
+                "--jobs",
+                jobs,
+                "--out",
+                out_path.to_str().unwrap(),
+            ]);
+            assert!(o.status.success(), "{}", String::from_utf8_lossy(&o.stderr));
+            let stdout = String::from_utf8_lossy(&o.stdout).into_owned();
+            assert!(stdout.contains("[warm]"), "summary must mark warm mode: {stdout}");
+            std::fs::read(out_path).unwrap()
+        };
+        let a = run(&format!("a{jobs}.json"));
+        let b = run(&format!("b{jobs}.json"));
+        assert_eq!(a, b, "elaps run --warm --seed 1 --jobs {jobs} must be byte-identical");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
