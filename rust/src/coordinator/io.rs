@@ -282,9 +282,12 @@ pub fn point_result_from_json(pj: &Json) -> PointResult {
 /// History: schema 1 added `{jobs, created_unix}` provenance over the
 /// legacy bare point object; schema 2 added the `warm` flag (whether
 /// the measuring sampler carried simulated cache state from previous
-/// points). Schema-1 entries still parse, as `warm: false` — a cold
-/// measurement is exactly what a schema-1 run produced.
-pub const CACHE_ENTRY_SCHEMA: u64 = 2;
+/// points); schema 3 added `{host, worker}` — which machine and which
+/// worker process measured the entry, the provenance multi-host
+/// campaigns over one shared cache need. Schema-1 entries still parse,
+/// as `warm: false` (a cold measurement is exactly what a schema-1 run
+/// produced); schema-1/2 entries parse with unknown host/worker.
+pub const CACHE_ENTRY_SCHEMA: u64 = 3;
 
 /// A parsed result-cache entry: the stored [`PointResult`] plus the
 /// provenance the storing run recorded. `schema == 0` (with `jobs` and
@@ -303,6 +306,12 @@ pub struct CacheEnvelope {
     /// previous points (the engine's warm execution mode). Legacy and
     /// schema-1 entries are cold by construction.
     pub warm: bool,
+    /// Hostname of the measuring machine; `None` means unknown
+    /// (pre-schema-3 entry).
+    pub host: Option<String>,
+    /// Worker identity of the measuring process
+    /// ([`crate::util::hostid::new_worker_id`]); `None` means unknown.
+    pub worker: Option<String>,
     /// The cached measurement.
     pub result: PointResult,
 }
@@ -317,12 +326,14 @@ impl CacheEnvelope {
 }
 
 /// Serialize a result-cache entry as the versioned envelope
-/// `{schema, jobs, warm, created_unix, result}`.
+/// `{schema, jobs, warm, host, worker, created_unix, result}`.
 pub fn cache_envelope_to_json(
     p: &PointResult,
     jobs: usize,
     created_unix: Option<u64>,
     warm: bool,
+    host: Option<&str>,
+    worker: Option<&str>,
 ) -> Json {
     let mut j = Json::obj();
     j.set("schema", CACHE_ENTRY_SCHEMA)
@@ -332,13 +343,20 @@ pub fn cache_envelope_to_json(
     if let Some(t) = created_unix {
         j.set("created_unix", t);
     }
+    if let Some(h) = host {
+        j.set("host", h);
+    }
+    if let Some(w) = worker {
+        j.set("worker", w);
+    }
     j
 }
 
 /// Parse a result-cache entry. Envelopes with an unknown `schema` are
-/// rejected (`None` — a miss, not an error); schema-1 envelopes parse
-/// as cold (`warm: false`); a bare point object (the pre-envelope
-/// format) parses as a legacy entry with unknown provenance.
+/// rejected (`None` — a miss, not an error); schema-1/2 envelopes parse
+/// with the provenance fields they predate defaulted (cold, unknown
+/// host/worker); a bare point object (the pre-envelope format) parses
+/// as a legacy entry with unknown provenance.
 pub fn cache_envelope_from_json(j: &Json) -> Option<CacheEnvelope> {
     if j.get("schema").is_null() {
         // legacy bare entry: require at least a records array so that
@@ -349,11 +367,13 @@ pub fn cache_envelope_from_json(j: &Json) -> Option<CacheEnvelope> {
             jobs: None,
             created_unix: None,
             warm: false,
+            host: None,
+            worker: None,
             result: point_result_from_json(j),
         });
     }
     let schema = j.get("schema").as_u64()?;
-    if schema != 1 && schema != CACHE_ENTRY_SCHEMA {
+    if !(1..=CACHE_ENTRY_SCHEMA).contains(&schema) {
         return None;
     }
     // same guard as the legacy branch: a payload without a records
@@ -365,6 +385,10 @@ pub fn cache_envelope_from_json(j: &Json) -> Option<CacheEnvelope> {
         created_unix: j.get("created_unix").as_u64(),
         // schema 1 predates warm execution: those entries are cold
         warm: schema >= 2 && j.get("warm").as_bool().unwrap_or(false),
+        // schema 3 added host/worker provenance; a stray field on an
+        // older envelope is ignored, like the warm flag above
+        host: (schema >= 3).then(|| j.get("host").as_str().map(String::from)).flatten(),
+        worker: (schema >= 3).then(|| j.get("worker").as_str().map(String::from)).flatten(),
         result: point_result_from_json(j.get("result")),
     })
 }
@@ -477,21 +501,34 @@ mod tests {
                 omp_group: None,
             }],
         };
-        let j = cache_envelope_to_json(&p, 8, Some(1_700_000_000), true);
+        let j = cache_envelope_to_json(
+            &p,
+            8,
+            Some(1_700_000_000),
+            true,
+            Some("nodeA"),
+            Some("nodeA#7-0"),
+        );
         let env = cache_envelope_from_json(&j).unwrap();
         assert_eq!(env.schema, CACHE_ENTRY_SCHEMA);
         assert_eq!(env.jobs, Some(8));
         assert_eq!(env.created_unix, Some(1_700_000_000));
         assert!(env.warm);
         assert!(!env.trusted());
+        assert_eq!(env.host.as_deref(), Some("nodeA"));
+        assert_eq!(env.worker.as_deref(), Some("nodeA#7-0"));
         assert_eq!(env.result.records.len(), 1);
         assert_eq!(env.result.records[0].counters, vec![3, 4]);
-        // jobs ≤ 1 is trusted
-        let env1 = cache_envelope_from_json(&cache_envelope_to_json(&p, 1, None, false)).unwrap();
+        // jobs ≤ 1 is trusted; absent host/worker stay unknown
+        let env1 =
+            cache_envelope_from_json(&cache_envelope_to_json(&p, 1, None, false, None, None))
+                .unwrap();
         assert!(env1.trusted());
         assert!(!env1.warm);
-        // a schema-1 envelope (pre-warm) still parses, as cold
-        let mut v1 = cache_envelope_to_json(&p, 1, Some(1_700_000_000), false);
+        assert_eq!(env1.host, None);
+        assert_eq!(env1.worker, None);
+        // a schema-1 envelope (pre-warm, pre-host) still parses, as cold
+        let mut v1 = cache_envelope_to_json(&p, 1, Some(1_700_000_000), false, None, None);
         v1.set("schema", 1u64);
         let env_v1 = cache_envelope_from_json(&v1).unwrap();
         assert_eq!(env_v1.schema, 1);
@@ -501,6 +538,18 @@ mod tests {
         // ...even if some (corrupt) writer put a warm flag on it
         v1.set("warm", true);
         assert!(!cache_envelope_from_json(&v1).unwrap().warm);
+        // a schema-2 envelope (pre-host) parses with unknown host
+        let mut v2 = cache_envelope_to_json(&p, 1, None, true, None, None);
+        v2.set("schema", 2u64);
+        let env_v2 = cache_envelope_from_json(&v2).unwrap();
+        assert_eq!(env_v2.schema, 2);
+        assert!(env_v2.warm);
+        assert_eq!(env_v2.host, None);
+        // ...even if some (corrupt) writer put host/worker fields on it
+        v2.set("host", "bogus").set("worker", "bogus#0-0");
+        let env_v2b = cache_envelope_from_json(&v2).unwrap();
+        assert_eq!(env_v2b.host, None);
+        assert_eq!(env_v2b.worker, None);
         // legacy bare point: readable, provenance unknown, untrusted
         let legacy = cache_envelope_from_json(&point_result_to_json(&p)).unwrap();
         assert_eq!(legacy.schema, 0);
@@ -509,7 +558,7 @@ mod tests {
         assert!(!legacy.trusted());
         assert_eq!(legacy.result.records.len(), 1);
         // unknown schema and non-entry JSON are rejected, not errors
-        let mut wrong = cache_envelope_to_json(&p, 1, None, false);
+        let mut wrong = cache_envelope_to_json(&p, 1, None, false, None, None);
         wrong.set("schema", CACHE_ENTRY_SCHEMA + 1);
         assert!(cache_envelope_from_json(&wrong).is_none());
         assert!(cache_envelope_from_json(&Json::parse("{}").unwrap()).is_none());

@@ -1,0 +1,375 @@
+//! Job leases: the spooler's multi-host claim protocol.
+//!
+//! The original spooler guessed whether a claimed job was abandoned by
+//! looking at the claim file's mtime — a heuristic that misfires under
+//! clock skew and NFS attribute caching, exactly the shared-filesystem
+//! setting remote workers live in. This module replaces the guess with
+//! an explicit contract:
+//!
+//! * **Lease.** A claim is a JSON lease
+//!   `{job_id, worker_id, host, epoch, expires_unix}` stored in
+//!   `<spool>/leases/`, written atomically (temp + rename). Only the
+//!   worker that won the queue→running rename writes it.
+//! * **Heartbeat.** The holder renews the lease (extends
+//!   `expires_unix`) while the job runs. A worker that stops renewing —
+//!   crashed, paused, partitioned — lets the lease expire.
+//! * **Expiry reclaim.** Anyone may move a job whose lease has expired
+//!   back into the queue ([`crate::coordinator::Spooler::recover_stale`]).
+//!   The lease file stays behind: it carries the epoch.
+//! * **Epoch fencing.** Every acquisition bumps the lease's `epoch`
+//!   (read old epoch, write `epoch + 1`). A publish is only valid while
+//!   the on-disk lease still names the publisher's `(worker_id, epoch)`
+//!   *and* is unexpired — so a zombie worker (one that kept running
+//!   past its expiry) finds either a bumped epoch or an expired lease
+//!   and its late publish is rejected ([`FenceReason`]).
+//!
+//! Timestamps are absolute Unix seconds (fractional, so sub-second
+//! TTLs work), which makes the protocol independent of file mtimes —
+//! the usual lease assumption of loosely synchronized clocks replaces
+//! the unfounded assumption of consistent NFS mtimes. Pick the TTL a
+//! comfortable multiple of both the heartbeat interval and the
+//! worst-case clock skew.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One job lease: who holds which job, under which fencing epoch,
+/// until when.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lease {
+    /// The claimed job.
+    pub job_id: String,
+    /// Holder identity, unique per worker thread
+    /// ([`crate::util::hostid::new_worker_id`]).
+    pub worker_id: String,
+    /// Hostname of the holder (provenance; also the `spool status`
+    /// grouping key).
+    pub host: String,
+    /// Fencing epoch: bumped on every acquisition of this job. A
+    /// publish carrying a stale epoch is rejected.
+    pub epoch: u64,
+    /// Absolute expiry, fractional Unix seconds.
+    pub expires_unix: f64,
+}
+
+impl Lease {
+    /// Whether the lease is expired at `now` (Unix seconds).
+    pub fn expired_at(&self, now: f64) -> bool {
+        now >= self.expires_unix
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("job_id", self.job_id.as_str())
+            .set("worker_id", self.worker_id.as_str())
+            .set("host", self.host.as_str())
+            .set("epoch", self.epoch)
+            .set("expires_unix", self.expires_unix);
+        j
+    }
+
+    /// Parse a lease; corrupt or incomplete JSON yields `None` (a
+    /// missing lease, never an error — the claim then counts as
+    /// legacy).
+    pub fn from_json(j: &Json) -> Option<Lease> {
+        Some(Lease {
+            job_id: j.get("job_id").as_str()?.to_string(),
+            worker_id: j.get("worker_id").as_str()?.to_string(),
+            host: j.get("host").as_str()?.to_string(),
+            epoch: j.get("epoch").as_u64()?,
+            expires_unix: j.get("expires_unix").as_f64()?,
+        })
+    }
+}
+
+/// Current time as fractional Unix seconds (the lease clock).
+pub fn now_unix() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Why a publish (or renewal) was refused by the fence.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FenceReason {
+    /// The lease still names the publisher but has expired: the job is
+    /// up for reclaim, and a reclaimer may already be re-running it.
+    Expired { expires_unix: f64 },
+    /// The job was reclaimed and re-acquired: the on-disk lease carries
+    /// a newer epoch (and usually another worker). The publisher is a
+    /// zombie.
+    Superseded { current_epoch: u64, current_worker: String },
+    /// No lease exists for the job any more — typically another worker
+    /// already published it (publishing releases the lease).
+    LeaseGone,
+}
+
+/// Outcome of a fenced publish attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PublishOutcome {
+    /// The report landed in `<spool>/done/`.
+    Published,
+    /// The publish was rejected by the lease fence; nothing was
+    /// written.
+    Fenced(FenceReason),
+}
+
+impl PublishOutcome {
+    pub fn published(&self) -> bool {
+        matches!(self, PublishOutcome::Published)
+    }
+}
+
+// ------------------------------------------------------- lease store
+
+fn leases_dir(spool: &Path) -> PathBuf {
+    spool.join("leases")
+}
+
+pub(crate) fn lease_path(spool: &Path, job_id: &str) -> PathBuf {
+    leases_dir(spool).join(format!("{job_id}.json"))
+}
+
+/// Read the current lease of a job; `None` if absent or unreadable.
+pub fn read(spool: &Path, job_id: &str) -> Option<Lease> {
+    let text = std::fs::read_to_string(lease_path(spool, job_id)).ok()?;
+    Lease::from_json(&Json::parse(&text).ok()?)
+}
+
+/// Atomically write (create or replace) a job's lease.
+pub fn write(spool: &Path, lease: &Lease) -> Result<()> {
+    let path = lease_path(spool, &lease.job_id);
+    let tmp = crate::coordinator::submit::unique_tmp(&path);
+    std::fs::write(&tmp, lease.to_json().to_string_pretty())
+        .with_context(|| format!("writing lease for {}", lease.job_id))?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// Remove a job's lease (publish-time release). A missing lease is
+/// fine — a racing publish already released it.
+pub fn remove(spool: &Path, job_id: &str) -> Result<()> {
+    match std::fs::remove_file(lease_path(spool, job_id)) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+        Err(e) => Err(e.into()),
+    }
+}
+
+// ------------------------------------------------------ spool status
+
+/// One currently leased (or legacy-claimed) job, for `spool status`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeasedJob {
+    pub job_id: String,
+    /// `None` marks a legacy claim: a file in `running/` without a
+    /// lease, recoverable only by the mtime heuristic.
+    pub lease: Option<Lease>,
+}
+
+/// A snapshot of a spool directory: queued/leased/done totals plus the
+/// per-host breakdown behind `elaps spool status`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpoolStatus {
+    pub queued: usize,
+    pub leased: Vec<LeasedJob>,
+    pub done: usize,
+    /// Leased jobs per host; legacy claims count under `"(legacy)"`.
+    pub leased_by_host: BTreeMap<String, usize>,
+    /// Finished reports per serving host (from the report's
+    /// `served_by` stamp); reports without one count under
+    /// `"(unknown)"`.
+    pub done_by_host: BTreeMap<String, usize>,
+}
+
+impl SpoolStatus {
+    /// Multi-line human-readable rendering (the `spool status` output).
+    pub fn render(&self) -> String {
+        let now = now_unix();
+        let mut s = String::new();
+        s += &format!("  queued: {}\n", self.queued);
+        s += &format!("  leased: {}\n", self.leased.len());
+        for job in &self.leased {
+            match &job.lease {
+                Some(l) => {
+                    let left = l.expires_unix - now;
+                    let state = if left <= 0.0 {
+                        format!("expired {:.1}s ago", -left)
+                    } else {
+                        format!("expires in {left:.1}s")
+                    };
+                    s += &format!(
+                        "    {}  worker {} (host {}, epoch {}, {state})\n",
+                        job.job_id, l.worker_id, l.host, l.epoch
+                    );
+                }
+                None => {
+                    s += &format!("    {}  (legacy claim, no lease)\n", job.job_id);
+                }
+            }
+        }
+        s += &format!("  done: {}\n", self.done);
+        if !self.done_by_host.is_empty() {
+            s += "  done per host:\n";
+            for (host, n) in &self.done_by_host {
+                s += &format!("    {host:<16} {n}\n");
+            }
+        }
+        s
+    }
+}
+
+/// Count the `.json` files under `<spool>/<sub>`.
+fn count_json(spool: &Path, sub: &str) -> Result<usize> {
+    Ok(std::fs::read_dir(spool.join(sub))?
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+        .count())
+}
+
+/// Gather a [`SpoolStatus`] snapshot for the spool at `dir`.
+pub fn spool_status(dir: &Path) -> Result<SpoolStatus> {
+    if !dir.join("queue").is_dir() {
+        return Err(anyhow!("no spool directory at {}", dir.display()));
+    }
+    let mut st = SpoolStatus { queued: count_json(dir, "queue")?, ..Default::default() };
+    // leased: every claim in running/, with its lease where one exists
+    let mut leased = Vec::new();
+    for entry in std::fs::read_dir(dir.join("running"))?.filter_map(|e| e.ok()) {
+        let path = entry.path();
+        if !path.extension().is_some_and(|x| x == "json") {
+            continue;
+        }
+        let job_id = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().to_string())
+            .unwrap_or_default();
+        let lease = read(dir, &job_id);
+        let host = lease
+            .as_ref()
+            .map(|l| l.host.clone())
+            .unwrap_or_else(|| "(legacy)".to_string());
+        *st.leased_by_host.entry(host).or_insert(0) += 1;
+        leased.push(LeasedJob { job_id, lease });
+    }
+    leased.sort_by(|a, b| a.job_id.cmp(&b.job_id));
+    st.leased = leased;
+    // done: group by the served_by stamp the publisher folded in
+    for entry in std::fs::read_dir(dir.join("done"))?.filter_map(|e| e.ok()) {
+        let path = entry.path();
+        if !path.extension().is_some_and(|x| x == "json") {
+            continue;
+        }
+        st.done += 1;
+        let host = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| j.get("served_by").get("host").as_str().map(String::from))
+            .unwrap_or_else(|| "(unknown)".to_string());
+        *st.done_by_host.entry(host).or_insert(0) += 1;
+    }
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_lease_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for sub in ["queue", "running", "done", "leases"] {
+            std::fs::create_dir_all(dir.join(sub)).unwrap();
+        }
+        dir
+    }
+
+    fn lease(job: &str, epoch: u64, expires_unix: f64) -> Lease {
+        Lease {
+            job_id: job.to_string(),
+            worker_id: format!("hostA#1-{epoch}"),
+            host: "hostA".to_string(),
+            epoch,
+            expires_unix,
+        }
+    }
+
+    #[test]
+    fn lease_json_roundtrip() {
+        let l = lease("job-1", 3, 1_700_000_000.25);
+        let j = l.to_json();
+        let l2 = Lease::from_json(&j).unwrap();
+        assert_eq!(l, l2);
+        // fractional expiry survives (sub-second TTLs)
+        assert!((l2.expires_unix - 1_700_000_000.25).abs() < 1e-6);
+        // incomplete JSON is a missing lease, not a panic
+        assert!(Lease::from_json(&Json::parse(r#"{"job_id":"x"}"#).unwrap()).is_none());
+        assert!(Lease::from_json(&Json::parse("[]").unwrap()).is_none());
+    }
+
+    #[test]
+    fn expiry_is_absolute_time() {
+        let l = lease("j", 1, 100.0);
+        assert!(!l.expired_at(99.9));
+        assert!(l.expired_at(100.0));
+        assert!(l.expired_at(200.0));
+    }
+
+    #[test]
+    fn store_roundtrip_and_release() {
+        let dir = tmpdir("store");
+        assert!(read(&dir, "j1").is_none());
+        let l = lease("j1", 1, now_unix() + 60.0);
+        write(&dir, &l).unwrap();
+        assert_eq!(read(&dir, "j1").unwrap().epoch, 1);
+        // replace bumps in place (atomic rename)
+        let l2 = lease("j1", 2, now_unix() + 60.0);
+        write(&dir, &l2).unwrap();
+        assert_eq!(read(&dir, "j1").unwrap().epoch, 2);
+        remove(&dir, "j1").unwrap();
+        assert!(read(&dir, "j1").is_none());
+        // double release is fine
+        remove(&dir, "j1").unwrap();
+        // corrupt lease file reads as missing
+        std::fs::write(lease_path(&dir, "bad"), "{not json").unwrap();
+        assert!(read(&dir, "bad").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn status_counts_and_groups_by_host() {
+        let dir = tmpdir("status");
+        std::fs::write(dir.join("queue").join("q1.json"), "{}").unwrap();
+        std::fs::write(dir.join("running").join("r1.json"), "{}").unwrap();
+        std::fs::write(dir.join("running").join("r2.json"), "{}").unwrap();
+        write(&dir, &lease("r1", 2, now_unix() + 30.0)).unwrap();
+        // r2 has no lease: a legacy claim
+        std::fs::write(
+            dir.join("done").join("d1.report.json"),
+            r#"{"served_by":{"host":"hostB","worker":"hostB#9-0","epoch":1}}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("done").join("d2.report.json"), "{}").unwrap();
+        let st = spool_status(&dir).unwrap();
+        assert_eq!(st.queued, 1);
+        assert_eq!(st.leased.len(), 2);
+        assert_eq!(st.done, 2);
+        assert_eq!(st.leased_by_host.get("hostA"), Some(&1));
+        assert_eq!(st.leased_by_host.get("(legacy)"), Some(&1));
+        assert_eq!(st.done_by_host.get("hostB"), Some(&1));
+        assert_eq!(st.done_by_host.get("(unknown)"), Some(&1));
+        let text = st.render();
+        assert!(text.contains("queued: 1"), "{text}");
+        assert!(text.contains("leased: 2"), "{text}");
+        assert!(text.contains("epoch 2"), "{text}");
+        assert!(text.contains("legacy claim"), "{text}");
+        assert!(text.contains("hostB"), "{text}");
+        // a directory that is not a spool is an error
+        assert!(spool_status(&dir.join("nope")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

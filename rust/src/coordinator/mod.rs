@@ -10,11 +10,13 @@ pub mod stats;
 pub mod report;
 pub mod plot;
 pub mod io;
+pub mod lease;
 pub mod submit;
 
 pub use experiment::{Call, CallArg, DataGen, Experiment, RangeDef, Vary};
+pub use lease::{FenceReason, Lease, PublishOutcome, SpoolStatus};
 pub use plot::Figure;
 pub use report::{Metric, PointResult, Report};
 pub use stats::Stat;
-pub use submit::{run_local, Spooler};
+pub use submit::{run_local, ClaimedJob, Spooler};
 pub use symbolic::Expr;

@@ -1,13 +1,20 @@
 //! Experiment execution (§3.2.1 "submit"): run locally, or through the
 //! batch-job spooler that substitutes the paper's LoadLeveler/LSF
 //! workflows (DESIGN.md §Substitutions 5).
+//!
+//! The spooler is multi-host capable: claims are explicit, heartbeat-
+//! renewed leases with epoch fencing ([`crate::coordinator::lease`])
+//! rather than mtime-staleness guesses, so workers on several machines
+//! can drain one spool directory on a shared filesystem and a zombie
+//! worker's late publish is rejected instead of corrupting the output.
 
 use super::experiment::Experiment;
 use super::io;
+use super::lease::{self, FenceReason, Lease, PublishOutcome};
 use super::report::Report;
 use anyhow::{anyhow, bail, Result};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -23,22 +30,100 @@ pub fn run_local(exp: &Experiment) -> Result<Report> {
     crate::engine::Engine::with_defaults().run(exp)
 }
 
+/// Default lease TTL when neither `with_ttl` nor `ELAPS_LEASE_TTL`
+/// says otherwise: comfortably above typical job runtimes, so
+/// heartbeat-less [`Spooler::serve_one`] stays safe.
+const DEFAULT_LEASE_TTL: Duration = Duration::from_secs(300);
+
+/// A job this worker has claimed: the queue entry renamed into
+/// `<spool>/running/` plus the lease acquired for it. Produced by
+/// [`Spooler::claim_next`]; consumed by [`Spooler::serve_claim`] /
+/// [`Spooler::publish`].
+#[derive(Debug, Clone)]
+pub struct ClaimedJob {
+    pub job_id: String,
+    /// The lease as acquired. Renewals extend the on-disk expiry
+    /// without updating this copy — fencing always re-reads the disk.
+    pub lease: Lease,
+    /// The claim file in `<spool>/running/`.
+    running: PathBuf,
+    /// The job file's contents (the experiment JSON).
+    pub text: String,
+}
+
 /// The batch spooler: `submit` drops a job file into `<spool>/queue`;
-/// a worker (`elaps worker`, or [`serve_one`] in-process) picks it up,
-/// runs it, and writes the report to `<spool>/done`. `wait` polls for
-/// the report — the same submit → poll → fetch workflow the paper uses
-/// with LoadLeveler and LSF.
+/// a worker (`elaps worker`, or [`Spooler::serve_one`] in-process)
+/// leases it, runs it, and publishes the report to `<spool>/done`.
+/// `wait` polls for the report — the same submit → poll → fetch
+/// workflow the paper uses with LoadLeveler and LSF, extended with the
+/// lease protocol so many hosts can serve one spool.
+#[derive(Debug, Clone)]
 pub struct Spooler {
     pub dir: PathBuf,
+    /// This handle's hostname (lease + provenance identity).
+    host: String,
+    /// This handle's worker identity (unique per handle).
+    worker_id: String,
+    /// Lease TTL: how long a claim stays valid without a renewal.
+    ttl: Duration,
 }
 
 impl Spooler {
+    /// Open (creating if needed) a spool directory. The handle's
+    /// identity defaults to this process on this host; the lease TTL
+    /// comes from `ELAPS_LEASE_TTL` (e.g. `90s`, `5m`) or defaults to
+    /// 300 s.
     pub fn new(dir: impl AsRef<Path>) -> Result<Spooler> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(dir.join("queue"))?;
         std::fs::create_dir_all(dir.join("running"))?;
         std::fs::create_dir_all(dir.join("done"))?;
-        Ok(Spooler { dir })
+        std::fs::create_dir_all(dir.join("leases"))?;
+        let ttl = std::env::var("ELAPS_LEASE_TTL")
+            .ok()
+            .and_then(|v| crate::util::cli::parse_duration(&v).ok())
+            .filter(|d| !d.is_zero())
+            .unwrap_or(DEFAULT_LEASE_TTL);
+        Ok(Spooler {
+            dir,
+            host: crate::util::hostid::hostname().to_string(),
+            worker_id: crate::util::hostid::new_worker_id(),
+            ttl,
+        })
+    }
+
+    /// Override the host identity recorded in leases and provenance
+    /// (tests simulate multi-host fleets this way).
+    pub fn with_host(mut self, host: impl Into<String>) -> Spooler {
+        self.host = host.into();
+        self
+    }
+
+    /// Override the worker identity.
+    pub fn with_worker(mut self, worker_id: impl Into<String>) -> Spooler {
+        self.worker_id = worker_id.into();
+        self
+    }
+
+    /// Override the lease TTL. Zero is rejected (it would make every
+    /// claim instantly reclaimable).
+    pub fn with_ttl(mut self, ttl: Duration) -> Spooler {
+        if !ttl.is_zero() {
+            self.ttl = ttl;
+        }
+        self
+    }
+
+    pub fn host(&self) -> &str {
+        &self.host
+    }
+
+    pub fn worker_id(&self) -> &str {
+        &self.worker_id
+    }
+
+    pub fn ttl(&self) -> Duration {
+        self.ttl
     }
 
     /// Submit an experiment; returns the job id. The id embeds a
@@ -62,12 +147,12 @@ impl Spooler {
         Ok(job_id)
     }
 
-    /// Atomically claim the oldest queued job by renaming it into
-    /// `<spool>/running/`, and return its contents. Losing the rename
-    /// race to a concurrent worker (or having the fresh claim stolen by
-    /// a concurrent `recover_stale`) is not an error — the claimer just
-    /// moves on to the next queue entry.
-    fn claim_next(&self) -> Result<Option<(String, PathBuf, String)>> {
+    /// Atomically claim the oldest queued job: rename it into
+    /// `<spool>/running/` and acquire its lease (epoch = previous
+    /// epoch + 1, expiry = now + TTL). Losing the rename race to a
+    /// concurrent worker is not an error — the claimer just moves on
+    /// to the next queue entry.
+    pub fn claim_next(&self) -> Result<Option<ClaimedJob>> {
         let queue = self.dir.join("queue");
         let mut entries: Vec<_> = std::fs::read_dir(&queue)?
             .filter_map(|e| e.ok())
@@ -89,55 +174,236 @@ impl Spooler {
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
                 Err(e) => return Err(e.into()),
             };
-            // rename preserves the submit-time mtime; atomically
-            // rewrite the claim so recover_stale measures staleness
-            // from the claim, not from submission (best-effort — a
-            // failed touch only makes the job recoverable earlier, and
-            // the tmp+rename means it can never truncate the claim)
-            let touch = unique_tmp(&running);
-            if std::fs::write(&touch, &text).is_ok() {
-                let _ = std::fs::rename(&touch, &running);
-            }
-            return Ok(Some((job_id, running, text)));
+            // Acquire the lease. The epoch chains across the job's
+            // whole claim history (the previous lease file is left in
+            // place by expiry reclaims precisely so this read sees it),
+            // which is what fences a previous holder's late publish.
+            let epoch = lease::read(&self.dir, &job_id).map(|l| l.epoch).unwrap_or(0) + 1;
+            let l = Lease {
+                job_id: job_id.clone(),
+                worker_id: self.worker_id.clone(),
+                host: self.host.clone(),
+                epoch,
+                expires_unix: lease::now_unix() + self.ttl.as_secs_f64(),
+            };
+            lease::write(&self.dir, &l)?;
+            return Ok(Some(ClaimedJob { job_id, lease: l, running, text }));
         }
         Ok(None)
     }
 
-    /// Move jobs stranded in `<spool>/running/` by crashed workers back
-    /// into the queue. A job is considered stale once its claim file
-    /// has not been touched for `max_age`. Returns the number of jobs
-    /// recovered.
+    /// Heartbeat: extend the claim's on-disk lease by one TTL. Returns
+    /// `false` (without touching anything) when the lease is no longer
+    /// ours to renew — expired, superseded by a newer epoch, or gone —
+    /// at which point the worker should abandon the job: its publish
+    /// would be fenced anyway.
+    pub fn renew(&self, claim: &ClaimedJob) -> Result<bool> {
+        let Some(current) = lease::read(&self.dir, &claim.job_id) else {
+            return Ok(false);
+        };
+        let now = lease::now_unix();
+        if current.worker_id != claim.lease.worker_id
+            || current.epoch != claim.lease.epoch
+            || current.expired_at(now)
+        {
+            return Ok(false);
+        }
+        let renewed = Lease { expires_unix: now + self.ttl.as_secs_f64(), ..current };
+        lease::write(&self.dir, &renewed)?;
+        Ok(true)
+    }
+
+    /// Fenced, atomic publish of a claimed job's report payload.
     ///
-    /// Recovery gives at-least-once semantics: a job whose runtime
-    /// exceeds `max_age` may be recovered while still running and
-    /// executed twice (both executions publish complete reports
-    /// atomically; the last one wins). Pick `max_age` above the longest
-    /// expected job; true exactly-once needs worker heartbeats (see
-    /// ROADMAP "remote/multi-host workers").
-    pub fn recover_stale(&self, max_age: Duration) -> Result<usize> {
+    /// The fence: the on-disk lease must still name this claim's
+    /// `(worker_id, epoch)` and be unexpired — otherwise the claim was
+    /// (or is about to be) reclaimed, and writing would race the
+    /// reclaim's re-execution. A fenced publish writes nothing and
+    /// reports why ([`FenceReason`]). On success the report lands in
+    /// `<spool>/done/` via temp + rename (readers only ever see a
+    /// complete report), then the claim and lease are released.
+    pub fn publish(&self, claim: &ClaimedJob, payload: &str) -> Result<PublishOutcome> {
+        let fence = match lease::read(&self.dir, &claim.job_id) {
+            Some(l)
+                if l.worker_id == claim.lease.worker_id && l.epoch == claim.lease.epoch =>
+            {
+                if l.expired_at(lease::now_unix()) {
+                    Some(FenceReason::Expired { expires_unix: l.expires_unix })
+                } else {
+                    None
+                }
+            }
+            Some(l) => Some(FenceReason::Superseded {
+                current_epoch: l.epoch,
+                current_worker: l.worker_id,
+            }),
+            None => Some(FenceReason::LeaseGone),
+        };
+        if let Some(reason) = fence {
+            return Ok(PublishOutcome::Fenced(reason));
+        }
+        let done = self.dir.join("done").join(format!("{}.report.json", claim.job_id));
+        let tmp = unique_tmp(&done);
+        std::fs::write(&tmp, payload)?;
+        std::fs::rename(&tmp, &done)?;
+        // Release only what is still ours: if the lease expired in the
+        // tiny window since the fence check and a successor already
+        // re-acquired the job, its claim and epoch-bumped lease must
+        // not be torn down — the successor finishes and republishes
+        // the same report (at-least-once, last writer wins).
+        let still_ours = lease::read(&self.dir, &claim.job_id)
+            .is_some_and(|l| {
+                l.worker_id == claim.lease.worker_id && l.epoch == claim.lease.epoch
+            });
+        if still_ours {
+            // claim file first, lease last (a crash in between leaves
+            // a reclaimable claim whose re-execution republishes the
+            // same report — consistent)
+            match std::fs::remove_file(&claim.running) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e.into()),
+            }
+            lease::remove(&self.dir, &claim.job_id)?;
+        }
+        Ok(PublishOutcome::Published)
+    }
+
+    /// The `served_by` provenance stamp folded into every published
+    /// report: which host/worker, under which lease epoch, produced it.
+    fn served_by_json(&self, epoch: u64) -> crate::util::json::Json {
+        let mut j = crate::util::json::Json::obj();
+        j.set("host", self.host.as_str())
+            .set("worker", self.worker_id.as_str())
+            .set("epoch", epoch);
+        j
+    }
+
+    /// Execute a claimed job and render its report payload (never
+    /// errors: a malformed job file is the job's failure, not the
+    /// worker's — it is published as an error report like any failed
+    /// run, so poison jobs cannot crash-loop the worker).
+    fn execute_payload(&self, claim: &ClaimedJob) -> String {
+        let result = crate::util::json::Json::parse(&claim.text)
+            .map_err(|e| anyhow!("invalid job file: {e}"))
+            .and_then(|j| io::experiment_from_json(&j))
+            .and_then(|exp| run_local(&exp));
+        let mut j = match result {
+            Ok(report) => io::report_to_json(&report),
+            Err(e) => {
+                let mut j = crate::util::json::Json::obj();
+                j.set("error", format!("{e:#}"));
+                j
+            }
+        };
+        j.set("served_by", self.served_by_json(claim.lease.epoch));
+        j.to_string_pretty()
+    }
+
+    /// Run a claimed job and publish its report. With `heartbeat`, a
+    /// sidecar thread renews the lease every TTL/3 while the job
+    /// executes, so jobs may outlive a single TTL; without it the job
+    /// must finish within one TTL or its publish is fenced (useful in
+    /// tests that drive the fence deliberately).
+    pub fn serve_claim(&self, claim: &ClaimedJob, heartbeat: bool) -> Result<PublishOutcome> {
+        let payload = if heartbeat {
+            let stop = AtomicBool::new(false);
+            let interval = (self.ttl / 3).max(Duration::from_millis(10));
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let mut last = Instant::now();
+                    while !stop.load(Ordering::Relaxed) {
+                        std::thread::sleep(Duration::from_millis(10));
+                        if last.elapsed() >= interval {
+                            last = Instant::now();
+                            match self.renew(claim) {
+                                // lease cleanly lost (expired,
+                                // superseded, gone): stop renewing and
+                                // let the publish fence report it
+                                Ok(false) => break,
+                                Ok(true) => {}
+                                // transient fs error (NFS hiccup):
+                                // keep the heartbeat alive and retry
+                                // on the next tick
+                                Err(_) => {}
+                            }
+                        }
+                    }
+                });
+                let payload = self.execute_payload(claim);
+                stop.store(true, Ordering::Relaxed);
+                payload
+            })
+        } else {
+            self.execute_payload(claim)
+        };
+        self.publish(claim, &payload)
+    }
+
+    /// Worker side: take one queued job (if any), run it with the
+    /// heartbeat keeping the lease alive (so jobs longer than one TTL
+    /// are safe on every path), publish the report. Returns the
+    /// processed job id; a fenced publish (this worker lost the job to
+    /// a reclaim) is reported on stderr — the reclaiming worker owns
+    /// the job now.
+    pub fn serve_one(&self) -> Result<Option<String>> {
+        let Some(claim) = self.claim_next()? else {
+            return Ok(None);
+        };
+        let job_id = claim.job_id.clone();
+        if let PublishOutcome::Fenced(reason) = self.serve_claim(&claim, true)? {
+            eprintln!(
+                "warning: publish of job {job_id} fenced ({reason:?}); a reclaimer owns it"
+            );
+        }
+        Ok(Some(job_id))
+    }
+
+    /// Requeue jobs whose claims are dead: leased claims whose lease
+    /// has **expired** (the lease protocol — `legacy_max_age` plays no
+    /// part), and legacy claims (a file in `running/` with no lease,
+    /// e.g. from a pre-lease worker) whose claim-file mtime is older
+    /// than `legacy_max_age`. Lease files are deliberately left in
+    /// place: they carry the fencing epoch the next claimer bumps.
+    /// Returns the number of jobs requeued.
+    ///
+    /// Reclaim gives at-least-once semantics: between a lease's expiry
+    /// and its holder noticing, the job can be re-executed; both
+    /// executions publish complete reports atomically and the zombie's
+    /// is fenced out, so readers still see exactly one report.
+    pub fn recover_stale(&self, legacy_max_age: Duration) -> Result<usize> {
         let running = self.dir.join("running");
+        let now = lease::now_unix();
         let mut recovered = 0;
         for entry in std::fs::read_dir(&running)?.filter_map(|e| e.ok()) {
             let path = entry.path();
             if !path.extension().is_some_and(|x| x == "json") {
                 continue;
             }
-            let age = entry
-                .metadata()
-                .ok()
-                .and_then(|m| m.modified().ok())
-                .and_then(|t| t.elapsed().ok());
-            // only a readable, past timestamp older than max_age is
-            // stale; future-dated mtimes (clock skew) and unreadable
-            // metadata count as fresh so live jobs are never stolen
-            // on a hiccup
-            if !age.is_some_and(|a| a >= max_age) {
+            let job_id = path_job_id(&path);
+            let stale = match lease::read(&self.dir, &job_id) {
+                // leased claim: absolute expiry, mtimes are irrelevant
+                Some(l) => l.expired_at(now),
+                // legacy claim: fall back to the old mtime heuristic.
+                // Only a readable, past timestamp older than
+                // legacy_max_age is stale; future-dated mtimes (clock
+                // skew) and unreadable metadata count as fresh so live
+                // jobs are never stolen on a hiccup.
+                None => entry
+                    .metadata()
+                    .ok()
+                    .and_then(|m| m.modified().ok())
+                    .and_then(|t| t.elapsed().ok())
+                    .is_some_and(|age| age >= legacy_max_age),
+            };
+            if !stale {
                 continue;
             }
             let dest = self.dir.join("queue").join(path.file_name().unwrap());
             match std::fs::rename(&path, &dest) {
                 Ok(()) => recovered += 1,
-                // the (not so crashed) worker finished or re-claimed it
+                // the (not so dead) worker finished or a concurrent
+                // reclaimer got there first
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
                 Err(e) => return Err(e.into()),
             }
@@ -145,41 +411,10 @@ impl Spooler {
         Ok(recovered)
     }
 
-    /// Worker side: take one queued job (if any), run it, write the
-    /// report. Returns the processed job id.
-    pub fn serve_one(&self) -> Result<Option<String>> {
-        let Some((job_id, running, text)) = self.claim_next()? else {
-            return Ok(None);
-        };
-        // A malformed job file is the job's failure, not the worker's:
-        // publish it as an error report like any failed run, so poison
-        // jobs cannot crash-loop the worker through recover_stale.
-        let result = crate::util::json::Json::parse(&text)
-            .map_err(|e| anyhow!("invalid job file: {e}"))
-            .and_then(|j| io::experiment_from_json(&j))
-            .and_then(|exp| run_local(&exp));
-        let done = self.dir.join("done").join(format!("{job_id}.report.json"));
-        let payload = match result {
-            Ok(report) => io::report_to_json(&report).to_string_pretty(),
-            Err(e) => {
-                let mut j = crate::util::json::Json::obj();
-                j.set("error", format!("{e:#}"));
-                j.to_string_pretty()
-            }
-        };
-        // atomic publish: if a duplicate worker (after recover_stale)
-        // races us, readers still only ever see one complete report
-        let tmp = unique_tmp(&done);
-        std::fs::write(&tmp, payload)?;
-        std::fs::rename(&tmp, &done)?;
-        // the claim may already be gone if recover_stale requeued this
-        // job and another worker finished it — our report is still valid
-        match std::fs::remove_file(&running) {
-            Ok(()) => {}
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-            Err(e) => return Err(e.into()),
-        }
-        Ok(Some(job_id))
+    /// [`Spooler::recover_stale`] restricted to the lease protocol:
+    /// requeues only expired leases, never legacy claims.
+    pub fn reclaim_expired(&self) -> Result<usize> {
+        self.recover_stale(Duration::MAX)
     }
 
     /// Number of jobs currently waiting in the queue.
@@ -204,13 +439,23 @@ impl Spooler {
         Ok(Some(io::report_from_json(&j)?))
     }
 
-    /// Block until a job's report appears, polling with exponential
-    /// backoff (10 ms doubling up to 1 s — the submit → poll → fetch
-    /// workflow of the paper's LoadLeveler/LSF setups, without busy-
-    /// spinning on the filesystem).
+    /// Block until a job's report appears, polling with jittered
+    /// exponential backoff (10 ms doubling, sleeps drawn uniformly
+    /// from [base/2, base], capped at 1 s) — the submit → poll → fetch
+    /// workflow of the paper's LoadLeveler/LSF setups. The jitter
+    /// desynchronizes many clients waiting on one shared (NFS) spool,
+    /// so poll stampedes don't hammer the fileserver in lockstep.
     pub fn wait(&self, job_id: &str, timeout: Duration) -> Result<Report> {
         let deadline = Instant::now() + timeout;
-        let mut delay = Duration::from_millis(10);
+        // deterministic per (job, process): reproducible traces, yet
+        // different clients spread out
+        let mut seed = 0xcbf2_9ce4_8422_2325u64;
+        for b in job_id.bytes() {
+            seed ^= b as u64;
+            seed = seed.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut rng = crate::util::rng::Xoshiro256::seeded(seed ^ std::process::id() as u64);
+        let mut base = Duration::from_millis(10);
         loop {
             if let Some(report) = self.fetch(job_id)? {
                 return Ok(report);
@@ -219,23 +464,28 @@ impl Spooler {
             if now >= deadline {
                 bail!("timed out after {timeout:?} waiting for job {job_id}");
             }
-            std::thread::sleep(delay.min(deadline - now));
-            delay = (delay * 2).min(Duration::from_secs(1));
+            let jittered = base.mul_f64(rng.range_f64(0.5, 1.0));
+            std::thread::sleep(jittered.min(deadline - now));
+            base = (base * 2).min(Duration::from_secs(1));
         }
     }
 
-    /// Drain the queue with `jobs` concurrent workers (the multi-worker
-    /// spooler loop behind `elaps worker --jobs N`). Each worker claims
-    /// jobs via the atomic rename until the queue is empty. Returns the
-    /// number of jobs served.
+    /// Drain the queue with `jobs` concurrent workers. Each worker gets
+    /// its own lease identity and claims jobs until the queue is empty.
+    /// Returns the number of jobs served.
     pub fn drain(&self, jobs: usize) -> Result<usize> {
         let jobs = jobs.max(1);
         let served = AtomicUsize::new(0);
         let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let spoolers: Vec<Spooler> = (0..jobs)
+            .map(|i| self.clone().with_worker(format!("{}/d{i}", self.worker_id)))
+            .collect();
         std::thread::scope(|s| {
-            for _ in 0..jobs {
-                s.spawn(|| loop {
-                    match self.serve_one() {
+            for sp in &spoolers {
+                let served = &served;
+                let first_err = &first_err;
+                s.spawn(move || loop {
+                    match sp.serve_one() {
                         Ok(Some(_)) => {
                             served.fetch_add(1, Ordering::Relaxed);
                         }
@@ -246,6 +496,75 @@ impl Spooler {
                                 *guard = Some(e);
                             }
                             break;
+                        }
+                    }
+                });
+            }
+        });
+        if let Some(e) = first_err.lock().unwrap().take() {
+            return Err(e);
+        }
+        Ok(served.load(Ordering::Relaxed))
+    }
+
+    /// The worker daemon loop behind `elaps worker`: `workers` threads,
+    /// each cycling serve → heartbeat → publish with expiry reclaim
+    /// between claims. Runs until the queue stays empty (`once`) or
+    /// until `shutdown` is raised (the SIGTERM flag) — in-flight jobs
+    /// are finished and published either way: the drain is graceful.
+    /// `legacy_max_age` additionally reclaims pre-lease claims by
+    /// mtime; `None` turns that heuristic off.
+    /// Returns the number of jobs this pool published.
+    pub fn run_worker_pool(
+        &self,
+        workers: usize,
+        once: bool,
+        legacy_max_age: Option<Duration>,
+        shutdown: &AtomicBool,
+    ) -> Result<usize> {
+        let workers = workers.max(1);
+        let served = AtomicUsize::new(0);
+        let first_err: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        let spoolers: Vec<Spooler> = (0..workers)
+            .map(|i| self.clone().with_worker(format!("{}/w{i}", self.worker_id)))
+            .collect();
+        let legacy = legacy_max_age.unwrap_or(Duration::MAX);
+        std::thread::scope(|s| {
+            for sp in &spoolers {
+                let served = &served;
+                let first_err = &first_err;
+                s.spawn(move || {
+                    let run = || -> Result<()> {
+                        loop {
+                            if shutdown.load(Ordering::Relaxed) {
+                                return Ok(());
+                            }
+                            sp.recover_stale(legacy)?;
+                            match sp.claim_next()? {
+                                Some(claim) => {
+                                    if sp.serve_claim(&claim, true)?.published() {
+                                        served.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                }
+                                None => {
+                                    if once {
+                                        return Ok(());
+                                    }
+                                    // idle poll, responsive to shutdown
+                                    for _ in 0..10 {
+                                        if shutdown.load(Ordering::Relaxed) {
+                                            return Ok(());
+                                        }
+                                        std::thread::sleep(Duration::from_millis(20));
+                                    }
+                                }
+                            }
+                        }
+                    };
+                    if let Err(e) = run() {
+                        let mut guard = first_err.lock().unwrap();
+                        if guard.is_none() {
+                            *guard = Some(e);
                         }
                     }
                 });
@@ -275,7 +594,7 @@ fn path_job_id(path: &Path) -> String {
 
 /// A sibling temp path unique across processes *and* within this
 /// process, for atomic write+rename publishes.
-fn unique_tmp(path: &Path) -> PathBuf {
+pub(crate) fn unique_tmp(path: &Path) -> PathBuf {
     static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
     path.with_extension(format!(
         "{}.{}.tmp",
@@ -350,6 +669,7 @@ mod tests {
     #[test]
     fn spooler_roundtrip() {
         let dir = std::env::temp_dir().join(format!("elaps_spool_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
         let spool = Spooler::new(&dir).unwrap();
         let mut exp = dgemm_experiment(30);
         exp.nreps = 2;
@@ -361,22 +681,58 @@ mod tests {
     }
 
     #[test]
+    fn claim_acquires_lease_and_publish_releases_it() {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_spool_lease_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = Spooler::new(&dir).unwrap().with_host("hostA");
+        let id = spool.submit(&dgemm_experiment(16)).unwrap();
+        let claim = spool.claim_next().unwrap().unwrap();
+        assert_eq!(claim.job_id, id);
+        assert_eq!(claim.lease.epoch, 1, "first acquisition");
+        assert_eq!(claim.lease.host, "hostA");
+        let on_disk = lease::read(&dir, &id).unwrap();
+        assert_eq!(on_disk, claim.lease);
+        assert!(!on_disk.expired_at(lease::now_unix()), "fresh lease");
+        // renewal extends the on-disk expiry
+        assert!(spool.renew(&claim).unwrap());
+        assert!(lease::read(&dir, &id).unwrap().expires_unix >= on_disk.expires_unix);
+        // publish succeeds and releases claim + lease
+        let outcome = spool.serve_claim(&claim, false).unwrap();
+        assert_eq!(outcome, PublishOutcome::Published);
+        assert!(lease::read(&dir, &id).is_none(), "lease released");
+        assert!(!dir.join("running").join(format!("{id}.json")).exists());
+        let report = spool.fetch(&id).unwrap().unwrap();
+        assert_eq!(report.points.len(), 1);
+        // the done payload carries the served_by provenance stamp
+        let raw =
+            std::fs::read_to_string(dir.join("done").join(format!("{id}.report.json")))
+                .unwrap();
+        assert!(raw.contains("served_by"), "{raw}");
+        assert!(raw.contains("hostA"), "{raw}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn crashed_worker_job_is_recovered() {
         let dir =
             std::env::temp_dir().join(format!("elaps_spool_recover_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let spool = Spooler::new(&dir).unwrap();
         let id = spool.submit(&dgemm_experiment(20)).unwrap();
-        // simulate a worker that claimed the job and then crashed
+        // simulate a pre-lease worker that claimed the job and then
+        // crashed: a claim file with no lease (the legacy path)
         std::fs::rename(
             dir.join("queue").join(format!("{id}.json")),
             dir.join("running").join(format!("{id}.json")),
         )
         .unwrap();
         assert_eq!(spool.serve_one().unwrap(), None, "claimed job must be invisible");
-        // a fresh claim is not stale yet
+        // a fresh legacy claim is not stale yet
         assert_eq!(spool.recover_stale(std::time::Duration::from_secs(3600)).unwrap(), 0);
-        // with zero tolerance it is recovered and servable again
+        // the pure lease reclaim never touches legacy claims
+        assert_eq!(spool.reclaim_expired().unwrap(), 0);
+        // with zero mtime tolerance it is recovered and servable again
         assert_eq!(spool.recover_stale(std::time::Duration::ZERO).unwrap(), 1);
         assert_eq!(spool.serve_one().unwrap().as_deref(), Some(id.as_str()));
         assert!(spool.fetch(&id).unwrap().is_some());
@@ -410,6 +766,7 @@ mod tests {
         assert_eq!(spool.drain(3).unwrap(), 4);
         for id in &ids {
             assert!(spool.fetch(id).unwrap().is_some(), "{id}");
+            assert!(lease::read(&dir, id).is_none(), "{id}: lease released");
         }
         assert_eq!(spool.serve_one().unwrap(), None);
         let _ = std::fs::remove_dir_all(&dir);
@@ -434,6 +791,29 @@ mod tests {
         let id2 = spool.submit(&dgemm_experiment(16)).unwrap();
         let err = spool.wait(&id2, Duration::from_millis(40)).unwrap_err();
         assert!(err.to_string().contains("timed out"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_pool_once_drains_queue_and_respects_shutdown() {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_spool_pool_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = Spooler::new(&dir).unwrap();
+        let ids: Vec<String> =
+            (0..3).map(|_| spool.submit(&dgemm_experiment(12)).unwrap()).collect();
+        let shutdown = AtomicBool::new(false);
+        let served = spool.run_worker_pool(2, true, None, &shutdown).unwrap();
+        assert_eq!(served, 3);
+        for id in &ids {
+            assert!(spool.fetch(id).unwrap().is_some(), "{id}");
+        }
+        // a pre-raised shutdown flag exits without claiming anything
+        let id = spool.submit(&dgemm_experiment(12)).unwrap();
+        shutdown.store(true, Ordering::Relaxed);
+        assert_eq!(spool.run_worker_pool(2, false, None, &shutdown).unwrap(), 0);
+        assert_eq!(spool.queued().unwrap(), 1);
+        assert!(spool.fetch(&id).unwrap().is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -318,6 +318,7 @@ pub fn run_batch_stats(
         scheduled_hits,
         jobs,
         warm: false,
+        host: crate::util::hostid::hostname().to_string(),
     };
     Ok((reports, stats))
 }
@@ -498,6 +499,7 @@ fn run_batch_warm(
         scheduled_hits,
         jobs,
         warm: true,
+        host: crate::util::hostid::hostname().to_string(),
     };
     Ok((reports, stats))
 }

@@ -11,15 +11,19 @@
 //! to operand sizes, vary specs, counters or thread counts changes the
 //! script and therefore the key.
 //!
-//! **Entry format (envelope schema 1).** Each entry is a JSON object
-//! `{schema, jobs, created_unix, result}` ([`CacheEnvelope`]): `jobs`
-//! records the worker-pool width of the measuring run (the timing
-//! provenance — entries measured with `jobs > 1` carry contention-
-//! inflated wall times), `created_unix` the store time, and `result`
-//! the [`PointResult`] payload. Legacy pre-envelope entries (a bare
-//! point object) remain readable with unknown provenance. Corrupt,
-//! truncated or unknown-schema files are cache *misses*, never errors.
-//! With [`ResultCache::with_trusted_only`], lookups additionally reject
+//! **Entry format (envelope schema 3).** Each entry is a JSON object
+//! `{schema, jobs, warm, host, worker, created_unix, result}`
+//! ([`CacheEnvelope`]): `jobs` records the worker-pool width of the
+//! measuring run (the timing provenance — entries measured with
+//! `jobs > 1` carry contention-inflated wall times), `warm` the
+//! sampler-reuse mode, `host`/`worker` which machine and worker
+//! process measured it (the multi-host provenance shared NFS caches
+//! need; `elaps cache stats` breaks entries down by host),
+//! `created_unix` the store time, and `result` the [`PointResult`]
+//! payload. Legacy pre-envelope entries (a bare point object) remain
+//! readable with unknown provenance. Corrupt, truncated or
+//! unknown-schema files are cache *misses*, never errors. With
+//! [`ResultCache::with_trusted_only`], lookups additionally reject
 //! every entry that cannot prove `jobs ≤ 1`.
 
 use crate::coordinator::experiment::UnrolledPoint;
@@ -48,6 +52,10 @@ pub struct ResultCache {
     /// When set, `lookup` serves only entries proven to be measured
     /// without worker contention (`jobs ≤ 1`).
     trusted_only: bool,
+    /// Host/worker provenance recorded on every `store` (schema-3
+    /// envelope fields). Defaults to this process on this host.
+    host: String,
+    worker: String,
 }
 
 /// 64-bit FNV-1a (the registry provides no hashing crates; this is the
@@ -71,12 +79,32 @@ impl ResultCache {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating cache dir {}", dir.display()))?;
-        Ok(ResultCache { dir, store_jobs: 1, warm: false, trusted_only: false })
+        Ok(ResultCache {
+            dir,
+            store_jobs: 1,
+            warm: false,
+            trusted_only: false,
+            host: crate::util::hostid::hostname().to_string(),
+            worker: crate::util::hostid::new_worker_id(),
+        })
     }
 
     /// Record `jobs` as the provenance of every entry this cache stores.
     pub fn with_provenance(mut self, jobs: usize) -> ResultCache {
         self.store_jobs = jobs;
+        self
+    }
+
+    /// Override the host/worker provenance recorded on stores (the
+    /// spooler stamps entries with the serving worker's lease
+    /// identity; tests simulate multi-host fleets).
+    pub fn with_worker(
+        mut self,
+        host: impl Into<String>,
+        worker: impl Into<String>,
+    ) -> ResultCache {
+        self.host = host.into();
+        self.worker = worker.into();
         self
     }
 
@@ -242,7 +270,14 @@ impl ResultCache {
             .duration_since(std::time::UNIX_EPOCH)
             .ok()
             .map(|d| d.as_secs());
-        let j = io::cache_envelope_to_json(point, self.store_jobs, created, self.warm);
+        let j = io::cache_envelope_to_json(
+            point,
+            self.store_jobs,
+            created,
+            self.warm,
+            Some(&self.host),
+            Some(&self.worker),
+        );
         std::fs::write(&tmp, j.to_string_pretty())?;
         std::fs::rename(&tmp, &path)?;
         Ok(())
@@ -377,13 +412,18 @@ mod tests {
         let dir = std::env::temp_dir()
             .join(format!("elaps_cache_prov_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
-        let cache = ResultCache::open(&dir).unwrap().with_provenance(8);
+        let cache = ResultCache::open(&dir)
+            .unwrap()
+            .with_provenance(8)
+            .with_worker("nodeX", "nodeX#1-0");
         cache.store("contended", &result(3)).unwrap();
         let env = cache.lookup_entry("contended").unwrap();
         assert_eq!(env.schema, CACHE_ENTRY_SCHEMA);
         assert_eq!(env.jobs, Some(8));
         assert!(env.created_unix.is_some());
         assert!(!env.trusted());
+        assert_eq!(env.host.as_deref(), Some("nodeX"));
+        assert_eq!(env.worker.as_deref(), Some("nodeX#1-0"));
         // plain lookups serve it; trusted-only lookups reject it
         assert!(cache.lookup("contended", 3).is_some());
         let strict = ResultCache::open(&dir).unwrap().with_trusted_only(true);

@@ -19,6 +19,7 @@
 use crate::coordinator::io;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::time::{Duration, SystemTime};
 
@@ -58,6 +59,11 @@ pub struct CacheStats {
     /// Entry count per [`AGE_BUCKETS`] bucket (by `created_unix` when
     /// recorded, mtime otherwise).
     pub ages: [usize; AGE_BUCKETS.len()],
+    /// Entries per measuring host (the schema-3 envelope's `host`
+    /// provenance); pre-schema-3, legacy and unreadable entries count
+    /// under `"(unknown)"`. The ROADMAP's size-aware-stats item for
+    /// shared multi-host caches.
+    pub by_host: BTreeMap<String, usize>,
 }
 
 impl CacheStats {
@@ -75,6 +81,12 @@ impl CacheStats {
         s += "  age histogram:\n";
         for (i, (label, _)) in AGE_BUCKETS.iter().enumerate() {
             s += &format!("    {label:<9} {}\n", self.ages[i]);
+        }
+        if !self.by_host.is_empty() {
+            s += "  per-host:\n";
+            for (host, n) in &self.by_host {
+                s += &format!("    {host:<16} {n}\n");
+            }
         }
         s
     }
@@ -148,6 +160,11 @@ pub fn cache_stats(dir: &Path) -> Result<CacheStats> {
         st.total_bytes += ent.bytes;
         let env = Json::parse(&text).ok().as_ref().and_then(io::cache_envelope_from_json);
         let created = env.as_ref().and_then(|e| e.created_unix);
+        let host = env
+            .as_ref()
+            .and_then(|e| e.host.clone())
+            .unwrap_or_else(|| "(unknown)".to_string());
+        *st.by_host.entry(host).or_insert(0) += 1;
         match env {
             None => st.unreadable += 1,
             Some(e) => {
@@ -343,6 +360,34 @@ mod tests {
         assert_eq!(st.ages[1], 1); // < 1 hour
         assert_eq!(st.ages[4], 1); // older
         assert!(st.render().contains("entries:     3"));
+        // raw files carry no host provenance
+        assert_eq!(st.by_host.get("(unknown)"), Some(&3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_break_entries_down_by_host() {
+        let dir = tmpdir("byhost");
+        let entry = |host: &str| {
+            format!(
+                r#"{{"schema":3,"jobs":1,"warm":false,"host":"{host}","worker":"{host}#1-0",
+                   "result":{{"range_value":0,"nthreads":1,"sum_iters":1,
+                              "calls_per_iter":1,"records":[]}}}}"#
+            )
+        };
+        std::fs::write(dir.join("a1.json"), entry("nodeA")).unwrap();
+        std::fs::write(dir.join("a2.json"), entry("nodeA")).unwrap();
+        std::fs::write(dir.join("b1.json"), entry("nodeB")).unwrap();
+        // a schema-2 (pre-host) envelope counts as unknown
+        std::fs::write(dir.join("old.json"), envelope_json(1_700_000_000)).unwrap();
+        let st = cache_stats(&dir).unwrap();
+        assert_eq!(st.entries, 4);
+        assert_eq!(st.by_host.get("nodeA"), Some(&2));
+        assert_eq!(st.by_host.get("nodeB"), Some(&1));
+        assert_eq!(st.by_host.get("(unknown)"), Some(&1));
+        let text = st.render();
+        assert!(text.contains("per-host:"), "{text}");
+        assert!(text.contains("nodeA"), "{text}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

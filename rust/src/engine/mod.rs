@@ -184,7 +184,7 @@ impl EngineConfig {
 
 /// Execution statistics of one engine run or batch: the hit/miss/skip
 /// accounting behind the CLI's summary line.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct BatchStats {
     /// Experiments submitted.
     pub experiments: usize,
@@ -204,6 +204,10 @@ pub struct BatchStats {
     /// Whether the run executed in warm mode (per-worker sampler reuse
     /// with deterministic sharding).
     pub warm: bool,
+    /// Hostname the batch executed on — the provenance the multi-host
+    /// spooler extends from jobs to `(host, worker)`; empty when
+    /// unknown (hand-built stats).
+    pub host: String,
 }
 
 impl BatchStats {
@@ -230,6 +234,9 @@ impl BatchStats {
                 ", {}/{} experiment(s) fully cached",
                 self.fully_cached, self.experiments
             );
+        }
+        if !self.host.is_empty() {
+            line += &format!(" @{}", self.host);
         }
         if self.warm {
             line += " [warm]";
@@ -388,6 +395,9 @@ mod tests {
         assert_eq!(stats.cache_hits, 0);
         assert_eq!(stats.total_points(), 3);
         assert!(stats.summary_line().contains("3 executed"));
+        // provenance: the batch records the executing host
+        assert_eq!(stats.host, crate::util::hostid::hostname());
+        assert!(stats.summary_line().contains(&format!("@{}", stats.host)));
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!   figures [ids…]        regenerate the paper's tables/figures
 //!   cache stats|gc|clear  result-cache lifecycle (sizes, LRU eviction)
 //!   sampler               stdin/stdout sampler (the paper's §3.1 tool)
-//!   worker --spool <dir>  batch-queue worker
+//!   worker --spool <dir>  lease-based batch-queue worker daemon
+//!   spool status          queued/leased/done per host for a spool dir
 //!   kernels               list the kernel signature database
 //!   libraries             list available kernel libraries
 //!
@@ -43,7 +44,9 @@ USAGE:
   elaps cache gc [--max-bytes N[K|M|G]] [--max-age DUR] [--cache DIR]
   elaps cache clear [--cache DIR]
   elaps sampler [--library L] [--machine M]
-  elaps worker --spool DIR [--once] [--jobs N] [--recover SECS|0=off]
+  elaps worker --spool DIR [--once] [--workers N] [--lease-ttl DUR]
+               [--recover SECS|0=off]
+  elaps spool status [--spool DIR]
   elaps kernels
   elaps libraries
 
@@ -65,6 +68,15 @@ stats:   min max avg med std
                --warm and --jobs are byte-identical (env ELAPS_SEED)
 --max-bytes N  cache gc byte budget; K/M/G suffixes are powers of 1024
 --max-age DUR  cache gc age cutoff by store time: N[s|m|h|d], e.g. 7d
+--workers N    worker daemon threads draining one spool (default 1)
+--lease-ttl D  job-lease TTL, N[s|m|h|d] (default 300s; env
+               ELAPS_LEASE_TTL). Leases are heartbeat-renewed while a
+               job runs; an expired lease is reclaimed by any worker,
+               and the late publish of the old holder is fenced off by
+               the lease epoch. SIGTERM drains gracefully: in-flight
+               jobs finish and publish, no new jobs are claimed.
+--recover SECS reclaim age for legacy (pre-lease) claims; 0 disables
+               the mtime heuristic (leased claims are unaffected)
 ";
 
 fn main() {
@@ -102,6 +114,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "cache" => cmd_cache(&args),
         "sampler" => cmd_sampler(&args),
         "worker" => cmd_worker(&args),
+        "spool" => cmd_spool(&args),
         "kernels" => cmd_kernels(),
         "libraries" => cmd_libraries(),
         "help" | "--help" | "-h" => {
@@ -445,44 +458,105 @@ fn cmd_sampler(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The worker daemon's shutdown flag, raised by SIGTERM/SIGINT so the
+/// pool drains gracefully: in-flight jobs finish and publish, no new
+/// jobs are claimed.
+static SHUTDOWN: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn raise_shutdown(_sig: i32) {
+    // only an atomic store: async-signal-safe
+    SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+}
+
+/// Route SIGTERM and SIGINT to the shutdown flag (best-effort; on
+/// failure the daemon still works, it just dies hard on signals).
+#[cfg(unix)]
+fn install_shutdown_handler() {
+    // libc's classic signal(2) registration — the crates.io cache has
+    // no `libc`/`signal-hook`, but the symbol is always there since
+    // std links libc on unix
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGTERM, raise_shutdown);
+        signal(SIGINT, raise_shutdown);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_shutdown_handler() {}
+
 fn cmd_worker(args: &Args) -> Result<()> {
     try_register_xla();
     let mut cfg = engine_config(args)?;
-    let jobs = cfg.jobs;
-    // --jobs parallelizes across queued jobs (drain); each job itself
-    // runs serially so the thread count stays bounded by --jobs. The
-    // cache is still shared through the default engine config.
+    // --workers parallelizes across queued jobs; each job itself runs
+    // serially so the thread count stays bounded (--jobs is accepted
+    // as the pre-lease spelling). The cache is still shared through
+    // the default engine config.
+    let workers = match args.opt_usize_strict("workers").map_err(|e| anyhow!(e))? {
+        Some(0) => bail!("--workers must be ≥ 1"),
+        Some(n) => n,
+        None => cfg.jobs,
+    };
     cfg.jobs = 1;
     elaps::engine::set_default_config(cfg);
-    let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    let mut spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    if let Some(ttl) = args.opt("lease-ttl") {
+        let ttl = elaps::util::cli::parse_duration(ttl).map_err(|e| anyhow!("--lease-ttl: {e}"))?;
+        if ttl.is_zero() {
+            bail!("--lease-ttl must be > 0");
+        }
+        spool = spool.with_ttl(ttl);
+    } else if args.flag("lease-ttl") {
+        bail!("--lease-ttl requires a duration (e.g. 90s, 5m)");
+    }
     let once = args.flag("once");
-    // 0 disables recovery (it would otherwise classify every live
-    // claim as instantly stale and make workers steal each other's
-    // running jobs)
-    let recover_after = match args.opt_usize_strict("recover").map_err(|e| anyhow!(e))? {
+    // legacy (pre-lease) claims are reclaimed by claim-file mtime; 0
+    // disables that heuristic. Leased claims always reclaim on lease
+    // expiry, independent of this knob.
+    let legacy_recover = match args.opt_usize_strict("recover").map_err(|e| anyhow!(e))? {
         Some(0) => None,
         Some(secs) => Some(std::time::Duration::from_secs(secs as u64)),
         None => Some(std::time::Duration::from_secs(300)),
     };
-    loop {
-        if let Some(max_age) = recover_after {
-            let recovered = spool.recover_stale(max_age)?;
-            if recovered > 0 {
-                println!("recovered {recovered} stale job(s) from crashed workers");
-            }
-        }
-        // don't spin up the worker pool just to watch an empty queue
-        if spool.queued()? > 0 {
-            let served = spool.drain(jobs)?;
-            if served > 0 {
-                println!("served {served} job(s)");
-            }
-        }
-        if once {
-            return Ok(());
-        }
-        std::thread::sleep(std::time::Duration::from_millis(200));
+    install_shutdown_handler();
+    println!(
+        "worker {} draining {} with {workers} worker(s), lease TTL {:?}{}",
+        spool.worker_id(),
+        spool.dir.display(),
+        spool.ttl(),
+        if once { " (once)" } else { "" }
+    );
+    let served = spool.run_worker_pool(workers, once, legacy_recover, &SHUTDOWN)?;
+    if SHUTDOWN.load(std::sync::atomic::Ordering::SeqCst) {
+        println!("shutdown: drained gracefully after {served} job(s)");
+    } else {
+        println!("served {served} job(s)");
     }
+    Ok(())
+}
+
+/// `elaps spool status`: queued/leased/done counts for a spool
+/// directory, with the per-host lease and provenance breakdown.
+fn cmd_spool(args: &Args) -> Result<()> {
+    let sub = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("usage: elaps spool status [--spool DIR]"))?;
+    match sub {
+        "status" => {
+            let dir = std::path::PathBuf::from(args.opt_or("spool", ".elaps-spool"));
+            let st = elaps::coordinator::lease::spool_status(&dir)?;
+            println!("spool at {}:", dir.display());
+            print!("{}", st.render());
+        }
+        other => bail!("unknown spool subcommand '{other}' (expected status)"),
+    }
+    Ok(())
 }
 
 fn cmd_kernels() -> Result<()> {

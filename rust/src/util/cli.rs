@@ -214,9 +214,16 @@ mod tests {
         for bad in ["", "   ", "-5", "-5K", "1.5M", "K", "10KB", "ten", "1e6", "+3"] {
             assert!(parse_byte_size(bad).is_err(), "{bad:?} must be rejected");
         }
+        // embedded whitespace is rejected (only surrounding trim is
+        // forgiven), as are unknown suffixes
+        for bad in ["1 0K", "10 K", "1\t0", "1 024", "10Q", "10x"] {
+            assert!(parse_byte_size(bad).is_err(), "{bad:?} must be rejected");
+        }
         // overflow is an error, not a wrap
         assert!(parse_byte_size("99999999999999999999").is_err());
         assert!(parse_byte_size("18446744073709551615G").is_err());
+        // just-at-the-edge values still parse
+        assert_eq!(parse_byte_size("18446744073709551615"), Ok(u64::MAX));
     }
 
     #[test]
@@ -232,9 +239,16 @@ mod tests {
         for bad in ["", "   ", "-5", "-5h", "1.5h", "h", "10min", "ten", "1e3", "+3d"] {
             assert!(parse_duration(bad).is_err(), "{bad:?} must be rejected");
         }
+        // embedded whitespace, unknown suffixes and compound specs are
+        // rejected (only surrounding trim is forgiven)
+        for bad in ["1 0s", "10 s", "1\t0", "3h30m", "10w", "5y"] {
+            assert!(parse_duration(bad).is_err(), "{bad:?} must be rejected");
+        }
         // overflow is an error, not a wrap
         assert!(parse_duration("99999999999999999999").is_err());
         assert!(parse_duration("18446744073709551615d").is_err());
+        // just-at-the-edge values still parse
+        assert_eq!(parse_duration("18446744073709551615"), Ok(Duration::from_secs(u64::MAX)));
     }
 
     #[test]

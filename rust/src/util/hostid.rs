@@ -1,0 +1,67 @@
+//! Process and host identity for multi-host provenance: which machine
+//! (and which worker process on it) produced a measurement or holds a
+//! job lease. The spooler's lease protocol
+//! ([`crate::coordinator::lease`]) and the schema-3 result-cache
+//! envelope ([`crate::coordinator::io::CacheEnvelope`]) both record
+//! these identities.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Best-effort hostname, resolved once per process:
+/// `ELAPS_HOST` (explicit override, used by tests and heterogeneous
+/// cluster setups) → `HOSTNAME` → `/etc/hostname` → `"localhost"`.
+/// Whitespace is trimmed; an empty result falls through to the next
+/// source.
+pub fn hostname() -> &'static str {
+    static HOST: OnceLock<String> = OnceLock::new();
+    HOST.get_or_init(|| {
+        let from_env = |name: &str| {
+            std::env::var(name).ok().map(|v| v.trim().to_string()).filter(|v| !v.is_empty())
+        };
+        from_env("ELAPS_HOST")
+            .or_else(|| from_env("HOSTNAME"))
+            .or_else(|| {
+                std::fs::read_to_string("/etc/hostname")
+                    .ok()
+                    .map(|v| v.trim().to_string())
+                    .filter(|v| !v.is_empty())
+            })
+            .unwrap_or_else(|| "localhost".to_string())
+    })
+}
+
+/// A worker identity unique across hosts, processes *and* within this
+/// process: `<host>#<pid>-<seq>`. Each call mints a fresh identity, so
+/// every spooler handle (and every worker thread derived from one) can
+/// be distinguished in leases and provenance records.
+pub fn new_worker_id() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    format!(
+        "{}#{}-{}",
+        hostname(),
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hostname_is_stable_and_nonempty() {
+        let h = hostname();
+        assert!(!h.is_empty());
+        assert_eq!(h, hostname(), "resolved once, then cached");
+    }
+
+    #[test]
+    fn worker_ids_are_unique_and_carry_the_host() {
+        let a = new_worker_id();
+        let b = new_worker_id();
+        assert_ne!(a, b);
+        assert!(a.starts_with(hostname()), "{a}");
+        assert!(a.contains('#'));
+    }
+}

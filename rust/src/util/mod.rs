@@ -1,4 +1,5 @@
-//! Self-contained utilities: JSON, RNG, CLI parsing, property testing.
+//! Self-contained utilities: JSON, RNG, CLI parsing, host/worker
+//! identity, property testing.
 //!
 //! The build environment is offline and the crates.io cache does not
 //! provide `serde`, `clap`, `rand` or `proptest`; these small modules
@@ -7,6 +8,7 @@
 pub mod json;
 pub mod rng;
 pub mod cli;
+pub mod hostid;
 pub mod prop;
 
 pub use json::Json;

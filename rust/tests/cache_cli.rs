@@ -140,6 +140,45 @@ fn write_entry(dir: &Path, name: &str, created_unix: u64) {
 }
 
 #[test]
+fn stats_break_entries_down_per_host() {
+    let dir = tmpdir("perhost");
+    let exp = write_exp(&dir);
+    let cache = dir.join("cache");
+    let cache_s = cache.to_str().unwrap();
+    // seed two entries measured "on" a pinned host (ELAPS_HOST
+    // overrides hostname resolution, so the snapshot is stable)
+    let out = Command::new(elaps_bin())
+        .args([
+            "run",
+            exp.to_str().unwrap(),
+            "--cache",
+            cache_s,
+            "--out",
+            dir.join("r.json").to_str().unwrap(),
+        ])
+        .env("ELAPS_HOST", "snaphost")
+        .env_remove("ELAPS_CACHE")
+        .env_remove("ELAPS_JOBS")
+        .env_remove("ELAPS_TRUSTED_ONLY")
+        .env_remove("ELAPS_WARM")
+        .env_remove("ELAPS_SEED")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", stderr(&out));
+    // plus one pre-schema-3 entry: provenance unknown
+    write_entry(&cache, "older", 1_700_000_000);
+    // snapshot of the per-host section
+    let out = elaps(&["cache", "stats", "--cache", cache_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("entries:     3"), "{text}");
+    assert!(text.contains("per-host:"), "{text}");
+    assert!(text.contains(&format!("{:<16} {}", "snaphost", 2)), "{text}");
+    assert!(text.contains(&format!("{:<16} {}", "(unknown)", 1)), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn gc_max_age_parses_strictly_and_expires_by_store_time() {
     let dir = tmpdir("maxage");
     let cache = dir.join("cache");

@@ -184,8 +184,16 @@ fn schema1_entries_parse_as_cold_and_unknown_schemas_miss() {
     let dir = tmpdir("schema1");
     let cache = ResultCache::open(&dir).unwrap();
     let point = synthetic_result(2, 11);
-    // a schema-1 entry, as a PR-2 build would have written it
-    let mut v1 = elaps::coordinator::io::cache_envelope_to_json(&point, 1, Some(1_700_000_000), false);
+    // a schema-1 entry, as a PR-2 build would have written it (no
+    // warm flag, no host/worker provenance)
+    let mut v1 = elaps::coordinator::io::cache_envelope_to_json(
+        &point,
+        1,
+        Some(1_700_000_000),
+        false,
+        None,
+        None,
+    );
     v1.set("schema", 1u64);
     let v1 = {
         let mut j = v1;

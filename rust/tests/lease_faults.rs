@@ -1,0 +1,440 @@
+//! Differential fault-injection suite for the spooler's lease
+//! protocol: multiple in-process "hosts" drive one spool directory and
+//! are killed, paused or zombified at injected points. Invariants under
+//! every injection:
+//!
+//! * **exactly-once output** — every job ends with exactly one
+//!   published report, queue/running/leases are empty afterwards, and
+//!   the number of successful (non-fenced) publishes equals the number
+//!   of jobs;
+//! * **epoch fencing** — a zombie worker (claim held past lease
+//!   expiry) can never publish: its attempt is fenced by the expired
+//!   lease or the successor's bumped epoch, asserted in-test;
+//! * **differential determinism** — runs use the engine's fixed-seed
+//!   mode (modeled timings), so the merged fault-run reports are
+//!   byte-identical (after the report-JSON normalization `fetch`
+//!   applies) to a plain serial `run_local` of the same experiments.
+//!
+//! Timing margins are deliberately generous (waits poll actual lease
+//! expiry instead of sleeping fixed amounts) so the suite stays
+//! flake-free under `--test-threads=1` and `ELAPS_LEASE_TTL=1s` in the
+//! tier-2 CI job.
+
+use elaps::coordinator::lease::{self, FenceReason, PublishOutcome};
+use elaps::coordinator::{io, Experiment, Spooler};
+use elaps::engine::{set_default_config, EngineConfig};
+use elaps::figures::call;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Pin the process-default engine config to serial, fixed-seed
+/// execution: modeled timings make every report a pure function of its
+/// experiment, which is what turns "compare fault run against serial
+/// run" into a byte-equality check. Idempotent, so concurrent tests in
+/// this binary can all call it.
+fn det_config() {
+    set_default_config(EngineConfig::default().with_seed(7));
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("elaps_faults_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_exp(n: i64) -> Experiment {
+    let ns = n.to_string();
+    let mut exp = Experiment {
+        name: format!("flt{n}"),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps: 2,
+        ..Default::default()
+    };
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+    )
+    .unwrap()];
+    exp
+}
+
+/// Canonical serialization of a report (the byte-identity yardstick).
+fn normalize(r: &elaps::Report) -> String {
+    io::report_to_json(r).to_string_pretty()
+}
+
+/// The serial reference: what a plain single-host run produces for
+/// `exp` under the fixed-seed config.
+fn serial_reference(exp: &Experiment) -> String {
+    normalize(&elaps::coordinator::run_local(exp).unwrap())
+}
+
+fn count_json(dir: &Path, sub: &str) -> usize {
+    std::fs::read_dir(dir.join(sub))
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+/// Block until the claim's lease is past its expiry (plus a small
+/// margin), polling the wall clock — no fixed sleeps, no flakes.
+fn wait_past_expiry(expires_unix: f64) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while lease::now_unix() <= expires_unix + 0.05 {
+        assert!(Instant::now() < deadline, "lease never expired?");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn killed_worker_job_is_reclaimed_and_served_exactly_once() {
+    det_config();
+    let dir = tmpdir("kill");
+    // generous TTL: the "fresh lease is never stolen" assertions below
+    // must hold even when the test host stalls this thread for a while
+    let ttl = Duration::from_millis(1500);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let b = Spooler::new(&dir).unwrap().with_host("hostB").with_ttl(ttl);
+    let exp = small_exp(16);
+    let id = a.submit(&exp).unwrap();
+    // host A claims the job and "dies": the claim is simply dropped,
+    // no publish, no heartbeat
+    let killed = a.claim_next().unwrap().unwrap();
+    assert_eq!(killed.lease.epoch, 1);
+    // while the lease lives, nobody can steal the job — even with the
+    // paranoid legacy tolerance of zero, because leases ignore mtimes
+    assert_eq!(b.recover_stale(Duration::ZERO).unwrap(), 0);
+    assert_eq!(b.claim_next().unwrap().map(|c| c.job_id), None);
+    // after expiry, host B reclaims and serves it
+    wait_past_expiry(killed.lease.expires_unix);
+    assert_eq!(b.reclaim_expired().unwrap(), 1);
+    assert_eq!(b.serve_one().unwrap().as_deref(), Some(id.as_str()));
+    // exactly one report, byte-identical to the serial run
+    assert_eq!(count_json(&dir, "done"), 1);
+    assert_eq!(count_json(&dir, "running"), 0);
+    assert_eq!(count_json(&dir, "leases"), 0, "lease released on publish");
+    let report = b.fetch(&id).unwrap().unwrap();
+    assert_eq!(normalize(&report), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn zombie_publish_is_fenced_by_epoch() {
+    det_config();
+    let dir = tmpdir("zombie");
+    let ttl = Duration::from_millis(1500);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let b = Spooler::new(&dir).unwrap().with_host("hostB").with_ttl(ttl);
+    let exp = small_exp(20);
+    let id = a.submit(&exp).unwrap();
+    // host A claims under epoch 1, then pauses past its own expiry
+    let zombie = a.claim_next().unwrap().unwrap();
+    assert_eq!(zombie.lease.epoch, 1);
+    wait_past_expiry(zombie.lease.expires_unix);
+    // the zombie can no longer renew...
+    assert!(!a.renew(&zombie).unwrap());
+    // ...host B reclaims and re-acquires under a bumped epoch
+    assert_eq!(b.reclaim_expired().unwrap(), 1);
+    let succ = b.claim_next().unwrap().unwrap();
+    assert_eq!(succ.job_id, id);
+    assert_eq!(succ.lease.epoch, 2, "reacquisition must bump the epoch");
+    assert!(succ.lease.epoch > zombie.lease.epoch, "the epoch fence");
+    // the zombie wakes up and tries to publish a poisoned payload:
+    // fenced by the successor's epoch, nothing is written
+    let outcome = a.publish(&zombie, r#"{"error":"ZOMBIE PAYLOAD"}"#).unwrap();
+    assert_eq!(
+        outcome,
+        PublishOutcome::Fenced(FenceReason::Superseded {
+            current_epoch: 2,
+            current_worker: succ.lease.worker_id.clone(),
+        })
+    );
+    assert_eq!(count_json(&dir, "done"), 0, "fenced publish writes nothing");
+    // the successor publishes normally
+    assert!(b.serve_claim(&succ, false).unwrap().published());
+    let raw = std::fs::read_to_string(dir.join("done").join(format!("{id}.report.json")))
+        .unwrap();
+    assert!(!raw.contains("ZOMBIE"), "zombie payload must never land: {raw}");
+    assert!(raw.contains("hostB"), "provenance names the real server: {raw}");
+    // a second zombie attempt after completion is fenced too (the
+    // lease is gone)
+    assert_eq!(
+        a.publish(&zombie, "{}").unwrap(),
+        PublishOutcome::Fenced(FenceReason::LeaseGone)
+    );
+    assert_eq!(normalize(&b.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn expired_lease_fences_publish_even_before_reclaim() {
+    det_config();
+    let dir = tmpdir("expired");
+    let ttl = Duration::from_millis(1000);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let exp = small_exp(12);
+    let id = a.submit(&exp).unwrap();
+    let claim = a.claim_next().unwrap().unwrap();
+    wait_past_expiry(claim.lease.expires_unix);
+    // nobody reclaimed yet, but the lease is expired: publishing now
+    // could race a reclaim that is about to happen, so it is refused
+    match a.publish(&claim, "{}").unwrap() {
+        PublishOutcome::Fenced(FenceReason::Expired { expires_unix }) => {
+            assert!((expires_unix - claim.lease.expires_unix).abs() < 1e-6);
+        }
+        other => panic!("expected an expiry fence, got {other:?}"),
+    }
+    assert_eq!(count_json(&dir, "done"), 0);
+    // normal recovery still works afterwards
+    assert_eq!(a.reclaim_expired().unwrap(), 1);
+    assert_eq!(a.serve_one().unwrap().as_deref(), Some(id.as_str()));
+    assert_eq!(normalize(&a.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn heartbeat_keeps_a_paused_worker_alive_across_ttls() {
+    det_config();
+    let dir = tmpdir("pause");
+    let ttl = Duration::from_millis(1000);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let exp = small_exp(12);
+    let id = a.submit(&exp).unwrap();
+    let claim = a.claim_next().unwrap().unwrap();
+    // the worker pauses for ~2 TTLs total but keeps heartbeating at a
+    // 5x margin: the lease must stay unexpired and unreclaimable
+    for _ in 0..10 {
+        std::thread::sleep(Duration::from_millis(200));
+        assert!(a.renew(&claim).unwrap(), "heartbeat must keep the lease ours");
+        assert_eq!(a.reclaim_expired().unwrap(), 0, "a renewed lease is never reclaimed");
+    }
+    assert!(a.serve_claim(&claim, false).unwrap().published());
+    assert_eq!(normalize(&a.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The multi-host fault storm: `workers` in-process hosts drain one
+/// spool while injections kill the first claim of host 0, zombify the
+/// first claim of host 1 and pause-with-heartbeat the first claim of
+/// host 2. Asserts exactly-once output and byte-identity against the
+/// serial run.
+fn fault_storm(workers: usize) {
+    det_config();
+    let dir = tmpdir(&format!("storm{workers}"));
+    let ttl = Duration::from_millis(400);
+    let submitter = Spooler::new(&dir).unwrap();
+    let exps: Vec<Experiment> = (0..6).map(|i| small_exp(8 + 4 * i)).collect();
+    let ids: Vec<String> = exps.iter().map(|e| submitter.submit(e).unwrap()).collect();
+    let references: Vec<String> = exps.iter().map(serial_reference).collect();
+
+    let spoolers: Vec<Spooler> = (0..workers)
+        .map(|w| {
+            Spooler::new(&dir)
+                .unwrap()
+                .with_host(format!("h{w}"))
+                .with_worker(format!("h{w}#storm"))
+                .with_ttl(ttl)
+        })
+        .collect();
+    let published = AtomicUsize::new(0);
+    let fenced = AtomicUsize::new(0);
+    let total = ids.len();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    std::thread::scope(|s| {
+        for (w, sp) in spoolers.iter().enumerate() {
+            let published = &published;
+            let fenced = &fenced;
+            s.spawn(move || {
+                // one scripted injection per host, then honest serving
+                let mut inject_kill = w == 0;
+                let mut inject_zombie = workers > 1 && w == 1;
+                let mut inject_pause = workers > 2 && w == 2;
+                loop {
+                    if count_json(&sp.dir, "done") >= total {
+                        break;
+                    }
+                    assert!(Instant::now() < deadline, "fault storm did not converge");
+                    sp.reclaim_expired().unwrap();
+                    let Some(claim) = sp.claim_next().unwrap() else {
+                        std::thread::sleep(Duration::from_millis(20));
+                        continue;
+                    };
+                    if inject_kill {
+                        inject_kill = false;
+                        // kill: drop the claim, no publish, no
+                        // heartbeat — the lease just expires
+                        continue;
+                    }
+                    if inject_zombie {
+                        inject_zombie = false;
+                        // zombie: outlive the lease, then attempt a
+                        // poisoned late publish — must be fenced
+                        wait_past_expiry(claim.lease.expires_unix);
+                        sp.reclaim_expired().unwrap();
+                        match sp.publish(&claim, r#"{"error":"ZOMBIE"}"#).unwrap() {
+                            PublishOutcome::Published => {
+                                panic!("zombie publish must be fenced")
+                            }
+                            PublishOutcome::Fenced(_) => {
+                                fenced.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        continue;
+                    }
+                    if inject_pause {
+                        inject_pause = false;
+                        // pause: stall for ~1.5 TTLs but heartbeat at a
+                        // generous margin, then serve normally
+                        for _ in 0..12 {
+                            std::thread::sleep(Duration::from_millis(50));
+                            if !sp.renew(&claim).unwrap() {
+                                break;
+                            }
+                        }
+                    }
+                    if sp.serve_claim(&claim, true).unwrap().published() {
+                        published.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+
+    // exactly-once: one report per job, every publish that landed was
+    // a real one, and the spool is fully drained
+    assert_eq!(count_json(&dir, "done"), total);
+    assert_eq!(published.load(Ordering::Relaxed), total, "each job published exactly once");
+    if workers > 1 {
+        assert_eq!(fenced.load(Ordering::Relaxed), 1, "the zombie was fenced");
+    }
+    assert_eq!(count_json(&dir, "queue"), 0);
+    assert_eq!(count_json(&dir, "running"), 0);
+    assert_eq!(count_json(&dir, "leases"), 0, "all leases released");
+    // differential: the merged reports are byte-identical to the
+    // serial run of the same experiments
+    for (id, reference) in ids.iter().zip(&references) {
+        let report = submitter.fetch(id).unwrap().unwrap();
+        assert_eq!(&normalize(&report), reference, "{id}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fault_storm_single_worker_recovers_its_own_kill() {
+    fault_storm(1);
+}
+
+#[test]
+fn fault_storm_four_hosts_kill_pause_zombie() {
+    fault_storm(4);
+}
+
+#[test]
+fn worker_pool_drains_gracefully_on_shutdown_flag() {
+    det_config();
+    let dir = tmpdir("drainflag");
+    let spool = Spooler::new(&dir).unwrap().with_ttl(Duration::from_secs(30));
+    let total = 6usize;
+    let ids: Vec<String> =
+        (0..total).map(|i| spool.submit(&small_exp(8 + 2 * i as i64)).unwrap()).collect();
+    let shutdown = AtomicBool::new(false);
+    let served = std::thread::scope(|s| {
+        let handle = s.spawn(|| spool.run_worker_pool(2, false, None, &shutdown).unwrap());
+        // let the pool make some progress, then raise the SIGTERM flag
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while count_json(&dir, "done") < 2 {
+            assert!(Instant::now() < deadline, "pool made no progress");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join().unwrap()
+    });
+    // graceful: in-flight jobs were finished and published, nothing is
+    // left half-claimed, unclaimed jobs stay queued for the next pool
+    assert!(served >= 2, "{served}");
+    assert!(served <= total);
+    assert_eq!(count_json(&dir, "running"), 0, "no abandoned claims");
+    assert_eq!(count_json(&dir, "leases"), 0, "no abandoned leases");
+    assert_eq!(count_json(&dir, "done"), served);
+    assert_eq!(spool.queued().unwrap(), total - served);
+    // a fresh pool (fresh flag) finishes the drain
+    let rest = spool
+        .run_worker_pool(2, true, None, &AtomicBool::new(false))
+        .unwrap();
+    assert_eq!(served + rest, total);
+    for id in &ids {
+        assert!(spool.fetch(id).unwrap().is_some(), "{id}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------------ CLI path
+
+fn elaps_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_elaps")
+}
+
+#[test]
+fn worker_and_spool_status_cli() {
+    let dir = tmpdir("cli");
+    let spool = Spooler::new(&dir).unwrap();
+    let ids: Vec<String> = (0..2).map(|_| spool.submit(&small_exp(10)).unwrap()).collect();
+    let spool_s = dir.to_str().unwrap().to_string();
+    // status before serving: 2 queued, nothing done
+    let out = std::process::Command::new(elaps_bin())
+        .args(["spool", "status", "--spool", &spool_s])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("queued: 2"), "{text}");
+    assert!(text.contains("done: 0"), "{text}");
+    // a one-shot worker daemon with an explicit lease TTL and host
+    let out = std::process::Command::new(elaps_bin())
+        .args([
+            "worker", "--spool", &spool_s, "--once", "--workers", "2", "--lease-ttl", "30s",
+        ])
+        .env("ELAPS_HOST", "clihost")
+        .env_remove("ELAPS_JOBS")
+        .env_remove("ELAPS_CACHE")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("served 2 job(s)"), "{text}");
+    for id in &ids {
+        assert!(spool.fetch(id).unwrap().is_some(), "{id}");
+    }
+    // status after: drained, and the done reports are grouped by the
+    // serving host's provenance stamp
+    let out = std::process::Command::new(elaps_bin())
+        .args(["spool", "status", "--spool", &spool_s])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("queued: 0"), "{text}");
+    assert!(text.contains("done: 2"), "{text}");
+    assert!(text.contains("clihost"), "{text}");
+    // a malformed --lease-ttl is a hard error, not a silent default
+    let out = std::process::Command::new(elaps_bin())
+        .args(["worker", "--spool", &spool_s, "--once", "--lease-ttl", "garbage"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("lease-ttl"), "{err}");
+    // status on a directory that is not a spool fails cleanly
+    let out = std::process::Command::new(elaps_bin())
+        .args(["spool", "status", "--spool", dir.join("nope").to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -8,6 +8,7 @@
 //! * linalg: solve∘multiply = identity, factor∘reconstruct = identity
 
 use elaps::coordinator::{run_local, Experiment, Metric, RangeDef, Stat, Vary};
+use elaps::engine::shard_contiguous;
 use elaps::figures::call;
 use elaps::linalg::blas3::{dgemm_blocked, dgemm_naive, dtrsm_blocked, dtrmm};
 use elaps::linalg::{Diag, Matrix, Side, Trans, Uplo};
@@ -220,6 +221,68 @@ fn prop_vary_instances_never_alias() {
                 if seen.len() != want {
                     return Err(format!("{} distinct C instances, want {want}", seen.len()));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shard_contiguous_partition_invariants() {
+    // the warm engine's determinism contract rests on these: for
+    // arbitrary (len, jobs) — including jobs > len and jobs = 0 —
+    // concatenating the shards round-trips the input, the shard count
+    // never exceeds jobs (jobs = 0 behaves as 1), shard sizes differ
+    // by at most one, no shard is empty, and the split is a pure
+    // function of its input
+    forall(
+        0xD1,
+        200,
+        |r, size| {
+            let len = r.range_usize(0, 4 + size * 8);
+            // cover jobs = 0, jobs in range, and jobs far above len
+            let jobs = match r.below(3) {
+                0 => 0,
+                1 => r.range_usize(1, 8),
+                _ => len + r.range_usize(1, 10),
+            };
+            (len, jobs)
+        },
+        |&(len, jobs)| {
+            let items: Vec<usize> = (0..len).collect();
+            let shards = shard_contiguous(items.clone(), jobs);
+            let flat: Vec<usize> = shards.iter().flatten().copied().collect();
+            if flat != items {
+                return Err(format!("concatenation must round-trip: {shards:?}"));
+            }
+            if len == 0 {
+                return if shards.is_empty() {
+                    Ok(())
+                } else {
+                    Err(format!("empty input must yield no shards: {shards:?}"))
+                };
+            }
+            let effective = jobs.max(1);
+            if shards.len() > effective {
+                return Err(format!("{} shards for jobs={jobs}", shards.len()));
+            }
+            if shards.len() != effective.min(len) {
+                return Err(format!(
+                    "{} shards, want min(max(jobs,1), len) = {}",
+                    shards.len(),
+                    effective.min(len)
+                ));
+            }
+            let min = shards.iter().map(Vec::len).min().unwrap();
+            let max = shards.iter().map(Vec::len).max().unwrap();
+            if min == 0 {
+                return Err(format!("no shard may be empty: {shards:?}"));
+            }
+            if max - min > 1 {
+                return Err(format!("sizes must differ by ≤ 1: {shards:?}"));
+            }
+            if shards != shard_contiguous(items, jobs) {
+                return Err("sharding must be deterministic".to_string());
             }
             Ok(())
         },

@@ -3,8 +3,14 @@
 //! crashed worker's claimed job is requeued exactly once, recovery
 //! racing live workers never duplicates or loses jobs, and reports are
 //! only ever published atomically (no partial files visible in done/).
+//!
+//! Since the lease protocol replaced mtime staleness, this file also
+//! pins the equivalence contract: legacy claims (a `running/` file
+//! with no lease) still recover exactly as the old mtime heuristic
+//! did, while leased claims ignore mtimes entirely and reclaim only on
+//! lease expiry.
 
-use elaps::coordinator::{Experiment, Spooler};
+use elaps::coordinator::{lease, Experiment, Spooler};
 use elaps::figures::call;
 use std::time::Duration;
 
@@ -101,6 +107,66 @@ fn concurrent_recovery_and_drain_neither_lose_nor_duplicate_jobs() {
     assert_eq!(count(&dir, "running", "json"), 0);
     assert_eq!(count(&dir, "done", "json"), 6);
     assert_eq!(count(&dir, "done", "tmp"), 0, "publish must be atomic");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_claims_recover_by_mtime_exactly_like_the_old_protocol() {
+    // a pre-lease worker's crash leaves a claim file with no lease:
+    // recover_stale must treat it exactly as the old mtime heuristic
+    // did — fresh claims survive a generous max_age, zero tolerance
+    // reclaims, and the reclaim happens exactly once
+    let dir = tmpdir("legacy_equiv");
+    let spool = Spooler::new(&dir).unwrap();
+    let id = spool.submit(&small_exp(16)).unwrap();
+    std::fs::rename(
+        dir.join("queue").join(format!("{id}.json")),
+        dir.join("running").join(format!("{id}.json")),
+    )
+    .unwrap();
+    assert!(lease::read(&dir, &id).is_none(), "a legacy claim has no lease");
+    // the lease-only reclaim never touches it, at any age
+    assert_eq!(spool.reclaim_expired().unwrap(), 0);
+    // the mtime heuristic behaves exactly as before the lease protocol
+    assert_eq!(spool.recover_stale(Duration::from_secs(3600)).unwrap(), 0);
+    assert_eq!(spool.recover_stale(Duration::ZERO).unwrap(), 1);
+    assert_eq!(spool.recover_stale(Duration::ZERO).unwrap(), 0, "exactly once");
+    assert_eq!(spool.serve_one().unwrap().as_deref(), Some(id.as_str()));
+    assert!(spool.fetch(&id).unwrap().is_some());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn leased_claims_ignore_mtimes_and_reclaim_only_on_expiry() {
+    // the behavioral difference the lease protocol buys: a live claim
+    // is safe from reclaim even under the paranoid legacy tolerance of
+    // zero (on NFS, mtime-based staleness would have stolen it), and
+    // reclaim leaves the lease file behind so the next acquisition
+    // bumps the fencing epoch
+    let dir = tmpdir("lease_equiv");
+    // generous TTL so the "mtimes are irrelevant" probe below cannot
+    // race a slow test host into real expiry
+    let ttl = Duration::from_millis(1500);
+    let spool = Spooler::new(&dir).unwrap().with_ttl(ttl);
+    let id = spool.submit(&small_exp(16)).unwrap();
+    let claim = spool.claim_next().unwrap().unwrap();
+    assert_eq!(claim.lease.epoch, 1);
+    // mtimes are irrelevant for leased claims
+    assert_eq!(spool.recover_stale(Duration::ZERO).unwrap(), 0);
+    // wait out the lease, then the same call reclaims
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while lease::now_unix() <= claim.lease.expires_unix + 0.05 {
+        assert!(std::time::Instant::now() < deadline);
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(spool.recover_stale(Duration::ZERO).unwrap(), 1);
+    assert_eq!(spool.recover_stale(Duration::ZERO).unwrap(), 0, "exactly once");
+    // the lease survived the reclaim and fences the next acquisition
+    assert_eq!(lease::read(&dir, &id).unwrap().epoch, 1);
+    let reclaimed = spool.claim_next().unwrap().unwrap();
+    assert_eq!(reclaimed.lease.epoch, 2, "epoch chains across reclaims");
+    assert!(spool.serve_claim(&reclaimed, false).unwrap().published());
+    assert!(spool.fetch(&id).unwrap().is_some());
     let _ = std::fs::remove_dir_all(&dir);
 }
 
