@@ -1,0 +1,625 @@
+//! Campaigns: the asynchronous client side of the batch spooler
+//! (§3.2.2 — experiments are composed on a laptop and submitted to
+//! "the whole spectrum of architectures" via batch jobs).
+//!
+//! Three pieces live here:
+//!
+//! * **Campaign manifests** ([`CampaignManifest`]): a JSON file naming
+//!   a campaign tag plus the experiments it comprises (by path or
+//!   inline), the input of `elaps submit`.
+//! * **Campaign records**: `<spool>/campaigns/<tag>.json` maps a tag
+//!   to the job ids submitted under it, so `elaps wait --campaign` and
+//!   `elaps fetch --campaign` can address a whole campaign without the
+//!   client remembering individual ids.
+//! * **Stamp sidecars** ([`Stamp`]): one small JSON per *done* job
+//!   (`<spool>/stamps/<job>.stamp.json`) recording `{job_id, host,
+//!   worker, epoch, outcome}`, written atomically at publish time.
+//!   Campaign status and `elaps spool status` read stamps instead of
+//!   parsing report bodies, making both O(#jobs) instead of
+//!   O(report bytes) — a multi-thousand-job spool on NFS is summarized
+//!   with one readdir and #jobs tiny reads.
+//!
+//! Malformed or truncated stamps are never an error: a stamp exists
+//! purely as an index over the (atomically published) reports, so a
+//! corrupt one degrades the affected job to "(unknown)" provenance
+//! with a warning, and the report itself stays untouched.
+
+use super::experiment::Experiment;
+use super::io;
+use super::submit::{unique_tmp, Spooler};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+// ------------------------------------------------------------- stamps
+
+/// How a published job ended: a real report, or an error report (the
+/// worker publishes a job's failure as a report too, so poison jobs
+/// cannot crash-loop the queue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StampOutcome {
+    Ok,
+    Error,
+}
+
+impl StampOutcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StampOutcome::Ok => "ok",
+            StampOutcome::Error => "error",
+        }
+    }
+
+    /// Inverse of [`StampOutcome::as_str`] (named like
+    /// [`crate::coordinator::Stat::by_name`] — an inherent `from_str`
+    /// would shadow the `FromStr` convention).
+    pub fn by_name(s: &str) -> Option<StampOutcome> {
+        match s {
+            "ok" => Some(StampOutcome::Ok),
+            "error" => Some(StampOutcome::Error),
+            _ => None,
+        }
+    }
+}
+
+/// The per-job publish stamp: which host/worker produced the done
+/// report, under which lease epoch, and whether the job succeeded.
+/// Everything `spool status` and campaign-level `wait` need, without
+/// opening the report body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stamp {
+    pub job_id: String,
+    pub host: String,
+    pub worker: String,
+    pub epoch: u64,
+    pub outcome: StampOutcome,
+}
+
+impl Stamp {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("job_id", self.job_id.as_str())
+            .set("host", self.host.as_str())
+            .set("worker", self.worker.as_str())
+            .set("epoch", self.epoch)
+            .set("outcome", self.outcome.as_str());
+        j
+    }
+
+    /// Parse a stamp; incomplete or mistyped JSON yields `None`, never
+    /// a panic — readers skip it with a warning.
+    pub fn from_json(j: &Json) -> Option<Stamp> {
+        Some(Stamp {
+            job_id: j.get("job_id").as_str()?.to_string(),
+            host: j.get("host").as_str()?.to_string(),
+            worker: j.get("worker").as_str()?.to_string(),
+            epoch: j.get("epoch").as_u64()?,
+            outcome: StampOutcome::by_name(j.get("outcome").as_str()?)?,
+        })
+    }
+}
+
+fn stamps_dir(spool: &Path) -> PathBuf {
+    spool.join("stamps")
+}
+
+pub fn stamp_path(spool: &Path, job_id: &str) -> PathBuf {
+    stamps_dir(spool).join(format!("{job_id}.stamp.json"))
+}
+
+/// Atomically write (create or replace) a job's publish stamp. A
+/// republish after an expiry reclaim overwrites the previous stamp,
+/// exactly as it overwrites the report.
+pub fn write_stamp(spool: &Path, stamp: &Stamp) -> Result<()> {
+    std::fs::create_dir_all(stamps_dir(spool))?;
+    let path = stamp_path(spool, &stamp.job_id);
+    let tmp = unique_tmp(&path);
+    std::fs::write(&tmp, stamp.to_json().to_string_pretty())
+        .with_context(|| format!("writing stamp for {}", stamp.job_id))?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// Read one job's stamp; `None` if absent or unreadable.
+pub fn read_stamp(spool: &Path, job_id: &str) -> Option<Stamp> {
+    let text = std::fs::read_to_string(stamp_path(spool, job_id)).ok()?;
+    Stamp::from_json(&Json::parse(&text).ok()?)
+}
+
+/// The result of scanning a spool's stamp directory: every readable
+/// stamp by job id, plus how many files were skipped as malformed.
+#[derive(Debug, Clone, Default)]
+pub struct StampScan {
+    pub stamps: BTreeMap<String, Stamp>,
+    pub skipped: usize,
+}
+
+/// Scan every stamp in the spool. Malformed or truncated stamp files
+/// are skipped with a warning on stderr (the report they index is
+/// still intact — the job merely loses its cheap provenance), never an
+/// error or a panic. A spool without a stamps directory (pre-stamp
+/// era) scans as empty.
+pub fn read_stamps(spool: &Path) -> StampScan {
+    let mut scan = StampScan::default();
+    let Ok(rd) = std::fs::read_dir(stamps_dir(spool)) else {
+        return scan;
+    };
+    for entry in rd.filter_map(|e| e.ok()) {
+        let path = entry.path();
+        let Some(job_id) = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .and_then(|n| n.strip_suffix(".stamp.json"))
+        else {
+            continue; // tmp files from in-flight atomic writes
+        };
+        let parsed = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| Stamp::from_json(&j));
+        match parsed {
+            Some(stamp) => {
+                scan.stamps.insert(job_id.to_string(), stamp);
+            }
+            None => {
+                scan.skipped += 1;
+                eprintln!(
+                    "warning: skipping malformed stamp {} (report unaffected)",
+                    path.display()
+                );
+            }
+        }
+    }
+    scan
+}
+
+// ---------------------------------------------------------- manifests
+
+/// One experiment in a campaign manifest: a path to an experiment file
+/// (resolved relative to the manifest's directory) or an inline
+/// experiment object.
+#[derive(Debug, Clone)]
+pub enum ManifestEntry {
+    Path(String),
+    Inline(Experiment),
+}
+
+/// A campaign manifest: the `elaps submit` input for a multi-experiment
+/// campaign. JSON form:
+///
+/// ```json
+/// {
+///   "campaign": "sweep-2026-08",
+///   "experiments": ["gemm_small.json", "gemm_large.json", { ...inline... }]
+/// }
+/// ```
+#[derive(Debug, Clone)]
+pub struct CampaignManifest {
+    pub campaign: String,
+    pub experiments: Vec<ManifestEntry>,
+}
+
+impl CampaignManifest {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("campaign", self.campaign.as_str()).set(
+            "experiments",
+            Json::Arr(
+                self.experiments
+                    .iter()
+                    .map(|e| match e {
+                        ManifestEntry::Path(p) => Json::Str(p.clone()),
+                        ManifestEntry::Inline(exp) => io::experiment_to_json(exp),
+                    })
+                    .collect(),
+            ),
+        );
+        j
+    }
+
+    /// Parse a manifest. Strict where it matters: a missing/empty tag
+    /// or an empty experiment list is an error (an empty campaign is
+    /// always a composition mistake), and every entry must be a path
+    /// string or a parsable experiment object.
+    pub fn from_json(j: &Json) -> Result<CampaignManifest> {
+        let campaign = j
+            .get("campaign")
+            .as_str()
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .ok_or_else(|| anyhow!("manifest needs a non-empty 'campaign' tag"))?
+            .to_string();
+        validate_tag(&campaign)?;
+        let entries = j
+            .get("experiments")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest needs an 'experiments' array"))?;
+        if entries.is_empty() {
+            bail!("campaign '{campaign}' lists no experiments");
+        }
+        let mut experiments = Vec::new();
+        for (i, e) in entries.iter().enumerate() {
+            experiments.push(match e {
+                Json::Str(p) => ManifestEntry::Path(p.clone()),
+                obj if obj.as_obj().is_some() => ManifestEntry::Inline(
+                    io::experiment_from_json(obj)
+                        .with_context(|| format!("experiments[{i}]"))?,
+                ),
+                other => bail!(
+                    "experiments[{i}] must be a path string or an experiment \
+                     object, not {other}"
+                ),
+            });
+        }
+        Ok(CampaignManifest { campaign, experiments })
+    }
+
+    /// Is this JSON a campaign manifest (as opposed to a bare
+    /// experiment file)? The discriminator `elaps submit` uses.
+    pub fn is_manifest(j: &Json) -> bool {
+        !j.get("experiments").is_null()
+    }
+
+    /// Load the experiments the manifest names, resolving path entries
+    /// relative to `base_dir` (the manifest file's directory).
+    pub fn resolve(&self, base_dir: &Path) -> Result<Vec<Experiment>> {
+        self.experiments
+            .iter()
+            .map(|e| match e {
+                ManifestEntry::Path(p) => {
+                    let path = if Path::new(p).is_absolute() {
+                        PathBuf::from(p)
+                    } else {
+                        base_dir.join(p)
+                    };
+                    io::load_experiment_file(&path)
+                }
+                ManifestEntry::Inline(exp) => Ok(exp.clone()),
+            })
+            .collect()
+    }
+}
+
+// ----------------------------------------------------- campaign record
+
+/// Campaign tags become file names, so they are *validated*, not
+/// sanitized: replacing characters would silently map distinct tags
+/// (`sweep/1`, `sweep_1`) onto one record file and merge their job
+/// lists. Only `[A-Za-z0-9._-]` is allowed, and a tag may not consist
+/// purely of dots (`.`/`..` are directory names, not files).
+pub fn validate_tag(tag: &str) -> Result<()> {
+    if tag.is_empty() {
+        bail!("campaign tag must not be empty");
+    }
+    if let Some(c) = tag.chars().find(|&c| !(c.is_ascii_alphanumeric() || ".-_".contains(c)))
+    {
+        bail!("campaign tag '{tag}' contains '{c}': only [A-Za-z0-9._-] is allowed");
+    }
+    if tag.chars().all(|c| c == '.') {
+        bail!("campaign tag '{tag}' is not a valid file name");
+    }
+    Ok(())
+}
+
+fn campaign_path(spool: &Path, tag: &str) -> PathBuf {
+    spool.join("campaigns").join(format!("{tag}.json"))
+}
+
+/// Register job ids under a campaign tag (creating or extending the
+/// record). Read-modify-write with an atomic replace; concurrent
+/// submitters to the *same tag* can race the read, so share one
+/// submitting client per campaign.
+pub fn record_jobs(spool: &Path, tag: &str, job_ids: &[String]) -> Result<()> {
+    validate_tag(tag)?;
+    std::fs::create_dir_all(spool.join("campaigns"))?;
+    let path = campaign_path(spool, tag);
+    let mut jobs = campaign_jobs(spool, tag).unwrap_or_default();
+    for id in job_ids {
+        if !jobs.contains(id) {
+            jobs.push(id.clone());
+        }
+    }
+    let mut j = Json::obj();
+    j.set("campaign", tag)
+        .set("jobs", Json::Arr(jobs.iter().map(|s| Json::Str(s.clone())).collect()));
+    let tmp = unique_tmp(&path);
+    std::fs::write(&tmp, j.to_string_pretty())?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+/// The job ids registered under a campaign tag, in submission order.
+pub fn campaign_jobs(spool: &Path, tag: &str) -> Result<Vec<String>> {
+    validate_tag(tag)?;
+    let path = campaign_path(spool, tag);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no campaign '{tag}' in {}", spool.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("campaign '{tag}': {e}"))?;
+    Ok(j.get("jobs")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_str().map(String::from))
+        .collect())
+}
+
+/// Submit experiments through a spooler, optionally registering the
+/// job ids under a campaign tag. Returns the ids in submission order.
+/// Purely client-side: nothing blocks on workers.
+pub fn submit_experiments(
+    spool: &Spooler,
+    tag: Option<&str>,
+    exps: &[Experiment],
+) -> Result<Vec<String>> {
+    // validate the tag BEFORE enqueueing: a bad tag must not leave
+    // already-queued jobs behind with their ids never reported
+    if let Some(tag) = tag {
+        validate_tag(tag)?;
+    }
+    let ids: Vec<String> =
+        exps.iter().map(|e| spool.submit(e)).collect::<Result<_>>()?;
+    if let Some(tag) = tag {
+        record_jobs(&spool.dir, tag, &ids)?;
+    }
+    Ok(ids)
+}
+
+// ------------------------------------------------------------- status
+
+/// Campaign-level progress, computed in O(#jobs): existence checks in
+/// queue/running/done plus the stamp sidecars — no report body is ever
+/// opened.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CampaignStatus {
+    pub total: usize,
+    pub queued: usize,
+    pub leased: usize,
+    pub done_ok: usize,
+    pub done_error: usize,
+    /// Done reports whose stamp is missing or unreadable (pre-stamp
+    /// workers, or a corrupt sidecar): finished, outcome unknown.
+    pub done_unknown: usize,
+    /// Jobs registered in the campaign but visible nowhere in the
+    /// spool (e.g. a queue file deleted by hand).
+    pub missing: usize,
+}
+
+impl CampaignStatus {
+    pub fn done(&self) -> usize {
+        self.done_ok + self.done_error + self.done_unknown
+    }
+
+    pub fn render(&self, tag: &str) -> String {
+        format!(
+            "campaign '{tag}': {} job(s) — {} queued, {} leased, {} done \
+             ({} ok, {} error, {} unknown){}\n",
+            self.total,
+            self.queued,
+            self.leased,
+            self.done(),
+            self.done_ok,
+            self.done_error,
+            self.done_unknown,
+            if self.missing > 0 { format!(", {} missing", self.missing) } else { String::new() },
+        )
+    }
+}
+
+/// Compute [`CampaignStatus`] for a set of job ids.
+///
+/// Probes are ordered so a job moving *forward* (queue → running →
+/// done) between checks is never misreported as missing: `done` is
+/// terminal and checked first, then queue before running (the claim
+/// direction), and `done` once more at the end to catch a publish that
+/// landed mid-probe. Only a job caught mid-*reclaim* (running → queue,
+/// a sub-TTL window) can transiently count as missing.
+pub fn status_of_jobs(spool: &Path, job_ids: &[String]) -> CampaignStatus {
+    let mut st = CampaignStatus { total: job_ids.len(), ..Default::default() };
+    let done_outcome = |st: &mut CampaignStatus, id: &str| match read_stamp(spool, id) {
+        Some(s) if s.outcome == StampOutcome::Ok => st.done_ok += 1,
+        Some(_) => st.done_error += 1,
+        None => st.done_unknown += 1,
+    };
+    for id in job_ids {
+        let done = spool.join("done").join(format!("{id}.report.json"));
+        if done.exists() {
+            done_outcome(&mut st, id);
+        } else if spool.join("queue").join(format!("{id}.json")).exists() {
+            st.queued += 1;
+        } else if spool.join("running").join(format!("{id}.json")).exists() {
+            st.leased += 1;
+        } else if done.exists() {
+            // claimed and published while we probed
+            done_outcome(&mut st, id);
+        } else {
+            st.missing += 1;
+        }
+    }
+    st
+}
+
+/// [`status_of_jobs`] for a recorded campaign tag.
+pub fn campaign_status(spool: &Path, tag: &str) -> Result<CampaignStatus> {
+    Ok(status_of_jobs(spool, &campaign_jobs(spool, tag)?))
+}
+
+// -------------------------------------------------------------- fetch
+
+/// Copy the published reports of `job_ids` to `out_dir` as
+/// `<job>.report.json`, byte-for-byte (the `served_by` provenance
+/// stamp inside each report is preserved). Every job must be done;
+/// wait first ([`Spooler::wait_many`]).
+pub fn fetch_jobs(spool: &Spooler, job_ids: &[String], out_dir: &Path) -> Result<Vec<PathBuf>> {
+    std::fs::create_dir_all(out_dir)?;
+    let mut fetched = Vec::new();
+    for id in job_ids {
+        let src = spool.dir.join("done").join(format!("{id}.report.json"));
+        if !src.exists() {
+            bail!("job {id} has no published report (wait for the campaign first)");
+        }
+        let dest = out_dir.join(format!("{id}.report.json"));
+        let tmp = unique_tmp(&dest);
+        std::fs::copy(&src, &tmp).with_context(|| format!("fetching {id}"))?;
+        std::fs::rename(&tmp, &dest)?;
+        fetched.push(dest);
+    }
+    Ok(fetched)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::tests_support::dgemm_experiment;
+    use std::time::Duration;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("elaps_campaign_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn stamp_roundtrip_and_corruption() {
+        let dir = tmpdir("stamp");
+        std::fs::create_dir_all(&dir).unwrap();
+        let s = Stamp {
+            job_id: "job-1".into(),
+            host: "hostA".into(),
+            worker: "hostA#7-0".into(),
+            epoch: 3,
+            outcome: StampOutcome::Error,
+        };
+        write_stamp(&dir, &s).unwrap();
+        assert_eq!(read_stamp(&dir, "job-1"), Some(s.clone()));
+        // replace is atomic and overwrites
+        let s2 = Stamp { epoch: 4, outcome: StampOutcome::Ok, ..s.clone() };
+        write_stamp(&dir, &s2).unwrap();
+        assert_eq!(read_stamp(&dir, "job-1"), Some(s2.clone()));
+        // truncated and malformed stamps are skipped, never a panic
+        std::fs::write(stamp_path(&dir, "trunc"), r#"{"job_id":"tru"#).unwrap();
+        std::fs::write(stamp_path(&dir, "badout"), r#"{"job_id":"b","host":"h","worker":"w","epoch":1,"outcome":"maybe"}"#).unwrap();
+        let scan = read_stamps(&dir);
+        assert_eq!(scan.stamps.len(), 1);
+        assert_eq!(scan.stamps.get("job-1"), Some(&s2));
+        assert_eq!(scan.skipped, 2);
+        assert_eq!(read_stamp(&dir, "trunc"), None);
+        // a spool with no stamps directory scans as empty
+        assert!(read_stamps(&dir.join("nope")).stamps.is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_validation() {
+        let m = CampaignManifest {
+            campaign: "sweep".into(),
+            experiments: vec![
+                ManifestEntry::Path("a.json".into()),
+                ManifestEntry::Inline(dgemm_experiment(24)),
+            ],
+        };
+        let j = m.to_json();
+        assert!(CampaignManifest::is_manifest(&j));
+        let m2 = CampaignManifest::from_json(&j).unwrap();
+        assert_eq!(m2.campaign, "sweep");
+        assert_eq!(m2.experiments.len(), 2);
+        // parse ∘ serialize is the identity on the JSON form
+        assert_eq!(j.to_string_compact(), m2.to_json().to_string_compact());
+        // a bare experiment is not a manifest
+        assert!(!CampaignManifest::is_manifest(&io::experiment_to_json(
+            &dgemm_experiment(8)
+        )));
+        // validation: tag and experiment list are mandatory
+        for bad in [
+            r#"{"experiments":["a.json"]}"#,
+            r#"{"campaign":"  ","experiments":["a.json"]}"#,
+            r#"{"campaign":"a/b","experiments":["a.json"]}"#,
+            r#"{"campaign":"x"}"#,
+            r#"{"campaign":"x","experiments":[]}"#,
+            r#"{"campaign":"x","experiments":[42]}"#,
+        ] {
+            assert!(
+                CampaignManifest::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn manifest_resolves_paths_relative_to_base() {
+        let dir = tmpdir("resolve");
+        std::fs::create_dir_all(&dir).unwrap();
+        let exp = dgemm_experiment(16);
+        std::fs::write(
+            dir.join("e.json"),
+            io::experiment_to_json(&exp).to_string_pretty(),
+        )
+        .unwrap();
+        let m = CampaignManifest {
+            campaign: "c".into(),
+            experiments: vec![
+                ManifestEntry::Path("e.json".into()),
+                ManifestEntry::Inline(dgemm_experiment(8)),
+            ],
+        };
+        let exps = m.resolve(&dir).unwrap();
+        assert_eq!(exps.len(), 2);
+        assert_eq!(exps[0].name, exp.name);
+        // a dangling path is an error
+        let bad = CampaignManifest {
+            campaign: "c".into(),
+            experiments: vec![ManifestEntry::Path("missing.json".into())],
+        };
+        assert!(bad.resolve(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_record_submit_status_fetch_roundtrip() {
+        let dir = tmpdir("record");
+        let spool = Spooler::new(&dir).unwrap();
+        let exps: Vec<_> = (0..3).map(|i| dgemm_experiment(8 + 4 * i)).collect();
+        let ids = submit_experiments(&spool, Some("camp"), &exps).unwrap();
+        assert_eq!(ids.len(), 3);
+        assert_eq!(campaign_jobs(&dir, "camp").unwrap(), ids);
+        // incremental submission extends the record without duplicates
+        let more = submit_experiments(&spool, Some("camp"), &exps[..1]).unwrap();
+        record_jobs(&dir, "camp", &ids[..1]).unwrap();
+        let all = campaign_jobs(&dir, "camp").unwrap();
+        assert_eq!(all.len(), 4);
+        assert_eq!(&all[..3], &ids[..]);
+        assert_eq!(all[3], more[0]);
+        // tags that could collide or escape the directory are
+        // rejected outright, never sanitized into someone else's file
+        for bad in ["../evil", "evil tag", "a/b", "", ".", ".."] {
+            assert!(record_jobs(&dir, bad, &ids[..1]).is_err(), "{bad:?}");
+            assert!(campaign_jobs(&dir, bad).is_err(), "{bad:?}");
+        }
+        // status: everything queued, then drained to done-ok
+        let st = status_of_jobs(&dir, &all);
+        assert_eq!(st.total, 4);
+        assert_eq!(st.queued, 4);
+        assert_eq!(st.done(), 0);
+        spool.drain(2).unwrap();
+        let st = campaign_status(&dir, "camp").unwrap();
+        assert_eq!(st.done_ok, 4);
+        assert_eq!(st.done_error + st.done_unknown + st.missing, 0);
+        // an unknown tag is an error
+        assert!(campaign_status(&dir, "nope").is_err());
+        // wait returns immediately, fetch copies the raw reports
+        spool.wait_many(&all, Duration::from_secs(5)).unwrap();
+        let out = dir.join("fetched");
+        let files = fetch_jobs(&spool, &all, &out).unwrap();
+        assert_eq!(files.len(), 4);
+        for (id, f) in all.iter().zip(&files) {
+            let fetched = std::fs::read(f).unwrap();
+            let original =
+                std::fs::read(dir.join("done").join(format!("{id}.report.json"))).unwrap();
+            assert_eq!(fetched, original, "fetch must be byte-for-byte");
+        }
+        // fetching a job that was never published is an error
+        assert!(fetch_jobs(&spool, &["ghost".into()], &out).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -12,6 +12,16 @@ use anyhow::{anyhow, bail, Result};
 
 // ---------------------------------------------------------------- exp
 
+/// Load an experiment from a JSON file (the CLI's and the campaign
+/// manifest's shared path → [`Experiment`] step).
+pub fn load_experiment_file(path: impl AsRef<std::path::Path>) -> Result<Experiment> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    experiment_from_json(&j)
+}
+
 pub fn experiment_to_json(e: &Experiment) -> Json {
     let mut j = Json::obj();
     j.set("name", e.name.as_str())

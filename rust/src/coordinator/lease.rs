@@ -159,6 +159,28 @@ pub fn remove(spool: &Path, job_id: &str) -> Result<()> {
     }
 }
 
+/// Count the live (unexpired) leases currently held by `host` — the
+/// observable quantity the `--max-leases` backpressure caps. Corrupt
+/// lease files count as missing, exactly as [`read`] treats them.
+pub fn live_leases_for_host(spool: &Path, host: &str) -> Result<usize> {
+    let now = now_unix();
+    let mut live = 0;
+    for entry in std::fs::read_dir(leases_dir(spool))?.filter_map(|e| e.ok()) {
+        let path = entry.path();
+        if !path.extension().is_some_and(|x| x == "json") {
+            continue;
+        }
+        let lease = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|j| Lease::from_json(&j));
+        if lease.is_some_and(|l| l.host == host && !l.expired_at(now)) {
+            live += 1;
+        }
+    }
+    Ok(live)
+}
+
 // ------------------------------------------------------ spool status
 
 /// One currently leased (or legacy-claimed) job, for `spool status`.
@@ -179,10 +201,14 @@ pub struct SpoolStatus {
     pub done: usize,
     /// Leased jobs per host; legacy claims count under `"(legacy)"`.
     pub leased_by_host: BTreeMap<String, usize>,
-    /// Finished reports per serving host (from the report's
-    /// `served_by` stamp); reports without one count under
-    /// `"(unknown)"`.
+    /// Finished reports per serving host, read from the stamp sidecars
+    /// ([`crate::coordinator::campaign::Stamp`]) — never from the
+    /// report bodies, so the grouping is O(#jobs) regardless of report
+    /// size. Reports without a readable stamp (pre-stamp workers, or a
+    /// corrupt sidecar) count under `"(unknown)"`.
     pub done_by_host: BTreeMap<String, usize>,
+    /// Done reports whose stamp records an error outcome.
+    pub done_errors: usize,
 }
 
 impl SpoolStatus {
@@ -212,6 +238,9 @@ impl SpoolStatus {
             }
         }
         s += &format!("  done: {}\n", self.done);
+        if self.done_errors > 0 {
+            s += &format!("  done with errors: {}\n", self.done_errors);
+        }
         if !self.done_by_host.is_empty() {
             s += "  done per host:\n";
             for (host, n) in &self.done_by_host {
@@ -257,18 +286,30 @@ pub fn spool_status(dir: &Path) -> Result<SpoolStatus> {
     }
     leased.sort_by(|a, b| a.job_id.cmp(&b.job_id));
     st.leased = leased;
-    // done: group by the served_by stamp the publisher folded in
+    // done: group by the stamp sidecar the publisher wrote — report
+    // bodies are deliberately never opened (a corrupt or huge report
+    // cannot slow or break the status view; the sidecars keep this
+    // pass O(#jobs))
+    let scan = crate::coordinator::campaign::read_stamps(dir);
     for entry in std::fs::read_dir(dir.join("done"))?.filter_map(|e| e.ok()) {
-        let path = entry.path();
-        if !path.extension().is_some_and(|x| x == "json") {
+        let Some(job_id) = entry
+            .file_name()
+            .to_str()
+            .and_then(|n| n.strip_suffix(".report.json"))
+            .map(String::from)
+        else {
             continue;
-        }
+        };
         st.done += 1;
-        let host = std::fs::read_to_string(&path)
-            .ok()
-            .and_then(|text| Json::parse(&text).ok())
-            .and_then(|j| j.get("served_by").get("host").as_str().map(String::from))
-            .unwrap_or_else(|| "(unknown)".to_string());
+        let host = match scan.stamps.get(&job_id) {
+            Some(stamp) => {
+                if stamp.outcome == crate::coordinator::campaign::StampOutcome::Error {
+                    st.done_errors += 1;
+                }
+                stamp.host.clone()
+            }
+            None => "(unknown)".to_string(),
+        };
         *st.done_by_host.entry(host).or_insert(0) += 1;
     }
     Ok(st)
@@ -348,9 +389,22 @@ mod tests {
         std::fs::write(dir.join("running").join("r2.json"), "{}").unwrap();
         write(&dir, &lease("r1", 2, now_unix() + 30.0)).unwrap();
         // r2 has no lease: a legacy claim
-        std::fs::write(
-            dir.join("done").join("d1.report.json"),
-            r#"{"served_by":{"host":"hostB","worker":"hostB#9-0","epoch":1}}"#,
+        //
+        // d1 is a *deliberately corrupt* report body with a valid
+        // stamp sidecar: status must group it by the stamp's host,
+        // proving it never opens report bodies. d2 has no stamp (a
+        // pre-stamp worker published it) and counts as unknown.
+        std::fs::write(dir.join("done").join("d1.report.json"), "{CORRUPT not json")
+            .unwrap();
+        crate::coordinator::campaign::write_stamp(
+            &dir,
+            &crate::coordinator::campaign::Stamp {
+                job_id: "d1".into(),
+                host: "hostB".into(),
+                worker: "hostB#9-0".into(),
+                epoch: 1,
+                outcome: crate::coordinator::campaign::StampOutcome::Error,
+            },
         )
         .unwrap();
         std::fs::write(dir.join("done").join("d2.report.json"), "{}").unwrap();
@@ -358,6 +412,7 @@ mod tests {
         assert_eq!(st.queued, 1);
         assert_eq!(st.leased.len(), 2);
         assert_eq!(st.done, 2);
+        assert_eq!(st.done_errors, 1);
         assert_eq!(st.leased_by_host.get("hostA"), Some(&1));
         assert_eq!(st.leased_by_host.get("(legacy)"), Some(&1));
         assert_eq!(st.done_by_host.get("hostB"), Some(&1));
@@ -368,8 +423,26 @@ mod tests {
         assert!(text.contains("epoch 2"), "{text}");
         assert!(text.contains("legacy claim"), "{text}");
         assert!(text.contains("hostB"), "{text}");
+        assert!(text.contains("done with errors: 1"), "{text}");
         // a directory that is not a spool is an error
         assert!(spool_status(&dir.join("nope")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_lease_count_ignores_expired_and_foreign_hosts() {
+        let dir = tmpdir("live");
+        let now = now_unix();
+        write(&dir, &lease("a", 1, now + 60.0)).unwrap();
+        write(&dir, &lease("b", 1, now + 60.0)).unwrap();
+        write(&dir, &lease("c", 1, now - 1.0)).unwrap(); // expired
+        let mut foreign = lease("d", 1, now + 60.0);
+        foreign.host = "hostZ".into();
+        write(&dir, &foreign).unwrap();
+        std::fs::write(lease_path(&dir, "junk"), "{not json").unwrap();
+        assert_eq!(live_leases_for_host(&dir, "hostA").unwrap(), 2);
+        assert_eq!(live_leases_for_host(&dir, "hostZ").unwrap(), 1);
+        assert_eq!(live_leases_for_host(&dir, "nobody").unwrap(), 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -11,12 +11,14 @@ pub mod report;
 pub mod plot;
 pub mod io;
 pub mod lease;
+pub mod campaign;
 pub mod submit;
 
+pub use campaign::{CampaignManifest, CampaignStatus, ManifestEntry, Stamp, StampOutcome};
 pub use experiment::{Call, CallArg, DataGen, Experiment, RangeDef, Vary};
 pub use lease::{FenceReason, Lease, PublishOutcome, SpoolStatus};
 pub use plot::Figure;
 pub use report::{Metric, PointResult, Report};
 pub use stats::Stat;
-pub use submit::{run_local, ClaimedJob, Spooler};
+pub use submit::{run_local, Backoff, ClaimOutcome, ClaimedJob, Spooler};
 pub use symbolic::Expr;

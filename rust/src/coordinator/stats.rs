@@ -46,8 +46,17 @@ impl Stat {
             Stat::Max => values.iter().copied().fold(f64::NEG_INFINITY, f64::max),
             Stat::Avg => values.iter().sum::<f64>() / values.len() as f64,
             Stat::Median => {
+                // A NaN sample poisons the median, exactly as it does
+                // avg and std — anything else would rank the NaN at an
+                // end (where depends on its sign bit) and silently
+                // shift the reported median of the finite samples.
+                if values.iter().any(|v| v.is_nan()) {
+                    return f64::NAN;
+                }
                 let mut v = values.to_vec();
-                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                // total_cmp instead of partial_cmp(..).unwrap(): the
+                // sort must never be able to panic a report reduction
+                v.sort_by(f64::total_cmp);
                 let n = v.len();
                 if n % 2 == 1 {
                     v[n / 2]
@@ -96,8 +105,35 @@ mod tests {
     }
 
     #[test]
+    fn median_even() {
+        assert_eq!(Stat::Median.apply(&[4.0, 1.0, 3.0, 2.0]), 2.5);
+        assert_eq!(Stat::Median.apply(&[1.0, 2.0]), 1.5);
+    }
+
+    #[test]
     fn empty_is_nan() {
-        assert!(Stat::Avg.apply(&[]).is_nan());
+        for &s in ALL_STATS {
+            assert!(s.apply(&[]).is_nan(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn nan_samples_never_panic() {
+        // the regression: Median used to sort with
+        // partial_cmp(..).unwrap(), which panics on NaN samples
+        let with_nan = &[2.0, f64::NAN, 1.0];
+        // a poisoned sample yields NaN — consistently with avg/std,
+        // and independent of the NaN's sign bit (total_cmp would rank
+        // -NaN first but +NaN last)
+        assert!(Stat::Median.apply(with_nan).is_nan());
+        assert!(Stat::Median.apply(&[1.0, f64::NAN]).is_nan());
+        assert!(Stat::Median.apply(&[-f64::NAN, 5.0, 6.0]).is_nan());
+        // the other stats handle NaN without panicking
+        for &s in ALL_STATS {
+            let _ = s.apply(with_nan);
+        }
+        assert!(Stat::Std.apply(with_nan).is_nan());
+        assert!(Stat::Avg.apply(with_nan).is_nan());
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! can drain one spool directory on a shared filesystem and a zombie
 //! worker's late publish is rejected instead of corrupting the output.
 
+use super::campaign::{self, Stamp, StampOutcome};
 use super::experiment::Experiment;
 use super::io;
 use super::lease::{self, FenceReason, Lease, PublishOutcome};
@@ -15,7 +16,7 @@ use super::report::Report;
 use anyhow::{anyhow, bail, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Run an experiment on in-process samplers (the "local" backend).
@@ -49,6 +50,46 @@ pub struct ClaimedJob {
     running: PathBuf,
     /// The job file's contents (the experiment JSON).
     pub text: String,
+    /// The backpressure slot this claim occupies (only when the
+    /// spooler has a `max_leases` cap). Held purely for its drop glue:
+    /// the slot frees when the last clone of the claim is dropped, so
+    /// its lifetime covers the lease's whole claim-execute-publish
+    /// span.
+    _slot: Option<SlotGuard>,
+}
+
+/// One occupied backpressure slot. Cloned with the claim; the
+/// underlying slot is returned to the pool when the last clone drops.
+#[derive(Debug, Clone)]
+struct SlotGuard {
+    /// Held only for its [`SlotRelease`] drop glue.
+    _release: Arc<SlotRelease>,
+}
+
+#[derive(Debug)]
+struct SlotRelease {
+    held: Arc<AtomicUsize>,
+}
+
+impl Drop for SlotRelease {
+    fn drop(&mut self) {
+        self.held.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Why [`Spooler::try_claim`] returned without a job.
+#[derive(Debug, Clone)]
+pub enum ClaimOutcome {
+    /// A job was claimed and leased.
+    Claimed(ClaimedJob),
+    /// The queue is empty (for this pass — a concurrent submit may
+    /// land right after).
+    Empty,
+    /// Jobs are queued, but this host already holds `max_leases` live
+    /// leases: claiming must wait until an in-flight job publishes or
+    /// a lease expires. A capped host with an *empty* queue reports
+    /// [`ClaimOutcome::Empty`] instead, so `--once` pools can exit.
+    Backpressured,
 }
 
 /// The batch spooler: `submit` drops a job file into `<spool>/queue`;
@@ -66,6 +107,14 @@ pub struct Spooler {
     worker_id: String,
     /// Lease TTL: how long a claim stays valid without a renewal.
     ttl: Duration,
+    /// Per-host lease backpressure: at most this many live leases for
+    /// this host at once ([`Spooler::try_claim`]); `None` = unlimited.
+    max_leases: Option<usize>,
+    /// Slots currently occupied by in-flight claims of this handle and
+    /// its clones (a worker pool shares one counter, so in-process
+    /// enforcement of `max_leases` is exact; the on-disk lease count
+    /// additionally throttles against other processes on this host).
+    slots_held: Arc<AtomicUsize>,
 }
 
 impl Spooler {
@@ -79,6 +128,7 @@ impl Spooler {
         std::fs::create_dir_all(dir.join("running"))?;
         std::fs::create_dir_all(dir.join("done"))?;
         std::fs::create_dir_all(dir.join("leases"))?;
+        std::fs::create_dir_all(dir.join("stamps"))?;
         let ttl = std::env::var("ELAPS_LEASE_TTL")
             .ok()
             .and_then(|v| crate::util::cli::parse_duration(&v).ok())
@@ -89,6 +139,8 @@ impl Spooler {
             host: crate::util::hostid::hostname().to_string(),
             worker_id: crate::util::hostid::new_worker_id(),
             ttl,
+            max_leases: None,
+            slots_held: Arc::new(AtomicUsize::new(0)),
         })
     }
 
@@ -114,6 +166,18 @@ impl Spooler {
         self
     }
 
+    /// Cap the number of live leases this host may hold at once (the
+    /// `elaps worker --max-leases` backpressure). `0` removes the cap.
+    /// Worker-pool clones of this handle share one slot counter, so
+    /// enforcement within a daemon is exact; other processes on the
+    /// same host are throttled via the on-disk live-lease count (a
+    /// check-then-claim, so momentary overshoot across *processes* is
+    /// possible — run one daemon per host for a hard cap).
+    pub fn with_max_leases(mut self, max: usize) -> Spooler {
+        self.max_leases = if max == 0 { None } else { Some(max) };
+        self
+    }
+
     pub fn host(&self) -> &str {
         &self.host
     }
@@ -124,6 +188,11 @@ impl Spooler {
 
     pub fn ttl(&self) -> Duration {
         self.ttl
+    }
+
+    /// The per-host live-lease cap, if any.
+    pub fn max_leases(&self) -> Option<usize> {
+        self.max_leases
     }
 
     /// Submit an experiment; returns the job id. The id embeds a
@@ -151,8 +220,55 @@ impl Spooler {
     /// `<spool>/running/` and acquire its lease (epoch = previous
     /// epoch + 1, expiry = now + TTL). Losing the rename race to a
     /// concurrent worker is not an error — the claimer just moves on
-    /// to the next queue entry.
-    pub fn claim_next(&self) -> Result<Option<ClaimedJob>> {
+    /// to the next queue entry. With a `max_leases` cap, a claim is
+    /// refused ([`ClaimOutcome::Backpressured`]) while this host
+    /// already holds that many live leases: the slot is taken *before*
+    /// the lease is written and released only after the claim's lease
+    /// is gone, so an observer scanning `<spool>/leases/` never counts
+    /// more than `max_leases` live leases for this host.
+    pub fn try_claim(&self) -> Result<ClaimOutcome> {
+        // Backpressured only when there is actually something to be
+        // backpressured *from*: a capped host with an empty queue is
+        // Empty, so --once pools terminate instead of spinning on a
+        // neighbor's leases.
+        let at_capacity = |spooler: &Spooler| -> Result<ClaimOutcome> {
+            Ok(if spooler.queued()? == 0 {
+                ClaimOutcome::Empty
+            } else {
+                ClaimOutcome::Backpressured
+            })
+        };
+        let slot = match self.max_leases {
+            None => None,
+            Some(cap) => {
+                // in-process slot first (exact within a worker pool)
+                let mut cur = self.slots_held.load(Ordering::SeqCst);
+                loop {
+                    if cur >= cap {
+                        return at_capacity(self);
+                    }
+                    match self.slots_held.compare_exchange(
+                        cur,
+                        cur + 1,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    ) {
+                        Ok(_) => break,
+                        Err(seen) => cur = seen,
+                    }
+                }
+                let guard = SlotGuard {
+                    _release: Arc::new(SlotRelease { held: self.slots_held.clone() }),
+                };
+                // then the on-disk count: leases of this host written
+                // by other processes (or left behind by a crashed
+                // claim) also occupy capacity until they expire
+                if lease::live_leases_for_host(&self.dir, &self.host)? >= cap {
+                    return at_capacity(self); // guard drops
+                }
+                Some(guard)
+            }
+        };
         let queue = self.dir.join("queue");
         let mut entries: Vec<_> = std::fs::read_dir(&queue)?
             .filter_map(|e| e.ok())
@@ -187,9 +303,26 @@ impl Spooler {
                 expires_unix: lease::now_unix() + self.ttl.as_secs_f64(),
             };
             lease::write(&self.dir, &l)?;
-            return Ok(Some(ClaimedJob { job_id, lease: l, running, text }));
+            return Ok(ClaimOutcome::Claimed(ClaimedJob {
+                job_id,
+                lease: l,
+                running,
+                text,
+                _slot: slot,
+            }));
         }
-        Ok(None)
+        Ok(ClaimOutcome::Empty)
+    }
+
+    /// [`Spooler::try_claim`] flattened to an `Option`: `None` covers
+    /// both an empty queue and a backpressured host. Callers that must
+    /// distinguish the two (the worker daemon's `--once` loop) use
+    /// `try_claim` directly.
+    pub fn claim_next(&self) -> Result<Option<ClaimedJob>> {
+        Ok(match self.try_claim()? {
+            ClaimOutcome::Claimed(c) => Some(c),
+            ClaimOutcome::Empty | ClaimOutcome::Backpressured => None,
+        })
     }
 
     /// Heartbeat: extend the claim's on-disk lease by one TTL. Returns
@@ -223,7 +356,73 @@ impl Spooler {
     /// `<spool>/done/` via temp + rename (readers only ever see a
     /// complete report), then the claim and lease are released.
     pub fn publish(&self, claim: &ClaimedJob, payload: &str) -> Result<PublishOutcome> {
-        let fence = match lease::read(&self.dir, &claim.job_id) {
+        if let Some(reason) = self.fence_reason(claim) {
+            return Ok(PublishOutcome::Fenced(reason));
+        }
+        let done = self.dir.join("done").join(format!("{}.report.json", claim.job_id));
+        let tmp = unique_tmp(&done);
+        std::fs::write(&tmp, payload)?;
+        // Re-check the fence right before the rename: the payload
+        // write above is the slow step (a multi-megabyte report over
+        // NFS), and a publisher that stalled in it must not overwrite
+        // a successor's already-published report on wake-up. The
+        // remaining stall window is the rename syscall itself —
+        // at-least-once semantics (last writer wins) still cover it.
+        if let Some(reason) = self.fence_reason(claim) {
+            let _ = std::fs::remove_file(&tmp);
+            return Ok(PublishOutcome::Fenced(reason));
+        }
+        std::fs::rename(&tmp, &done)?;
+        // Proceed only with what is still ours: if the lease expired in
+        // the tiny window since the fence check and a successor already
+        // re-acquired the job, its claim and epoch-bumped lease must
+        // not be torn down — and the stamp sidecar must not be written
+        // either, or a publisher stalled mid-publish could pair its
+        // stale stamp with the successor's report. The successor
+        // finishes and republishes report *and* stamp (at-least-once,
+        // last writer wins).
+        let still_ours = lease::read(&self.dir, &claim.job_id)
+            .is_some_and(|l| {
+                l.worker_id == claim.lease.worker_id && l.epoch == claim.lease.epoch
+            });
+        if still_ours {
+            // Stamp sidecar: the O(#jobs) index over done reports that
+            // `spool status` and campaign-level wait read instead of
+            // the report bodies. Written right after the report (a
+            // crash in between leaves a report with "(unknown)"
+            // provenance, never a stamp without its report).
+            let outcome = match crate::util::json::Json::parse(payload) {
+                Ok(j) if j.get("error").is_null() => StampOutcome::Ok,
+                _ => StampOutcome::Error,
+            };
+            campaign::write_stamp(
+                &self.dir,
+                &Stamp {
+                    job_id: claim.job_id.clone(),
+                    host: claim.lease.host.clone(),
+                    worker: claim.lease.worker_id.clone(),
+                    epoch: claim.lease.epoch,
+                    outcome,
+                },
+            )?;
+            // claim file first, lease last (a crash in between leaves
+            // a reclaimable claim whose re-execution republishes the
+            // same report — consistent)
+            match std::fs::remove_file(&claim.running) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(e.into()),
+            }
+            lease::remove(&self.dir, &claim.job_id)?;
+        }
+        Ok(PublishOutcome::Published)
+    }
+
+    /// The publish fence, evaluated against the on-disk lease: `None`
+    /// while the lease still names this claim's `(worker_id, epoch)`
+    /// and is unexpired, otherwise why the publish must be refused.
+    fn fence_reason(&self, claim: &ClaimedJob) -> Option<FenceReason> {
+        match lease::read(&self.dir, &claim.job_id) {
             Some(l)
                 if l.worker_id == claim.lease.worker_id && l.epoch == claim.lease.epoch =>
             {
@@ -238,35 +437,7 @@ impl Spooler {
                 current_worker: l.worker_id,
             }),
             None => Some(FenceReason::LeaseGone),
-        };
-        if let Some(reason) = fence {
-            return Ok(PublishOutcome::Fenced(reason));
         }
-        let done = self.dir.join("done").join(format!("{}.report.json", claim.job_id));
-        let tmp = unique_tmp(&done);
-        std::fs::write(&tmp, payload)?;
-        std::fs::rename(&tmp, &done)?;
-        // Release only what is still ours: if the lease expired in the
-        // tiny window since the fence check and a successor already
-        // re-acquired the job, its claim and epoch-bumped lease must
-        // not be torn down — the successor finishes and republishes
-        // the same report (at-least-once, last writer wins).
-        let still_ours = lease::read(&self.dir, &claim.job_id)
-            .is_some_and(|l| {
-                l.worker_id == claim.lease.worker_id && l.epoch == claim.lease.epoch
-            });
-        if still_ours {
-            // claim file first, lease last (a crash in between leaves
-            // a reclaimable claim whose re-execution republishes the
-            // same report — consistent)
-            match std::fs::remove_file(&claim.running) {
-                Ok(()) => {}
-                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-                Err(e) => return Err(e.into()),
-            }
-            lease::remove(&self.dir, &claim.job_id)?;
-        }
-        Ok(PublishOutcome::Published)
     }
 
     /// The `served_by` provenance stamp folded into every published
@@ -440,39 +611,56 @@ impl Spooler {
     }
 
     /// Block until a job's report appears, polling with jittered
-    /// exponential backoff (10 ms doubling, sleeps drawn uniformly
-    /// from [base/2, base], capped at 1 s) — the submit → poll → fetch
-    /// workflow of the paper's LoadLeveler/LSF setups. The jitter
-    /// desynchronizes many clients waiting on one shared (NFS) spool,
-    /// so poll stampedes don't hammer the fileserver in lockstep.
+    /// exponential backoff ([`Backoff`]) — the submit → poll → fetch
+    /// workflow of the paper's LoadLeveler/LSF setups.
     pub fn wait(&self, job_id: &str, timeout: Duration) -> Result<Report> {
         let deadline = Instant::now() + timeout;
-        // deterministic per (job, process): reproducible traces, yet
-        // different clients spread out
-        let mut seed = 0xcbf2_9ce4_8422_2325u64;
-        for b in job_id.bytes() {
-            seed ^= b as u64;
-            seed = seed.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        let mut rng = crate::util::rng::Xoshiro256::seeded(seed ^ std::process::id() as u64);
-        let mut base = Duration::from_millis(10);
+        let mut backoff = Backoff::new(job_id);
         loop {
             if let Some(report) = self.fetch(job_id)? {
                 return Ok(report);
             }
-            let now = Instant::now();
-            if now >= deadline {
+            if !backoff.sleep_until(deadline) {
                 bail!("timed out after {timeout:?} waiting for job {job_id}");
             }
-            let jittered = base.mul_f64(rng.range_f64(0.5, 1.0));
-            std::thread::sleep(jittered.min(deadline - now));
-            base = (base * 2).min(Duration::from_secs(1));
+        }
+    }
+
+    /// Block until *every* job's report exists, with the same jittered
+    /// backoff as [`Spooler::wait`]. Each poll is an O(#jobs) existence
+    /// scan — no report body is parsed, so waiting on a huge campaign
+    /// costs directory metadata only; outcomes are judged afterwards
+    /// from the stamp sidecars. Errors on timeout with the jobs still
+    /// missing.
+    pub fn wait_many(&self, job_ids: &[String], timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        let done = self.dir.join("done");
+        let mut pending: Vec<&String> = job_ids.iter().collect();
+        let mut backoff = Backoff::new(&job_ids.join(","));
+        loop {
+            pending.retain(|id| !done.join(format!("{id}.report.json")).exists());
+            if pending.is_empty() {
+                return Ok(());
+            }
+            if !backoff.sleep_until(deadline) {
+                let shown: Vec<&str> =
+                    pending.iter().take(5).map(|s| s.as_str()).collect();
+                bail!(
+                    "timed out after {timeout:?} with {} of {} job(s) unpublished \
+                     (first: {})",
+                    pending.len(),
+                    job_ids.len(),
+                    shown.join(", ")
+                );
+            }
         }
     }
 
     /// Drain the queue with `jobs` concurrent workers. Each worker gets
     /// its own lease identity and claims jobs until the queue is empty.
-    /// Returns the number of jobs served.
+    /// Returns the number of jobs served. Under a `max_leases` cap a
+    /// backpressured worker thread exits as if the queue were empty;
+    /// the threads still holding slots finish the drain.
     pub fn drain(&self, jobs: usize) -> Result<usize> {
         let jobs = jobs.max(1);
         let served = AtomicUsize::new(0);
@@ -535,18 +723,21 @@ impl Spooler {
                 let first_err = &first_err;
                 s.spawn(move || {
                     let run = || -> Result<()> {
+                        let mut backoff = Backoff::new(sp.worker_id());
                         loop {
                             if shutdown.load(Ordering::Relaxed) {
                                 return Ok(());
                             }
                             sp.recover_stale(legacy)?;
-                            match sp.claim_next()? {
-                                Some(claim) => {
+                            match sp.try_claim()? {
+                                ClaimOutcome::Claimed(claim) => {
                                     if sp.serve_claim(&claim, true)?.published() {
                                         served.fetch_add(1, Ordering::Relaxed);
                                     }
+                                    // progress: next stall starts gentle
+                                    backoff = Backoff::new(sp.worker_id());
                                 }
-                                None => {
+                                ClaimOutcome::Empty => {
                                     if once {
                                         return Ok(());
                                     }
@@ -557,6 +748,23 @@ impl Spooler {
                                         }
                                         std::thread::sleep(Duration::from_millis(20));
                                     }
+                                }
+                                ClaimOutcome::Backpressured => {
+                                    // jobs remain but the host is at
+                                    // its lease cap: wait for a slot
+                                    // even under --once (our own
+                                    // in-flight jobs will free one —
+                                    // exiting here would strand the
+                                    // queue). Jittered backoff, not a
+                                    // fixed tick: capped pools on many
+                                    // hosts must not rescan a shared
+                                    // NFS spool in lockstep.
+                                    if shutdown.load(Ordering::Relaxed) {
+                                        return Ok(());
+                                    }
+                                    backoff.sleep_until(
+                                        Instant::now() + Duration::from_secs(1),
+                                    );
                                 }
                             }
                         }
@@ -584,6 +792,44 @@ impl Spooler {
         self.serve_one()?;
         self.fetch(&id)?
             .ok_or_else(|| anyhow!("job {id} did not produce a report"))
+    }
+}
+
+/// Jittered exponential backoff for spool polling: 10 ms doubling,
+/// sleeps drawn uniformly from [base/2, base], capped at 1 s. The
+/// jitter desynchronizes many clients polling one shared (NFS) spool,
+/// so stampedes don't hammer the fileserver in lockstep; the RNG seed
+/// is deterministic per (key, process) — reproducible traces, yet
+/// different clients spread out.
+pub struct Backoff {
+    rng: crate::util::rng::Xoshiro256,
+    base: Duration,
+}
+
+impl Backoff {
+    pub fn new(key: &str) -> Backoff {
+        let mut seed = 0xcbf2_9ce4_8422_2325u64;
+        for b in key.bytes() {
+            seed ^= b as u64;
+            seed = seed.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Backoff {
+            rng: crate::util::rng::Xoshiro256::seeded(seed ^ std::process::id() as u64),
+            base: Duration::from_millis(10),
+        }
+    }
+
+    /// Sleep one jittered step, never past `deadline`. Returns `false`
+    /// (without sleeping) once the deadline has passed.
+    pub fn sleep_until(&mut self, deadline: Instant) -> bool {
+        let now = Instant::now();
+        if now >= deadline {
+            return false;
+        }
+        let jittered = self.base.mul_f64(self.rng.range_f64(0.5, 1.0));
+        std::thread::sleep(jittered.min(deadline - now));
+        self.base = (self.base * 2).min(Duration::from_secs(1));
+        true
     }
 }
 
@@ -710,6 +956,36 @@ mod tests {
                 .unwrap();
         assert!(raw.contains("served_by"), "{raw}");
         assert!(raw.contains("hostA"), "{raw}");
+        // publishing also wrote the stamp sidecar (the O(#jobs) index)
+        let stamp = campaign::read_stamp(&dir, &id).unwrap();
+        assert_eq!(stamp.host, "hostA");
+        assert_eq!(stamp.epoch, 1);
+        assert_eq!(stamp.outcome, StampOutcome::Ok);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wait_many_blocks_until_every_report_exists() {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_spool_waitmany_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spool = Spooler::new(&dir).unwrap();
+        let ids: Vec<String> =
+            (0..3).map(|_| spool.submit(&dgemm_experiment(12)).unwrap()).collect();
+        // nothing served yet: an expired deadline names the missing jobs
+        let err = spool.wait_many(&ids, Duration::ZERO).unwrap_err();
+        assert!(err.to_string().contains("3 of 3"), "{err}");
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                spool.drain(2).unwrap();
+            });
+            spool.wait_many(&ids, Duration::from_secs(60)).unwrap();
+        });
+        for id in &ids {
+            assert!(spool.fetch(id).unwrap().is_some(), "{id}");
+        }
+        // an empty id set is trivially satisfied
+        spool.wait_many(&[], Duration::ZERO).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -5,6 +5,9 @@
 //! Subcommands:
 //!   run <exp.json>        run an experiment file (local or --batch)
 //!   batch <exp.json>…     run a campaign of experiments via the engine
+//!   submit <file>…        enqueue experiments/campaigns, print job ids
+//!   wait [ids…]           block until jobs (or a campaign) publish
+//!   fetch [ids…]          copy published reports to local files
 //!   view <report.json>    metrics/statistics of a stored report
 //!   plot <report.json>    ASCII + SVG plot of a stored report
 //!   figures [ids…]        regenerate the paper's tables/figures
@@ -21,7 +24,7 @@
 //! serves hits only from entries measured without contention (jobs ≤ 1).
 
 use anyhow::{anyhow, bail, Context, Result};
-use elaps::coordinator::{io, Metric, Spooler, Stat};
+use elaps::coordinator::{campaign, io, Metric, Spooler, Stat};
 use elaps::engine::{Engine, EngineConfig};
 use elaps::perfmodel::MachineModel;
 use elaps::sampler::Sampler;
@@ -36,6 +39,9 @@ USAGE:
   elaps run <experiment.json> [--jobs N] [--cache DIR] [--out report.json]
             [--warm] [--seed S] [--batch --spool DIR]
   elaps batch <exp.json>… [--jobs N] [--cache DIR] [--out-dir batch_out]
+  elaps submit <exp-or-manifest.json>… [--campaign TAG] [--spool DIR]
+  elaps wait [JOB_ID…] [--campaign TAG] [--timeout DUR] [--spool DIR]
+  elaps fetch [JOB_ID…] [--campaign TAG] [--out-dir fetched] [--spool DIR]
   elaps view <report.json> [--metric M] [--stat S]
   elaps plot <report.json> [--metric M] [--stat S] [--svg out.svg]
   elaps figures [T1 F1 F2 … W1|all] [--full] [--jobs N] [--cache DIR]
@@ -45,7 +51,7 @@ USAGE:
   elaps cache clear [--cache DIR]
   elaps sampler [--library L] [--machine M]
   elaps worker --spool DIR [--once] [--workers N] [--lease-ttl DUR]
-               [--recover SECS|0=off]
+               [--max-leases N] [--recover SECS|0=off]
   elaps spool status [--spool DIR]
   elaps kernels
   elaps libraries
@@ -68,7 +74,20 @@ stats:   min max avg med std
                --warm and --jobs are byte-identical (env ELAPS_SEED)
 --max-bytes N  cache gc byte budget; K/M/G suffixes are powers of 1024
 --max-age DUR  cache gc age cutoff by store time: N[s|m|h|d], e.g. 7d
+--campaign TAG address jobs as a named campaign: submit records the job
+               ids under <spool>/campaigns/<TAG>.json; wait and fetch
+               then take the tag instead of individual job ids. A
+               manifest file {\"campaign\": TAG, \"experiments\": [...]}
+               submits a whole campaign in one call (entries are paths
+               resolved relative to the manifest, or inline experiments)
+--timeout DUR  wait deadline, N[s|m|h|d] (default 10m). Waiting is
+               O(#jobs) per poll: report existence + stamp sidecars
+               (a report body is read only as the outcome fallback for
+               a done job whose stamp is missing)
 --workers N    worker daemon threads draining one spool (default 1)
+--max-leases N per-host lease backpressure: this host never holds more
+               than N live leases at once; claims beyond that wait for
+               a publish or an expiry (default: unlimited)
 --lease-ttl D  job-lease TTL, N[s|m|h|d] (default 300s; env
                ELAPS_LEASE_TTL). Leases are heartbeat-renewed while a
                job runs; an expired lease is reclaimed by any worker,
@@ -108,6 +127,9 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "batch" => cmd_batch(&args),
+        "submit" => cmd_submit(&args),
+        "wait" => cmd_wait(&args),
+        "fetch" => cmd_fetch(&args),
         "view" => cmd_view(&args),
         "plot" => cmd_plot(&args),
         "figures" => cmd_figures(&args),
@@ -126,9 +148,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
 }
 
 fn load_experiment(path: &str) -> Result<elaps::Experiment> {
-    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
-    io::experiment_from_json(&j)
+    io::load_experiment_file(path)
 }
 
 /// Engine configuration from `--jobs` / `--cache`, layered over the
@@ -186,12 +206,7 @@ fn cmd_cache(args: &Args) -> Result<()> {
                     elaps::util::cli::parse_byte_size(v).map_err(|e| anyhow!("--max-bytes: {e}"))
                 })
                 .transpose()?;
-            let max_age = args
-                .opt("max-age")
-                .map(|v| {
-                    elaps::util::cli::parse_duration(v).map_err(|e| anyhow!("--max-age: {e}"))
-                })
-                .transpose()?;
+            let max_age = args.opt_duration_strict("max-age").map_err(|e| anyhow!(e))?;
             if budget.is_none() && max_age.is_none() {
                 bail!(
                     "cache gc requires --max-bytes N (K/M/G suffixes allowed) \
@@ -292,6 +307,179 @@ fn cmd_batch(args: &Args) -> Result<()> {
         println!("report written to {}", out.display());
     }
     println!("{} ({:.1}s)", stats.summary_line(), t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// `elaps submit`: the asynchronous client's enqueue step — drop
+/// experiments (or whole campaign manifests) into the spool and print
+/// the job ids, one per line on stdout, without blocking on any
+/// worker. A manifest submits under its own campaign tag; `--campaign`
+/// overrides it (and tags loose experiment files).
+fn cmd_submit(args: &Args) -> Result<()> {
+    if args.positional.is_empty() {
+        bail!("usage: elaps submit <exp-or-manifest.json>… [--campaign TAG] [--spool DIR]");
+    }
+    if args.flag("campaign") {
+        bail!("--campaign requires a tag");
+    }
+    let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    let override_tag = args.opt("campaign");
+    let mut total = 0usize;
+    for path in &args.positional {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        let (tag, exps) = if campaign::CampaignManifest::is_manifest(&j) {
+            let m = campaign::CampaignManifest::from_json(&j)
+                .with_context(|| path.clone())?;
+            let base = std::path::Path::new(path)
+                .parent()
+                .filter(|p| !p.as_os_str().is_empty())
+                .unwrap_or_else(|| std::path::Path::new("."))
+                .to_path_buf();
+            let exps = m.resolve(&base)?;
+            (Some(override_tag.unwrap_or(&m.campaign).to_string()), exps)
+        } else {
+            let exp = io::experiment_from_json(&j).with_context(|| path.clone())?;
+            (override_tag.map(String::from), vec![exp])
+        };
+        let ids = campaign::submit_experiments(&spool, tag.as_deref(), &exps)?;
+        for id in &ids {
+            println!("{id}");
+        }
+        match &tag {
+            Some(tag) => eprintln!(
+                "submitted {} job(s) from {path} to campaign '{tag}'",
+                ids.len()
+            ),
+            None => eprintln!("submitted {} job(s) from {path}", ids.len()),
+        }
+        total += ids.len();
+    }
+    eprintln!(
+        "{total} job(s) queued in {0}; drain with: elaps worker --spool {0}",
+        spool.dir.display()
+    );
+    Ok(())
+}
+
+/// Job ids addressed by a `wait`/`fetch` invocation: the explicit
+/// positional ids plus every job recorded under `--campaign TAG`.
+fn jobs_from_args(args: &Args, spool: &std::path::Path) -> Result<Vec<String>> {
+    if args.flag("campaign") {
+        bail!("--campaign requires a tag");
+    }
+    let mut seen = std::collections::HashSet::new();
+    let mut ids: Vec<String> = Vec::new();
+    for id in &args.positional {
+        if seen.insert(id.clone()) {
+            ids.push(id.clone());
+        }
+    }
+    if let Some(tag) = args.opt("campaign") {
+        for id in campaign::campaign_jobs(spool, tag)? {
+            if seen.insert(id.clone()) {
+                ids.push(id);
+            }
+        }
+    }
+    if ids.is_empty() {
+        bail!("nothing to address: pass job ids or --campaign TAG");
+    }
+    Ok(ids)
+}
+
+/// `elaps wait`: block until every addressed job has published,
+/// polling with jittered backoff. O(#jobs) per poll and O(#jobs) for
+/// the final outcome summary — report existence checks and stamp
+/// sidecars only, never a report body.
+fn cmd_wait(args: &Args) -> Result<()> {
+    let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    let ids = jobs_from_args(args, &spool.dir)?;
+    let timeout = args
+        .opt_duration_strict("timeout")
+        .map_err(|e| anyhow!(e))?
+        .unwrap_or(std::time::Duration::from_secs(600));
+    if let Err(e) = spool.wait_many(&ids, timeout) {
+        let st = campaign::status_of_jobs(&spool.dir, &ids);
+        eprint!("{}", st.render(args.opt_or("campaign", "(ad-hoc)")));
+        return Err(e);
+    }
+    // one stamp read per job: the outcome lines and the campaign
+    // summary are derived from the same pass (every job is done at
+    // this point, so the summary needs no further probing)
+    let (mut ok, mut errors, mut unknown) = (0usize, 0usize, 0usize);
+    for id in &ids {
+        match campaign::read_stamp(&spool.dir, id) {
+            Some(s) => {
+                println!(
+                    "{id}  {} (host {}, worker {}, epoch {})",
+                    s.outcome.as_str(),
+                    s.host,
+                    s.worker,
+                    s.epoch
+                );
+                match s.outcome {
+                    elaps::coordinator::StampOutcome::Ok => ok += 1,
+                    elaps::coordinator::StampOutcome::Error => errors += 1,
+                }
+            }
+            None => {
+                // stamp missing (a pre-stamp worker, or a crash in the
+                // report→stamp window): fall back to probing this one
+                // report's body, so an error report still fails the
+                // wait — the O(#jobs) guarantee holds for stamped jobs
+                let body_error = std::fs::read_to_string(
+                    spool.dir.join("done").join(format!("{id}.report.json")),
+                )
+                .ok()
+                .and_then(|text| Json::parse(&text).ok())
+                .map(|j| !j.get("error").is_null());
+                match body_error {
+                    Some(true) => {
+                        println!("{id}  error (no stamp; outcome from report body)");
+                        errors += 1;
+                    }
+                    Some(false) => {
+                        println!("{id}  ok (no stamp; outcome from report body)");
+                        ok += 1;
+                    }
+                    None => {
+                        println!("{id}  done (no stamp, unreadable report: outcome unknown)");
+                        unknown += 1;
+                    }
+                }
+            }
+        }
+    }
+    if let Some(tag) = args.opt("campaign") {
+        let st = elaps::coordinator::CampaignStatus {
+            total: ids.len(),
+            done_ok: ok,
+            done_error: errors,
+            done_unknown: unknown,
+            ..Default::default()
+        };
+        print!("{}", st.render(tag));
+    }
+    if errors > 0 {
+        bail!("{errors} of {} job(s) published error reports", ids.len());
+    }
+    Ok(())
+}
+
+/// `elaps fetch`: copy the published reports of the addressed jobs to
+/// local files, byte-for-byte (each report keeps its `served_by`
+/// provenance stamp). Prints the fetched paths, one per line.
+fn cmd_fetch(args: &Args) -> Result<()> {
+    let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    let ids = jobs_from_args(args, &spool.dir)?;
+    let out_dir = std::path::PathBuf::from(args.opt_or("out-dir", "fetched"));
+    let files = campaign::fetch_jobs(&spool, &ids, &out_dir)?;
+    for f in &files {
+        println!("{}", f.display());
+    }
+    eprintln!("fetched {} report(s) to {}", files.len(), out_dir.display());
     Ok(())
 }
 
@@ -504,14 +692,18 @@ fn cmd_worker(args: &Args) -> Result<()> {
     cfg.jobs = 1;
     elaps::engine::set_default_config(cfg);
     let mut spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
-    if let Some(ttl) = args.opt("lease-ttl") {
-        let ttl = elaps::util::cli::parse_duration(ttl).map_err(|e| anyhow!("--lease-ttl: {e}"))?;
+    if let Some(ttl) = args.opt_duration_strict("lease-ttl").map_err(|e| anyhow!(e))? {
         if ttl.is_zero() {
             bail!("--lease-ttl must be > 0");
         }
         spool = spool.with_ttl(ttl);
-    } else if args.flag("lease-ttl") {
-        bail!("--lease-ttl requires a duration (e.g. 90s, 5m)");
+    }
+    // per-host lease backpressure: this daemon (and, via the on-disk
+    // lease count, this host) never holds more than N live leases
+    match args.opt_usize_strict("max-leases").map_err(|e| anyhow!(e))? {
+        Some(0) => bail!("--max-leases must be ≥ 1"),
+        Some(n) => spool = spool.with_max_leases(n),
+        None => {}
     }
     let once = args.flag("once");
     // legacy (pre-lease) claims are reclaimed by claim-file mtime; 0
@@ -524,10 +716,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
     };
     install_shutdown_handler();
     println!(
-        "worker {} draining {} with {workers} worker(s), lease TTL {:?}{}",
+        "worker {} draining {} with {workers} worker(s), lease TTL {:?}{}{}",
         spool.worker_id(),
         spool.dir.display(),
         spool.ttl(),
+        match spool.max_leases() {
+            Some(n) => format!(", ≤{n} lease(s)"),
+            None => String::new(),
+        },
         if once { " (once)" } else { "" }
     );
     let served = spool.run_worker_pool(workers, once, legacy_recover, &SHUTDOWN)?;

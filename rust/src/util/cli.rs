@@ -77,6 +77,24 @@ impl Args {
     pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
         self.opt(name).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+
+    /// Strict duration option parsing, mirroring
+    /// [`Args::opt_usize_strict`]: absent is `Ok(None)`, while a
+    /// malformed value or a bare `--name` without one is an `Err` —
+    /// used for `--lease-ttl`, `--timeout` and `--max-age`, where a
+    /// silently defaulted typo would change lease or gc semantics.
+    pub fn opt_duration_strict(
+        &self,
+        name: &str,
+    ) -> Result<Option<std::time::Duration>, String> {
+        if let Some(v) = self.opt(name) {
+            return parse_duration(v).map(Some).map_err(|e| format!("--{name}: {e}"));
+        }
+        if self.flag(name) {
+            return Err(format!("--{name} requires a duration (e.g. 90s, 5m)"));
+        }
+        Ok(None)
+    }
 }
 
 /// Parse a byte-size argument: a non-negative integer with an optional
@@ -200,6 +218,22 @@ mod tests {
         // bare flag: strict parsing reports the missing value
         let missing = Args::parse(sv(&["--jobs", "--cache", "dir"]), &[]);
         assert!(missing.opt_usize_strict("jobs").is_err());
+    }
+
+    #[test]
+    fn strict_duration_option() {
+        let a = Args::parse(sv(&["--timeout", "90s"]), &[]);
+        assert_eq!(
+            a.opt_duration_strict("timeout"),
+            Ok(Some(std::time::Duration::from_secs(90)))
+        );
+        assert_eq!(a.opt_duration_strict("lease-ttl"), Ok(None));
+        let bad = Args::parse(sv(&["--timeout", "soon"]), &[]);
+        assert!(bad.opt_duration_strict("timeout").is_err());
+        // --timeout followed by another option parses as a bare flag:
+        // strict parsing reports the missing value
+        let missing = Args::parse(sv(&["--timeout", "--spool", "d"]), &[]);
+        assert!(missing.opt_duration_strict("timeout").is_err());
     }
 
     #[test]

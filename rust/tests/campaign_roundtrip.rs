@@ -1,0 +1,439 @@
+//! End-to-end differential campaign suite: the asynchronous client
+//! workflow (`elaps submit` → worker daemons → `elaps wait` → `elaps
+//! fetch`) driven through the real CLI binary across ≥2 simulated
+//! hosts, plus the per-host `--max-leases` backpressure and the
+//! stamp-sidecar O(#jobs) `spool status` path. Invariants:
+//!
+//! * **differential byte-identity** — with seeded modeled timings, the
+//!   reports fetched from a multi-host campaign drain are
+//!   byte-identical (after the report-JSON normalization) to a serial
+//!   `run_local` of the same experiments, exactly once per job;
+//! * **backpressure** — a host capped at `--max-leases 2` never holds
+//!   more than 2 unexpired leases at any observation point, while an
+//!   unconstrained host still drains the rest (no deadlock, no
+//!   starvation);
+//! * **O(#jobs) status** — `spool status` groups done reports by their
+//!   stamp sidecars and never opens a report body: a deliberately
+//!   corrupt done-report payload still yields correct per-host counts.
+//!
+//! Like `lease_faults.rs`, timing margins are generous and waits poll
+//! real state, so the suite stays flake-free under `--test-threads=1`
+//! with `ELAPS_LEASE_TTL=1s` in the tier-2 CI leg.
+
+use elaps::coordinator::campaign::{self, StampOutcome};
+use elaps::coordinator::lease;
+use elaps::coordinator::{io, ClaimOutcome, Experiment, Spooler};
+use elaps::engine::{set_default_config, EngineConfig};
+use elaps::figures::call;
+use elaps::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Pin the process-default engine config to serial, fixed-seed
+/// execution (modeled timings): every report becomes a pure function
+/// of its experiment, turning the campaign-vs-serial comparison into a
+/// byte-equality check. The CLI workers below get the same config via
+/// `--seed 7`.
+fn det_config() {
+    set_default_config(EngineConfig::default().with_seed(7));
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("elaps_campaign_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn small_exp(n: i64) -> Experiment {
+    let ns = n.to_string();
+    let mut exp = Experiment {
+        name: format!("camp{n}"),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps: 2,
+        ..Default::default()
+    };
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+    )
+    .unwrap()];
+    exp
+}
+
+/// Canonical serialization of a report (the byte-identity yardstick).
+fn normalize(r: &elaps::Report) -> String {
+    io::report_to_json(r).to_string_pretty()
+}
+
+fn count_json(dir: &Path, sub: &str) -> usize {
+    std::fs::read_dir(dir.join(sub))
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+                .count()
+        })
+        .unwrap_or(0)
+}
+
+fn elaps_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_elaps")
+}
+
+/// A CLI invocation scrubbed of the engine/spool environment the test
+/// process may have inherited, so subprocesses see exactly the flags
+/// we pass (plus `ELAPS_HOST` where a test sets one).
+fn elaps_cmd(args: &[&str]) -> Command {
+    let mut cmd = Command::new(elaps_bin());
+    cmd.args(args);
+    for var in ["ELAPS_JOBS", "ELAPS_CACHE", "ELAPS_WARM", "ELAPS_SEED", "ELAPS_TRUSTED_ONLY", "ELAPS_HOST"] {
+        cmd.env_remove(var);
+    }
+    cmd
+}
+
+// ------------------------------------------------- the e2e roundtrip
+
+#[test]
+fn campaign_submit_wait_fetch_roundtrip_is_differential() {
+    det_config();
+    let dir = tmpdir("rt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spool_dir = dir.join("spool");
+    let spool_s = spool_dir.to_str().unwrap().to_string();
+
+    // the campaign: two experiments by path, two inline
+    let exps: Vec<Experiment> = (0..4).map(|i| small_exp(8 + 4 * i)).collect();
+    for (i, e) in exps.iter().enumerate().take(2) {
+        std::fs::write(
+            dir.join(format!("exp{i}.json")),
+            io::experiment_to_json(e).to_string_pretty(),
+        )
+        .unwrap();
+    }
+    let mut mj = Json::obj();
+    mj.set("campaign", "camp-rt").set(
+        "experiments",
+        Json::Arr(vec![
+            Json::Str("exp0.json".into()),
+            Json::Str("exp1.json".into()),
+            io::experiment_to_json(&exps[2]),
+            io::experiment_to_json(&exps[3]),
+        ]),
+    );
+    let manifest = dir.join("manifest.json");
+    std::fs::write(&manifest, mj.to_string_pretty()).unwrap();
+
+    // submit: prints one job id per line on stdout, never blocks
+    let out = elaps_cmd(&["submit", manifest.to_str().unwrap(), "--spool", &spool_s])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let ids: Vec<String> = String::from_utf8_lossy(&out.stdout)
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .map(String::from)
+        .collect();
+    assert_eq!(ids.len(), 4, "{ids:?}");
+    assert_eq!(count_json(&spool_dir, "queue"), 4);
+    assert_eq!(campaign::campaign_jobs(&spool_dir, "camp-rt").unwrap(), ids);
+
+    // two worker daemons on two simulated hosts drain the campaign
+    // concurrently, each with a 2-thread pool and the same fixed seed
+    let worker = |host: &str| {
+        let mut cmd = elaps_cmd(&[
+            "worker", "--spool", &spool_s, "--once", "--workers", "2", "--seed", "7",
+        ]);
+        cmd.env("ELAPS_HOST", host);
+        cmd.spawn().unwrap()
+    };
+    let mut ha = worker("hostA");
+    let mut hb = worker("hostB");
+    assert!(ha.wait().unwrap().success());
+    assert!(hb.wait().unwrap().success());
+
+    // wait: the whole campaign by tag, O(#jobs) polling
+    let out = elaps_cmd(&[
+        "wait", "--campaign", "camp-rt", "--spool", &spool_s, "--timeout", "120s",
+    ])
+    .output()
+    .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("ok (host host"), "{text}");
+    assert!(text.contains("4 ok, 0 error"), "{text}");
+
+    // fetch: raw report bytes to local files, one per job
+    let fetched_dir = dir.join("fetched");
+    let out = elaps_cmd(&[
+        "fetch",
+        "--campaign",
+        "camp-rt",
+        "--spool",
+        &spool_s,
+        "--out-dir",
+        fetched_dir.to_str().unwrap(),
+    ])
+    .output()
+    .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // exactly-once: one report + one stamp per job, spool fully drained
+    assert_eq!(count_json(&spool_dir, "done"), 4);
+    assert_eq!(count_json(&spool_dir, "queue"), 0);
+    assert_eq!(count_json(&spool_dir, "running"), 0);
+    assert_eq!(count_json(&spool_dir, "leases"), 0, "all leases released");
+    let scan = campaign::read_stamps(&spool_dir);
+    assert_eq!(scan.stamps.len(), 4);
+    assert_eq!(scan.skipped, 0);
+    for (id, stamp) in &scan.stamps {
+        assert_eq!(stamp.outcome, StampOutcome::Ok, "{id}");
+        assert!(stamp.host == "hostA" || stamp.host == "hostB", "{stamp:?}");
+    }
+
+    // differential: every fetched report is byte-identical to a serial
+    // run_local of its experiment (same fixed seed), and the raw bytes
+    // keep the served_by provenance + match the spool's copy exactly
+    for (id, exp) in ids.iter().zip(&exps) {
+        let path = fetched_dir.join(format!("{id}.report.json"));
+        let raw = std::fs::read_to_string(&path).unwrap();
+        assert!(raw.contains("served_by"), "{id}: {raw}");
+        let in_spool =
+            std::fs::read_to_string(spool_dir.join("done").join(format!("{id}.report.json")))
+                .unwrap();
+        assert_eq!(raw, in_spool, "{id}: fetch must be byte-for-byte");
+        let report = io::report_from_json(&Json::parse(&raw).unwrap()).unwrap();
+        let reference = normalize(&elaps::coordinator::run_local(exp).unwrap());
+        assert_eq!(normalize(&report), reference, "{id}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn submit_rejects_malformed_manifests_and_wait_times_out() {
+    let dir = tmpdir("badcli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spool_dir = dir.join("spool");
+    let spool_s = spool_dir.to_str().unwrap().to_string();
+    // a manifest without a campaign tag is a hard error
+    let bad = dir.join("bad.json");
+    std::fs::write(&bad, r#"{"experiments":["x.json"]}"#).unwrap();
+    let out =
+        elaps_cmd(&["submit", bad.to_str().unwrap(), "--spool", &spool_s]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("campaign"), "{err}");
+    // as is a dangling path entry
+    let dangling = dir.join("dangling.json");
+    std::fs::write(&dangling, r#"{"campaign":"c","experiments":["missing.json"]}"#).unwrap();
+    assert!(!elaps_cmd(&["submit", dangling.to_str().unwrap(), "--spool", &spool_s])
+        .output()
+        .unwrap()
+        .status
+        .success());
+    // waiting on an unserved job times out with the pending ids named
+    let spool = Spooler::new(&spool_dir).unwrap();
+    let id = spool.submit(&small_exp(8)).unwrap();
+    let out = elaps_cmd(&["wait", &id, "--spool", &spool_s, "--timeout", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("timed out"), "{err}");
+    // a malformed --timeout is a hard error, not a silent default
+    let out = elaps_cmd(&["wait", &id, "--spool", &spool_s, "--timeout", "soon"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("timeout"), "{err}");
+    // wait/fetch with nothing addressed is a usage error
+    let out = elaps_cmd(&["wait", "--spool", &spool_s]).output().unwrap();
+    assert!(!out.status.success());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wait_surfaces_error_outcomes_from_stamps() {
+    let dir = tmpdir("waiterr");
+    let spool = Spooler::new(&dir).unwrap();
+    let spool_s = dir.to_str().unwrap().to_string();
+    // a poison job publishes an error report (and an error stamp)
+    std::fs::write(dir.join("queue").join("poison.json"), "{not json").unwrap();
+    assert_eq!(spool.serve_one().unwrap().as_deref(), Some("poison"));
+    let stamp = campaign::read_stamp(&dir, "poison").unwrap();
+    assert_eq!(stamp.outcome, StampOutcome::Error);
+    // wait finds the report immediately but exits nonzero on the error
+    let out = elaps_cmd(&["wait", "poison", "--spool", &spool_s, "--timeout", "10s"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("poison  error"), "{text}");
+    let err = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(err.contains("error report"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ------------------------------------------------------- backpressure
+
+#[test]
+fn max_leases_backpressures_claims_and_other_host_drains() {
+    det_config();
+    let dir = tmpdir("bp");
+    let ttl = Duration::from_secs(30);
+    let a = Spooler::new(&dir).unwrap().with_host("bpA").with_ttl(ttl).with_max_leases(2);
+    let b = Spooler::new(&dir).unwrap().with_host("bpB").with_ttl(ttl);
+    // equal-width sizes: queue order (lexicographic by job file name)
+    // then matches submission order, which the claim assertions rely on
+    let exps: Vec<Experiment> = (0..5).map(|i| small_exp(10 + 2 * i)).collect();
+    let ids: Vec<String> = exps.iter().map(|e| a.submit(e).unwrap()).collect();
+    // host A claims up to its cap...
+    let c1 = match a.try_claim().unwrap() {
+        ClaimOutcome::Claimed(c) => c,
+        other => panic!("expected a claim, got {other:?}"),
+    };
+    let c2 = match a.try_claim().unwrap() {
+        ClaimOutcome::Claimed(c) => c,
+        other => panic!("expected a claim, got {other:?}"),
+    };
+    assert_eq!(lease::live_leases_for_host(&dir, "bpA").unwrap(), 2);
+    // ...and is then refused more, even though jobs are queued
+    assert!(matches!(a.try_claim().unwrap(), ClaimOutcome::Backpressured));
+    assert!(a.claim_next().unwrap().is_none());
+    assert_eq!(a.queued().unwrap(), 3, "backpressure must not consume the queue");
+    // the unconstrained host is unaffected and drains the rest: the
+    // capped host never starves the campaign
+    assert_eq!(b.drain(2).unwrap(), 3);
+    assert_eq!(count_json(&dir, "done"), 3);
+    // still at its cap, but with the queue drained a capped host
+    // reports Empty — a --once pool must be able to exit instead of
+    // spinning on its own in-flight leases
+    assert!(matches!(a.try_claim().unwrap(), ClaimOutcome::Empty));
+    assert!(a.serve_claim(&c1, false).unwrap().published());
+    drop(c1);
+    assert_eq!(lease::live_leases_for_host(&dir, "bpA").unwrap(), 1);
+    assert!(matches!(a.try_claim().unwrap(), ClaimOutcome::Empty));
+    assert!(a.serve_claim(&c2, false).unwrap().published());
+    drop(c2);
+    // exactly once each, with per-host provenance in the stamps
+    assert_eq!(count_json(&dir, "done"), 5);
+    assert_eq!(count_json(&dir, "leases"), 0);
+    let scan = campaign::read_stamps(&dir);
+    assert_eq!(scan.stamps.len(), 5);
+    assert_eq!(scan.stamps[&ids[0]].host, "bpA");
+    assert_eq!(scan.stamps[&ids[1]].host, "bpA");
+    for id in &ids[2..] {
+        assert_eq!(scan.stamps[id].host, "bpB", "{id}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn backpressured_pool_never_exceeds_cap_under_contention() {
+    det_config();
+    let dir = tmpdir("bp_storm");
+    let ttl = Duration::from_secs(30);
+    let total = 10usize;
+    let submitter = Spooler::new(&dir).unwrap();
+    for i in 0..total {
+        submitter.submit(&small_exp(8 + 2 * (i as i64 % 5))).unwrap();
+    }
+    let a = Spooler::new(&dir).unwrap().with_host("bpA").with_ttl(ttl).with_max_leases(2);
+    let b = Spooler::new(&dir).unwrap().with_host("bpB").with_ttl(ttl);
+    let stop = AtomicBool::new(false);
+    let max_seen = AtomicUsize::new(0);
+    let flag_a = AtomicBool::new(false);
+    let flag_b = AtomicBool::new(false);
+    let (served_a, served_b) = std::thread::scope(|s| {
+        // the observer: sample host A's live-lease count the whole
+        // time; the backpressure contract is that it never exceeds 2
+        // at ANY observation point
+        let observer = s.spawn(|| {
+            let mut worst = 0;
+            while !stop.load(Ordering::Relaxed) {
+                worst = worst.max(lease::live_leases_for_host(&dir, "bpA").unwrap());
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            worst
+        });
+        // an oversized pool on the capped host contends for the 2
+        // slots; the unconstrained host races it for the same queue
+        let ha = s.spawn(|| a.run_worker_pool(4, true, None, &flag_a).unwrap());
+        let hb = s.spawn(|| b.run_worker_pool(2, true, None, &flag_b).unwrap());
+        let served_a = ha.join().unwrap();
+        let served_b = hb.join().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        max_seen.store(observer.join().unwrap(), Ordering::Relaxed);
+        (served_a, served_b)
+    });
+    // no deadlock, no starvation: the pools drained everything between
+    // them, exactly once
+    assert_eq!(served_a + served_b, total, "a={served_a} b={served_b}");
+    assert_eq!(count_json(&dir, "done"), total);
+    assert_eq!(count_json(&dir, "queue"), 0);
+    assert_eq!(count_json(&dir, "running"), 0);
+    assert_eq!(count_json(&dir, "leases"), 0);
+    // the cap held at every observation point
+    assert!(
+        max_seen.load(Ordering::Relaxed) <= 2,
+        "host A held {} live leases",
+        max_seen.load(Ordering::Relaxed)
+    );
+    let scan = campaign::read_stamps(&dir);
+    assert_eq!(scan.stamps.len(), total);
+    assert_eq!(
+        scan.stamps.values().filter(|s| s.host == "bpA").count(),
+        served_a,
+        "stamp provenance must match the pools' own counts"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------- O(#jobs) spool status
+
+#[test]
+fn spool_status_uses_stamps_and_survives_corrupt_report_bodies() {
+    det_config();
+    let dir = tmpdir("statuszero");
+    let spool_s = dir.to_str().unwrap().to_string();
+    let a = Spooler::new(&dir).unwrap().with_host("stA");
+    let b = Spooler::new(&dir).unwrap().with_host("stB");
+    // equal-width sizes so queue order matches submission order (see
+    // the backpressure test)
+    let ids: Vec<String> =
+        (0..3).map(|i| a.submit(&small_exp(10 + 2 * i)).unwrap()).collect();
+    // host A serves the first two jobs, host B the third
+    assert_eq!(a.serve_one().unwrap().as_deref(), Some(ids[0].as_str()));
+    assert_eq!(a.serve_one().unwrap().as_deref(), Some(ids[1].as_str()));
+    assert_eq!(b.serve_one().unwrap().as_deref(), Some(ids[2].as_str()));
+    // clobber one done report's payload wholesale: status must not
+    // care, because it never opens report bodies — the stamp sidecars
+    // carry everything it needs
+    std::fs::write(dir.join("done").join(format!("{}.report.json", ids[0])), "{CORRUPT")
+        .unwrap();
+    let st = lease::spool_status(&dir).unwrap();
+    assert_eq!(st.done, 3);
+    assert_eq!(st.done_errors, 0);
+    assert_eq!(st.done_by_host.get("stA"), Some(&2));
+    assert_eq!(st.done_by_host.get("stB"), Some(&1));
+    // the CLI view agrees
+    let out = elaps_cmd(&["spool", "status", "--spool", &spool_s]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("done: 3"), "{text}");
+    assert!(text.contains("stA"), "{text}");
+    assert!(text.contains("stB"), "{text}");
+    // a corrupt *stamp* downgrades only that job to unknown provenance
+    std::fs::write(campaign::stamp_path(&dir, &ids[1]), "{truncated").unwrap();
+    let st = lease::spool_status(&dir).unwrap();
+    assert_eq!(st.done, 3);
+    assert_eq!(st.done_by_host.get("stA"), Some(&1));
+    assert_eq!(st.done_by_host.get("(unknown)"), Some(&1));
+    assert_eq!(st.done_by_host.get("stB"), Some(&1));
+    let _ = std::fs::remove_dir_all(&dir);
+}

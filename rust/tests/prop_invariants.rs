@@ -7,9 +7,13 @@
 //! * state: report reduction is permutation/semantics-consistent
 //! * linalg: solve∘multiply = identity, factor∘reconstruct = identity
 
+use elaps::coordinator::campaign::{
+    read_stamps, write_stamp, CampaignManifest, ManifestEntry, Stamp, StampOutcome,
+};
 use elaps::coordinator::{run_local, Experiment, Metric, RangeDef, Stat, Vary};
 use elaps::engine::shard_contiguous;
 use elaps::figures::call;
+use elaps::util::json::Json;
 use elaps::linalg::blas3::{dgemm_blocked, dgemm_naive, dtrsm_blocked, dtrmm};
 use elaps::linalg::{Diag, Matrix, Side, Trans, Uplo};
 use elaps::util::prop::{all_close, forall};
@@ -284,6 +288,157 @@ fn prop_shard_contiguous_partition_invariants() {
             if shards != shard_contiguous(items, jobs) {
                 return Err("sharding must be deterministic".to_string());
             }
+            Ok(())
+        },
+    );
+}
+
+/// A minimal dgemm experiment for manifest round-trips (the cfg(test)
+/// `tests_support` helpers are not visible to integration tests).
+fn manifest_exp(n: i64, nreps: usize) -> Experiment {
+    let ns = n.to_string();
+    Experiment {
+        name: format!("mexp{n}"),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps,
+        calls: vec![call(
+            "dgemm",
+            &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+        )
+        .unwrap()],
+        ..Default::default()
+    }
+}
+
+#[test]
+fn prop_campaign_manifest_parse_serialize_identity() {
+    // parse ∘ serialize = id on the JSON form, for arbitrary mixes of
+    // path entries and inline experiments under arbitrary tags
+    forall(
+        0xE1,
+        40,
+        |r, size| {
+            const TAG_CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789-_.";
+            // leading letter: a tag of dots alone ("."/"..") is
+            // rejected by validate_tag, and rightly so
+            let tag: String = std::iter::once('c')
+                .chain((0..r.range_usize(0, 11)).map(|_| TAG_CHARS[r.below(TAG_CHARS.len())] as char))
+                .collect();
+            let entries: Vec<(bool, usize, usize)> = (0..r.range_usize(1, 2 + size.min(4)))
+                .map(|_| (r.chance(0.5), r.range_usize(1, 64), r.range_usize(1, 4)))
+                .collect();
+            (tag, entries)
+        },
+        |(tag, entries)| {
+            let m = CampaignManifest {
+                campaign: tag.clone(),
+                experiments: entries
+                    .iter()
+                    .map(|&(inline, n, nreps)| {
+                        if inline {
+                            ManifestEntry::Inline(manifest_exp(n as i64, nreps))
+                        } else {
+                            ManifestEntry::Path(format!("exp_{n}_{nreps}.json"))
+                        }
+                    })
+                    .collect(),
+            };
+            let j = m.to_json();
+            if !CampaignManifest::is_manifest(&j) {
+                return Err("serialized manifest must be recognizable".into());
+            }
+            // through text and back: the round-trip is the identity
+            let text = j.to_string_pretty();
+            let reparsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            let m2 = CampaignManifest::from_json(&reparsed).map_err(|e| format!("{e:#}"))?;
+            if m2.campaign != *tag {
+                return Err(format!("tag changed: {} vs {tag}", m2.campaign));
+            }
+            if m2.experiments.len() != entries.len() {
+                return Err(format!("{} entries, want {}", m2.experiments.len(), entries.len()));
+            }
+            let j2 = m2.to_json();
+            if j.to_string_compact() != j2.to_string_compact() {
+                return Err(format!(
+                    "parse ∘ serialize must be the identity:\n{}\nvs\n{}",
+                    j.to_string_compact(),
+                    j2.to_string_compact()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_stamp_roundtrip_and_malformed_stamps_skipped() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static CASE: AtomicU64 = AtomicU64::new(0);
+    forall(
+        0xE2,
+        30,
+        |r, size| {
+            let valid: Vec<(usize, u64, bool)> = (0..r.range_usize(1, 3 + size.min(6)))
+                .map(|i| (i, r.range_usize(1, 9) as u64, r.chance(0.8)))
+                .collect();
+            let corrupt = r.range_usize(1, 4);
+            (valid, corrupt)
+        },
+        |(valid, corrupt)| {
+            let dir = std::env::temp_dir().join(format!(
+                "elaps_prop_stamps_{}_{}",
+                std::process::id(),
+                CASE.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+            let mut expect = std::collections::BTreeMap::new();
+            for &(i, epoch, ok) in valid {
+                let s = Stamp {
+                    job_id: format!("job-{i}"),
+                    host: format!("h{}", i % 3),
+                    worker: format!("h{}#{}-{i}", i % 3, std::process::id()),
+                    epoch,
+                    outcome: if ok { StampOutcome::Ok } else { StampOutcome::Error },
+                };
+                // per-stamp JSON round-trip is the identity
+                let back = Stamp::from_json(&s.to_json())
+                    .ok_or("stamp JSON round-trip lost the stamp")?;
+                if back != s {
+                    return Err(format!("{back:?} != {s:?}"));
+                }
+                write_stamp(&dir, &s).map_err(|e| format!("{e:#}"))?;
+                expect.insert(s.job_id.clone(), s);
+            }
+            // corrupt sidecars: truncated copies of a real stamp and
+            // plain garbage, plus an unrelated file that is not a
+            // stamp at all
+            let template = expect.values().next().unwrap().to_json().to_string_pretty();
+            for k in 0..*corrupt {
+                let body = if k % 2 == 0 {
+                    template[..template.len() / 2].to_string()
+                } else {
+                    "]]{ not json".to_string()
+                };
+                std::fs::write(
+                    elaps::coordinator::campaign::stamp_path(&dir, &format!("corrupt-{k}")),
+                    body,
+                )
+                .map_err(|e| e.to_string())?;
+            }
+            std::fs::write(dir.join("stamps").join("README.txt"), "not a stamp")
+                .map_err(|e| e.to_string())?;
+            // the scan returns exactly the valid stamps and counts
+            // (never panics on) the malformed ones
+            let scan = read_stamps(&dir);
+            if scan.skipped != *corrupt {
+                return Err(format!("skipped {} of {corrupt} corrupt", scan.skipped));
+            }
+            if scan.stamps != expect {
+                return Err(format!("{:?} != {expect:?}", scan.stamps));
+            }
+            let _ = std::fs::remove_dir_all(&dir);
             Ok(())
         },
     );
