@@ -306,13 +306,65 @@ fn campaign_path(spool: &Path, tag: &str) -> PathBuf {
     spool.join("campaigns").join(format!("{tag}.json"))
 }
 
+/// A held exclusive lock on a campaign tag's record
+/// (`<spool>/campaigns/<tag>.lock`). Dropping the guard releases the
+/// lock — `flock(2)` locks die with the last descriptor on their open
+/// file description.
+#[derive(Debug)]
+pub struct TagLock {
+    _file: Option<std::fs::File>,
+}
+
+/// Serialize concurrent [`record_jobs`] callers on one tag with an
+/// advisory `flock(2)` on a sidecar lock file — not on the record
+/// itself, whose inode is replaced by every atomic rename, which would
+/// leave later lockers holding a lock on a dead file. Each caller
+/// opens its own descriptor, so the lock serializes threads within one
+/// process as well as distinct processes on a shared (local)
+/// filesystem.
+#[cfg(unix)]
+fn lock_tag(spool: &Path, tag: &str) -> Result<TagLock> {
+    use std::os::unix::io::AsRawFd;
+    extern "C" {
+        fn flock(fd: i32, operation: i32) -> i32;
+    }
+    const LOCK_EX: i32 = 2;
+    const EINTR: i32 = 4;
+    let path = spool.join("campaigns").join(format!("{tag}.lock"));
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .truncate(false)
+        .write(true)
+        .open(&path)
+        .with_context(|| format!("opening campaign lock {}", path.display()))?;
+    loop {
+        if unsafe { flock(file.as_raw_fd(), LOCK_EX) } == 0 {
+            return Ok(TagLock { _file: Some(file) });
+        }
+        let err = std::io::Error::last_os_error();
+        if err.raw_os_error() != Some(EINTR) {
+            return Err(err).with_context(|| format!("locking campaign '{tag}'"));
+        }
+    }
+}
+
+/// Non-unix fallback: no advisory locking — concurrent submitters to
+/// one tag keep the historical last-write-wins race.
+#[cfg(not(unix))]
+fn lock_tag(_spool: &Path, _tag: &str) -> Result<TagLock> {
+    Ok(TagLock { _file: None })
+}
+
 /// Register job ids under a campaign tag (creating or extending the
-/// record). Read-modify-write with an atomic replace; concurrent
-/// submitters to the *same tag* can race the read, so share one
-/// submitting client per campaign.
+/// record). The load-merge-store runs under an exclusive per-tag
+/// [`TagLock`], so concurrent submitters to the *same tag* merge their
+/// job lists instead of silently dropping each other's updates; the
+/// final store is still an atomic replace, so readers never observe a
+/// torn record.
 pub fn record_jobs(spool: &Path, tag: &str, job_ids: &[String]) -> Result<()> {
     validate_tag(tag)?;
     std::fs::create_dir_all(spool.join("campaigns"))?;
+    let _lock = lock_tag(spool, tag)?;
     let path = campaign_path(spool, tag);
     let mut jobs = campaign_jobs(spool, tag).unwrap_or_default();
     for id in job_ids {
@@ -357,8 +409,13 @@ pub fn submit_experiments(
     if let Some(tag) = tag {
         validate_tag(tag)?;
     }
+    // submit through a campaign-tagged clone so the `submitted`
+    // lifecycle events carry the tag; worker-side events stay untagged
+    // and `elaps analyze` attributes them via the campaign record
+    let tagged = tag.map(|t| spool.clone().with_campaign(t));
+    let submitter = tagged.as_ref().unwrap_or(spool);
     let ids: Vec<String> =
-        exps.iter().map(|e| spool.submit(e)).collect::<Result<_>>()?;
+        exps.iter().map(|e| submitter.submit(e)).collect::<Result<_>>()?;
     if let Some(tag) = tag {
         record_jobs(&spool.dir, tag, &ids)?;
     }
@@ -572,6 +629,38 @@ mod tests {
             experiments: vec![ManifestEntry::Path("missing.json".into())],
         };
         assert!(bad.resolve(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_jobs_concurrent_submitters_merge() {
+        // the regression this locks down: two clients registering jobs
+        // under one tag used to race the read-modify-write and lose
+        // whole submissions (last write wins)
+        let dir = tmpdir("lock");
+        std::fs::create_dir_all(&dir).unwrap();
+        const THREADS: usize = 4;
+        const PER: usize = 25;
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let dir = &dir;
+                s.spawn(move || {
+                    for i in 0..PER {
+                        record_jobs(dir, "camp", &[format!("job-{t}-{i}")]).unwrap();
+                    }
+                });
+            }
+        });
+        let jobs = campaign_jobs(&dir, "camp").unwrap();
+        assert_eq!(jobs.len(), THREADS * PER, "a lost update dropped job ids");
+        // every submitter's ids survive, each in its submission order
+        for t in 0..THREADS {
+            let prefix = format!("job-{t}-");
+            let mine: Vec<String> =
+                jobs.iter().filter(|j| j.starts_with(&prefix)).cloned().collect();
+            let expect: Vec<String> = (0..PER).map(|i| format!("job-{t}-{i}")).collect();
+            assert_eq!(mine, expect, "thread {t} must keep submission order");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -249,6 +249,43 @@ impl SpoolStatus {
         }
         s
     }
+
+    /// Machine-readable twin of [`SpoolStatus::render`] (the
+    /// `spool status --json` output): counts as numbers, per-host
+    /// breakdowns as object maps, and each leased job with its full
+    /// lease — `null` for a legacy claim.
+    pub fn to_json(&self) -> Json {
+        let leased: Vec<Json> = self
+            .leased
+            .iter()
+            .map(|job| {
+                let lease_json = match &job.lease {
+                    Some(l) => l.to_json(),
+                    None => Json::Null,
+                };
+                let mut lj = Json::obj();
+                lj.set("job_id", job.job_id.as_str()).set("lease", lease_json);
+                lj
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("queued", self.queued)
+            .set("done", self.done)
+            .set("done_errors", self.done_errors)
+            .set("leased", Json::Arr(leased))
+            .set("leased_by_host", count_map(&self.leased_by_host))
+            .set("done_by_host", count_map(&self.done_by_host));
+        j
+    }
+}
+
+/// A `{key: count}` JSON object from a counting map.
+fn count_map(counts: &BTreeMap<String, usize>) -> Json {
+    let mut j = Json::obj();
+    for (k, n) in counts {
+        j.set(k.as_str(), *n);
+    }
+    j
 }
 
 /// Count the `.json` files under `<spool>/<sub>`.
@@ -424,6 +461,19 @@ mod tests {
         assert!(text.contains("legacy claim"), "{text}");
         assert!(text.contains("hostB"), "{text}");
         assert!(text.contains("done with errors: 1"), "{text}");
+        // the JSON twin mirrors every count; a legacy lease is null
+        let j = st.to_json();
+        assert_eq!(j.get("queued").as_u64(), Some(1));
+        assert_eq!(j.get("done").as_u64(), Some(2));
+        assert_eq!(j.get("done_errors").as_u64(), Some(1));
+        let leased = j.get("leased").as_arr().unwrap();
+        assert_eq!(leased.len(), 2);
+        assert_eq!(leased[0].get("job_id").as_str(), Some("r1"));
+        assert_eq!(leased[0].get("lease").get("epoch").as_u64(), Some(2));
+        assert!(leased[1].get("lease").is_null(), "legacy claim must be null");
+        assert_eq!(j.get("leased_by_host").get("(legacy)").as_u64(), Some(1));
+        assert_eq!(j.get("done_by_host").get("hostB").as_u64(), Some(1));
+        assert!(Json::parse(&j.to_string_pretty()).is_ok());
         // a directory that is not a spool is an error
         assert!(spool_status(&dir.join("nope")).is_err());
         let _ = std::fs::remove_dir_all(&dir);

@@ -83,6 +83,29 @@ pub fn maybe_discard_first(values: &[f64], discard: bool) -> &[f64] {
     }
 }
 
+/// NaN-safe percentile with linear interpolation between closest
+/// ranks: `percentile(v, 0.5)` is the median of an odd sample,
+/// `percentile(v, 0.0)`/`(v, 1.0)` the min/max. Empty or NaN-poisoned
+/// samples yield NaN (the same poisoning rule as [`Stat::Median`]);
+/// `q` is clamped to `[0, 1]`. Deliberately a free function, not a
+/// [`Stat`] variant: report reductions stay the paper's five
+/// statistics, while `elaps analyze` layers percentiles on top.
+pub fn percentile(values: &[f64], q: f64) -> f64 {
+    if values.is_empty() || values.iter().any(|v| v.is_nan()) {
+        return f64::NAN;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(f64::total_cmp);
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,5 +177,33 @@ mod tests {
             assert_eq!(Stat::by_name(s.name()), Some(s));
         }
         assert_eq!(Stat::by_name("p99"), None);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_brackets() {
+        let v = &[1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(v, 0.0), 1.0);
+        assert_eq!(percentile(v, 1.0), 4.0);
+        assert_eq!(percentile(v, 0.5), 2.5, "matches the even-sample median");
+        assert!((percentile(v, 0.9) - 3.7).abs() < 1e-12);
+        // order-independent and monotone in q
+        let shuffled = &[4.0, 1.0, 3.0, 2.0];
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(percentile(v, q), percentile(shuffled, q));
+        }
+        assert!(percentile(v, 0.5) <= percentile(v, 0.9));
+        assert!(percentile(v, 0.9) <= percentile(v, 0.99));
+        // a single sample is every percentile
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        // out-of-range q clamps instead of indexing out of bounds
+        assert_eq!(percentile(v, -1.0), 1.0);
+        assert_eq!(percentile(v, 2.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_is_nan_safe() {
+        assert!(percentile(&[], 0.5).is_nan());
+        assert!(percentile(&[1.0, f64::NAN], 0.5).is_nan(), "poisoned like Median");
+        assert!(percentile(&[-f64::NAN, 5.0], 0.9).is_nan());
     }
 }

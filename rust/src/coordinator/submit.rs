@@ -13,6 +13,8 @@ use super::experiment::Experiment;
 use super::io;
 use super::lease::{self, FenceReason, Lease, PublishOutcome};
 use super::report::Report;
+use crate::obs::emit::Emitter;
+use crate::obs::events::EventKind;
 use anyhow::{anyhow, bail, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -115,6 +117,13 @@ pub struct Spooler {
     /// enforcement of `max_leases` is exact; the on-disk lease count
     /// additionally throttles against other processes on this host).
     slots_held: Arc<AtomicUsize>,
+    /// Job-lifecycle event emitter, appending to
+    /// `<spool>/events/<host>.jsonl` ([`crate::obs`]). Default-on;
+    /// `--no-events` / `ELAPS_EVENTS=0` disable it. Never fails a job.
+    events: Emitter,
+    /// Mirror fence diagnostics to stderr (`elaps worker --verbose`);
+    /// the structured `fenced` event is emitted either way.
+    verbose: bool,
 }
 
 impl Spooler {
@@ -134,26 +143,58 @@ impl Spooler {
             .and_then(|v| crate::util::cli::parse_duration(&v).ok())
             .filter(|d| !d.is_zero())
             .unwrap_or(DEFAULT_LEASE_TTL);
+        let host = crate::util::hostid::hostname().to_string();
+        let worker_id = crate::util::hostid::new_worker_id();
+        let events = Emitter::for_spool(&dir, &host, &worker_id);
         Ok(Spooler {
             dir,
-            host: crate::util::hostid::hostname().to_string(),
-            worker_id: crate::util::hostid::new_worker_id(),
+            host,
+            worker_id,
             ttl,
             max_leases: None,
             slots_held: Arc::new(AtomicUsize::new(0)),
+            events,
+            verbose: false,
         })
     }
 
     /// Override the host identity recorded in leases and provenance
     /// (tests simulate multi-host fleets this way).
     pub fn with_host(mut self, host: impl Into<String>) -> Spooler {
-        self.host = host.into();
+        let host = host.into();
+        self.events = self.events.with_host(&host);
+        self.host = host;
         self
     }
 
     /// Override the worker identity.
     pub fn with_worker(mut self, worker_id: impl Into<String>) -> Spooler {
-        self.worker_id = worker_id.into();
+        let worker_id = worker_id.into();
+        self.events = self.events.with_worker(&worker_id);
+        self.worker_id = worker_id;
+        self
+    }
+
+    /// Tag this handle's events with a campaign
+    /// ([`super::campaign::submit_experiments`] does this for the
+    /// submitting client — workers never know the campaign; `elaps
+    /// analyze --campaign` joins their events via the campaign record).
+    pub fn with_campaign(mut self, tag: &str) -> Spooler {
+        self.events = self.events.with_campaign(tag);
+        self
+    }
+
+    /// Force event emission on or off, overriding `ELAPS_EVENTS` (the
+    /// CLI's `--no-events` passes `false`; tests pass `true` to pin
+    /// behavior regardless of the environment).
+    pub fn with_events(mut self, enabled: bool) -> Spooler {
+        self.events = self.events.with_enabled(enabled);
+        self
+    }
+
+    /// Mirror fence diagnostics to stderr (`elaps worker --verbose`).
+    pub fn with_verbose(mut self, verbose: bool) -> Spooler {
+        self.verbose = verbose;
         self
     }
 
@@ -213,6 +254,7 @@ impl Spooler {
         let tmp = unique_tmp(&path);
         std::fs::write(&tmp, io::experiment_to_json(exp).to_string_pretty())?;
         std::fs::rename(&tmp, &path)?; // atomic enqueue
+        self.events.emit(EventKind::Submitted, &job_id, 0, &[]);
         Ok(job_id)
     }
 
@@ -303,6 +345,7 @@ impl Spooler {
                 expires_unix: lease::now_unix() + self.ttl.as_secs_f64(),
             };
             lease::write(&self.dir, &l)?;
+            self.events.emit(EventKind::Claimed, &job_id, epoch, &[]);
             return Ok(ClaimOutcome::Claimed(ClaimedJob {
                 job_id,
                 lease: l,
@@ -343,6 +386,7 @@ impl Spooler {
         }
         let renewed = Lease { expires_unix: now + self.ttl.as_secs_f64(), ..current };
         lease::write(&self.dir, &renewed)?;
+        self.events.emit(EventKind::Heartbeat, &claim.job_id, claim.lease.epoch, &[]);
         Ok(true)
     }
 
@@ -357,6 +401,7 @@ impl Spooler {
     /// complete report), then the claim and lease are released.
     pub fn publish(&self, claim: &ClaimedJob, payload: &str) -> Result<PublishOutcome> {
         if let Some(reason) = self.fence_reason(claim) {
+            self.record_fence(claim, &reason);
             return Ok(PublishOutcome::Fenced(reason));
         }
         let done = self.dir.join("done").join(format!("{}.report.json", claim.job_id));
@@ -370,6 +415,7 @@ impl Spooler {
         // at-least-once semantics (last writer wins) still cover it.
         if let Some(reason) = self.fence_reason(claim) {
             let _ = std::fs::remove_file(&tmp);
+            self.record_fence(claim, &reason);
             return Ok(PublishOutcome::Fenced(reason));
         }
         std::fs::rename(&tmp, &done)?;
@@ -415,7 +461,31 @@ impl Spooler {
             }
             lease::remove(&self.dir, &claim.job_id)?;
         }
+        self.events.emit(EventKind::Published, &claim.job_id, claim.lease.epoch, &[]);
         Ok(PublishOutcome::Published)
+    }
+
+    /// Record a fenced publish: always as a structured `fenced` event,
+    /// mirrored to stderr only under `--verbose` — the daemon's
+    /// default output stays stable and greppable.
+    fn record_fence(&self, claim: &ClaimedJob, reason: &FenceReason) {
+        let label = match reason {
+            FenceReason::Expired { .. } => "expired",
+            FenceReason::Superseded { .. } => "superseded",
+            FenceReason::LeaseGone => "lease_gone",
+        };
+        self.events.emit(
+            EventKind::Fenced,
+            &claim.job_id,
+            claim.lease.epoch,
+            &[("reason", label.into())],
+        );
+        if self.verbose {
+            eprintln!(
+                "warning: publish of job {} fenced ({reason:?}); a reclaimer owns it",
+                claim.job_id
+            );
+        }
     }
 
     /// The publish fence, evaluated against the on-disk lease: `None`
@@ -471,6 +541,29 @@ impl Spooler {
         j.to_string_pretty()
     }
 
+    /// [`Spooler::execute_payload`] bracketed by `serve_started` /
+    /// `serve_finished` events, with the thread-local job context set
+    /// for the execution span so spool-less layers (the engine's cache
+    /// probe) can attribute their events to this job.
+    fn execute_payload_observed(&self, claim: &ClaimedJob) -> String {
+        let epoch = claim.lease.epoch;
+        self.events.emit(EventKind::ServeStarted, &claim.job_id, epoch, &[]);
+        let ctx = crate::obs::emit::enter_job(&self.events, &claim.job_id, epoch);
+        let payload = self.execute_payload(claim);
+        drop(ctx);
+        let outcome = match crate::util::json::Json::parse(&payload) {
+            Ok(j) if j.get("error").is_null() => "ok",
+            _ => "error",
+        };
+        self.events.emit(
+            EventKind::ServeFinished,
+            &claim.job_id,
+            epoch,
+            &[("outcome", outcome.into())],
+        );
+        payload
+    }
+
     /// Run a claimed job and publish its report. With `heartbeat`, a
     /// sidecar thread renews the lease every TTL/3 while the job
     /// executes, so jobs may outlive a single TTL; without it the job
@@ -501,12 +594,12 @@ impl Spooler {
                         }
                     }
                 });
-                let payload = self.execute_payload(claim);
+                let payload = self.execute_payload_observed(claim);
                 stop.store(true, Ordering::Relaxed);
                 payload
             })
         } else {
-            self.execute_payload(claim)
+            self.execute_payload_observed(claim)
         };
         self.publish(claim, &payload)
     }
@@ -515,18 +608,15 @@ impl Spooler {
     /// heartbeat keeping the lease alive (so jobs longer than one TTL
     /// are safe on every path), publish the report. Returns the
     /// processed job id; a fenced publish (this worker lost the job to
-    /// a reclaim) is reported on stderr — the reclaiming worker owns
-    /// the job now.
+    /// a reclaim) is recorded as a `fenced` event — and mirrored to
+    /// stderr under `--verbose` — the reclaiming worker owns the job
+    /// now.
     pub fn serve_one(&self) -> Result<Option<String>> {
         let Some(claim) = self.claim_next()? else {
             return Ok(None);
         };
         let job_id = claim.job_id.clone();
-        if let PublishOutcome::Fenced(reason) = self.serve_claim(&claim, true)? {
-            eprintln!(
-                "warning: publish of job {job_id} fenced ({reason:?}); a reclaimer owns it"
-            );
-        }
+        self.serve_claim(&claim, true)?;
         Ok(Some(job_id))
     }
 
@@ -762,8 +852,20 @@ impl Spooler {
                                     if shutdown.load(Ordering::Relaxed) {
                                         return Ok(());
                                     }
+                                    let stalled = Instant::now();
                                     backoff.sleep_until(
                                         Instant::now() + Duration::from_secs(1),
+                                    );
+                                    // host-scoped (no job): how long
+                                    // this worker sat at the lease cap
+                                    sp.events.emit(
+                                        EventKind::Backpressured,
+                                        "",
+                                        0,
+                                        &[(
+                                            "stall_ns",
+                                            (stalled.elapsed().as_nanos() as u64).into(),
+                                        )],
                                     );
                                 }
                             }

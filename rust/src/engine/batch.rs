@@ -160,7 +160,48 @@ fn probe_cache(
 
 /// Run a batch of experiments through the worker pool; returns one
 /// report per experiment (in input order) plus execution statistics.
+///
+/// When the calling thread carries a job context
+/// ([`crate::obs::emit::current_job`], set by the spooler around
+/// payload execution), the batch's aggregate cache-probe accounting is
+/// also emitted as `cache_hit`/`cache_miss`/`cache_skip` lifecycle
+/// events attributed to that job, classed `seeded`/`warm`/`cold` by
+/// the run's mode. Without a context this is a no-op, so the engine
+/// stays usable far from any spool.
 pub fn run_batch_stats(
+    cfg: &EngineConfig,
+    exps: &[Experiment],
+) -> Result<(Vec<Report>, BatchStats)> {
+    let out = run_batch_stats_inner(cfg, exps);
+    if let Ok((_, stats)) = &out {
+        emit_cache_events(cfg, stats);
+    }
+    out
+}
+
+/// Map a finished batch's cache accounting onto lifecycle events: a
+/// configured cache splits points into hits (probe or worker re-probe)
+/// and executed misses; a cache-less run reports every executed point
+/// as a skip.
+fn emit_cache_events(cfg: &EngineConfig, stats: &BatchStats) {
+    use crate::obs::emit::emit_cache_counts;
+    use crate::obs::events::EventKind;
+    let class = if cfg.seed.is_some() {
+        "seeded"
+    } else if cfg.warm {
+        "warm"
+    } else {
+        "cold"
+    };
+    if cfg.cache_dir.is_some() {
+        emit_cache_counts(EventKind::CacheHit, class, stats.cache_hits);
+        emit_cache_counts(EventKind::CacheMiss, class, stats.executed);
+    } else {
+        emit_cache_counts(EventKind::CacheSkip, class, stats.executed);
+    }
+}
+
+fn run_batch_stats_inner(
     cfg: &EngineConfig,
     exps: &[Experiment],
 ) -> Result<(Vec<Report>, BatchStats)> {

@@ -43,6 +43,7 @@ pub mod perfmodel;
 pub mod sampler;
 pub mod coordinator;
 pub mod engine;
+pub mod obs;
 pub mod runtime;
 pub mod figures;
 

@@ -15,6 +15,8 @@
 //!   sampler               stdin/stdout sampler (the paper's §3.1 tool)
 //!   worker --spool <dir>  lease-based batch-queue worker daemon
 //!   spool status          queued/leased/done per host for a spool dir
+//!   analyze               latency/throughput/cache/audit over a spool's
+//!                         job-lifecycle event log
 //!   kernels               list the kernel signature database
 //!   libraries             list available kernel libraries
 //!
@@ -51,8 +53,9 @@ USAGE:
   elaps cache clear [--cache DIR]
   elaps sampler [--library L] [--machine M]
   elaps worker --spool DIR [--once] [--workers N] [--lease-ttl DUR]
-               [--max-leases N] [--recover SECS|0=off]
-  elaps spool status [--spool DIR]
+               [--max-leases N] [--recover SECS|0=off] [--verbose]
+  elaps spool status [--spool DIR] [--json]
+  elaps analyze [--campaign TAG] [--spool DIR] [--json]
   elaps kernels
   elaps libraries
 
@@ -96,6 +99,12 @@ stats:   min max avg med std
                jobs finish and publish, no new jobs are claimed.
 --recover SECS reclaim age for legacy (pre-lease) claims; 0 disables
                the mtime heuristic (leased claims are unaffected)
+--no-events    disable job-lifecycle event logging to <spool>/events/
+               (env ELAPS_EVENTS=0). Events are on by default, appended
+               crash-safely per host, and never fail a job.
+--verbose      worker: also mirror fenced-publish warnings to stderr
+               (the structured `fenced` event is always recorded)
+--json         machine-readable output (analyze, spool status)
 ";
 
 fn main() {
@@ -122,7 +131,17 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
     };
     let args = Args::parse(
         raw[1..].iter().cloned(),
-        &["batch", "once", "full", "help", "trusted-only", "warm"],
+        &[
+            "batch",
+            "once",
+            "full",
+            "help",
+            "trusted-only",
+            "warm",
+            "no-events",
+            "verbose",
+            "json",
+        ],
     );
     match cmd.as_str() {
         "run" => cmd_run(&args),
@@ -137,6 +156,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "sampler" => cmd_sampler(&args),
         "worker" => cmd_worker(&args),
         "spool" => cmd_spool(&args),
+        "analyze" => cmd_analyze(&args),
         "kernels" => cmd_kernels(),
         "libraries" => cmd_libraries(),
         "help" | "--help" | "-h" => {
@@ -254,7 +274,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     elaps::engine::set_default_config(cfg.clone());
     let exp = load_experiment(path)?;
     let report = if args.flag("batch") {
-        let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+        let mut spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+        if args.flag("no-events") {
+            spool = spool.with_events(false);
+        }
         let id = spool.submit(&exp)?;
         println!("submitted job {id}; serving in-process worker…");
         println!("note: engine cache statistics are not reported on the spooled path");
@@ -322,7 +345,10 @@ fn cmd_submit(args: &Args) -> Result<()> {
     if args.flag("campaign") {
         bail!("--campaign requires a tag");
     }
-    let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    let mut spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    if args.flag("no-events") {
+        spool = spool.with_events(false);
+    }
     let override_tag = args.opt("campaign");
     let mut total = 0usize;
     for path in &args.positional {
@@ -705,6 +731,12 @@ fn cmd_worker(args: &Args) -> Result<()> {
         Some(n) => spool = spool.with_max_leases(n),
         None => {}
     }
+    if args.flag("no-events") {
+        spool = spool.with_events(false);
+    }
+    if args.flag("verbose") {
+        spool = spool.with_verbose(true);
+    }
     let once = args.flag("once");
     // legacy (pre-lease) claims are reclaimed by claim-file mtime; 0
     // disables that heuristic. Leased claims always reclaim on lease
@@ -747,10 +779,33 @@ fn cmd_spool(args: &Args) -> Result<()> {
         "status" => {
             let dir = std::path::PathBuf::from(args.opt_or("spool", ".elaps-spool"));
             let st = elaps::coordinator::lease::spool_status(&dir)?;
-            println!("spool at {}:", dir.display());
-            print!("{}", st.render());
+            if args.flag("json") {
+                println!("{}", st.to_json().to_string_pretty());
+            } else {
+                println!("spool at {}:", dir.display());
+                print!("{}", st.render());
+            }
         }
         other => bail!("unknown spool subcommand '{other}' (expected status)"),
+    }
+    Ok(())
+}
+
+/// `elaps analyze`: merge a spool's job-lifecycle event log into
+/// queue-wait/service/publish percentiles, per-host throughput and
+/// backpressure stall, cache hit rates by class, the exactly-once
+/// publish audit and straggler detection — for one campaign
+/// (`--campaign TAG`) or the whole spool.
+fn cmd_analyze(args: &Args) -> Result<()> {
+    if args.flag("campaign") {
+        bail!("--campaign requires a tag");
+    }
+    let dir = std::path::PathBuf::from(args.opt_or("spool", ".elaps-spool"));
+    let analysis = elaps::obs::analyze(&dir, args.opt("campaign"))?;
+    if args.flag("json") {
+        println!("{}", analysis.to_json().to_string_pretty());
+    } else {
+        print!("{}", analysis.render());
     }
     Ok(())
 }

@@ -1,0 +1,610 @@
+//! `elaps analyze`: merge a spool's event logs, stamp sidecars and
+//! done reports into a campaign-level performance report — where time
+//! goes between submit and fetch, which hosts straggle, how the cache
+//! behaves, and whether the exactly-once publish guarantee held. The
+//! measured per-job timings here are the calibration substrate the
+//! modeling roadmap (ROADMAP items on `calibrate`/`rank`) builds on.
+
+use super::events::{read_events, Event, EventKind};
+use crate::coordinator::campaign;
+use crate::coordinator::stats::percentile;
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::Path;
+
+/// Straggler threshold factor: a job is a straggler when its service
+/// time exceeds `k · p90(service)`.
+pub const STRAGGLER_FACTOR: f64 = 3.0;
+
+/// p50/p90/p99 over one latency sample set, in seconds. All NaN when
+/// `n == 0` (rendered as `-` / JSON `null`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl LatencySummary {
+    fn of(samples: &[f64]) -> LatencySummary {
+        LatencySummary {
+            n: samples.len(),
+            p50: percentile(samples, 0.50),
+            p90: percentile(samples, 0.90),
+            p99: percentile(samples, 0.99),
+        }
+    }
+
+    fn to_json(self) -> Json {
+        let mut j = Json::obj();
+        j.set("n", self.n)
+            .set("p50", num_or_null(self.p50))
+            .set("p90", num_or_null(self.p90))
+            .set("p99", num_or_null(self.p99));
+        j
+    }
+}
+
+/// Per-host activity: successful and fenced publishes, total
+/// lease-backpressure stall, and throughput over the host's active
+/// span (first to last event).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HostSummary {
+    pub published: usize,
+    pub fenced: usize,
+    pub stall_s: f64,
+    pub span_s: f64,
+}
+
+impl HostSummary {
+    /// Published jobs per second of active span; NaN for a host whose
+    /// span is empty (a single instantaneous event).
+    pub fn throughput(&self) -> f64 {
+        if self.span_s > 0.0 {
+            self.published as f64 / self.span_s
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Aggregated cache-probe counts for one class (cold/warm/seeded).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheClassSummary {
+    pub hits: u64,
+    pub misses: u64,
+    pub skips: u64,
+}
+
+impl CacheClassSummary {
+    /// hits / (hits + misses); NaN when the cache was never probed.
+    pub fn hit_rate(&self) -> f64 {
+        let probed = self.hits + self.misses;
+        if probed == 0 {
+            f64::NAN
+        } else {
+            self.hits as f64 / probed as f64
+        }
+    }
+}
+
+/// The exactly-once audit: every done job must have exactly one
+/// (non-fenced) `published` event. Fenced publishes alongside are
+/// expected — that is the lease protocol working.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Audit {
+    pub done: usize,
+    pub published_once: usize,
+    /// Done jobs violating the rule, as `"<job>: N published event(s)"`.
+    pub violations: Vec<String>,
+}
+
+impl Audit {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Everything `elaps analyze` computes, renderable as a human table
+/// ([`Analysis::render`]) or machine-readable JSON
+/// ([`Analysis::to_json`]).
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    pub campaign: Option<String>,
+    /// Events considered (after the campaign filter).
+    pub events: usize,
+    /// Complete-but-unreadable log lines skipped by the reader.
+    pub skipped_events: usize,
+    /// Event counts by kind name, over the considered events.
+    pub counts: BTreeMap<String, usize>,
+    /// submit → first claim.
+    pub queue_wait: LatencySummary,
+    /// serve start → serve finish, one sample per completed serve.
+    pub service: LatencySummary,
+    /// serve finish → published report, per successful publish.
+    pub publish: LatencySummary,
+    pub hosts: BTreeMap<String, HostSummary>,
+    pub cache: BTreeMap<String, CacheClassSummary>,
+    pub audit: Audit,
+    pub straggler_threshold_s: f64,
+    pub stragglers: Vec<String>,
+}
+
+/// `Json::Num(NaN)` would serialize as the non-JSON token `NaN`:
+/// absent measurements become `null` instead.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::Num(x)
+    } else {
+        Json::Null
+    }
+}
+
+fn ns_delta_s(later: u128, earlier: u128) -> f64 {
+    // saturating: cross-host clock skew must not produce negative
+    // latencies (or a u128 underflow panic)
+    later.saturating_sub(earlier) as f64 / 1e9
+}
+
+/// Timing milestones reconstructed for one job from its events.
+#[derive(Debug, Default)]
+struct Timeline {
+    submitted: Option<u128>,
+    first_claimed: Option<u128>,
+    published: Vec<u128>,
+    /// serve spans by (worker, epoch): started / finished timestamps.
+    serve: BTreeMap<(String, u64), (Option<u128>, Option<u128>)>,
+}
+
+/// Analyze a spool directory, optionally restricted to one campaign's
+/// jobs (host-scoped events like `backpressured` are always kept).
+pub fn analyze(spool: &Path, campaign_tag: Option<&str>) -> Result<Analysis> {
+    if !spool.join("queue").is_dir() {
+        bail!("{} is not a spool directory (no queue/)", spool.display());
+    }
+    let scan = read_events(spool);
+    let job_filter: Option<BTreeSet<String>> = match campaign_tag {
+        Some(tag) => Some(campaign::campaign_jobs(spool, tag)?.into_iter().collect()),
+        None => None,
+    };
+    let in_scope = |ev: &Event| match &job_filter {
+        None => true,
+        Some(set) => ev.job_id.is_empty() || set.contains(&ev.job_id),
+    };
+    let events: Vec<&Event> = scan.events.iter().filter(|e| in_scope(e)).collect();
+
+    // ---- done jobs (the audit's ground truth), campaign-filtered
+    let mut done_jobs: Vec<String> = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(spool.join("done")) {
+        for entry in rd.filter_map(|e| e.ok()) {
+            let name = entry.file_name();
+            let Some(id) = name.to_str().and_then(|n| n.strip_suffix(".report.json")) else {
+                continue;
+            };
+            if job_filter.as_ref().is_none_or(|set| set.contains(id)) {
+                done_jobs.push(id.to_string());
+            }
+        }
+    }
+    done_jobs.sort();
+
+    // ---- single pass over the events
+    let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+    let mut timelines: BTreeMap<String, Timeline> = BTreeMap::new();
+    let mut hosts: BTreeMap<String, HostSummary> = BTreeMap::new();
+    let mut host_spans: BTreeMap<String, (u128, u128)> = BTreeMap::new();
+    let mut cache: BTreeMap<String, CacheClassSummary> = BTreeMap::new();
+    for ev in &events {
+        *counts.entry(ev.kind.as_str().to_string()).or_default() += 1;
+        let span = host_spans.entry(ev.host.clone()).or_insert((ev.t_unix_ns, ev.t_unix_ns));
+        span.0 = span.0.min(ev.t_unix_ns);
+        span.1 = span.1.max(ev.t_unix_ns);
+        if !ev.job_id.is_empty() {
+            let tl = timelines.entry(ev.job_id.clone()).or_default();
+            match ev.kind {
+                EventKind::Submitted => {
+                    tl.submitted = Some(tl.submitted.map_or(ev.t_unix_ns, |t| t.min(ev.t_unix_ns)))
+                }
+                EventKind::Claimed => {
+                    tl.first_claimed =
+                        Some(tl.first_claimed.map_or(ev.t_unix_ns, |t| t.min(ev.t_unix_ns)))
+                }
+                EventKind::ServeStarted => {
+                    let slot = tl.serve.entry((ev.worker.clone(), ev.epoch)).or_default();
+                    slot.0 = Some(ev.t_unix_ns);
+                }
+                EventKind::ServeFinished => {
+                    let slot = tl.serve.entry((ev.worker.clone(), ev.epoch)).or_default();
+                    slot.1 = Some(ev.t_unix_ns);
+                }
+                EventKind::Published => tl.published.push(ev.t_unix_ns),
+                _ => {}
+            }
+        }
+        match ev.kind {
+            EventKind::Published => hosts.entry(ev.host.clone()).or_default().published += 1,
+            EventKind::Fenced => hosts.entry(ev.host.clone()).or_default().fenced += 1,
+            EventKind::Backpressured => {
+                let stall = ev.extra.get("stall_ns").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                hosts.entry(ev.host.clone()).or_default().stall_s += stall / 1e9;
+            }
+            EventKind::CacheHit | EventKind::CacheMiss | EventKind::CacheSkip => {
+                let class =
+                    ev.extra.get("class").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                let count = ev.extra.get("count").and_then(|v| v.as_u64()).unwrap_or(1);
+                let entry = cache.entry(class).or_default();
+                match ev.kind {
+                    EventKind::CacheHit => entry.hits += count,
+                    EventKind::CacheMiss => entry.misses += count,
+                    _ => entry.skips += count,
+                }
+            }
+            _ => {}
+        }
+    }
+    for (host, summary) in &mut hosts {
+        if let Some((lo, hi)) = host_spans.get(host) {
+            summary.span_s = ns_delta_s(*hi, *lo);
+        }
+    }
+
+    // ---- latency samples from the timelines
+    let mut queue_wait = Vec::new();
+    let mut service = Vec::new();
+    let mut publish = Vec::new();
+    let mut service_by_job: BTreeMap<&str, f64> = BTreeMap::new();
+    for (job, tl) in &timelines {
+        if let (Some(s), Some(c)) = (tl.submitted, tl.first_claimed) {
+            queue_wait.push(ns_delta_s(c, s));
+        }
+        let mut last_finished: Option<u128> = None;
+        for (start, finish) in tl.serve.values() {
+            if let (Some(a), Some(b)) = (start, finish) {
+                let d = ns_delta_s(*b, *a);
+                service.push(d);
+                let worst = service_by_job.entry(job.as_str()).or_insert(0.0);
+                *worst = worst.max(d);
+            }
+            if let Some(b) = finish {
+                last_finished = Some(last_finished.map_or(*b, |t| t.max(*b)));
+            }
+        }
+        if let Some(f) = last_finished {
+            for p in &tl.published {
+                publish.push(ns_delta_s(*p, f));
+            }
+        }
+    }
+    let service_summary = LatencySummary::of(&service);
+
+    // ---- stragglers: service time beyond k·p90
+    let straggler_threshold_s = STRAGGLER_FACTOR * service_summary.p90;
+    let mut stragglers: Vec<String> = Vec::new();
+    if straggler_threshold_s.is_finite() {
+        for (job, worst) in &service_by_job {
+            if *worst > straggler_threshold_s {
+                stragglers.push((*job).to_string());
+            }
+        }
+    }
+
+    // ---- exactly-once audit over the done jobs
+    let mut audit = Audit { done: done_jobs.len(), ..Default::default() };
+    for job in &done_jobs {
+        let n = timelines.get(job).map_or(0, |tl| tl.published.len());
+        if n == 1 {
+            audit.published_once += 1;
+        } else {
+            audit.violations.push(format!("{job}: {n} published event(s)"));
+        }
+    }
+
+    Ok(Analysis {
+        campaign: campaign_tag.map(str::to_string),
+        events: events.len(),
+        skipped_events: scan.skipped,
+        counts,
+        queue_wait: LatencySummary::of(&queue_wait),
+        service: service_summary,
+        publish: LatencySummary::of(&publish),
+        hosts,
+        cache,
+        audit,
+        straggler_threshold_s,
+        stragglers,
+    })
+}
+
+impl Analysis {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("v", 1u64);
+        match &self.campaign {
+            Some(tag) => j.set("campaign", tag.as_str()),
+            None => j.set("campaign", Json::Null),
+        };
+        let mut ev = Json::obj();
+        ev.set("total", self.events).set("skipped", self.skipped_events);
+        let mut by_kind = Json::obj();
+        for (kind, n) in &self.counts {
+            by_kind.set(kind, *n);
+        }
+        ev.set("by_kind", by_kind);
+        j.set("events", ev);
+        let mut lat = Json::obj();
+        lat.set("queue_wait_s", self.queue_wait.to_json())
+            .set("service_s", self.service.to_json())
+            .set("publish_s", self.publish.to_json());
+        j.set("latency", lat);
+        let mut hosts = Json::obj();
+        for (host, h) in &self.hosts {
+            let mut o = Json::obj();
+            o.set("published", h.published)
+                .set("fenced", h.fenced)
+                .set("stall_s", num_or_null(h.stall_s))
+                .set("span_s", num_or_null(h.span_s))
+                .set("throughput_jobs_per_s", num_or_null(h.throughput()));
+            hosts.set(host, o);
+        }
+        j.set("hosts", hosts);
+        let mut cache = Json::obj();
+        for (class, c) in &self.cache {
+            let mut o = Json::obj();
+            o.set("hits", c.hits)
+                .set("misses", c.misses)
+                .set("skips", c.skips)
+                .set("hit_rate", num_or_null(c.hit_rate()));
+            cache.set(class, o);
+        }
+        j.set("cache", cache);
+        let mut audit = Json::obj();
+        audit
+            .set("done", self.audit.done)
+            .set("published_once", self.audit.published_once)
+            .set("ok", self.audit.ok())
+            .set(
+                "violations",
+                Json::Arr(self.audit.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            );
+        j.set("audit", audit);
+        let mut stragglers = Json::obj();
+        stragglers.set("threshold_s", num_or_null(self.straggler_threshold_s)).set(
+            "jobs",
+            Json::Arr(self.stragglers.iter().map(|v| Json::Str(v.clone())).collect()),
+        );
+        j.set("stragglers", stragglers);
+        j
+    }
+
+    /// The human table.
+    pub fn render(&self) -> String {
+        let fmt_s = |x: f64| {
+            if x.is_finite() {
+                format!("{x:>9.4}")
+            } else {
+                format!("{:>9}", "-")
+            }
+        };
+        let mut out = String::new();
+        match &self.campaign {
+            Some(tag) => out.push_str(&format!("campaign '{tag}': ")),
+            None => out.push_str("spool: "),
+        }
+        out.push_str(&format!(
+            "{} done job(s), {} event(s), {} skipped line(s)\n",
+            self.audit.done, self.events, self.skipped_events
+        ));
+        if self.events == 0 {
+            out.push_str("  no events recorded (run without --no-events to analyze latency)\n");
+        }
+        out.push_str(&format!(
+            "  latency (s)      {:>9} {:>9} {:>9} {:>6}\n",
+            "p50", "p90", "p99", "n"
+        ));
+        for (label, l) in [
+            ("queue-wait", &self.queue_wait),
+            ("service", &self.service),
+            ("publish", &self.publish),
+        ] {
+            out.push_str(&format!(
+                "    {label:<12} {} {} {} {:>6}\n",
+                fmt_s(l.p50),
+                fmt_s(l.p90),
+                fmt_s(l.p99),
+                l.n
+            ));
+        }
+        if !self.hosts.is_empty() {
+            out.push_str("  hosts:\n");
+            for (host, h) in &self.hosts {
+                let rate = h.throughput();
+                let rate = if rate.is_finite() {
+                    format!("{rate:.2} job/s")
+                } else {
+                    "- job/s".to_string()
+                };
+                out.push_str(&format!(
+                    "    {host:<16} {} published, {} fenced, stall {:.3}s, {rate}\n",
+                    h.published, h.fenced, h.stall_s
+                ));
+            }
+        }
+        if !self.cache.is_empty() {
+            out.push_str("  cache:\n");
+            for (class, c) in &self.cache {
+                let rate = c.hit_rate();
+                let rate = if rate.is_finite() {
+                    format!("{:.1}%", 100.0 * rate)
+                } else {
+                    "-".to_string()
+                };
+                out.push_str(&format!(
+                    "    {class:<8} {}/{} hits ({rate}), {} uncached\n",
+                    c.hits,
+                    c.hits + c.misses,
+                    c.skips
+                ));
+            }
+        }
+        if self.audit.ok() {
+            out.push_str(&format!(
+                "  exactly-once audit: PASS ({}/{} done jobs published exactly once)\n",
+                self.audit.published_once, self.audit.done
+            ));
+        } else {
+            out.push_str(&format!(
+                "  exactly-once audit: FAIL ({} violation(s))\n",
+                self.audit.violations.len()
+            ));
+            for v in &self.audit.violations {
+                out.push_str(&format!("    {v}\n"));
+            }
+        }
+        if self.straggler_threshold_s.is_finite() {
+            if self.stragglers.is_empty() {
+                out.push_str(&format!(
+                    "  stragglers (> {STRAGGLER_FACTOR:.1}×p90 service): none\n"
+                ));
+            } else {
+                out.push_str(&format!(
+                    "  stragglers (> {:.4}s service):\n",
+                    self.straggler_threshold_s
+                ));
+                for job in &self.stragglers {
+                    out.push_str(&format!("    {job}\n"));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::emit::Emitter;
+    use std::path::PathBuf;
+
+    fn spool_skeleton(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_obs_analyze_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for sub in ["queue", "running", "done", "leases", "stamps", "events"] {
+            std::fs::create_dir_all(dir.join(sub)).unwrap();
+        }
+        dir
+    }
+
+    fn mark_done(dir: &Path, job: &str) {
+        std::fs::write(dir.join("done").join(format!("{job}.report.json")), "{}").unwrap();
+    }
+
+    #[test]
+    fn analyze_rejects_non_spool_dirs() {
+        let dir = std::env::temp_dir().join(format!("elaps_obs_nospool_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(analyze(&dir, None).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_lifecycle_produces_ordered_percentiles_and_passing_audit() {
+        let dir = spool_skeleton("ok");
+        let client = Emitter::for_spool(&dir, "laptop", "laptop#1-0")
+            .with_enabled(true)
+            .with_campaign("camp");
+        let worker = Emitter::for_spool(&dir, "hA", "hA#1-1").with_enabled(true);
+        for (i, job) in ["job-a", "job-b", "job-c"].iter().enumerate() {
+            client.emit(EventKind::Submitted, job, 0, &[]);
+            worker.emit(EventKind::Claimed, job, 1, &[]);
+            worker.emit(EventKind::ServeStarted, job, 1, &[]);
+            if i == 0 {
+                crate::obs::emit::emit_cache_counts(EventKind::CacheHit, "cold", 2);
+            }
+            worker.emit(EventKind::ServeFinished, job, 1, &[("outcome", "ok".into())]);
+            worker.emit(EventKind::Published, job, 1, &[]);
+            mark_done(&dir, job);
+        }
+        // register the campaign so --campaign filtering can join
+        let ids: Vec<String> = ["job-a", "job-b", "job-c"].iter().map(|s| s.to_string()).collect();
+        campaign::record_jobs(&dir, "camp", &ids).unwrap();
+        let a = analyze(&dir, Some("camp")).unwrap();
+        assert_eq!(a.audit.done, 3);
+        assert!(a.audit.ok(), "{:?}", a.audit.violations);
+        assert_eq!(a.counts.get("submitted"), Some(&3));
+        assert_eq!(a.counts.get("published"), Some(&3));
+        for l in [&a.queue_wait, &a.service, &a.publish] {
+            assert_eq!(l.n, 3);
+            assert!(l.p50.is_finite() && l.p90.is_finite() && l.p99.is_finite());
+            assert!(l.p50 <= l.p90 && l.p90 <= l.p99, "{l:?}");
+            assert!(l.p50 >= 0.0);
+        }
+        assert_eq!(a.hosts.get("hA").map(|h| h.published), Some(3));
+        // the unfiltered view sees the same spool
+        let all = analyze(&dir, None).unwrap();
+        assert_eq!(all.audit.done, 3);
+        assert!(all.events >= a.events);
+        // JSON stays parseable (NaN-free) and carries the audit
+        let j = Json::parse(&a.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("audit").get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("cache").get("cold").get("hits").as_u64(), None, "no job ctx, no event");
+        assert!(a.render().contains("PASS"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn audit_flags_missing_and_duplicate_publishes() {
+        let dir = spool_skeleton("audit");
+        let worker = Emitter::for_spool(&dir, "hB", "hB#1-0").with_enabled(true);
+        // done without any published event
+        mark_done(&dir, "silent");
+        // done with two published events
+        worker.emit(EventKind::Published, "twice", 1, &[]);
+        worker.emit(EventKind::Published, "twice", 2, &[]);
+        mark_done(&dir, "twice");
+        // fenced alongside a single publish is fine
+        worker.emit(EventKind::Fenced, "fenced-ok", 1, &[("reason", "superseded".into())]);
+        worker.emit(EventKind::Published, "fenced-ok", 2, &[]);
+        mark_done(&dir, "fenced-ok");
+        let a = analyze(&dir, None).unwrap();
+        assert_eq!(a.audit.done, 3);
+        assert_eq!(a.audit.published_once, 1);
+        assert!(!a.audit.ok());
+        assert_eq!(a.audit.violations.len(), 2);
+        assert_eq!(a.hosts.get("hB").map(|h| h.fenced), Some(1));
+        assert!(a.render().contains("FAIL"));
+        let j = a.to_json();
+        assert_eq!(j.get("audit").get("ok").as_bool(), Some(false));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn backpressure_stall_and_cache_classes_aggregate() {
+        let dir = spool_skeleton("stall");
+        let worker = Emitter::for_spool(&dir, "hC", "hC#1-0").with_enabled(true);
+        worker.emit(EventKind::Backpressured, "", 0, &[("stall_ns", 2_000_000_000u64.into())]);
+        worker.emit(EventKind::Backpressured, "", 0, &[("stall_ns", 500_000_000u64.into())]);
+        worker.emit(
+            EventKind::CacheHit,
+            "j1",
+            1,
+            &[("class", "warm".into()), ("count", 3u64.into())],
+        );
+        worker.emit(
+            EventKind::CacheMiss,
+            "j1",
+            1,
+            &[("class", "warm".into()), ("count", 1u64.into())],
+        );
+        let a = analyze(&dir, None).unwrap();
+        let h = a.hosts.get("hC").unwrap();
+        assert!((h.stall_s - 2.5).abs() < 1e-9, "{}", h.stall_s);
+        let warm = a.cache.get("warm").unwrap();
+        assert_eq!((warm.hits, warm.misses, warm.skips), (3, 1, 0));
+        assert!((warm.hit_rate() - 0.75).abs() < 1e-12);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

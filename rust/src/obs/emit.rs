@@ -1,0 +1,326 @@
+//! Crash-safe, never-failing event emission.
+//!
+//! An [`Emitter`] appends one event per call to its host's log file
+//! `<spool>/events/<host>.jsonl` — a single `O_APPEND` write of one
+//! newline-terminated line, so concurrent workers on one host
+//! interleave whole lines and a crash mid-write leaves at most one
+//! partial final line (which the reader ignores). Emission is
+//! default-on, disabled by `ELAPS_EVENTS=0` or the CLI's `--no-events`,
+//! and guaranteed never to fail a job: an I/O error degrades to a
+//! one-time warning on stderr, after which emission errors are
+//! silently dropped.
+
+use super::events::{Event, EventKind};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Once;
+
+/// Process-global emission counter behind [`Event::seq`]. Worker
+/// identities embed the process id, so a per-process counter is
+/// strictly increasing over any one `(host, worker)`'s events.
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// One warning for the whole process, then silence: event logging is
+/// telemetry, and telemetry must never crash-loop or spam a worker.
+static EMIT_WARN: Once = Once::new();
+
+/// Is emission enabled by the environment? Default on; `ELAPS_EVENTS`
+/// set to `0`/`false`/`no` (the same falsy spellings the engine's
+/// config readers reject as truthy) turns it off.
+pub fn env_enabled() -> bool {
+    match std::env::var("ELAPS_EVENTS") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            !(v == "0" || v == "false" || v == "no")
+        }
+        Err(_) => true,
+    }
+}
+
+/// A handle for appending job-lifecycle events. Cheap to clone; clones
+/// carry the identity fields (host, worker, campaign) independently,
+/// so a worker pool's per-thread spooler clones each stamp their own
+/// worker id while sharing the process-global [`Event::seq`] counter.
+#[derive(Debug, Clone)]
+pub struct Emitter {
+    /// `<spool>/events`; empty for [`Emitter::disabled`].
+    dir: PathBuf,
+    host: String,
+    worker: String,
+    campaign: String,
+    enabled: bool,
+}
+
+impl Emitter {
+    /// An emitter for a spool directory, enabled unless the
+    /// environment says otherwise ([`env_enabled`]).
+    pub fn for_spool(spool: &Path, host: &str, worker: &str) -> Emitter {
+        let enabled = env_enabled();
+        let dir = spool.join("events");
+        if enabled {
+            let _ = std::fs::create_dir_all(&dir);
+        }
+        Emitter {
+            dir,
+            host: host.to_string(),
+            worker: worker.to_string(),
+            campaign: String::new(),
+            enabled,
+        }
+    }
+
+    /// An emitter that never writes (no spool in play at all).
+    pub fn disabled() -> Emitter {
+        Emitter {
+            dir: PathBuf::new(),
+            host: String::new(),
+            worker: String::new(),
+            campaign: String::new(),
+            enabled: false,
+        }
+    }
+
+    /// Re-target the host identity (and with it the per-host log file).
+    pub fn with_host(mut self, host: &str) -> Emitter {
+        self.host = host.to_string();
+        self
+    }
+
+    pub fn with_worker(mut self, worker: &str) -> Emitter {
+        self.worker = worker.to_string();
+        self
+    }
+
+    /// Tag subsequent events with a campaign (the submitting client
+    /// knows it; workers do not).
+    pub fn with_campaign(mut self, tag: &str) -> Emitter {
+        self.campaign = tag.to_string();
+        self
+    }
+
+    /// Force emission on or off, overriding the environment — the
+    /// CLI's `--no-events`, and the tests' way of pinning behavior
+    /// regardless of an inherited `ELAPS_EVENTS`. Enabling an emitter
+    /// constructed with [`Emitter::disabled`] (no spool) stays off.
+    pub fn with_enabled(mut self, enabled: bool) -> Emitter {
+        self.enabled = enabled && !self.dir.as_os_str().is_empty();
+        if self.enabled {
+            let _ = std::fs::create_dir_all(&self.dir);
+        }
+        self
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Append one event. Infallible by contract: any I/O error is
+    /// reported once per process and otherwise swallowed — a job must
+    /// never fail because its telemetry could not be written.
+    pub fn emit(&self, kind: EventKind, job_id: &str, epoch: u64, extra: &[(&str, Json)]) {
+        if !self.enabled {
+            return;
+        }
+        let event = Event {
+            kind,
+            job_id: job_id.to_string(),
+            campaign: self.campaign.clone(),
+            host: self.host.clone(),
+            worker: self.worker.clone(),
+            epoch,
+            t_unix_ns: now_unix_ns(),
+            seq: SEQ.fetch_add(1, Ordering::Relaxed),
+            extra: extra.iter().map(|(k, v)| ((*k).to_string(), v.clone())).collect(),
+        };
+        if let Err(e) = self.append(&event) {
+            EMIT_WARN.call_once(|| {
+                eprintln!(
+                    "warning: event log write failed ({e}); \
+                     further event-log errors will be suppressed"
+                );
+            });
+        }
+    }
+
+    fn append(&self, event: &Event) -> std::io::Result<()> {
+        use std::io::Write;
+        // hosts come from the environment: keep the log name one flat
+        // file per host even for a pathological hostname
+        let file = format!("{}.jsonl", self.host.replace(['/', ' '], "_"));
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .create(true)
+            .open(self.dir.join(file))?;
+        f.write_all(event.to_line().as_bytes())
+    }
+}
+
+fn now_unix_ns() -> u128 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0)
+}
+
+// ----------------------------------------------------- job context
+
+/// The thread-local job context: which job (under which emitter) the
+/// current thread is executing. The spooler sets it around payload
+/// execution so layers with no spool handle — the engine's cache
+/// probe — can attribute their events to the running job.
+#[derive(Debug, Clone)]
+pub struct JobContext {
+    pub emitter: Emitter,
+    pub job_id: String,
+    pub epoch: u64,
+}
+
+thread_local! {
+    static JOB_CTX: std::cell::RefCell<Option<JobContext>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// RAII guard restoring the previous job context on drop, so nested
+/// serves (a job whose execution drives another spooler in-process)
+/// unwind correctly.
+pub struct JobCtxGuard {
+    prev: Option<JobContext>,
+}
+
+impl Drop for JobCtxGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        JOB_CTX.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Enter a job context for the current thread; hold the guard for the
+/// span of the job's execution.
+pub fn enter_job(emitter: &Emitter, job_id: &str, epoch: u64) -> JobCtxGuard {
+    let ctx = JobContext { emitter: emitter.clone(), job_id: job_id.to_string(), epoch };
+    let prev = JOB_CTX.with(|c| c.replace(Some(ctx)));
+    JobCtxGuard { prev }
+}
+
+/// The current thread's job context, if any.
+pub fn current_job() -> Option<JobContext> {
+    JOB_CTX.with(|c| c.borrow().clone())
+}
+
+/// Convenience used by the engine: emit aggregate cache-probe counts
+/// (`class` = cold/warm/seeded, `count` = how many points) against the
+/// current job context, if one is set. `count == 0` emits nothing.
+pub fn emit_cache_counts(kind: EventKind, class: &str, count: usize) {
+    if count == 0 {
+        return;
+    }
+    if let Some(ctx) = current_job() {
+        let extra: [(&str, Json); 2] = [("class", class.into()), ("count", count.into())];
+        ctx.emitter.emit(kind, &ctx.job_id, ctx.epoch, &extra);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::events::read_events;
+    use std::collections::BTreeMap;
+
+    fn tmp_spool(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("elaps_obs_emit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn emit_appends_readable_events_with_increasing_seq() {
+        let dir = tmp_spool("basic");
+        let em = Emitter::for_spool(&dir, "hostA", "hostA#1-0")
+            .with_enabled(true)
+            .with_campaign("camp");
+        em.emit(EventKind::Submitted, "job-1", 0, &[]);
+        em.emit(EventKind::Claimed, "job-1", 1, &[]);
+        em.emit(EventKind::Fenced, "job-1", 1, &[("reason", "expired".into())]);
+        let scan = read_events(&dir);
+        assert_eq!(scan.skipped, 0);
+        assert_eq!(scan.events.len(), 3);
+        assert!(dir.join("events").join("hostA.jsonl").is_file());
+        for ev in &scan.events {
+            assert_eq!(ev.host, "hostA");
+            assert_eq!(ev.worker, "hostA#1-0");
+            assert_eq!(ev.campaign, "camp");
+        }
+        assert!(scan.events.windows(2).all(|w| w[0].seq < w[1].seq), "seq strictly increasing");
+        assert!(scan.events.windows(2).all(|w| w[0].t_unix_ns <= w[1].t_unix_ns));
+        assert_eq!(scan.events[2].extra.get("reason"), Some(&Json::Str("expired".into())));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_emitters_write_nothing_and_never_error() {
+        let dir = tmp_spool("off");
+        let em = Emitter::for_spool(&dir, "hostA", "w").with_enabled(false);
+        em.emit(EventKind::Submitted, "job-1", 0, &[]);
+        assert!(read_events(&dir).events.is_empty());
+        // a spool-less emitter cannot be enabled into writing nowhere
+        let none = Emitter::disabled().with_enabled(true);
+        assert!(!none.is_enabled());
+        none.emit(EventKind::Submitted, "job-1", 0, &[]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn per_host_logs_are_separate_files() {
+        let dir = tmp_spool("hosts");
+        let a = Emitter::for_spool(&dir, "hA", "wa").with_enabled(true);
+        let b = a.clone().with_host("hB").with_worker("wb");
+        a.emit(EventKind::Submitted, "j", 0, &[]);
+        b.emit(EventKind::Claimed, "j", 1, &[]);
+        assert!(dir.join("events").join("hA.jsonl").is_file());
+        assert!(dir.join("events").join("hB.jsonl").is_file());
+        let scan = read_events(&dir);
+        assert_eq!(scan.events.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn job_context_nests_and_restores() {
+        let em = Emitter::disabled();
+        assert!(current_job().is_none());
+        {
+            let _outer = enter_job(&em, "outer", 1);
+            assert_eq!(current_job().unwrap().job_id, "outer");
+            {
+                let _inner = enter_job(&em, "inner", 2);
+                assert_eq!(current_job().unwrap().job_id, "inner");
+            }
+            assert_eq!(current_job().unwrap().job_id, "outer");
+        }
+        assert!(current_job().is_none());
+        // emit_cache_counts without a context is a no-op, not a panic
+        emit_cache_counts(EventKind::CacheHit, "cold", 3);
+    }
+
+    #[test]
+    fn cache_counts_attribute_to_the_context_job() {
+        let dir = tmp_spool("cache");
+        let em = Emitter::for_spool(&dir, "hC", "wc").with_enabled(true);
+        let _ctx = enter_job(&em, "job-9", 4);
+        emit_cache_counts(EventKind::CacheHit, "seeded", 5);
+        emit_cache_counts(EventKind::CacheMiss, "seeded", 0); // dropped
+        drop(_ctx);
+        let scan = read_events(&dir);
+        assert_eq!(scan.events.len(), 1);
+        let ev = &scan.events[0];
+        assert_eq!(ev.kind, EventKind::CacheHit);
+        assert_eq!(ev.job_id, "job-9");
+        assert_eq!(ev.epoch, 4);
+        let mut want = BTreeMap::new();
+        want.insert("class".to_string(), Json::Str("seeded".into()));
+        want.insert("count".to_string(), Json::Num(5.0));
+        assert_eq!(ev.extra, want);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,338 @@
+//! The job-lifecycle event schema: versioned, serde-free JSON records
+//! of everything that happens to a job between `elaps submit` and its
+//! published report. One event per line in per-host JSONL logs under
+//! `<spool>/events/<host>.jsonl`, written crash-safely by
+//! [`crate::obs::emit::Emitter`] and merged by `elaps analyze`
+//! ([`crate::obs::analyze`]) into the campaign-level timings the
+//! modeling work (ROADMAP) needs as calibration input.
+//!
+//! # Compatibility rule
+//!
+//! Every event carries a schema version `v`. A reader accepts events
+//! with `v <= EVENT_SCHEMA_VERSION` and a kind it knows, ignoring any
+//! fields it does not understand; events from a *newer* schema or with
+//! an unknown kind are skipped (and counted), never an error. Writers
+//! may add new kinds and new fields without a version bump; removing
+//! or re-typing a core field requires one.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Version stamped into every emitted event (the `v` field).
+pub const EVENT_SCHEMA_VERSION: u64 = 1;
+
+/// The core fields every event carries; anything else round-trips
+/// through [`Event::extra`].
+const CORE_KEYS: [&str; 9] =
+    ["v", "kind", "job_id", "campaign", "host", "worker", "epoch", "t_unix_ns", "seq"];
+
+/// What happened. The taxonomy covers the spooler's whole job
+/// lifecycle plus the engine's cache probe:
+///
+/// | kind             | emitted by                  | extra fields        |
+/// |------------------|-----------------------------|---------------------|
+/// | `submitted`      | client (`elaps submit`)     | —                   |
+/// | `claimed`        | worker claim                | —                   |
+/// | `heartbeat`      | worker lease renewal        | —                   |
+/// | `serve_started`  | worker, before execution    | —                   |
+/// | `serve_finished` | worker, after execution     | `outcome`           |
+/// | `published`      | worker, report landed       | —                   |
+/// | `fenced`         | worker, publish refused     | `reason`            |
+/// | `backpressured`  | worker daemon, at lease cap | `stall_ns`          |
+/// | `cache_hit`      | engine cache probe          | `class`, `count`    |
+/// | `cache_miss`     | engine cache probe          | `class`, `count`    |
+/// | `cache_skip`     | engine, no cache configured | `class`, `count`    |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    Submitted,
+    Claimed,
+    Heartbeat,
+    ServeStarted,
+    ServeFinished,
+    Published,
+    Fenced,
+    Backpressured,
+    CacheHit,
+    CacheMiss,
+    CacheSkip,
+}
+
+/// Every kind, in lifecycle order.
+pub const ALL_EVENT_KINDS: &[EventKind] = &[
+    EventKind::Submitted,
+    EventKind::Claimed,
+    EventKind::Heartbeat,
+    EventKind::ServeStarted,
+    EventKind::ServeFinished,
+    EventKind::Published,
+    EventKind::Fenced,
+    EventKind::Backpressured,
+    EventKind::CacheHit,
+    EventKind::CacheMiss,
+    EventKind::CacheSkip,
+];
+
+impl EventKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Submitted => "submitted",
+            EventKind::Claimed => "claimed",
+            EventKind::Heartbeat => "heartbeat",
+            EventKind::ServeStarted => "serve_started",
+            EventKind::ServeFinished => "serve_finished",
+            EventKind::Published => "published",
+            EventKind::Fenced => "fenced",
+            EventKind::Backpressured => "backpressured",
+            EventKind::CacheHit => "cache_hit",
+            EventKind::CacheMiss => "cache_miss",
+            EventKind::CacheSkip => "cache_skip",
+        }
+    }
+
+    /// Inverse of [`EventKind::as_str`]; `None` for kinds this reader
+    /// does not know (the compatibility rule says: skip them).
+    pub fn by_name(name: &str) -> Option<EventKind> {
+        ALL_EVENT_KINDS.iter().copied().find(|k| k.as_str() == name)
+    }
+}
+
+/// One job-lifecycle event. `campaign` is known only on the submitting
+/// client (workers see bare job ids — `elaps analyze --campaign` joins
+/// their events via the campaign record); `job_id` is empty for
+/// host-scoped events (`backpressured`). `t_unix_ns` is serialized as
+/// a decimal *string*: nanosecond epoch timestamps (~1.7e18) exceed
+/// the f64-exact integer range, and our JSON numbers are f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub job_id: String,
+    pub campaign: String,
+    pub host: String,
+    pub worker: String,
+    pub epoch: u64,
+    pub t_unix_ns: u128,
+    /// Process-global emission counter: strictly increasing over the
+    /// events any one `(host, worker)` writes, which is what lets a
+    /// reader order one worker's events without trusting clocks.
+    pub seq: u64,
+    /// Kind-specific payload (`reason`, `outcome`, `class`, `count`,
+    /// `stall_ns`) plus any field a newer writer added.
+    pub extra: BTreeMap<String, Json>,
+}
+
+impl Event {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("v", EVENT_SCHEMA_VERSION)
+            .set("kind", self.kind.as_str())
+            .set("job_id", self.job_id.as_str())
+            .set("campaign", self.campaign.as_str())
+            .set("host", self.host.as_str())
+            .set("worker", self.worker.as_str())
+            .set("epoch", self.epoch)
+            .set("t_unix_ns", self.t_unix_ns.to_string())
+            .set("seq", self.seq);
+        for (k, v) in &self.extra {
+            if !CORE_KEYS.contains(&k.as_str()) {
+                j.set(k, v.clone());
+            }
+        }
+        j
+    }
+
+    /// The log-file form: one compact line, newline-terminated (the
+    /// unit of the emitter's single `O_APPEND` write).
+    pub fn to_line(&self) -> String {
+        format!("{}\n", self.to_json().to_string_compact())
+    }
+
+    /// Parse one event. `None` — never a panic — for anything a
+    /// same-or-older reader cannot interpret: missing/mistyped core
+    /// fields, an unknown kind, or a newer schema version. Unknown
+    /// non-core fields are preserved in [`Event::extra`].
+    pub fn from_json(j: &Json) -> Option<Event> {
+        let v = j.get("v").as_u64()?;
+        if v > EVENT_SCHEMA_VERSION {
+            return None;
+        }
+        let kind = EventKind::by_name(j.get("kind").as_str()?)?;
+        // accept both the string form we write and a plain number (a
+        // small-timestamp writer is within f64-exact range anyway)
+        let t_unix_ns = match j.get("t_unix_ns") {
+            Json::Str(s) => s.parse::<u128>().ok()?,
+            other => other.as_u64()? as u128,
+        };
+        let mut extra = BTreeMap::new();
+        for (k, val) in j.as_obj()? {
+            if !CORE_KEYS.contains(&k.as_str()) {
+                extra.insert(k.clone(), val.clone());
+            }
+        }
+        Some(Event {
+            kind,
+            job_id: j.get("job_id").as_str()?.to_string(),
+            campaign: j.get("campaign").as_str()?.to_string(),
+            host: j.get("host").as_str()?.to_string(),
+            worker: j.get("worker").as_str()?.to_string(),
+            epoch: j.get("epoch").as_u64()?,
+            t_unix_ns,
+            seq: j.get("seq").as_u64()?,
+            extra,
+        })
+    }
+}
+
+/// The result of reading an event log: every recoverable event in file
+/// order, plus how many complete-but-unreadable lines were skipped
+/// under the compatibility rule. A trailing line without its newline
+/// (a writer crashed or is still mid-append) is ignored silently — it
+/// is an in-flight write, not a malformed record.
+#[derive(Debug, Clone, Default)]
+pub struct EventScan {
+    pub events: Vec<Event>,
+    pub skipped: usize,
+}
+
+/// Parse event-log text: one event per `\n`-terminated line. The
+/// partial-line tolerance that makes single-write `O_APPEND` logging
+/// crash-safe lives here — everything after the last newline is
+/// ignored, and any complete line that fails to parse is counted in
+/// [`EventScan::skipped`] instead of aborting the scan.
+pub fn parse_events_text(text: &str) -> EventScan {
+    let mut scan = EventScan::default();
+    let complete = match text.rfind('\n') {
+        Some(i) => &text[..i + 1],
+        None => "",
+    };
+    for line in complete.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Json::parse(line).ok().and_then(|j| Event::from_json(&j)) {
+            Some(ev) => scan.events.push(ev),
+            None => scan.skipped += 1,
+        }
+    }
+    scan
+}
+
+/// Read every per-host event log under `<spool>/events/`, in file-name
+/// order (deterministic across runs). A spool without an events
+/// directory — pre-observability, or run with `--no-events` — scans as
+/// empty; an unreadable file is skipped.
+pub fn read_events(spool: &Path) -> EventScan {
+    let mut scan = EventScan::default();
+    let Ok(rd) = std::fs::read_dir(spool.join("events")) else {
+        return scan;
+    };
+    let mut files: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+        .collect();
+    files.sort();
+    for file in files {
+        if let Ok(text) = std::fs::read_to_string(&file) {
+            let s = parse_events_text(&text);
+            scan.events.extend(s.events);
+            scan.skipped += s.skipped;
+        }
+    }
+    scan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(kind: EventKind, seq: u64) -> Event {
+        Event {
+            kind,
+            job_id: "job-1".into(),
+            campaign: "camp".into(),
+            host: "hostA".into(),
+            worker: "hostA#7-0".into(),
+            epoch: 2,
+            t_unix_ns: 1_700_000_000_123_456_789,
+            seq,
+            extra: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for &k in ALL_EVENT_KINDS {
+            assert_eq!(EventKind::by_name(k.as_str()), Some(k));
+        }
+        assert_eq!(EventKind::by_name("job_teleported"), None);
+    }
+
+    #[test]
+    fn event_roundtrip_preserves_nanosecond_timestamps() {
+        // 1.7e18 ns is beyond f64-exact integers (2^53 ≈ 9e15): the
+        // string form must survive a JSON round trip bit-for-bit
+        let mut ev = sample(EventKind::ServeFinished, 41);
+        ev.extra.insert("outcome".into(), Json::Str("ok".into()));
+        let line = ev.to_line();
+        assert!(line.ends_with('\n'));
+        assert!(line.contains("\"1700000000123456789\""), "{line}");
+        let back = Event::from_json(&Json::parse(line.trim()).unwrap()).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn compatibility_rule_skips_unknown_and_newer() {
+        // unknown kind: skipped
+        let mut j = sample(EventKind::Claimed, 0).to_json();
+        j.set("kind", "job_teleported");
+        assert_eq!(Event::from_json(&j), None);
+        // newer schema version: skipped
+        let mut j = sample(EventKind::Claimed, 0).to_json();
+        j.set("v", EVENT_SCHEMA_VERSION + 1);
+        assert_eq!(Event::from_json(&j), None);
+        // unknown *fields* from a same-version writer: preserved
+        let mut j = sample(EventKind::Claimed, 0).to_json();
+        j.set("future_field", 7u64);
+        let ev = Event::from_json(&j).unwrap();
+        assert_eq!(ev.extra.get("future_field"), Some(&Json::Num(7.0)));
+    }
+
+    #[test]
+    fn parse_tolerates_truncated_final_line_and_garbage() {
+        let a = sample(EventKind::Submitted, 0);
+        let b = sample(EventKind::Claimed, 1);
+        let c = sample(EventKind::Published, 2);
+        let mut text = a.to_line();
+        text.push_str("{ this is not json }\n");
+        text.push_str(&b.to_line());
+        // c's write was cut mid-line by a crash: no trailing newline
+        let cut = c.to_line();
+        text.push_str(&cut[..cut.len() / 2]);
+        let scan = parse_events_text(&text);
+        assert_eq!(scan.events, vec![a, b]);
+        assert_eq!(scan.skipped, 1, "only the complete garbage line counts");
+        // an empty or newline-free buffer scans as empty
+        assert!(parse_events_text("").events.is_empty());
+        assert!(parse_events_text("{\"v\":1").events.is_empty());
+        assert_eq!(parse_events_text("{\"v\":1").skipped, 0);
+    }
+
+    #[test]
+    fn read_events_scans_all_hosts_and_missing_dir_is_empty() {
+        let dir = std::env::temp_dir().join(format!("elaps_obs_events_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(read_events(&dir).events.is_empty());
+        std::fs::create_dir_all(dir.join("events")).unwrap();
+        let a = sample(EventKind::Submitted, 0);
+        let mut b = sample(EventKind::Claimed, 1);
+        b.host = "hostB".into();
+        std::fs::write(dir.join("events").join("hostA.jsonl"), a.to_line()).unwrap();
+        std::fs::write(dir.join("events").join("hostB.jsonl"), b.to_line()).unwrap();
+        std::fs::write(dir.join("events").join("notes.txt"), "ignored").unwrap();
+        let scan = read_events(&dir);
+        assert_eq!(scan.events, vec![a, b], "file-name order");
+        assert_eq!(scan.skipped, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

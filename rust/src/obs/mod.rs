@@ -1,0 +1,22 @@
+//! Observability: structured job-lifecycle events and campaign
+//! analysis.
+//!
+//! ELAPS reports "can be analyzed both numerically and visually"
+//! (PAPER.md) — this module extends that promise from single
+//! experiments to whole multi-host campaigns. [`events`] defines the
+//! versioned JSON event schema and the crash-tolerant reader,
+//! [`emit`] the never-failing per-host JSONL appender the spooler and
+//! engine are instrumented with, and [`analyze`] the `elaps analyze`
+//! verb that merges events, stamps and reports into latency
+//! percentiles, per-host throughput, cache hit rates, the
+//! exactly-once audit and straggler detection.
+
+pub mod analyze;
+pub mod emit;
+pub mod events;
+
+pub use analyze::{analyze, Analysis};
+pub use emit::{current_job, enter_job, Emitter, JobContext};
+pub use events::{
+    parse_events_text, read_events, Event, EventKind, EventScan, EVENT_SCHEMA_VERSION,
+};

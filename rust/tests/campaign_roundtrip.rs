@@ -89,7 +89,15 @@ fn elaps_bin() -> &'static str {
 fn elaps_cmd(args: &[&str]) -> Command {
     let mut cmd = Command::new(elaps_bin());
     cmd.args(args);
-    for var in ["ELAPS_JOBS", "ELAPS_CACHE", "ELAPS_WARM", "ELAPS_SEED", "ELAPS_TRUSTED_ONLY", "ELAPS_HOST"] {
+    for var in [
+        "ELAPS_JOBS",
+        "ELAPS_CACHE",
+        "ELAPS_WARM",
+        "ELAPS_SEED",
+        "ELAPS_TRUSTED_ONLY",
+        "ELAPS_HOST",
+        "ELAPS_EVENTS",
+    ] {
         cmd.env_remove(var);
     }
     cmd

@@ -1,0 +1,329 @@
+//! Observability acceptance suite: the structured job-lifecycle event
+//! log and the `elaps analyze` campaign analysis layer, end to end.
+//! Invariants:
+//!
+//! * **zero result perturbation** — a seeded two-host campaign drain
+//!   produces byte-identical done reports with events on and with
+//!   `--no-events`; the log is an observer, never a participant;
+//! * **exactly-once audit** — `analyze` reconstructs every job's
+//!   lifecycle from the per-host logs: one `published` event per done
+//!   job, campaign-consistent counts, finite ordered percentiles
+//!   (p50 ≤ p90 ≤ p99) for queue-wait / service / publish;
+//! * **fence visibility** — a kill-injected worker (claim, lose the
+//!   lease, publish late) shows up as a `fenced` event on its host
+//!   without breaking the audit: the reclaimer's publish is the one
+//!   that counts;
+//! * **CLI surface** — `elaps analyze --json` and `elaps spool status
+//!   --json` emit parseable, NaN-free JSON through the real binary.
+//!
+//! Like `campaign_roundtrip.rs`, timing margins are generous and waits
+//! poll real state, so the suite stays flake-free under
+//! `--test-threads=1` with `ELAPS_LEASE_TTL=1s` in the tier-2 CI leg.
+
+use elaps::coordinator::campaign;
+use elaps::coordinator::{io, Experiment, PublishOutcome, Spooler};
+use elaps::engine::{set_default_config, EngineConfig};
+use elaps::figures::call;
+use elaps::obs::analyze;
+use elaps::obs::events::{read_events, EventKind};
+use elaps::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+/// Seeded modeled timings: every report is a pure function of its
+/// experiment, so the events-on vs events-off comparison is a
+/// byte-equality check. CLI workers get the same config via `--seed 7`.
+fn det_config() {
+    set_default_config(EngineConfig::default().with_seed(7));
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("elaps_observe_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Equal-width sizes keep queue order (lexicographic by job file name)
+/// aligned with submission order.
+fn small_exp(n: i64) -> Experiment {
+    let ns = n.to_string();
+    let mut exp = Experiment {
+        name: format!("obs{n}"),
+        library: "rustblocked".into(),
+        machine: "localhost".into(),
+        nreps: 2,
+        ..Default::default()
+    };
+    exp.calls = vec![call(
+        "dgemm",
+        &["N", "N", &ns, &ns, &ns, "1.0", "$A", &ns, "$B", &ns, "0.0", "$C", &ns],
+    )
+    .unwrap()];
+    exp
+}
+
+fn elaps_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_elaps")
+}
+
+/// A CLI invocation scrubbed of the engine/spool environment the test
+/// process may have inherited, so subprocesses see exactly the flags
+/// we pass (plus `ELAPS_HOST` where a test sets one).
+fn elaps_cmd(args: &[&str]) -> Command {
+    let mut cmd = Command::new(elaps_bin());
+    cmd.args(args);
+    for var in [
+        "ELAPS_JOBS",
+        "ELAPS_CACHE",
+        "ELAPS_WARM",
+        "ELAPS_SEED",
+        "ELAPS_TRUSTED_ONLY",
+        "ELAPS_HOST",
+        "ELAPS_EVENTS",
+    ] {
+        cmd.env_remove(var);
+    }
+    cmd
+}
+
+// ------------------------------------- differential: events-on == off
+
+/// Drain one campaign over two pinned simulated hosts, alternating
+/// jobs between them in submission order. Returns the job ids.
+fn drain_two_hosts(dir: &Path, events: bool, exps: &[Experiment]) -> Vec<String> {
+    let client = Spooler::new(dir).unwrap().with_events(events);
+    let ids = campaign::submit_experiments(&client, Some("camp-obs"), exps).unwrap();
+    let a = Spooler::new(dir)
+        .unwrap()
+        .with_events(events)
+        .with_host("obsA")
+        .with_worker("obsA#w0");
+    let b = Spooler::new(dir)
+        .unwrap()
+        .with_events(events)
+        .with_host("obsB")
+        .with_worker("obsB#w0");
+    for (i, id) in ids.iter().enumerate() {
+        let sp = if i % 2 == 0 { &a } else { &b };
+        let served = sp.serve_one().unwrap();
+        assert_eq!(served.as_deref(), Some(id.as_str()), "serve order for job {i}");
+    }
+    ids
+}
+
+#[test]
+fn two_host_campaign_reports_are_byte_identical_with_and_without_events() {
+    det_config();
+    let base = tmpdir("diff");
+    std::fs::create_dir_all(&base).unwrap();
+    let exps: Vec<Experiment> = (0..4).map(|i| small_exp(10 + 2 * i)).collect();
+
+    let dir_on = base.join("on");
+    let dir_off = base.join("off");
+    let ids_on = drain_two_hosts(&dir_on, true, &exps);
+    let ids_off = drain_two_hosts(&dir_off, false, &exps);
+
+    // the observer never perturbs the observed: identical raw report
+    // bytes per submission slot (hosts, workers and epochs are pinned)
+    for (on, off) in ids_on.iter().zip(&ids_off) {
+        let on_bytes = std::fs::read(dir_on.join("done").join(format!("{on}.report.json"))).unwrap();
+        let off_bytes =
+            std::fs::read(dir_off.join("done").join(format!("{off}.report.json"))).unwrap();
+        assert_eq!(on_bytes, off_bytes, "report bytes differ for {on} vs {off}");
+    }
+    // --no-events leaves no event log at all
+    assert!(read_events(&dir_off).events.is_empty());
+
+    // events-on: full lifecycle reconstructed, exactly once per job
+    let scan = read_events(&dir_on);
+    assert_eq!(scan.skipped, 0);
+    let a = analyze(&dir_on, Some("camp-obs")).unwrap();
+    assert!(a.audit.ok(), "audit violations: {:?}", a.audit.violations);
+    assert_eq!(a.audit.done, 4);
+    assert_eq!(a.audit.published_once, 4);
+    for kind in ["submitted", "claimed", "serve_started", "serve_finished", "published"] {
+        assert_eq!(a.counts.get(kind), Some(&4), "count of '{kind}' events");
+    }
+    assert_eq!(a.counts.get("fenced"), None);
+    for (label, l) in [("queue_wait", &a.queue_wait), ("service", &a.service), ("publish", &a.publish)]
+    {
+        assert_eq!(l.n, 4, "{label} sample count");
+        assert!(l.p50.is_finite() && l.p90.is_finite() && l.p99.is_finite(), "{label}: {l:?}");
+        assert!(l.p50 <= l.p90 && l.p90 <= l.p99, "{label} percentiles out of order: {l:?}");
+        assert!(l.p50 >= 0.0, "{label}: negative latency");
+    }
+    assert_eq!(a.hosts.get("obsA").map(|h| (h.published, h.fenced)), Some((2, 0)));
+    assert_eq!(a.hosts.get("obsB").map(|h| (h.published, h.fenced)), Some((2, 0)));
+    // seeded modeled run without a cache: every executed point is a
+    // cache_skip in the "seeded" class, attributed via the job context
+    let seeded = a.cache.get("seeded").unwrap();
+    assert_eq!((seeded.hits, seeded.misses), (0, 0));
+    assert_eq!(seeded.skips, 4, "{seeded:?}");
+
+    // JSON stays parseable (NaN-free) and agrees with the struct
+    let text = a.to_json().to_string_pretty();
+    assert!(!text.contains("NaN"), "{text}");
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("audit").get("ok").as_bool(), Some(true));
+    assert_eq!(j.get("audit").get("done").as_u64(), Some(4));
+    assert_eq!(j.get("events").get("by_kind").get("published").as_u64(), Some(4));
+    assert!(a.render().contains("PASS"));
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ----------------------------------------- fence visibility under kill
+
+#[test]
+fn killed_worker_surfaces_as_fenced_publish_without_breaking_audit() {
+    det_config();
+    let dir = tmpdir("fence");
+    let zombie = Spooler::new(&dir)
+        .unwrap()
+        .with_events(true)
+        .with_host("obsZ")
+        .with_worker("obsZ#w0")
+        .with_ttl(Duration::from_millis(50));
+    let id = zombie.submit(&small_exp(8)).unwrap();
+
+    // the "kill": claim without heartbeating, then stall past the TTL
+    let claim = zombie.claim_next().unwrap().unwrap();
+    let healthy = Spooler::new(&dir)
+        .unwrap()
+        .with_events(true)
+        .with_host("obsH")
+        .with_worker("obsH#w0");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        if healthy.reclaim_expired().unwrap() == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "zombie lease never expired");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(healthy.serve_one().unwrap().as_deref(), Some(id.as_str()));
+
+    // the zombie wakes up and tries to publish its stale epoch
+    let outcome = zombie.serve_claim(&claim, false).unwrap();
+    assert!(matches!(outcome, PublishOutcome::Fenced(_)), "{outcome:?}");
+
+    // the log tells the story: one real publish (obsH), one fence (obsZ)
+    let scan = read_events(&dir);
+    let published: Vec<_> = scan
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Published && e.job_id == id)
+        .collect();
+    assert_eq!(published.len(), 1);
+    assert_eq!(published[0].host, "obsH");
+    let fenced: Vec<_> = scan
+        .events
+        .iter()
+        .filter(|e| e.kind == EventKind::Fenced && e.job_id == id)
+        .collect();
+    assert_eq!(fenced.len(), 1);
+    assert_eq!(fenced[0].host, "obsZ");
+    assert!(fenced[0].extra.get("reason").is_some(), "{:?}", fenced[0]);
+
+    // ...and analyze still passes the audit: fenced alongside one
+    // publish is the lease protocol working, not a violation
+    let a = analyze(&dir, None).unwrap();
+    assert!(a.audit.ok(), "{:?}", a.audit.violations);
+    assert_eq!(a.audit.done, 1);
+    assert_eq!(a.audit.published_once, 1);
+    assert_eq!(a.counts.get("fenced"), Some(&1));
+    assert_eq!(a.hosts.get("obsZ").map(|h| (h.published, h.fenced)), Some((0, 1)));
+    assert_eq!(a.hosts.get("obsH").map(|h| (h.published, h.fenced)), Some((1, 0)));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// --------------------------------------------------- CLI end to end
+
+#[test]
+fn cli_analyze_json_and_spool_status_json_report_the_drained_campaign() {
+    det_config();
+    let dir = tmpdir("cli");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spool_dir = dir.join("spool");
+    let spool_s = spool_dir.to_str().unwrap().to_string();
+
+    // submit three experiments by path under one campaign tag
+    let exps: Vec<Experiment> = (0..3).map(|i| small_exp(10 + 2 * i)).collect();
+    let mut paths: Vec<String> = Vec::new();
+    for (i, e) in exps.iter().enumerate() {
+        let p = dir.join(format!("exp{i}.json"));
+        std::fs::write(&p, io::experiment_to_json(e).to_string_pretty()).unwrap();
+        paths.push(p.to_str().unwrap().to_string());
+    }
+    let mut args: Vec<&str> = vec!["submit"];
+    args.extend(paths.iter().map(|s| s.as_str()));
+    args.extend_from_slice(&["--campaign", "camp-cli", "--spool", &spool_s]);
+    let out = elaps_cmd(&args).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // two worker daemons on simulated hosts drain the queue
+    let spawn_worker = |host: &str| {
+        let mut cmd =
+            elaps_cmd(&["worker", "--spool", &spool_s, "--once", "--workers", "2", "--seed", "7"]);
+        cmd.env("ELAPS_HOST", host);
+        cmd.spawn().unwrap()
+    };
+    let mut wa = spawn_worker("cliA");
+    let mut wb = spawn_worker("cliB");
+    assert!(wa.wait().unwrap().success());
+    assert!(wb.wait().unwrap().success());
+
+    // analyze --json: exactly-once audit, finite ordered percentiles
+    let out = elaps_cmd(&["analyze", "--campaign", "camp-cli", "--spool", &spool_s, "--json"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(!stdout.contains("NaN"), "{stdout}");
+    let j = Json::parse(&stdout).unwrap();
+    assert_eq!(j.get("audit").get("ok").as_bool(), Some(true), "{stdout}");
+    assert_eq!(j.get("audit").get("done").as_u64(), Some(3));
+    assert_eq!(j.get("audit").get("published_once").as_u64(), Some(3));
+    assert_eq!(j.get("events").get("by_kind").get("submitted").as_u64(), Some(3));
+    assert_eq!(j.get("events").get("by_kind").get("published").as_u64(), Some(3));
+    for metric in ["queue_wait_s", "service_s", "publish_s"] {
+        let lat = j.get("latency").get(metric);
+        assert_eq!(lat.get("n").as_u64(), Some(3), "{metric}");
+        let p50 = lat.get("p50").as_f64().unwrap();
+        let p90 = lat.get("p90").as_f64().unwrap();
+        let p99 = lat.get("p99").as_f64().unwrap();
+        assert!(p50.is_finite() && p50 <= p90 && p90 <= p99, "{metric}: {p50} {p90} {p99}");
+    }
+
+    // the human table agrees on the audit
+    let out =
+        elaps_cmd(&["analyze", "--campaign", "camp-cli", "--spool", &spool_s]).output().unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("PASS"));
+
+    // spool status --json mirrors the drained spool
+    let out = elaps_cmd(&["spool", "status", "--spool", &spool_s, "--json"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = Json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(j.get("queued").as_u64(), Some(0));
+    assert_eq!(j.get("done").as_u64(), Some(3));
+    assert_eq!(j.get("done_errors").as_u64(), Some(0));
+
+    // a --no-events rerun of the same flow writes no event log, and
+    // analyze degrades gracefully instead of failing
+    let spool2 = dir.join("spool2");
+    let spool2_s = spool2.to_str().unwrap().to_string();
+    let out = elaps_cmd(&["submit", &paths[0], "--spool", &spool2_s, "--no-events"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = elaps_cmd(&["worker", "--spool", &spool2_s, "--once", "--seed", "7", "--no-events"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(read_events(&spool2).events.is_empty());
+    let out = elaps_cmd(&["analyze", "--spool", &spool2_s]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("no events recorded"));
+    let _ = std::fs::remove_dir_all(&dir);
+}

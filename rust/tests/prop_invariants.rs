@@ -445,6 +445,126 @@ fn prop_stamp_roundtrip_and_malformed_stamps_skipped() {
 }
 
 #[test]
+fn prop_event_log_reader_recovers_complete_events_exactly_once() {
+    // the observability contract: over any line-atomic interleaving of
+    // per-writer event streams — with garbage lines mixed in and the
+    // final line torn mid-write — the reader recovers every complete
+    // event exactly once, in seq order per (host, worker), and counts
+    // exactly the garbage as skipped (a torn final line is silently
+    // ignored: the writer may still be appending it)
+    use elaps::obs::events::{parse_events_text, Event, ALL_EVENT_KINDS};
+    use std::collections::BTreeMap;
+    forall(
+        0xF1,
+        60,
+        |r, size| {
+            let writers = r.range_usize(1, 4);
+            let per: Vec<usize> =
+                (0..writers).map(|_| r.range_usize(1, 3 + size.min(8))).collect();
+            // a random order-preserving merge of the writers' lines,
+            // with garbage lines (None) mixed in at random positions
+            let mut remaining = per.clone();
+            let mut garbage = r.range_usize(0, 3);
+            let mut ops: Vec<Option<usize>> = Vec::new();
+            while remaining.iter().any(|&n| n > 0) || garbage > 0 {
+                let total: usize = remaining.iter().sum::<usize>() + garbage;
+                let mut pick = r.below(total);
+                let mut chosen = None;
+                for (w, n) in remaining.iter_mut().enumerate() {
+                    if pick < *n {
+                        *n -= 1;
+                        chosen = Some(w);
+                        break;
+                    }
+                    pick -= *n;
+                }
+                if chosen.is_none() {
+                    garbage -= 1;
+                }
+                ops.push(chosen);
+            }
+            let kinds: Vec<Vec<usize>> = per
+                .iter()
+                .map(|&n| (0..n).map(|_| r.below(ALL_EVENT_KINDS.len())).collect())
+                .collect();
+            (per, ops, kinds, r.chance(0.7))
+        },
+        |(per, ops, kinds, truncate_tail)| {
+            let writers = per.len();
+            // writer w's i-th event; hosts are shared across writers
+            // (w % 2) so ordering is genuinely per (host, worker)
+            let make = |w: usize, i: usize| Event {
+                kind: ALL_EVENT_KINDS[kinds[w][i]],
+                job_id: format!("job-{w}-{i}"),
+                campaign: if i % 2 == 0 { "camp".to_string() } else { String::new() },
+                host: format!("h{}", w % 2),
+                worker: format!("w{w}"),
+                epoch: i as u64,
+                t_unix_ns: 1_700_000_000_000_000_000 + (w as u128) * 1_000 + i as u128,
+                seq: (i * 3 + w) as u64,
+                extra: BTreeMap::new(),
+            };
+            let mut text = String::new();
+            let mut counters = vec![0usize; writers];
+            let mut written: Vec<Vec<Event>> = vec![Vec::new(); writers];
+            let mut garbage_lines = 0usize;
+            for op in ops {
+                match op {
+                    Some(w) => {
+                        let i = counters[*w];
+                        counters[*w] += 1;
+                        let ev = make(*w, i);
+                        text.push_str(&ev.to_line());
+                        written[*w].push(ev);
+                    }
+                    None => {
+                        garbage_lines += 1;
+                        text.push_str("]]{ not a json event\n");
+                    }
+                }
+            }
+            if *truncate_tail {
+                // a writer torn mid-append: a valid event minus its
+                // newline and final byte (events are pure ASCII)
+                let mut tail = make(0, 0);
+                tail.seq = 999_999;
+                let line = tail.to_line();
+                text.push_str(&line[..line.len() - 2]);
+            }
+            let scan = parse_events_text(&text);
+            if scan.skipped != garbage_lines {
+                return Err(format!("skipped {}, want {garbage_lines}", scan.skipped));
+            }
+            let total: usize = written.iter().map(Vec::len).sum();
+            if scan.events.len() != total {
+                return Err(format!("recovered {}, want {total}", scan.events.len()));
+            }
+            let mut got: BTreeMap<(String, String), Vec<Event>> = BTreeMap::new();
+            for ev in scan.events {
+                got.entry((ev.host.clone(), ev.worker.clone())).or_default().push(ev);
+            }
+            for (w, expect) in written.iter().enumerate() {
+                let key = (format!("h{}", w % 2), format!("w{w}"));
+                let empty = Vec::new();
+                let g = got.get(&key).unwrap_or(&empty);
+                if g != expect {
+                    return Err(format!("writer {w}: events lost, duplicated or reordered"));
+                }
+                for pair in g.windows(2) {
+                    if pair[0].seq >= pair[1].seq {
+                        return Err(format!(
+                            "writer {w}: seq not strictly increasing ({} then {})",
+                            pair[0].seq, pair[1].seq
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_eigenvalues_match_across_drivers() {
     use elaps::linalg::lapack::{dsyev, dsyevd, dsyevr, dsyevx};
     forall(
