@@ -1,13 +1,17 @@
-//! §Perf micro-benchmarks for the L3 hot paths (EXPERIMENTS.md §Perf):
-//! gemm variants vs problem size (roofline tracking), sampler dispatch
-//! overhead, and the xla-backend call overhead.
+//! §Perf micro-benchmarks (EXPERIMENTS.md §Perf), on the shared
+//! timing/JSON harness of `elaps::obs::bench` — the same code behind
+//! `elaps bench`. Running this binary (`cargo bench`) prints the gemm
+//! roofline table and then measures every framework hot-path suite
+//! (cache probe/hash, spooler claims + scans, event log, sampler inner
+//! loop), snapshotting machine-readable `BENCH_<suite>.json` files
+//! into the working directory for commit-over-commit comparison.
 //!
-//! ELAPS_BENCH_FULL=1 for larger sizes.
+//! ELAPS_BENCH_FULL=1 for larger gemm sizes; ELAPS_BENCH_QUICK=1 for
+//! ~10x smaller hot-path workloads (CI smoke).
 
 use elaps::linalg::blas3::{dgemm_blocked, dgemm_naive, dgemm_recursive};
 use elaps::linalg::{Matrix, Trans};
 use elaps::perfmodel::MachineModel;
-use elaps::sampler::Sampler;
 use elaps::util::rng::Xoshiro256;
 use std::time::Instant;
 
@@ -33,6 +37,7 @@ fn time_gemm(f: GemmFn, n: usize, reps: usize) -> f64 {
 
 fn main() {
     let full = std::env::var("ELAPS_BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let quick = std::env::var("ELAPS_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
     let sizes: &[usize] = if full { &[128, 256, 512, 1000] } else { &[128, 256, 512] };
     let machine = MachineModel::localhost();
     println!("=== perf_hotpath: gemm variants (best of 3) ===");
@@ -58,70 +63,13 @@ fn main() {
         machine.peak_flops_core() / 1e9
     );
 
-    // sampler dispatch overhead: tiny kernel, many calls
-    println!("\n=== sampler dispatch overhead ===");
-    let lib = elaps::libraries::by_name("rustblocked").unwrap();
-    let mut sampler = Sampler::new(lib, machine.clone());
-    sampler
-        .run_script("dmalloc A 16\ndmalloc B 16\ndmalloc C 16\ndgerand A\ndgerand B")
-        .unwrap();
-    let ncalls = 2000;
-    let mut script = String::new();
-    for _ in 0..ncalls {
-        script.push_str("dgemm N N 4 4 4 1.0 A 4 B 4 0.0 C 4\n");
-    }
-    script.push_str("go\n");
-    let t0 = Instant::now();
-    let recs = sampler.run_script(&script).unwrap();
-    let total = t0.elapsed().as_secs_f64();
-    let kernel_time: f64 = recs.iter().map(|r| r.seconds).sum();
-    println!(
-        "{} calls in {:.3}s: {:.2} µs/call dispatch+parse overhead (kernel time {:.3}s)",
-        recs.len(),
-        total,
-        (total - kernel_time) / ncalls as f64 * 1e6,
-        kernel_time
-    );
-
-    // xla backend round-trip overhead (if artifacts are built)
-    let dir = elaps::runtime::default_artifact_dir();
-    if dir.join("manifest.json").exists() {
-        println!("\n=== xla (PJRT) backend round-trip ===");
-        let reg = elaps::runtime::register_xla_library(&dir).unwrap();
-        let n = 256;
-        let meta = reg.find("dgemm", n, n, n, "jnp").unwrap().clone();
-        let mut rng = Xoshiro256::seeded(2);
-        let a = Matrix::random(n, n, &mut rng);
-        let b = Matrix::random(n, n, &mut rng);
-        let mut c = vec![0.0; n * n];
-        reg.run_gemm(&meta, &a.data, &b.data, &mut c, n, n, n, 1.0, 0.0).unwrap(); // compile+warm
-        let mut best = f64::INFINITY;
-        for _ in 0..5 {
-            let t0 = Instant::now();
-            reg.run_gemm(&meta, &a.data, &b.data, &mut c, n, n, n, 1.0, 0.0).unwrap();
-            best = best.min(t0.elapsed().as_secs_f64());
-        }
-        let flops = 2.0 * (n as f64).powi(3);
-        println!(
-            "dgemm {n}³ via PJRT: {:.4}s best → {:.2} GF/s (incl. literal copies)",
-            best,
-            flops / best / 1e9
-        );
-        // pallas-kernel artifact
-        if let Some(pal) = reg.find("dgemm", n, n, n, "pallas") {
-            if pal.key.impl_name == "pallas" {
-                let pal = pal.clone();
-                reg.run_gemm(&pal, &a.data, &b.data, &mut c, n, n, n, 1.0, 0.0).unwrap();
-                let t0 = Instant::now();
-                reg.run_gemm(&pal, &a.data, &b.data, &mut c, n, n, n, 1.0, 0.0).unwrap();
-                let t = t0.elapsed().as_secs_f64();
-                println!(
-                    "dgemm {n}³ via interpreted-Pallas artifact: {:.3}s → {:.3} GF/s \
-                     (interpret=True is a correctness path, not a perf proxy)",
-                    t,
-                    flops / t / 1e9
-                );
-            }
+    println!("\n=== framework hot paths (shared `elaps bench` harness) ===");
+    let out_dir = std::env::current_dir().expect("working directory");
+    match elaps::obs::run_bench(&out_dir, quick, &[]) {
+        Ok(written) => println!("{} BENCH snapshot(s) written", written.len()),
+        Err(e) => {
+            eprintln!("hot-path suites failed: {e:#}");
+            std::process::exit(1);
         }
     }
 }

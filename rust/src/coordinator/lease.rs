@@ -159,6 +159,57 @@ pub fn remove(spool: &Path, job_id: &str) -> Result<()> {
     }
 }
 
+/// A held exclusive lock on one job's lease (`<spool>/leases/
+/// <job_id>.lock`). Dropping the guard releases the lock — `flock(2)`
+/// locks die with the last descriptor on their open file description.
+#[derive(Debug)]
+pub struct JobLock {
+    _file: Option<std::fs::File>,
+}
+
+/// Serialize lease writes for one job across threads *and* processes
+/// with an advisory `flock(2)` on a sidecar lock file — not on the
+/// lease itself, whose inode is replaced by every atomic rename, which
+/// would leave later lockers holding a lock on a dead file. Every
+/// read-verify-write of a lease (claim acquisition, heartbeat renewal)
+/// runs under this lock, so the on-disk epoch can never regress: a
+/// stale renewal is forced to re-read *after* any concurrent
+/// acquisition's epoch bump and fences itself out. The `.lock` sidecar
+/// is invisible to every lease scan (they all filter on the `.json`
+/// extension).
+#[cfg(unix)]
+pub(crate) fn lock_job(spool: &Path, job_id: &str) -> Result<JobLock> {
+    use std::os::unix::io::AsRawFd;
+    extern "C" {
+        fn flock(fd: i32, operation: i32) -> i32;
+    }
+    const LOCK_EX: i32 = 2;
+    const EINTR: i32 = 4;
+    let path = leases_dir(spool).join(format!("{job_id}.lock"));
+    let file = std::fs::OpenOptions::new()
+        .create(true)
+        .truncate(false)
+        .write(true)
+        .open(&path)
+        .with_context(|| format!("opening lease lock {}", path.display()))?;
+    loop {
+        if unsafe { flock(file.as_raw_fd(), LOCK_EX) } == 0 {
+            return Ok(JobLock { _file: Some(file) });
+        }
+        let err = std::io::Error::last_os_error();
+        if err.raw_os_error() != Some(EINTR) {
+            return Err(err).with_context(|| format!("locking lease of job {job_id}"));
+        }
+    }
+}
+
+/// Non-unix fallback: no advisory locking — concurrent lease writers
+/// keep the historical read-modify-write race.
+#[cfg(not(unix))]
+pub(crate) fn lock_job(_spool: &Path, _job_id: &str) -> Result<JobLock> {
+    Ok(JobLock { _file: None })
+}
+
 /// Count the live (unexpired) leases currently held by `host` — the
 /// observable quantity the `--max-leases` backpressure caps. Corrupt
 /// lease files count as missing, exactly as [`read`] treats them.
@@ -476,6 +527,31 @@ mod tests {
         assert!(Json::parse(&j.to_string_pretty()).is_ok());
         // a directory that is not a spool is an error
         assert!(spool_status(&dir.join("nope")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn job_lock_serializes_concurrent_lease_writers() {
+        let dir = tmpdir("lock");
+        // four threads each run a read-bump-write of the same job's
+        // lease under the lock; without serialization two writers
+        // could read the same epoch and lose an update
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let _guard = lock_job(&dir, "j").unwrap();
+                    let epoch = read(&dir, "j").map(|l| l.epoch).unwrap_or(0) + 1;
+                    // widen the race window: a lost update would show
+                    // up as a duplicate epoch
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    write(&dir, &lease("j", epoch, now_unix() + 60.0)).unwrap();
+                });
+            }
+        });
+        assert_eq!(read(&dir, "j").unwrap().epoch, 4, "no lost lease update");
+        // the sidecar lock file is invisible to the lease scans
+        assert!(leases_dir(&dir).join("j.lock").exists());
+        assert_eq!(live_leases_for_host(&dir, "hostA").unwrap(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

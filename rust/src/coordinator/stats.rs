@@ -96,13 +96,26 @@ pub fn percentile(values: &[f64], q: f64) -> f64 {
     }
     let mut v = values.to_vec();
     v.sort_by(f64::total_cmp);
-    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    percentile_of_sorted(&v, q)
+}
+
+/// The rank-interpolation core of [`percentile`], for callers that read
+/// several percentiles from one sample: sort once (`f64::total_cmp`,
+/// after screening NaNs), then call this per rank — instead of paying
+/// [`percentile`]'s clone + sort every time. An empty sample yields
+/// NaN; NaN *elements* are the caller's job to screen, since a sort
+/// order over them is already caller-defined.
+pub fn percentile_of_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
     if lo == hi {
-        v[lo]
+        sorted[lo]
     } else {
-        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+        sorted[lo] + (pos - lo as f64) * (sorted[hi] - sorted[lo])
     }
 }
 

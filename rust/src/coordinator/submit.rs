@@ -16,6 +16,7 @@ use super::report::Report;
 use crate::obs::emit::Emitter;
 use crate::obs::events::EventKind;
 use anyhow::{anyhow, bail, Result};
+use std::collections::VecDeque;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -124,6 +125,34 @@ pub struct Spooler {
     /// Mirror fence diagnostics to stderr (`elaps worker --verbose`);
     /// the structured `fenced` event is emitted either way.
     verbose: bool,
+    /// Claim candidates from the last `<spool>/queue` scan, oldest
+    /// first, shared by all clones of this handle so a worker pool
+    /// drains one batch per scan instead of re-scanning (and
+    /// re-sorting) the whole queue on every claim
+    /// ([`Spooler::try_claim`]). Entries may be stale — each claim
+    /// re-checks the job under its per-job lease lock.
+    claim_batch: Arc<Mutex<VecDeque<String>>>,
+    /// Amortized cross-process backpressure accounting: the live-lease
+    /// count at the last full `<spool>/leases/` scan plus the leases
+    /// this handle (and its clones) wrote since. While the estimate is
+    /// safely under the cap the per-claim scan is skipped; a claim is
+    /// only ever *refused* after a fresh scan
+    /// ([`Spooler::disk_leases_at_cap`]).
+    lease_estimate: Arc<Mutex<LeaseEstimate>>,
+}
+
+/// Cross-process live-lease accounting between full scans of
+/// `<spool>/leases/` (see [`Spooler::disk_leases_at_cap`]).
+#[derive(Debug, Default)]
+struct LeaseEstimate {
+    /// Whether `scanned` reflects a completed scan of this spool.
+    valid: bool,
+    /// Live leases held by this host at the last scan.
+    scanned: usize,
+    /// Leases written by this handle and its clones since that scan
+    /// (releases are not tracked — they only make the estimate an
+    /// over-count, which triggers a fresh scan, never a wrong refusal).
+    created_since: usize,
 }
 
 impl Spooler {
@@ -155,6 +184,8 @@ impl Spooler {
             slots_held: Arc::new(AtomicUsize::new(0)),
             events,
             verbose: false,
+            claim_batch: Arc::new(Mutex::new(VecDeque::new())),
+            lease_estimate: Arc::new(Mutex::new(LeaseEstimate::default())),
         })
     }
 
@@ -258,17 +289,45 @@ impl Spooler {
         Ok(job_id)
     }
 
-    /// Atomically claim the oldest queued job: rename it into
-    /// `<spool>/running/` and acquire its lease (epoch = previous
-    /// epoch + 1, expiry = now + TTL). Losing the rename race to a
-    /// concurrent worker is not an error — the claimer just moves on
-    /// to the next queue entry. With a `max_leases` cap, a claim is
-    /// refused ([`ClaimOutcome::Backpressured`]) while this host
-    /// already holds that many live leases: the slot is taken *before*
-    /// the lease is written and released only after the claim's lease
-    /// is gone, so an observer scanning `<spool>/leases/` never counts
-    /// more than `max_leases` live leases for this host.
+    /// Atomically claim the oldest-scanned queued job: acquire its
+    /// lease (epoch = previous epoch + 1, expiry = now + TTL) and
+    /// rename it into `<spool>/running/`, both under the job's lease
+    /// lock ([`lease::lock_job`]). The lease is written *before* the
+    /// rename so a claimer that crashes between the two steps leaves a
+    /// queued job whose lease simply expires — never a lease-less
+    /// running job recoverable only by the slow legacy mtime heuristic.
+    /// Losing a job to a concurrent worker is not an error — the
+    /// claimer just moves on to the next candidate.
+    ///
+    /// Claims are batched: one queue scan (read_dir + sort) feeds a
+    /// candidate list shared by all clones of this handle, so a worker
+    /// pool draining an N-job queue scans it O(N / batch) times instead
+    /// of once per claim. Candidates may be stale by claim time; each
+    /// is re-validated under its per-job lock, and `Empty` is only ever
+    /// reported after a fresh scan found nothing claimable.
+    ///
+    /// With a `max_leases` cap, a claim is refused
+    /// ([`ClaimOutcome::Backpressured`]) while this host already holds
+    /// that many live leases: the slot is taken *before* the lease is
+    /// written and released only after the claim's lease is gone, so an
+    /// observer scanning `<spool>/leases/` never counts more than
+    /// `max_leases` live leases for this host.
     pub fn try_claim(&self) -> Result<ClaimOutcome> {
+        self.try_claim_impl(Option::<fn(&str)>::None)
+    }
+
+    /// [`Spooler::try_claim`] with a fault-injection hook fired once,
+    /// between the first candidate's lease write and its queue→running
+    /// rename — the window where a crashing claimer historically
+    /// stranded a lease-less running job. Tests use it to simulate that
+    /// crash (by panicking or stealing the queue file) and to observe
+    /// the on-disk ordering.
+    #[doc(hidden)]
+    pub fn try_claim_with_pause(&self, pause: impl FnOnce(&str)) -> Result<ClaimOutcome> {
+        self.try_claim_impl(Some(pause))
+    }
+
+    fn try_claim_impl<F: FnOnce(&str)>(&self, mut pause: Option<F>) -> Result<ClaimOutcome> {
         // Backpressured only when there is actually something to be
         // backpressured *from*: a capped host with an empty queue is
         // Empty, so --once pools terminate instead of spinning on a
@@ -305,56 +364,147 @@ impl Spooler {
                 // then the on-disk count: leases of this host written
                 // by other processes (or left behind by a crashed
                 // claim) also occupy capacity until they expire
-                if lease::live_leases_for_host(&self.dir, &self.host)? >= cap {
+                if self.disk_leases_at_cap(cap)? {
                     return at_capacity(self); // guard drops
                 }
                 Some(guard)
             }
         };
-        let queue = self.dir.join("queue");
-        let mut entries: Vec<_> = std::fs::read_dir(&queue)?
+        // Drain the shared candidate batch; rescan the queue only when
+        // it runs dry (at most once per call — a second dry batch means
+        // a racing clone drained the refill, and its claims cover the
+        // queue).
+        let mut refilled = false;
+        loop {
+            let candidate = self.claim_batch.lock().unwrap().pop_front();
+            let Some(job_id) = candidate else {
+                if refilled || !self.refill_claim_batch()? {
+                    return Ok(ClaimOutcome::Empty);
+                }
+                refilled = true;
+                continue;
+            };
+            if let Some(claimed) = self.claim_candidate(&job_id, &mut pause)? {
+                return Ok(ClaimOutcome::Claimed(ClaimedJob { _slot: slot, ..claimed }));
+            }
+        }
+    }
+
+    /// Rescan `<spool>/queue` into the shared candidate batch (sorted
+    /// by file name, i.e. submission order within the scan). Returns
+    /// whether any candidate is available afterwards. The batch lock is
+    /// held across the scan so concurrent dry claimers serialize here
+    /// instead of doubling the batch; a batch found already refilled by
+    /// the time the lock is acquired is taken as-is.
+    fn refill_claim_batch(&self) -> Result<bool> {
+        let mut batch = self.claim_batch.lock().unwrap();
+        if !batch.is_empty() {
+            return Ok(true);
+        }
+        let mut names: Vec<std::ffi::OsString> = std::fs::read_dir(self.dir.join("queue"))?
             .filter_map(|e| e.ok())
             .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+            .map(|e| e.file_name())
             .collect();
-        entries.sort_by_key(|e| e.file_name());
-        for entry in entries {
-            let job_id = path_job_id(&entry.path());
-            let running = self.dir.join("running").join(format!("{job_id}.json"));
-            match std::fs::rename(entry.path(), &running) {
-                Ok(()) => {}
-                // another worker claimed it between read_dir and rename
-                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
-                Err(e) => return Err(e.into()),
-            }
-            let text = match std::fs::read_to_string(&running) {
-                Ok(text) => text,
-                // a concurrent recover_stale requeued it already
-                Err(e) if e.kind() == std::io::ErrorKind::NotFound => continue,
-                Err(e) => return Err(e.into()),
-            };
-            // Acquire the lease. The epoch chains across the job's
-            // whole claim history (the previous lease file is left in
-            // place by expiry reclaims precisely so this read sees it),
-            // which is what fences a previous holder's late publish.
-            let epoch = lease::read(&self.dir, &job_id).map(|l| l.epoch).unwrap_or(0) + 1;
-            let l = Lease {
-                job_id: job_id.clone(),
-                worker_id: self.worker_id.clone(),
-                host: self.host.clone(),
-                epoch,
-                expires_unix: lease::now_unix() + self.ttl.as_secs_f64(),
-            };
-            lease::write(&self.dir, &l)?;
-            self.events.emit(EventKind::Claimed, &job_id, epoch, &[]);
-            return Ok(ClaimOutcome::Claimed(ClaimedJob {
-                job_id,
-                lease: l,
-                running,
-                text,
-                _slot: slot,
-            }));
+        names.sort();
+        batch.extend(names.iter().map(|n| path_job_id(Path::new(n))));
+        Ok(!batch.is_empty())
+    }
+
+    /// Try to claim one scanned candidate; `None` (not an error) when
+    /// the job is no longer claimable — another worker took it since
+    /// the scan. All on-disk steps run under the job's lease lock, and
+    /// the lease is written before the queue→running rename: any job
+    /// visible in `running/` already has a lease, and a lease written
+    /// here is withdrawn if the rename is lost to a claimer outside the
+    /// lock (an older binary sharing the spool).
+    fn claim_candidate<F: FnOnce(&str)>(
+        &self,
+        job_id: &str,
+        pause: &mut Option<F>,
+    ) -> Result<Option<ClaimedJob>> {
+        let queued = self.dir.join("queue").join(format!("{job_id}.json"));
+        let running = self.dir.join("running").join(format!("{job_id}.json"));
+        let lock = lease::lock_job(&self.dir, job_id)?;
+        // Under the lock the job must still be queued: the lease
+        // written below names this worker, and writing it over the
+        // lease of a job some other worker is already running would
+        // fence that worker for nothing.
+        if !queued.exists() {
+            return Ok(None);
         }
-        Ok(ClaimOutcome::Empty)
+        // Acquire the lease. The epoch chains across the job's whole
+        // claim history (the previous lease file is left in place by
+        // expiry reclaims precisely so this read sees it), which is
+        // what fences a previous holder's late publish.
+        let epoch = lease::read(&self.dir, job_id).map(|l| l.epoch).unwrap_or(0) + 1;
+        let l = Lease {
+            job_id: job_id.to_string(),
+            worker_id: self.worker_id.clone(),
+            host: self.host.clone(),
+            epoch,
+            expires_unix: lease::now_unix() + self.ttl.as_secs_f64(),
+        };
+        lease::write(&self.dir, &l)?;
+        self.lease_estimate.lock().unwrap().created_since += 1;
+        if let Some(pause) = pause.take() {
+            pause(job_id);
+        }
+        match std::fs::rename(&queued, &running) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                // Lost the rename to a claimer not holding the job
+                // lock: withdraw the lease written above, but only if
+                // it is still exactly ours — the winner may have
+                // re-written it already.
+                if lease::read(&self.dir, job_id).as_ref() == Some(&l) {
+                    lease::remove(&self.dir, job_id)?;
+                }
+                return Ok(None);
+            }
+            Err(e) => return Err(e.into()),
+        }
+        drop(lock);
+        let text = match std::fs::read_to_string(&running) {
+            Ok(text) => text,
+            // a concurrent recover_stale requeued it already
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        self.events.emit(EventKind::Claimed, job_id, epoch, &[]);
+        Ok(Some(ClaimedJob {
+            job_id: job_id.to_string(),
+            lease: l,
+            running,
+            text,
+            _slot: None,
+        }))
+    }
+
+    /// Cross-process arm of the backpressure check: has this host's
+    /// on-disk live-lease count reached `cap`? The full
+    /// `<spool>/leases/` scan is amortized: between scans the count is
+    /// estimated as `last scan + leases written since` — an upper bound
+    /// until a lease is released, and releases only make it more of an
+    /// over-count — and a claim is only ever *refused* after a fresh
+    /// scan confirms the cap, so a stale estimate can trigger an extra
+    /// scan but never a spurious Backpressured. Leases written by
+    /// *other* processes between scans widen the documented momentary
+    /// cross-process overshoot window; in-daemon enforcement stays
+    /// exact via the slot counter.
+    fn disk_leases_at_cap(&self, cap: usize) -> Result<bool> {
+        {
+            let est = self.lease_estimate.lock().unwrap();
+            if est.valid && est.scanned + est.created_since < cap {
+                return Ok(false);
+            }
+        }
+        let fresh = lease::live_leases_for_host(&self.dir, &self.host)?;
+        let mut est = self.lease_estimate.lock().unwrap();
+        est.valid = true;
+        est.scanned = fresh;
+        est.created_since = 0;
+        Ok(fresh >= cap)
     }
 
     /// [`Spooler::try_claim`] flattened to an `Option`: `None` covers
@@ -374,6 +524,40 @@ impl Spooler {
     /// at which point the worker should abandon the job: its publish
     /// would be fenced anyway.
     pub fn renew(&self, claim: &ClaimedJob) -> Result<bool> {
+        self.renew_impl(claim, || {})
+    }
+
+    /// [`Spooler::renew`] with a test hook injected into the historical
+    /// race window — after the optimistic check, before the locked
+    /// re-verify — so the regression test can deterministically land an
+    /// expiry + reclaim + re-acquisition exactly where the unserialized
+    /// renew used to write its stale epoch back over the successor's.
+    #[doc(hidden)]
+    pub fn renew_with_pause(&self, claim: &ClaimedJob, pause: impl FnOnce()) -> Result<bool> {
+        self.renew_impl(claim, pause)
+    }
+
+    fn renew_impl(&self, claim: &ClaimedJob, pause: impl FnOnce()) -> Result<bool> {
+        // Optimistic pre-check without the lock: a lease that is
+        // already lost needs nothing serialized.
+        let Some(current) = lease::read(&self.dir, &claim.job_id) else {
+            return Ok(false);
+        };
+        if current.worker_id != claim.lease.worker_id
+            || current.epoch != claim.lease.epoch
+            || current.expired_at(lease::now_unix())
+        {
+            return Ok(false);
+        }
+        pause();
+        // The renewal is a read-modify-write: between the check above
+        // and the write below, an expiry reclaim can hand the job to a
+        // new worker at epoch e+1, and writing the stale epoch e back
+        // would let *both* workers pass the publish fence. So the
+        // decision is re-made under the per-job lease lock against
+        // fresh state — claim acquisitions write under the same lock,
+        // so the on-disk epoch can never regress.
+        let _lock = lease::lock_job(&self.dir, &claim.job_id)?;
         let Some(current) = lease::read(&self.dir, &claim.job_id) else {
             return Ok(false);
         };

@@ -5,7 +5,7 @@
 //! The cache grows without bound while campaigns run; this module adds
 //! the introspection and eviction the ROADMAP called for: entry/byte
 //! counts with provenance classes and an age histogram, an LRU sweep
-//! (by atime where the filesystem keeps one, mtime fallback) that
+//! (by mtime, which served hits bump via `ResultCache::touch`) that
 //! deletes oldest entries until the cache fits a byte budget, and a
 //! full clear.
 //!
@@ -111,7 +111,11 @@ pub struct GcOutcome {
 struct EntryFile {
     path: PathBuf,
     bytes: u64,
-    /// LRU recency: atime where available, mtime fallback.
+    /// LRU recency. Taken from *mtime*, not atime: served hits bump
+    /// mtime explicitly (`ResultCache::touch`), while atime is frozen
+    /// on `noatime` mounts and stale for up to a day on the `relatime`
+    /// default — an atime-ordered sweep on such mounts evicts by write
+    /// age and throws out the hottest entries first.
     recency: SystemTime,
     /// Age reference for the stats histogram.
     mtime: SystemTime,
@@ -138,8 +142,7 @@ fn scan(dir: &Path) -> Result<(Vec<EntryFile>, Vec<PathBuf>)> {
                     continue;
                 }
                 let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
-                let recency = md.accessed().unwrap_or(mtime);
-                entries.push(EntryFile { path, bytes: md.len(), recency, mtime });
+                entries.push(EntryFile { path, bytes: md.len(), recency: mtime, mtime });
             }
             Some("tmp") => tmps.push(path),
             _ => {}
@@ -213,8 +216,9 @@ fn sweep_stale_tmps(tmps: Vec<PathBuf>) -> usize {
 }
 
 /// Shrink the cache below `max_bytes`, deleting least-recently-used
-/// entries first (atime recency, mtime fallback; ties broken by path
-/// for determinism). Also sweeps writer temp files abandoned for more
+/// entries first (mtime recency — see [`EntryFile::recency`]; ties
+/// broken by path for determinism). Also sweeps writer temp files
+/// abandoned for more
 /// than an hour. Entries deleted concurrently by another process count
 /// as freed.
 pub fn gc_max_bytes(dir: &Path, max_bytes: u64) -> Result<GcOutcome> {
@@ -409,6 +413,37 @@ mod tests {
         let out2 = gc_max_bytes(&dir, 150).unwrap();
         assert_eq!(out2.deleted, 0);
         assert_eq!(out2.bytes_after, 100);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Sweep order must come from mtime (the recency that
+    /// `ResultCache::touch` bumps on served hits) and ignore atime
+    /// entirely: on `relatime`/`noatime` mounts atime is stale or
+    /// frozen, and an atime-ordered sweep would evict whatever the
+    /// mount happened to record — here, the *hot* entry. The entries
+    /// are built with deliberately contradictory timestamps so the test
+    /// fails under either atime semantics if atime sneaks back in.
+    #[test]
+    fn gc_recency_comes_from_mtime_not_atime() {
+        let dir = tmpdir("mtime_recency");
+        let now = SystemTime::now();
+        let old = now - Duration::from_secs(5_000);
+        let set = |name: &str, atime: SystemTime, mtime: SystemTime| {
+            let path = dir.join(format!("{name}.json"));
+            std::fs::write(&path, "x".repeat(100)).unwrap();
+            let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+            f.set_times(std::fs::FileTimes::new().set_accessed(atime).set_modified(mtime))
+                .unwrap();
+        };
+        // "hot": served recently (touch bumped mtime) but the scan-time
+        // atime is ancient; "cold": written long ago, atime fresh as a
+        // strictly-atime mount would report after a read-only scan
+        set("hot", old, now);
+        set("cold", now, old);
+        let out = gc_max_bytes(&dir, 150).unwrap();
+        assert_eq!(out.deleted, 1);
+        assert!(!dir.join("cold.json").exists(), "mtime-old entry must go first");
+        assert!(dir.join("hot.json").exists(), "recently served entry must survive");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

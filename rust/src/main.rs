@@ -56,6 +56,7 @@ USAGE:
                [--max-leases N] [--recover SECS|0=off] [--verbose]
   elaps spool status [--spool DIR] [--json]
   elaps analyze [--campaign TAG] [--spool DIR] [--json]
+  elaps bench [SUITE…] [--quick] [--out DIR]
   elaps kernels
   elaps libraries
 
@@ -105,6 +106,11 @@ stats:   min max avg med std
 --verbose      worker: also mirror fenced-publish warnings to stderr
                (the structured `fenced` event is always recorded)
 --json         machine-readable output (analyze, spool status)
+--quick        bench: ~10x smaller workloads (CI smoke); metric names
+               are unchanged, so quick and full BENCH files still diff
+--out DIR      bench: directory for the BENCH_<suite>.json snapshots
+               (default: current directory). Suites: cache spool obs
+               sampler (default: all)
 ";
 
 fn main() {
@@ -141,6 +147,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
             "no-events",
             "verbose",
             "json",
+            "quick",
         ],
     );
     match cmd.as_str() {
@@ -157,6 +164,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "worker" => cmd_worker(&args),
         "spool" => cmd_spool(&args),
         "analyze" => cmd_analyze(&args),
+        "bench" => cmd_bench(&args),
         "kernels" => cmd_kernels(),
         "libraries" => cmd_libraries(),
         "help" | "--help" | "-h" => {
@@ -807,6 +815,18 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     } else {
         print!("{}", analysis.render());
     }
+    Ok(())
+}
+
+/// `elaps bench`: micro-benchmark the framework's own hot paths and
+/// snapshot the numbers to machine-readable `BENCH_<suite>.json` files
+/// (cache probe/hash, spooler claim + scans, event log, sampler inner
+/// loop). `--quick` shrinks workloads ~10x for CI smoke runs.
+fn cmd_bench(args: &Args) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(args.opt_or("out", "."));
+    std::fs::create_dir_all(&out_dir)?;
+    let written = elaps::obs::run_bench(&out_dir, args.flag("quick"), &args.positional)?;
+    println!("{} suite snapshot(s) written", written.len());
     Ok(())
 }
 

@@ -7,7 +7,7 @@
 
 use super::events::{read_events, Event, EventKind};
 use crate::coordinator::campaign;
-use crate::coordinator::stats::percentile;
+use crate::coordinator::stats::percentile_of_sorted;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet};
@@ -28,12 +28,24 @@ pub struct LatencySummary {
 }
 
 impl LatencySummary {
-    fn of(samples: &[f64]) -> LatencySummary {
+    /// Summarize one sample set. Sorts the sample once and reads the
+    /// three ranks from it — not three `stats::percentile` calls, each
+    /// of which would clone and sort the whole sample again (measured
+    /// in the `obs` bench suite as `percentile_three_sorts` vs
+    /// `latency_summary_single_sort`). NaN-poisoned samples yield
+    /// all-NaN percentiles, exactly like `stats::percentile`.
+    pub fn of(samples: &[f64]) -> LatencySummary {
+        if samples.is_empty() || samples.iter().any(|v| v.is_nan()) {
+            let nan = f64::NAN;
+            return LatencySummary { n: samples.len(), p50: nan, p90: nan, p99: nan };
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
         LatencySummary {
             n: samples.len(),
-            p50: percentile(samples, 0.50),
-            p90: percentile(samples, 0.90),
-            p99: percentile(samples, 0.99),
+            p50: percentile_of_sorted(&sorted, 0.50),
+            p90: percentile_of_sorted(&sorted, 0.90),
+            p99: percentile_of_sorted(&sorted, 0.99),
         }
     }
 

@@ -1,0 +1,527 @@
+//! `elaps bench`: machine-readable micro-benchmarks of the framework's
+//! *own* hot paths, sharing one timing/JSON harness with
+//! `benches/perf_hotpath.rs`. The paper's discipline — performance
+//! decisions rest on measured, reproducible numbers — applies to the
+//! coordinator as much as to the kernels it measures, so every run
+//! emits a `BENCH_<suite>.json` snapshot that can be diffed across
+//! commits (see the README's Benchmarks section).
+//!
+//! Suites and the hot paths they cover:
+//! - `cache`: content-fingerprint hashing, envelope read+parse, the
+//!   pre-enqueue probe (hit and miss), entry store.
+//! - `spool`: the per-claim queue scan the batched claim replaced
+//!   (`queue_scan_sorted`, kept as the old-cost reference), the new
+//!   batched claim (solo and under 4-thread contention, with an
+//!   exactly-once check), the locked lease renewal, and the lease /
+//!   stamp directory scans.
+//! - `obs`: event-log append and read, plus the `LatencySummary`
+//!   single-sort vs the triple `stats::percentile` sort it replaced.
+//! - `sampler`: the sampler inner loop on a tiny kernel — per-call
+//!   wall time and dispatch overhead above kernel time.
+//!
+//! Timings use batched inner loops (each sample times `batch`
+//! operations and divides) so nanosecond-scale operations are not
+//! swamped by timer overhead; reported numbers are the p50 and best of
+//! the per-operation samples.
+
+use crate::coordinator::campaign::{self, Stamp, StampOutcome};
+use crate::coordinator::experiment::{Call, CallArg, Experiment};
+use crate::coordinator::lease;
+use crate::coordinator::stats::{percentile, percentile_of_sorted};
+use crate::coordinator::submit::{ClaimOutcome, Spooler};
+use crate::engine::cache::ResultCache;
+use crate::obs::analyze::LatencySummary;
+use crate::obs::emit::Emitter;
+use crate::obs::events::{read_events, EventKind};
+use crate::perfmodel::MachineModel;
+use crate::sampler::Sampler;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::hint::black_box;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// The available suites, in their default execution order.
+pub const ALL_SUITES: &[&str] = &["cache", "spool", "obs", "sampler"];
+
+/// One measured metric, as serialized into `BENCH_<suite>.json`.
+#[derive(Debug, Clone)]
+pub struct MetricRecord {
+    /// Stable metric name — identical between `--quick` and full runs
+    /// so two BENCH files are always diffable by name.
+    pub name: String,
+    /// Total operations timed (samples × batch).
+    pub n: usize,
+    /// Median per-operation nanoseconds.
+    pub p50_ns: f64,
+    /// Fastest per-operation nanoseconds observed.
+    pub best_ns: f64,
+    /// Operations per second at the median (`1e9 / p50_ns`).
+    pub throughput: f64,
+    /// Workload size behind each operation where one exists (queued
+    /// jobs scanned, live leases counted, …); scales with `--quick`,
+    /// which is why it is recorded next to the timing.
+    pub items: Option<usize>,
+}
+
+/// One suite's measurements.
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    pub suite: String,
+    pub metrics: Vec<MetricRecord>,
+}
+
+/// Run the selected suites (all of [`ALL_SUITES`] when `suites` is
+/// empty), write one `BENCH_<suite>.json` per suite into `out_dir`,
+/// and return the written paths. `quick` scales workload sizes down
+/// (~10×) for CI smoke runs; metric *names* are unaffected.
+pub fn run_bench(out_dir: &Path, quick: bool, suites: &[String]) -> Result<Vec<PathBuf>> {
+    for s in suites {
+        if !ALL_SUITES.contains(&s.as_str()) {
+            bail!("unknown bench suite '{s}' (available: {})", ALL_SUITES.join(", "));
+        }
+    }
+    let chosen: Vec<String> = if suites.is_empty() {
+        ALL_SUITES.iter().map(|s| s.to_string()).collect()
+    } else {
+        suites.to_vec()
+    };
+    let mut written = Vec::new();
+    for name in &chosen {
+        println!("== bench suite {name}{} ==", if quick { " (quick)" } else { "" });
+        let suite = match name.as_str() {
+            "cache" => suite_cache(quick)?,
+            "spool" => suite_spool(quick)?,
+            "obs" => suite_obs(quick)?,
+            "sampler" => suite_sampler(quick)?,
+            _ => unreachable!("validated above"),
+        };
+        let path = write_report(out_dir, &suite)?;
+        println!("   -> {}", path.display());
+        written.push(path);
+    }
+    Ok(written)
+}
+
+/// Serialize one suite to `<out_dir>/BENCH_<suite>.json`.
+pub fn write_report(out_dir: &Path, suite: &SuiteResult) -> Result<PathBuf> {
+    let metrics: Vec<Json> = suite
+        .metrics
+        .iter()
+        .map(|m| {
+            let mut j = Json::obj();
+            j.set("name", m.name.as_str())
+                .set("n", m.n)
+                .set("p50_ns", m.p50_ns)
+                .set("best_ns", m.best_ns)
+                .set("throughput", m.throughput);
+            if let Some(items) = m.items {
+                j.set("items", items);
+            }
+            j
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("suite", suite.suite.as_str())
+        .set("host", crate::util::hostid::hostname())
+        .set("git_rev", git_rev().as_str())
+        .set("metrics", Json::Arr(metrics));
+    let path = out_dir.join(format!("BENCH_{}.json", suite.suite));
+    std::fs::write(&path, root.to_string_pretty())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// `git rev-parse --short HEAD` of the working directory, `"unknown"`
+/// outside a git checkout (or without a git binary).
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+// ------------------------------------------------------ timing harness
+
+/// Time `samples` invocations of a loop of `batch` calls to `op`;
+/// returns per-operation nanoseconds, one entry per sample.
+fn sample_ns(samples: usize, batch: usize, mut op: impl FnMut()) -> Vec<f64> {
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            op();
+        }
+        out.push(t0.elapsed().as_secs_f64() * 1e9 / batch as f64);
+    }
+    out
+}
+
+/// Reduce per-operation samples to a [`MetricRecord`].
+fn metric_from(name: &str, per_op_ns: &[f64], n: usize) -> MetricRecord {
+    let mut sorted = per_op_ns.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let p50 = percentile_of_sorted(&sorted, 0.5);
+    MetricRecord {
+        name: name.to_string(),
+        n,
+        p50_ns: p50,
+        best_ns: sorted.first().copied().unwrap_or(f64::NAN),
+        throughput: if p50 > 0.0 { 1e9 / p50 } else { f64::NAN },
+        items: None,
+    }
+}
+
+/// Print one metric's human-readable line (the JSON file carries the
+/// machine-readable truth).
+fn note(m: &MetricRecord) {
+    println!(
+        "   {:<28} p50 {:>12.0} ns   best {:>12.0} ns   {:>14.0} ops/s",
+        m.name, m.p50_ns, m.best_ns, m.throughput
+    );
+}
+
+/// A fresh scratch directory under the system temp dir.
+fn bench_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("elaps_bench_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A minimal single-call dgemm-16 experiment (2 repetitions), the
+/// standard tiny workload behind the cache and spool suites.
+fn dgemm16() -> Experiment {
+    Experiment {
+        name: "bench-dgemm16".into(),
+        nreps: 2,
+        calls: vec![Call::new(
+            "dgemm",
+            vec![
+                CallArg::Flag('N'),
+                CallArg::Flag('N'),
+                CallArg::expr("16"),
+                CallArg::expr("16"),
+                CallArg::expr("16"),
+                CallArg::Scalar(1.0),
+                CallArg::Data("A".into()),
+                CallArg::expr("16"),
+                CallArg::Data("B".into()),
+                CallArg::expr("16"),
+                CallArg::Scalar(0.0),
+                CallArg::Data("C".into()),
+                CallArg::expr("16"),
+            ],
+        )
+        .expect("static dgemm call")],
+        ..Default::default()
+    }
+}
+
+// ------------------------------------------------------------- suites
+
+/// Cache hot paths: key hashing, envelope read+parse, probe, store.
+fn suite_cache(quick: bool) -> Result<SuiteResult> {
+    let dir = bench_dir("cache");
+    std::fs::create_dir_all(&dir)?;
+    let cache = ResultCache::open(&dir)?;
+    let exp = dgemm16();
+    let point = exp.unroll()?.remove(0);
+    let lib = crate::libraries::by_name(&exp.library)
+        .ok_or_else(|| anyhow!("unknown library {}", exp.library))?;
+    let mut sampler = Sampler::new(lib, MachineModel::localhost()).deterministic(7);
+    let stored = crate::engine::execute_point_on(&mut sampler, &exp, &point)?;
+    let expected = stored.records.len();
+    let key = ResultCache::fingerprint_with(&exp.library, &exp.machine, exp.nreps, &point, Some(7));
+    cache.store(&key, &stored)?;
+    if cache.lookup(&key, expected).is_none() {
+        bail!("bench cache entry failed to round-trip");
+    }
+
+    let samples = if quick { 50 } else { 300 };
+    let mut metrics = Vec::new();
+
+    let s = sample_ns(samples, 10, || {
+        black_box(ResultCache::fingerprint_with(
+            &exp.library,
+            &exp.machine,
+            exp.nreps,
+            &point,
+            Some(7),
+        ));
+    });
+    let m = metric_from("fingerprint_dgemm16", &s, samples * 10);
+    note(&m);
+    metrics.push(m);
+
+    let s = sample_ns(samples, 10, || {
+        black_box(cache.lookup_entry(&key).is_some());
+    });
+    let m = metric_from("envelope_read_parse", &s, samples * 10);
+    note(&m);
+    metrics.push(m);
+
+    let s = sample_ns(samples, 10, || {
+        black_box(cache.lookup(&key, expected).is_some());
+    });
+    let m = metric_from("probe_hit", &s, samples * 10);
+    note(&m);
+    metrics.push(m);
+
+    let s = sample_ns(samples, 10, || {
+        black_box(cache.lookup("bench-absent-key", expected).is_some());
+    });
+    let m = metric_from("probe_miss", &s, samples * 10);
+    note(&m);
+    metrics.push(m);
+
+    let s = sample_ns(samples, 1, || {
+        cache.store(&key, &stored).expect("bench cache store");
+    });
+    let m = metric_from("cache_store", &s, samples);
+    note(&m);
+    metrics.push(m);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(SuiteResult { suite: "cache".into(), metrics })
+}
+
+/// Spooler hot paths: the old per-claim queue scan vs the batched
+/// claim, claims under contention (with an exactly-once check), the
+/// locked lease renewal, and the lease / stamp directory scans.
+fn suite_spool(quick: bool) -> Result<SuiteResult> {
+    let dir = bench_dir("spool");
+    let spool = Spooler::new(&dir)?.with_ttl(Duration::from_secs(600)).with_events(false);
+    let exp = dgemm16();
+    let jobs = if quick { 64 } else { 512 };
+    for _ in 0..jobs {
+        spool.submit(&exp)?;
+    }
+    let mut metrics = Vec::new();
+
+    // The cost the pre-batching claim paid on *every* try_claim: a full
+    // read_dir of the queue plus a sort — kept as the old-cost
+    // reference the batched numbers are compared against.
+    let scan_samples = if quick { 10 } else { 30 };
+    let queue = dir.join("queue");
+    let s = sample_ns(scan_samples, 1, || {
+        let mut entries: Vec<_> = std::fs::read_dir(&queue)
+            .expect("queue dir")
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "json"))
+            .collect();
+        entries.sort_by_key(|e| e.file_name());
+        black_box(entries.len());
+    });
+    let mut m = metric_from("queue_scan_sorted", &s, scan_samples);
+    m.items = Some(jobs);
+    note(&m);
+    metrics.push(m);
+
+    // The real per-claim cost of the batched try_claim, draining the
+    // same queue (includes the per-job lock, lease write and rename;
+    // the scan is amortized over the whole batch).
+    let mut claims = Vec::with_capacity(jobs);
+    let s = sample_ns(jobs, 1, || match spool.try_claim().expect("bench claim") {
+        ClaimOutcome::Claimed(c) => claims.push(c),
+        other => panic!("queue drained early: {other:?}"),
+    });
+    let mut m = metric_from("claim_batched", &s, jobs);
+    m.items = Some(jobs);
+    note(&m);
+    metrics.push(m);
+
+    // The fence-safe (per-job flock + re-verify) heartbeat renewal.
+    let claim = claims.last().expect("at least one claim");
+    if !spool.renew(claim)? {
+        bail!("bench renewal lost its lease");
+    }
+    let renew_samples = if quick { 40 } else { 200 };
+    let s = sample_ns(renew_samples, 1, || {
+        black_box(spool.renew(claim).expect("bench renew"));
+    });
+    let m = metric_from("renew_locked", &s, renew_samples);
+    note(&m);
+    metrics.push(m);
+
+    // Contended claims: four claimers sharing one candidate batch.
+    // Doubles as a stress check — every job must be claimed exactly
+    // once across the threads.
+    for _ in 0..jobs {
+        spool.submit(&exp)?;
+    }
+    let nthreads = 4;
+    let t0 = Instant::now();
+    let total: usize = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..nthreads)
+            .map(|i| {
+                let w = spool.clone().with_worker(format!("bench#{i}"));
+                s.spawn(move || {
+                    let mut mine = Vec::new();
+                    loop {
+                        match w.try_claim().expect("bench contended claim") {
+                            ClaimOutcome::Claimed(c) => mine.push(c),
+                            ClaimOutcome::Empty => break,
+                            ClaimOutcome::Backpressured => unreachable!("no cap set"),
+                        }
+                    }
+                    mine.len()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("claimer thread")).sum()
+    });
+    let elapsed_ns = t0.elapsed().as_secs_f64() * 1e9;
+    if total != jobs {
+        bail!("contended claims broke exactly-once: {total} claims for {jobs} jobs");
+    }
+    let per = elapsed_ns / jobs as f64;
+    let m = MetricRecord {
+        name: "claim_contended_4x".into(),
+        n: jobs,
+        p50_ns: per,
+        best_ns: per,
+        throughput: if per > 0.0 { 1e9 / per } else { f64::NAN },
+        items: Some(jobs),
+    };
+    note(&m);
+    metrics.push(m);
+
+    // Live-lease scan (the backpressure check's slow path): both claim
+    // rounds above left their leases in place, all unexpired.
+    let leases_live = 2 * jobs;
+    let s = sample_ns(scan_samples, 1, || {
+        black_box(lease::live_leases_for_host(&dir, spool.host()).expect("lease scan"));
+    });
+    let mut m = metric_from("lease_scan_live", &s, scan_samples);
+    m.items = Some(leases_live);
+    note(&m);
+    metrics.push(m);
+
+    // Stamp-sidecar scan (`spool status` / campaign wait).
+    for i in 0..jobs {
+        campaign::write_stamp(
+            &dir,
+            &Stamp {
+                job_id: format!("bench-stamp-{i}"),
+                host: spool.host().to_string(),
+                worker: "bench#0".to_string(),
+                epoch: 1,
+                outcome: StampOutcome::Ok,
+            },
+        )?;
+    }
+    let s = sample_ns(scan_samples, 1, || {
+        black_box(campaign::read_stamps(&dir).stamps.len());
+    });
+    let mut m = metric_from("stamp_scan", &s, scan_samples);
+    m.items = Some(jobs);
+    note(&m);
+    metrics.push(m);
+
+    drop(claims);
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(SuiteResult { suite: "spool".into(), metrics })
+}
+
+/// Observability hot paths: event append + read, and the
+/// LatencySummary single-sort vs the triple-sort it replaced.
+fn suite_obs(quick: bool) -> Result<SuiteResult> {
+    let dir = bench_dir("obs");
+    std::fs::create_dir_all(&dir)?;
+    let emitter = Emitter::for_spool(&dir, "benchhost", "bench#0").with_enabled(true);
+    let mut metrics = Vec::new();
+
+    let append_samples = if quick { 200 } else { 2000 };
+    let s = sample_ns(append_samples, 1, || {
+        emitter.emit(EventKind::Heartbeat, "bench-job", 1, &[]);
+    });
+    let m = metric_from("event_append", &s, append_samples);
+    note(&m);
+    metrics.push(m);
+
+    let n_events = read_events(&dir).events.len();
+    if n_events == 0 {
+        bail!("bench event log is empty — emitter disabled?");
+    }
+    let read_samples = if quick { 10 } else { 30 };
+    let s: Vec<f64> = sample_ns(read_samples, 1, || {
+        black_box(read_events(&dir).events.len());
+    })
+    .iter()
+    .map(|ns| ns / n_events as f64)
+    .collect();
+    let mut m = metric_from("event_read_per_event", &s, read_samples * n_events);
+    m.items = Some(n_events);
+    note(&m);
+    metrics.push(m);
+
+    // LatencySummary::of used to call stats::percentile three times —
+    // three clones + three sorts of the same sample. The pair below
+    // tracks the replaced cost next to the single-sort rewrite.
+    let sample: Vec<f64> =
+        (0..10_000u64).map(|i| (i.wrapping_mul(2_654_435_761) % 100_000) as f64 / 7.0).collect();
+    let psamples = if quick { 10 } else { 30 };
+    let s = sample_ns(psamples, 1, || {
+        black_box(percentile(&sample, 0.50));
+        black_box(percentile(&sample, 0.90));
+        black_box(percentile(&sample, 0.99));
+    });
+    let mut m = metric_from("percentile_three_sorts", &s, psamples);
+    m.items = Some(sample.len());
+    note(&m);
+    metrics.push(m);
+
+    let s = sample_ns(psamples, 1, || {
+        black_box(LatencySummary::of(&sample));
+    });
+    let mut m = metric_from("latency_summary_single_sort", &s, psamples);
+    m.items = Some(sample.len());
+    note(&m);
+    metrics.push(m);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(SuiteResult { suite: "obs".into(), metrics })
+}
+
+/// Sampler inner loop on a tiny kernel: per-call wall time, and the
+/// dispatch/bookkeeping overhead above the kernel's own time.
+fn suite_sampler(quick: bool) -> Result<SuiteResult> {
+    let lib =
+        crate::libraries::by_name("rustblocked").ok_or_else(|| anyhow!("rustblocked missing"))?;
+    let mut sampler = Sampler::new(lib, MachineModel::localhost());
+    sampler.run_script("dmalloc A 16\ndmalloc B 16\ndmalloc C 16\ndgerand A\ndgerand B")?;
+    let ncalls = if quick { 200 } else { 2000 };
+    let mut script = String::new();
+    for _ in 0..ncalls {
+        script.push_str("dgemm N N 4 4 4 1.0 A 4 B 4 0.0 C 4\n");
+    }
+    script.push_str("go\n");
+    let t0 = Instant::now();
+    let recs = sampler.run_script(&script)?;
+    let total_ns = t0.elapsed().as_secs_f64() * 1e9;
+    if recs.is_empty() {
+        bail!("sampler produced no records");
+    }
+    let kernel_ns: f64 = recs.iter().map(|r| r.seconds * 1e9).sum();
+    let per_call = total_ns / recs.len() as f64;
+    let overhead = (total_ns - kernel_ns).max(0.0) / recs.len() as f64;
+    let mut metrics = Vec::new();
+    for (name, ns) in [("tiny_dgemm_call", per_call), ("dispatch_overhead", overhead)] {
+        let m = MetricRecord {
+            name: name.into(),
+            n: recs.len(),
+            p50_ns: ns,
+            best_ns: ns,
+            throughput: if ns > 0.0 { 1e9 / ns } else { f64::NAN },
+            items: Some(ncalls),
+        };
+        note(&m);
+        metrics.push(m);
+    }
+    Ok(SuiteResult { suite: "sampler".into(), metrics })
+}

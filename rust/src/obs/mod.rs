@@ -12,10 +12,12 @@
 //! exactly-once audit and straggler detection.
 
 pub mod analyze;
+pub mod bench;
 pub mod emit;
 pub mod events;
 
 pub use analyze::{analyze, Analysis};
+pub use bench::{run_bench, MetricRecord, SuiteResult};
 pub use emit::{current_job, enter_job, Emitter, JobContext};
 pub use events::{
     parse_events_text, read_events, Event, EventKind, EventScan, EVENT_SCHEMA_VERSION,

@@ -29,6 +29,7 @@ use elaps::util::json::Json;
 use std::path::{Path, PathBuf};
 use std::process::Command;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Pin the process-default engine config to serial, fixed-seed
@@ -399,6 +400,82 @@ fn backpressured_pool_never_exceeds_cap_under_contention() {
         served_a,
         "stamp provenance must match the pools' own counts"
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shared_claim_batch_drains_exactly_once_under_cap_and_contention() {
+    det_config();
+    let dir = tmpdir("batchstorm");
+    let ttl = Duration::from_secs(30);
+    let total = 16usize;
+    let submitter = Spooler::new(&dir).unwrap();
+    let ids: Vec<String> = (0..total)
+        .map(|i| submitter.submit(&small_exp(8 + 2 * (i as i64 % 5))).unwrap())
+        .collect();
+    // six claimer threads share ONE capped spooler handle: the shared
+    // state under test is its claim batch (one queue scan feeding many
+    // claims) and its lease-cap slot counter + amortized disk estimate
+    let base =
+        Spooler::new(&dir).unwrap().with_host("batchA").with_ttl(ttl).with_max_leases(3);
+    let clones: Vec<Spooler> =
+        (0..6).map(|i| base.clone().with_worker(format!("batchA#{i}"))).collect();
+    let stop = AtomicBool::new(false);
+    let served: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let max_seen = std::thread::scope(|s| {
+        // the observer: the backpressure contract is that the host
+        // never holds more than 3 live leases at ANY observation point,
+        // batched claims or not
+        let observer = s.spawn(|| {
+            let mut worst = 0;
+            while !stop.load(Ordering::Relaxed) {
+                worst = worst.max(lease::live_leases_for_host(&dir, "batchA").unwrap());
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            worst
+        });
+        let handles: Vec<_> = clones
+            .iter()
+            .map(|sp| {
+                let served = &served;
+                s.spawn(move || loop {
+                    match sp.try_claim().unwrap() {
+                        ClaimOutcome::Claimed(claim) => {
+                            assert!(sp.serve_claim(&claim, false).unwrap().published());
+                            served.lock().unwrap().push(claim.job_id.clone());
+                        }
+                        ClaimOutcome::Backpressured => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        ClaimOutcome::Empty => break,
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        observer.join().unwrap()
+    });
+    // exactly once: every job served by exactly one claimer
+    let mut got = served.into_inner().unwrap();
+    got.sort();
+    let mut want = ids.clone();
+    want.sort();
+    assert_eq!(got, want, "each job must be claimed and served exactly once");
+    assert_eq!(count_json(&dir, "done"), total);
+    assert_eq!(count_json(&dir, "queue"), 0);
+    assert_eq!(count_json(&dir, "running"), 0);
+    assert_eq!(count_json(&dir, "leases"), 0);
+    assert!(max_seen <= 3, "host batchA held {max_seen} live leases");
+    // differential: byte-identical to serial runs of the same exps
+    for (i, id) in ids.iter().enumerate() {
+        let exp = small_exp(8 + 2 * (i as i64 % 5));
+        let report = submitter.fetch(id).unwrap().unwrap();
+        let reference = normalize(&elaps::coordinator::run_local(&exp).unwrap());
+        assert_eq!(normalize(&report), reference, "{id}");
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 

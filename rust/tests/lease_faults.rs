@@ -21,7 +21,7 @@
 //! tier-2 CI job.
 
 use elaps::coordinator::lease::{self, FenceReason, PublishOutcome};
-use elaps::coordinator::{io, Experiment, Spooler};
+use elaps::coordinator::{io, ClaimOutcome, Experiment, Spooler};
 use elaps::engine::{set_default_config, EngineConfig};
 use elaps::figures::call;
 use std::path::{Path, PathBuf};
@@ -215,6 +215,161 @@ fn heartbeat_keeps_a_paused_worker_alive_across_ttls() {
         assert_eq!(a.reclaim_expired().unwrap(), 0, "a renewed lease is never reclaimed");
     }
     assert!(a.serve_claim(&claim, false).unwrap().published());
+    assert_eq!(normalize(&a.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_renew_is_serialized_against_reacquisition() {
+    det_config();
+    let dir = tmpdir("renewrace");
+    let ttl = Duration::from_millis(1500);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let b = Spooler::new(&dir).unwrap().with_host("hostB").with_ttl(ttl);
+    let exp = small_exp(16);
+    let id = a.submit(&exp).unwrap();
+    let claim = a.claim_next().unwrap().unwrap();
+    assert_eq!(claim.lease.epoch, 1);
+    // Inject an expiry + reclaim + re-acquisition into the renewal's
+    // historical read-modify-write window. The unserialized renew
+    // checked the lease once and then wrote its extension back
+    // unconditionally: it would return true here and put an epoch-1
+    // lease back over the successor's epoch-2 one, letting BOTH
+    // workers pass the publish fence. The locked renew re-verifies
+    // under the per-job lease lock and must refuse instead.
+    let mut succ = None;
+    let renewed = a
+        .renew_with_pause(&claim, || {
+            wait_past_expiry(claim.lease.expires_unix);
+            assert_eq!(b.reclaim_expired().unwrap(), 1);
+            let c = b.claim_next().unwrap().unwrap();
+            assert_eq!(c.job_id, id);
+            assert_eq!(c.lease.epoch, 2, "re-acquisition bumps the epoch");
+            succ = Some(c);
+        })
+        .unwrap();
+    assert!(!renewed, "a renew that lost its lease must refuse to extend it");
+    let succ = succ.expect("the injected re-acquisition must have claimed");
+    // the successor's lease is untouched: same epoch, same worker
+    let on_disk = lease::read(&dir, &id).unwrap();
+    assert_eq!(on_disk.epoch, 2, "a stale renew must never regress the epoch");
+    assert_eq!(on_disk.worker_id, succ.lease.worker_id);
+    // the loser's publish is fenced...
+    let outcome = a.publish(&claim, r#"{"error":"STALE RENEW PAYLOAD"}"#).unwrap();
+    assert_eq!(
+        outcome,
+        PublishOutcome::Fenced(FenceReason::Superseded {
+            current_epoch: 2,
+            current_worker: succ.lease.worker_id.clone(),
+        })
+    );
+    assert_eq!(count_json(&dir, "done"), 0, "fenced publish writes nothing");
+    // ...and the successor's wins: exactly one report, byte-identical
+    assert!(b.serve_claim(&succ, false).unwrap().published());
+    assert_eq!(count_json(&dir, "done"), 1);
+    let raw = std::fs::read_to_string(dir.join("done").join(format!("{id}.report.json")))
+        .unwrap();
+    assert!(!raw.contains("STALE RENEW"), "loser payload must never land: {raw}");
+    assert_eq!(normalize(&b.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn claim_writes_lease_before_rename() {
+    det_config();
+    let dir = tmpdir("claimorder");
+    let ttl = Duration::from_millis(1500);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let exp = small_exp(12);
+    let id = a.submit(&exp).unwrap();
+    let fired = AtomicBool::new(false);
+    let outcome = a
+        .try_claim_with_pause(|job_id| {
+            fired.store(true, Ordering::Relaxed);
+            // inside the injection window the lease is on disk...
+            let l = lease::read(&dir, job_id).expect("the lease must precede the rename");
+            assert_eq!(l.epoch, 1);
+            assert_eq!(l.worker_id, a.worker_id());
+            // ...while the job file has not moved yet: a crash right
+            // here leaves a queued job with an expiring lease, never a
+            // lease-less running job for the slow mtime heuristic
+            assert!(dir.join("queue").join(format!("{job_id}.json")).exists());
+            assert!(!dir.join("running").join(format!("{job_id}.json")).exists());
+        })
+        .unwrap();
+    assert!(fired.load(Ordering::Relaxed), "the injection hook must fire");
+    let claim = match outcome {
+        ClaimOutcome::Claimed(c) => c,
+        other => panic!("expected a claim, got {other:?}"),
+    };
+    assert_eq!(claim.job_id, id);
+    assert!(a.serve_claim(&claim, false).unwrap().published());
+    assert_eq!(normalize(&a.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn claimer_crash_between_lease_and_rename_leaves_job_recoverable() {
+    det_config();
+    let dir = tmpdir("claimcrash");
+    let ttl = Duration::from_millis(1500);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let b = Spooler::new(&dir).unwrap().with_host("hostB").with_ttl(ttl);
+    let exp = small_exp(16);
+    let id = a.submit(&exp).unwrap();
+    // host A "crashes" in the historical stranding window: after its
+    // lease hit the disk, before the queue→running rename
+    let crash = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = a.try_claim_with_pause(|_| panic!("injected claimer crash"));
+    }));
+    assert!(crash.is_err(), "the injected crash must propagate");
+    // the residue: the job is still queued, under A's unexpired
+    // epoch-1 lease — nothing was stranded in running/
+    assert!(dir.join("queue").join(format!("{id}.json")).exists());
+    assert_eq!(count_json(&dir, "running"), 0);
+    let residue = lease::read(&dir, &id).unwrap();
+    assert_eq!(residue.epoch, 1);
+    assert!(!residue.expired_at(lease::now_unix()));
+    // host B claims immediately — the crashed claimer's advisory lock
+    // died with it, and the residue lease only feeds the epoch chain;
+    // no expiry wait, no recover_stale pass needed
+    let succ = b.claim_next().unwrap().unwrap();
+    assert_eq!(succ.job_id, id);
+    assert_eq!(succ.lease.epoch, 2, "must chain past the residue lease");
+    assert!(b.serve_claim(&succ, false).unwrap().published());
+    assert_eq!(count_json(&dir, "done"), 1);
+    assert_eq!(count_json(&dir, "leases"), 0, "lease released on publish");
+    assert_eq!(normalize(&b.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rename_loser_withdraws_its_own_lease() {
+    det_config();
+    let dir = tmpdir("renamelost");
+    let ttl = Duration::from_millis(1500);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let exp = small_exp(12);
+    let id = a.submit(&exp).unwrap();
+    let queued = dir.join("queue").join(format!("{id}.json"));
+    let running = dir.join("running").join(format!("{id}.json"));
+    // a claimer outside the lock protocol (an older binary sharing the
+    // spool) steals the queue file inside the injection window; our
+    // claimer loses the rename and must withdraw the lease it wrote
+    let outcome = a
+        .try_claim_with_pause(|job_id| {
+            assert_eq!(job_id, id);
+            std::fs::rename(&queued, &running).unwrap();
+        })
+        .unwrap();
+    assert!(matches!(outcome, ClaimOutcome::Empty), "{outcome:?}");
+    assert_eq!(count_json(&dir, "leases"), 0, "the loser's lease must be withdrawn");
+    assert!(running.exists(), "the thief owns the claim now");
+    // the stolen claim is a legacy (lease-less) one; the mtime
+    // heuristic recovers it and a normal serve finishes the job
+    assert_eq!(a.recover_stale(Duration::ZERO).unwrap(), 1);
+    assert_eq!(a.serve_one().unwrap().as_deref(), Some(id.as_str()));
+    assert_eq!(count_json(&dir, "done"), 1);
     assert_eq!(normalize(&a.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
     let _ = std::fs::remove_dir_all(&dir);
 }
