@@ -306,53 +306,37 @@ fn campaign_path(spool: &Path, tag: &str) -> PathBuf {
     spool.join("campaigns").join(format!("{tag}.json"))
 }
 
-/// A held exclusive lock on a campaign tag's record
+/// A held lock on a campaign tag's record
 /// (`<spool>/campaigns/<tag>.lock`). Dropping the guard releases the
 /// lock — `flock(2)` locks die with the last descriptor on their open
 /// file description.
 #[derive(Debug)]
 pub struct TagLock {
-    _file: Option<std::fs::File>,
+    _lock: super::lease::JobLock,
 }
 
-/// Serialize concurrent [`record_jobs`] callers on one tag with an
+/// Take the exclusive per-tag lock: serializes [`record_jobs`] merges,
+/// whole-campaign submissions, and ledger retries on one tag with an
 /// advisory `flock(2)` on a sidecar lock file — not on the record
 /// itself, whose inode is replaced by every atomic rename, which would
 /// leave later lockers holding a lock on a dead file. Each caller
 /// opens its own descriptor, so the lock serializes threads within one
 /// process as well as distinct processes on a shared (local)
 /// filesystem.
-#[cfg(unix)]
-fn lock_tag(spool: &Path, tag: &str) -> Result<TagLock> {
-    use std::os::unix::io::AsRawFd;
-    extern "C" {
-        fn flock(fd: i32, operation: i32) -> i32;
-    }
-    const LOCK_EX: i32 = 2;
-    const EINTR: i32 = 4;
+pub(crate) fn lock_tag(spool: &Path, tag: &str) -> Result<TagLock> {
+    std::fs::create_dir_all(spool.join("campaigns"))?;
     let path = spool.join("campaigns").join(format!("{tag}.lock"));
-    let file = std::fs::OpenOptions::new()
-        .create(true)
-        .truncate(false)
-        .write(true)
-        .open(&path)
-        .with_context(|| format!("opening campaign lock {}", path.display()))?;
-    loop {
-        if unsafe { flock(file.as_raw_fd(), LOCK_EX) } == 0 {
-            return Ok(TagLock { _file: Some(file) });
-        }
-        let err = std::io::Error::last_os_error();
-        if err.raw_os_error() != Some(EINTR) {
-            return Err(err).with_context(|| format!("locking campaign '{tag}'"));
-        }
-    }
+    Ok(TagLock { _lock: super::lease::flock_path(&path, false)? })
 }
 
-/// Non-unix fallback: no advisory locking — concurrent submitters to
-/// one tag keep the historical last-write-wins race.
-#[cfg(not(unix))]
-fn lock_tag(_spool: &Path, _tag: &str) -> Result<TagLock> {
-    Ok(TagLock { _file: None })
+/// Take the per-tag lock shared: campaign *readers* hold this, so many
+/// concurrent `wait`/`fetch`/`analyze` calls proceed in parallel while
+/// any one writer (a `record_jobs` merge, a whole-campaign submit)
+/// excludes them all — a reader can never act on a pre-merge job list.
+pub(crate) fn lock_tag_shared(spool: &Path, tag: &str) -> Result<TagLock> {
+    std::fs::create_dir_all(spool.join("campaigns"))?;
+    let path = spool.join("campaigns").join(format!("{tag}.lock"));
+    Ok(TagLock { _lock: super::lease::flock_path(&path, true)? })
 }
 
 /// Register job ids under a campaign tag (creating or extending the
@@ -363,10 +347,16 @@ fn lock_tag(_spool: &Path, _tag: &str) -> Result<TagLock> {
 /// torn record.
 pub fn record_jobs(spool: &Path, tag: &str, job_ids: &[String]) -> Result<()> {
     validate_tag(tag)?;
-    std::fs::create_dir_all(spool.join("campaigns"))?;
     let _lock = lock_tag(spool, tag)?;
+    record_jobs_locked(spool, tag, job_ids)
+}
+
+/// The merge body of [`record_jobs`], for callers already holding the
+/// tag's exclusive lock (taking it again on a fresh descriptor would
+/// deadlock against ourselves).
+fn record_jobs_locked(spool: &Path, tag: &str, job_ids: &[String]) -> Result<()> {
     let path = campaign_path(spool, tag);
-    let mut jobs = campaign_jobs(spool, tag).unwrap_or_default();
+    let mut jobs = campaign_jobs_unlocked(spool, tag).unwrap_or_default();
     for id in job_ids {
         if !jobs.contains(id) {
             jobs.push(id.clone());
@@ -382,8 +372,21 @@ pub fn record_jobs(spool: &Path, tag: &str, job_ids: &[String]) -> Result<()> {
 }
 
 /// The job ids registered under a campaign tag, in submission order.
+/// Reads under the shared per-tag lock, so a concurrent submission in
+/// progress (which holds the lock exclusively across its whole
+/// enqueue+record span) is either observed completely or not at all.
 pub fn campaign_jobs(spool: &Path, tag: &str) -> Result<Vec<String>> {
     validate_tag(tag)?;
+    if !campaign_path(spool, tag).exists() {
+        // bail before locking: reading a campaign that was never
+        // submitted must not create the campaigns/ directory
+        bail!("no campaign '{tag}' in {}", spool.display());
+    }
+    let _lock = lock_tag_shared(spool, tag)?;
+    campaign_jobs_unlocked(spool, tag)
+}
+
+fn campaign_jobs_unlocked(spool: &Path, tag: &str) -> Result<Vec<String>> {
     let path = campaign_path(spool, tag);
     let text = std::fs::read_to_string(&path)
         .with_context(|| format!("no campaign '{tag}' in {}", spool.display()))?;
@@ -409,6 +412,14 @@ pub fn submit_experiments(
     if let Some(tag) = tag {
         validate_tag(tag)?;
     }
+    // hold the tag's exclusive lock across the whole enqueue+record
+    // span: a concurrent campaign reader (wait/fetch, which locks
+    // shared) blocks until the record merge lands, so it can never act
+    // on a job list missing jobs that were already enqueued
+    let _lock = match tag {
+        Some(t) => Some(lock_tag(&spool.dir, t)?),
+        None => None,
+    };
     // submit through a campaign-tagged clone so the `submitted`
     // lifecycle events carry the tag; worker-side events stay untagged
     // and `elaps analyze` attributes them via the campaign record
@@ -417,7 +428,7 @@ pub fn submit_experiments(
     let ids: Vec<String> =
         exps.iter().map(|e| submitter.submit(e)).collect::<Result<_>>()?;
     if let Some(tag) = tag {
-        record_jobs(&spool.dir, tag, &ids)?;
+        record_jobs_locked(&spool.dir, tag, &ids)?;
     }
     Ok(ids)
 }

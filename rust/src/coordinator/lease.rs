@@ -159,55 +159,66 @@ pub fn remove(spool: &Path, job_id: &str) -> Result<()> {
     }
 }
 
-/// A held exclusive lock on one job's lease (`<spool>/leases/
-/// <job_id>.lock`). Dropping the guard releases the lock — `flock(2)`
-/// locks die with the last descriptor on their open file description.
+/// A held advisory `flock(2)` on a sidecar lock file (a job's lease
+/// lock, a campaign tag lock, a host lease-cap lock). Dropping the
+/// guard releases the lock — `flock(2)` locks die with the last
+/// descriptor on their open file description.
 #[derive(Debug)]
 pub struct JobLock {
     _file: Option<std::fs::File>,
 }
 
-/// Serialize lease writes for one job across threads *and* processes
-/// with an advisory `flock(2)` on a sidecar lock file — not on the
-/// lease itself, whose inode is replaced by every atomic rename, which
-/// would leave later lockers holding a lock on a dead file. Every
-/// read-verify-write of a lease (claim acquisition, heartbeat renewal)
-/// runs under this lock, so the on-disk epoch can never regress: a
-/// stale renewal is forced to re-read *after* any concurrent
-/// acquisition's epoch bump and fences itself out. The `.lock` sidecar
-/// is invisible to every lease scan (they all filter on the `.json`
-/// extension).
+/// Take an advisory `flock(2)` on `path` — exclusive by default,
+/// shared (many concurrent readers) with `shared`. The lock file is a
+/// sidecar, never the data file it guards: data files are replaced by
+/// atomic renames, which would leave later lockers holding a lock on a
+/// dead inode. Used for per-job lease locks, per-campaign tag locks
+/// and the per-host lease-cap lock.
 #[cfg(unix)]
-pub(crate) fn lock_job(spool: &Path, job_id: &str) -> Result<JobLock> {
+pub(crate) fn flock_path(path: &Path, shared: bool) -> Result<JobLock> {
     use std::os::unix::io::AsRawFd;
     extern "C" {
         fn flock(fd: i32, operation: i32) -> i32;
     }
+    const LOCK_SH: i32 = 1;
     const LOCK_EX: i32 = 2;
     const EINTR: i32 = 4;
-    let path = leases_dir(spool).join(format!("{job_id}.lock"));
     let file = std::fs::OpenOptions::new()
         .create(true)
         .truncate(false)
+        .read(true)
         .write(true)
-        .open(&path)
-        .with_context(|| format!("opening lease lock {}", path.display()))?;
+        .open(path)
+        .with_context(|| format!("opening lock {}", path.display()))?;
+    let op = if shared { LOCK_SH } else { LOCK_EX };
     loop {
-        if unsafe { flock(file.as_raw_fd(), LOCK_EX) } == 0 {
+        if unsafe { flock(file.as_raw_fd(), op) } == 0 {
             return Ok(JobLock { _file: Some(file) });
         }
         let err = std::io::Error::last_os_error();
         if err.raw_os_error() != Some(EINTR) {
-            return Err(err).with_context(|| format!("locking lease of job {job_id}"));
+            return Err(err).with_context(|| format!("locking {}", path.display()));
         }
     }
 }
 
-/// Non-unix fallback: no advisory locking — concurrent lease writers
-/// keep the historical read-modify-write race.
+/// Non-unix fallback: no advisory locking — concurrent writers keep
+/// the historical read-modify-write race.
 #[cfg(not(unix))]
-pub(crate) fn lock_job(_spool: &Path, _job_id: &str) -> Result<JobLock> {
+pub(crate) fn flock_path(_path: &Path, _shared: bool) -> Result<JobLock> {
     Ok(JobLock { _file: None })
+}
+
+/// Serialize lease writes for one job across threads *and* processes
+/// with an advisory `flock(2)` on a sidecar lock file. Every
+/// read-verify-write of a lease (claim acquisition, heartbeat renewal,
+/// stale-claim reclaim) runs under this lock, so the on-disk epoch can
+/// never regress: a stale renewal is forced to re-read *after* any
+/// concurrent acquisition's epoch bump and fences itself out. The
+/// `.lock` sidecar is invisible to every lease scan (they all filter
+/// on the `.json` extension).
+pub(crate) fn lock_job(spool: &Path, job_id: &str) -> Result<JobLock> {
+    flock_path(&leases_dir(spool).join(format!("{job_id}.lock")), false)
 }
 
 /// Count the live (unexpired) leases currently held by `host` — the
@@ -347,8 +358,12 @@ fn count_json(spool: &Path, sub: &str) -> Result<usize> {
         .count())
 }
 
-/// Gather a [`SpoolStatus`] snapshot for the spool at `dir`.
-pub fn spool_status(dir: &Path) -> Result<SpoolStatus> {
+/// The queue/running half of a [`SpoolStatus`]: queued count plus the
+/// leased jobs with their per-host breakdown. Shared by the
+/// directory-scan status path below and the incremental ledger path
+/// ([`crate::coordinator::ledger::spool_status_ledger`]) — these
+/// directories hold only in-flight work, so both paths scan them.
+pub(crate) fn status_queue_and_running(dir: &Path) -> Result<SpoolStatus> {
     if !dir.join("queue").is_dir() {
         return Err(anyhow!("no spool directory at {}", dir.display()));
     }
@@ -374,6 +389,12 @@ pub fn spool_status(dir: &Path) -> Result<SpoolStatus> {
     }
     leased.sort_by(|a, b| a.job_id.cmp(&b.job_id));
     st.leased = leased;
+    Ok(st)
+}
+
+/// Gather a [`SpoolStatus`] snapshot for the spool at `dir`.
+pub fn spool_status(dir: &Path) -> Result<SpoolStatus> {
+    let mut st = status_queue_and_running(dir)?;
     // done: group by the stamp sidecar the publisher wrote — report
     // bodies are deliberately never opened (a corrupt or huge report
     // cannot slow or break the status view; the sidecars keep this

@@ -1,0 +1,1011 @@
+//! The campaign ledger: an embedded canonical store for campaign
+//! bookkeeping, replacing the file-per-fact pattern (one JSON record
+//! merged under a flock per submission) with an append-only, fsync'd,
+//! CRC-framed event log per campaign plus a compacting index snapshot.
+//!
+//! * **Ledger** — `<spool>/ledger/<tag>.log`. One record per line:
+//!   `"{crc32:08x} {len} {payload}\n"`, where the payload is a compact
+//!   JSON [`Event`] (the existing obs taxonomy, extended with the
+//!   `submitted`/`retried`/`dead_lettered` client facts). Appends are a
+//!   single `O_APPEND` write followed by an fsync, so concurrent
+//!   submitters serialize through the kernel's append offset instead of
+//!   a flock'd read-merge-write, and a torn tail (crash mid-append) is
+//!   detected by the frame: a line without its newline is an in-flight
+//!   write, a framed line whose CRC or length disagrees is skipped and
+//!   counted, never an error.
+//! * **Index snapshot** — `<spool>/ledger/<tag>.index.json`, replaced
+//!   atomically. It folds the ledger (by byte cursor, so a refresh
+//!   ingests only what was appended since) together with completion
+//!   probes of the still-pending jobs. `elaps submit`/`wait`/`spool
+//!   status` become O(changed-since-snapshot): a million-job campaign
+//!   with ten unfinished jobs costs ten existence probes per poll, not
+//!   a million-entry directory scan.
+//! * **Operational verbs** — [`retry_errors`] resubmits error-stamped
+//!   jobs exactly once (recorded as `retried` ledger facts, guarded by
+//!   the campaign tag lock across processes) and dead-letters jobs
+//!   whose retry chain exhausted its attempt budget; [`compact`]
+//!   persists the folded snapshot and optionally archives a fully
+//!   ingested ledger.
+//!
+//! The directory scan remains available as the `--no-ledger` fallback,
+//! and the two paths are held to a differential bar: a ledger-backed
+//! and a file-backed campaign must yield byte-identical reports and
+//! identical `spool status --json` (rust/tests/ledger_roundtrip.rs).
+
+use super::campaign::{self, CampaignStatus, StampOutcome};
+use super::experiment::Experiment;
+use super::io;
+use super::lease;
+use super::submit::{unique_tmp, Spooler};
+use crate::obs::events::{Event, EventKind};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Default retry budget: an original attempt plus two retries.
+pub const DEFAULT_MAX_ATTEMPTS: u64 = 3;
+
+pub fn ledger_dir(spool: &Path) -> PathBuf {
+    spool.join("ledger")
+}
+
+pub fn ledger_path(spool: &Path, tag: &str) -> PathBuf {
+    ledger_dir(spool).join(format!("{tag}.log"))
+}
+
+pub fn index_path(spool: &Path, tag: &str) -> PathBuf {
+    ledger_dir(spool).join(format!("{tag}.index.json"))
+}
+
+/// Sidecar holding the campaign's archive generation (a decimal
+/// counter bumped each time compaction moves the log away). Refresh
+/// reads it in O(1) to learn that its byte cursor refers to a log that
+/// no longer exists — a length check alone cannot tell once a
+/// recreated post-archive log outgrows the old cursor.
+fn generation_path(spool: &Path, tag: &str) -> PathBuf {
+    ledger_dir(spool).join(format!("{tag}.gen"))
+}
+
+fn read_generation(spool: &Path, tag: &str) -> u64 {
+    std::fs::read_to_string(generation_path(spool, tag))
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Whether a campaign has a ledger (the discriminator `wait`/`fetch`/
+/// `analyze` use to pick the ledger path over the record file). An
+/// archived campaign still counts: compaction moves the log away but
+/// leaves the index snapshot, which answers every query the log would.
+pub fn has_ledger(spool: &Path, tag: &str) -> bool {
+    campaign::validate_tag(tag).is_ok()
+        && (ledger_path(spool, tag).is_file() || index_path(spool, tag).is_file())
+}
+
+// ---------------------------------------------------------------- CRC
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), table-driven. Hand
+/// rolled: the vendored crate set has no checksum crate, and 8 lines of
+/// const fn beat a dependency.
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { 0xEDB8_8320 ^ (crc >> 1) } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+// ------------------------------------------------------------ framing
+
+/// Frame one record payload as a ledger line. The CRC and explicit
+/// length let a reader reject a corrupted or spliced line without
+/// trusting the payload's own syntax.
+pub fn frame_record(payload: &str) -> String {
+    format!("{:08x} {} {payload}\n", crc32(payload.as_bytes()), payload.len())
+}
+
+/// Parse one complete (newline-stripped) ledger line back into its
+/// payload. `None` for any framing violation: missing fields, a length
+/// mismatch (a spliced or truncated write), or a CRC mismatch (bit
+/// rot). The payload is returned verbatim for the caller to parse.
+pub fn parse_frame(line: &str) -> Option<&str> {
+    let (crc_hex, rest) = line.split_once(' ')?;
+    let (len, payload) = rest.split_once(' ')?;
+    if payload.len() != len.parse::<usize>().ok()? {
+        return None;
+    }
+    if crc32(payload.as_bytes()) != u32::from_str_radix(crc_hex, 16).ok()? {
+        return None;
+    }
+    Some(payload)
+}
+
+/// The result of scanning (a suffix of) a ledger: every recoverable
+/// fact in append order, the count of complete-but-unreadable lines,
+/// and the byte offset up to which the text was consumed — the cursor
+/// an incremental reader stores and resumes from.
+#[derive(Debug, Clone, Default)]
+pub struct LedgerScan {
+    pub events: Vec<Event>,
+    pub skipped: usize,
+    /// Bytes consumed: the offset just past the last complete line. A
+    /// trailing line without its newline (an in-flight append) is left
+    /// for the next scan.
+    pub bytes: u64,
+}
+
+/// Parse ledger text. Everything after the last newline is an
+/// in-flight append and is ignored (and excluded from
+/// [`LedgerScan::bytes`]); complete lines failing the frame or the
+/// event schema are counted in `skipped`.
+pub fn parse_ledger_text(text: &str) -> LedgerScan {
+    let mut scan = LedgerScan::default();
+    let complete = match text.rfind('\n') {
+        Some(i) => &text[..i + 1],
+        None => "",
+    };
+    scan.bytes = complete.len() as u64;
+    for line in complete.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parsed = parse_frame(line)
+            .and_then(|payload| Json::parse(payload).ok())
+            .and_then(|j| Event::from_json(&j));
+        match parsed {
+            Some(ev) => scan.events.push(ev),
+            None => scan.skipped += 1,
+        }
+    }
+    scan
+}
+
+/// Read a ledger from a byte cursor (0 = the whole file). A missing
+/// file (archived, nothing appended since) scans as empty with the
+/// cursor unchanged; a file *shorter* than the cursor was archived and
+/// then appended to, and is scanned from its start. The returned
+/// [`LedgerScan::bytes`] is the new absolute cursor.
+pub fn read_ledger_from(path: &Path, offset: u64) -> Result<LedgerScan> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(LedgerScan { bytes: offset, ..Default::default() });
+        }
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    if (bytes.len() as u64) < offset {
+        // A ledger only shrinks when compaction archived it away: a
+        // file shorter than the cursor is a fresh post-archive log
+        // whose facts are all new (the archived prefix is already
+        // folded into the snapshot) — read it from the start.
+        return Ok(parse_ledger_text(&String::from_utf8_lossy(&bytes)));
+    }
+    let tail = String::from_utf8_lossy(&bytes[offset as usize..]);
+    let mut scan = parse_ledger_text(&tail);
+    scan.bytes += offset;
+    Ok(scan)
+}
+
+/// Append facts to a campaign ledger: one framed line per event,
+/// written with a single `O_APPEND` write and fsync'd before
+/// returning. Atomic appends are what let concurrent submitters
+/// serialize without a lock — the kernel orders the writes, and the
+/// frame detects the (local-fs-rare, NFS-possible) interleaved tail.
+pub fn append(spool: &Path, tag: &str, events: &[Event]) -> Result<()> {
+    campaign::validate_tag(tag)?;
+    std::fs::create_dir_all(ledger_dir(spool))?;
+    let path = ledger_path(spool, tag);
+    let mut buf = String::new();
+    for ev in events {
+        buf.push_str(&frame_record(&ev.to_json().to_string_compact()));
+    }
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .with_context(|| format!("opening ledger {}", path.display()))?;
+    file.write_all(buf.as_bytes())?;
+    file.sync_all()?;
+    Ok(())
+}
+
+// -------------------------------------------------------- fact makers
+
+fn now_ns() -> u128 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0)
+}
+
+fn next_seq() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A client-side ledger fact, stamped with this spooler's identity.
+fn fact(spool: &Spooler, tag: &str, kind: EventKind, job_id: &str) -> Event {
+    Event {
+        kind,
+        job_id: job_id.to_string(),
+        campaign: tag.to_string(),
+        host: spool.host().to_string(),
+        worker: spool.worker_id().to_string(),
+        epoch: 0,
+        t_unix_ns: now_ns(),
+        seq: next_seq(),
+        extra: BTreeMap::new(),
+    }
+}
+
+// -------------------------------------------------------------- index
+
+/// One job's folded state in the campaign index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobEntry {
+    pub job_id: String,
+    /// Position in the retry chain: 1 for an original submission.
+    pub attempt: u64,
+    /// The submitted experiment (from the `submitted` fact), kept so
+    /// `elaps retry` can resubmit without the original file. Dropped
+    /// once the job finishes ok — only failures need it again.
+    pub experiment: Option<Json>,
+    /// Whether a published report exists. Terminal: reports persist.
+    pub done: bool,
+    /// Outcome from the publish stamp; `None` while pending, or done
+    /// with a missing/unreadable stamp (outcome unknown).
+    pub outcome: Option<StampOutcome>,
+    pub host: String,
+    pub worker: String,
+    pub epoch: u64,
+    /// The failed job this one was resubmitted for.
+    pub retry_of: Option<String>,
+    /// The resubmission that replaced this failed job — the
+    /// exactly-once guard: a job with `retried_to` is never resubmitted
+    /// again.
+    pub retried_to: Option<String>,
+    /// Dead-lettered: the retry chain exhausted its attempt budget.
+    pub dead: bool,
+}
+
+impl JobEntry {
+    fn new(job_id: &str) -> JobEntry {
+        JobEntry {
+            job_id: job_id.to_string(),
+            attempt: 1,
+            experiment: None,
+            done: false,
+            outcome: None,
+            host: String::new(),
+            worker: String::new(),
+            epoch: 0,
+            retry_of: None,
+            retried_to: None,
+            dead: false,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt_str = |s: &Option<String>| match s {
+            Some(v) => Json::Str(v.clone()),
+            None => Json::Null,
+        };
+        let mut j = Json::obj();
+        j.set("job_id", self.job_id.as_str())
+            .set("attempt", self.attempt)
+            .set(
+                "experiment",
+                self.experiment.clone().unwrap_or(Json::Null),
+            )
+            .set("done", self.done)
+            .set(
+                "outcome",
+                match self.outcome {
+                    Some(o) => Json::Str(o.as_str().to_string()),
+                    None => Json::Null,
+                },
+            )
+            .set("host", self.host.as_str())
+            .set("worker", self.worker.as_str())
+            .set("epoch", self.epoch)
+            .set("retry_of", opt_str(&self.retry_of))
+            .set("retried_to", opt_str(&self.retried_to))
+            .set("dead", self.dead);
+        j
+    }
+
+    fn from_json(j: &Json) -> Option<JobEntry> {
+        let opt_str = |v: &Json| v.as_str().map(String::from);
+        Some(JobEntry {
+            job_id: j.get("job_id").as_str()?.to_string(),
+            attempt: j.get("attempt").as_u64()?,
+            experiment: match j.get("experiment") {
+                Json::Null => None,
+                other => Some(other.clone()),
+            },
+            done: j.get("done").as_bool()?,
+            outcome: j.get("outcome").as_str().and_then(StampOutcome::by_name),
+            host: j.get("host").as_str()?.to_string(),
+            worker: j.get("worker").as_str()?.to_string(),
+            epoch: j.get("epoch").as_u64()?,
+            retry_of: opt_str(j.get("retry_of")),
+            retried_to: opt_str(j.get("retried_to")),
+            dead: j.get("dead").as_bool()?,
+        })
+    }
+}
+
+/// The compacting index snapshot over one campaign's ledger: folded
+/// job states in submission order plus the ledger byte cursor. Loaded
+/// from `<tag>.index.json`, refreshed by ingesting only the ledger
+/// bytes appended since and probing only the still-pending jobs, and
+/// saved back via atomic replace — a reader mid-compaction sees the
+/// old snapshot or the new one, each self-consistent with its cursor.
+#[derive(Debug, Clone, Default)]
+pub struct CampaignIndex {
+    pub campaign: String,
+    pub jobs: BTreeMap<String, JobEntry>,
+    /// Job ids in first-appearance (submission) order.
+    pub order: Vec<String>,
+    /// Absolute byte cursor into the ledger: everything before it has
+    /// been folded into `jobs`.
+    pub ledger_bytes: u64,
+    /// Archive generation the cursor belongs to (see
+    /// [`generation_path`]); 0 until the first archive.
+    pub generation: u64,
+    /// Complete-but-unreadable ledger lines skipped so far.
+    pub skipped: usize,
+}
+
+impl CampaignIndex {
+    /// Load the snapshot, or start empty (first read, or a snapshot
+    /// from a newer writer we cannot parse — the ledger replays).
+    pub fn load(spool: &Path, tag: &str) -> Result<CampaignIndex> {
+        campaign::validate_tag(tag)?;
+        let fresh = CampaignIndex { campaign: tag.to_string(), ..Default::default() };
+        let text = match std::fs::read_to_string(index_path(spool, tag)) {
+            Ok(t) => t,
+            Err(_) => return Ok(fresh),
+        };
+        let Ok(j) = Json::parse(&text) else {
+            return Ok(fresh);
+        };
+        let mut idx = fresh;
+        idx.ledger_bytes = j.get("ledger_bytes").as_u64().unwrap_or(0);
+        idx.generation = j.get("generation").as_u64().unwrap_or(0);
+        idx.skipped = j.get("skipped").as_u64().unwrap_or(0) as usize;
+        for ej in j.get("jobs").as_arr().unwrap_or(&[]) {
+            if let Some(e) = JobEntry::from_json(ej) {
+                idx.order.push(e.job_id.clone());
+                idx.jobs.insert(e.job_id.clone(), e);
+            }
+        }
+        Ok(idx)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("v", 1u64)
+            .set("campaign", self.campaign.as_str())
+            .set("ledger_bytes", self.ledger_bytes)
+            .set("generation", self.generation)
+            .set("skipped", self.skipped as u64)
+            .set(
+                "jobs",
+                Json::Arr(
+                    self.order
+                        .iter()
+                        .filter_map(|id| self.jobs.get(id))
+                        .map(JobEntry::to_json)
+                        .collect(),
+                ),
+            );
+        j
+    }
+
+    /// Persist the snapshot (atomic replace).
+    pub fn save(&self, spool: &Path) -> Result<()> {
+        std::fs::create_dir_all(ledger_dir(spool))?;
+        let path = index_path(spool, &self.campaign);
+        let tmp = unique_tmp(&path);
+        std::fs::write(&tmp, self.to_json().to_string_pretty())?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    fn entry_mut(&mut self, job_id: &str) -> &mut JobEntry {
+        match self.jobs.entry(job_id.to_string()) {
+            std::collections::btree_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::btree_map::Entry::Vacant(v) => {
+                self.order.push(job_id.to_string());
+                v.insert(JobEntry::new(job_id))
+            }
+        }
+    }
+
+    /// Fold one ledger fact. Facts may arrive in either intra-append
+    /// order (`retried` before or after the new job's `submitted`);
+    /// unknown kinds are tolerated per the event compatibility rule.
+    fn apply(&mut self, ev: &Event) {
+        match ev.kind {
+            EventKind::Submitted => {
+                let attempt = ev.extra.get("attempt").and_then(|v| v.as_u64());
+                let exp = ev.extra.get("experiment").cloned();
+                let e = self.entry_mut(&ev.job_id);
+                if let Some(a) = attempt {
+                    e.attempt = a;
+                }
+                if exp.is_some() {
+                    e.experiment = exp;
+                }
+            }
+            EventKind::Retried => {
+                let of = ev.extra.get("of").and_then(|v| v.as_str()).map(String::from);
+                let attempt = ev.extra.get("attempt").and_then(|v| v.as_u64());
+                {
+                    let e = self.entry_mut(&ev.job_id);
+                    e.retry_of = of.clone();
+                    if let Some(a) = attempt {
+                        e.attempt = a;
+                    }
+                }
+                if let Some(of) = of {
+                    self.entry_mut(&of).retried_to = Some(ev.job_id.clone());
+                }
+            }
+            EventKind::DeadLettered => {
+                self.entry_mut(&ev.job_id).dead = true;
+            }
+            _ => {}
+        }
+    }
+
+    /// Bring the index up to date: ingest the ledger from the byte
+    /// cursor, then probe completion for the still-pending jobs only —
+    /// O(appended bytes + pending jobs), independent of campaign size.
+    pub fn refresh(&mut self, spool: &Path) -> Result<()> {
+        // Archive coherence: if compaction moved the log away since
+        // this snapshot's cursor was taken, the cursor refers to a
+        // dead file — and a recreated log may have grown past it,
+        // which the shrink check in `read_ledger_from` cannot see.
+        // The `.gen` sidecar makes detection O(1); the snapshot
+        // compaction persisted is authoritative up to the archive
+        // point, so adopt it, or failing that re-fold the fresh log
+        // from its start (`apply` is idempotent over replayed facts).
+        let gen_on_disk = read_generation(spool, &self.campaign);
+        if gen_on_disk > self.generation {
+            match Self::load(spool, &self.campaign) {
+                Ok(disk) if disk.generation == gen_on_disk => *self = disk,
+                _ => {
+                    self.ledger_bytes = 0;
+                    self.generation = gen_on_disk;
+                }
+            }
+        }
+        let scan = read_ledger_from(&ledger_path(spool, &self.campaign), self.ledger_bytes)?;
+        for ev in &scan.events {
+            self.apply(ev);
+        }
+        self.ledger_bytes = scan.bytes;
+        self.skipped += scan.skipped;
+        for id in &self.order {
+            let entry = self.jobs.get_mut(id).unwrap();
+            if entry.done {
+                continue;
+            }
+            if !spool.join("done").join(format!("{id}.report.json")).exists() {
+                continue;
+            }
+            entry.done = true;
+            match campaign::read_stamp(spool, id) {
+                Some(s) => {
+                    entry.outcome = Some(s.outcome);
+                    entry.host = s.host;
+                    entry.worker = s.worker;
+                    entry.epoch = s.epoch;
+                }
+                None => entry.outcome = None,
+            }
+            if entry.outcome == Some(StampOutcome::Ok) {
+                entry.experiment = None; // only failures are resubmitted
+            }
+        }
+        Ok(())
+    }
+
+    /// Job ids in submission order (the ledger twin of
+    /// [`campaign::campaign_jobs`]).
+    pub fn job_ids(&self) -> Vec<String> {
+        self.order.clone()
+    }
+
+    /// Jobs not yet seen done — the only ones a `wait` needs to poll.
+    pub fn pending_ids(&self) -> Vec<String> {
+        self.order
+            .iter()
+            .filter(|id| self.jobs.get(*id).is_some_and(|e| !e.done))
+            .cloned()
+            .collect()
+    }
+
+    /// Dead-lettered jobs, in submission order.
+    pub fn dead_letters(&self) -> Vec<&JobEntry> {
+        self.order
+            .iter()
+            .filter_map(|id| self.jobs.get(id))
+            .filter(|e| e.dead)
+            .collect()
+    }
+
+    /// Campaign status from the index: done outcomes are folded state
+    /// (no per-job I/O); only the pending jobs are existence-probed,
+    /// via the same probe order as the directory-scan path.
+    pub fn status(&self, spool: &Path) -> CampaignStatus {
+        let pending = self.pending_ids();
+        let mut st = campaign::status_of_jobs(spool, &pending);
+        st.total = self.order.len();
+        for id in &self.order {
+            let Some(e) = self.jobs.get(id) else { continue };
+            if !e.done {
+                continue;
+            }
+            match e.outcome {
+                Some(StampOutcome::Ok) => st.done_ok += 1,
+                Some(StampOutcome::Error) => st.done_error += 1,
+                None => st.done_unknown += 1,
+            }
+        }
+        st
+    }
+}
+
+// --------------------------------------------------------- operations
+
+/// Ledger-mode submit: enqueue the experiments and append one
+/// `submitted` fact per job (carrying the experiment itself, so a
+/// later `elaps retry` can resubmit a failure without the original
+/// file). The ledger *is* the campaign record — no flock'd JSON merge.
+pub fn submit_experiments(spool: &Spooler, tag: &str, exps: &[Experiment]) -> Result<Vec<String>> {
+    campaign::validate_tag(tag)?;
+    std::fs::create_dir_all(ledger_dir(&spool.dir))?;
+    let tagged = spool.clone().with_campaign(tag);
+    let mut ids = Vec::with_capacity(exps.len());
+    for exp in exps {
+        let id = tagged.submit(exp)?;
+        let mut ev = fact(spool, tag, EventKind::Submitted, &id);
+        ev.extra.insert("attempt".into(), 1u64.into());
+        ev.extra.insert("experiment".into(), io::experiment_to_json(exp));
+        append(&spool.dir, tag, &[ev])?;
+        ids.push(id);
+    }
+    Ok(ids)
+}
+
+/// The job ids of a campaign: from the ledger index when the campaign
+/// has a ledger (and `use_ledger` allows it), else from the record
+/// file — so pre-ledger campaigns keep working unchanged.
+pub fn campaign_jobs_resolved(spool: &Path, tag: &str, use_ledger: bool) -> Result<Vec<String>> {
+    if use_ledger && has_ledger(spool, tag) {
+        let mut idx = CampaignIndex::load(spool, tag)?;
+        idx.refresh(spool)?;
+        let _ = idx.save(spool);
+        return Ok(idx.job_ids());
+    }
+    campaign::campaign_jobs(spool, tag)
+}
+
+/// What [`retry_errors`] did.
+#[derive(Debug, Clone, Default)]
+pub struct RetryOutcome {
+    /// `(failed job, resubmitted job)` pairs, in submission order.
+    pub resubmitted: Vec<(String, String)>,
+    /// Jobs dead-lettered this pass (attempt budget exhausted).
+    pub dead_lettered: Vec<String>,
+    /// Error jobs skipped because their experiment is not in the
+    /// ledger (facts lost to corruption) — listed, never silently
+    /// dropped.
+    pub unrecoverable: Vec<String>,
+}
+
+/// Resubmit every error-stamped job of a campaign exactly once.
+///
+/// Runs under the campaign tag lock, so concurrent `elaps retry`
+/// invocations — same host or another process — serialize; the
+/// exactly-once guard is durable: a `retried` fact in the ledger marks
+/// the failed job as replaced, and a replaced (or dead-lettered) job
+/// is never resubmitted again. A failure whose chain already has
+/// `max_attempts` attempts is dead-lettered instead, also as a ledger
+/// fact.
+pub fn retry_errors(spool: &Spooler, tag: &str, max_attempts: u64) -> Result<RetryOutcome> {
+    campaign::validate_tag(tag)?;
+    if !has_ledger(&spool.dir, tag) {
+        bail!(
+            "campaign '{tag}' has no ledger in {} — `elaps retry` needs a \
+             ledger-backed campaign (submitted without --no-ledger)",
+            spool.dir.display()
+        );
+    }
+    let max_attempts = max_attempts.max(1);
+    let _lock = campaign::lock_tag(&spool.dir, tag)?;
+    let mut idx = CampaignIndex::load(&spool.dir, tag)?;
+    idx.refresh(&spool.dir)?;
+    let tagged = spool.clone().with_campaign(tag);
+    let mut out = RetryOutcome::default();
+    for id in idx.order.clone() {
+        let Some(e) = idx.jobs.get(&id) else { continue };
+        if !e.done
+            || e.outcome != Some(StampOutcome::Error)
+            || e.retried_to.is_some()
+            || e.dead
+        {
+            continue;
+        }
+        let attempt = e.attempt;
+        if attempt >= max_attempts {
+            let mut ev = fact(spool, tag, EventKind::DeadLettered, &id);
+            ev.extra.insert("attempts".into(), attempt.into());
+            append(&spool.dir, tag, &[ev.clone()])?;
+            idx.apply(&ev);
+            out.dead_lettered.push(id);
+            continue;
+        }
+        let Some(exp_json) = e.experiment.clone() else {
+            out.unrecoverable.push(id);
+            continue;
+        };
+        let exp = io::experiment_from_json(&exp_json)
+            .with_context(|| format!("experiment of failed job {id} in ledger"))?;
+        let new_id = tagged.submit(&exp)?;
+        let mut retried = fact(spool, tag, EventKind::Retried, &new_id);
+        retried.extra.insert("of".into(), Json::Str(id.clone()));
+        retried.extra.insert("attempt".into(), (attempt + 1).into());
+        let mut submitted = fact(spool, tag, EventKind::Submitted, &new_id);
+        submitted.extra.insert("attempt".into(), (attempt + 1).into());
+        submitted.extra.insert("experiment".into(), exp_json);
+        append(&spool.dir, tag, &[retried.clone(), submitted.clone()])?;
+        idx.apply(&retried);
+        idx.apply(&submitted);
+        out.resubmitted.push((id, new_id));
+    }
+    idx.save(&spool.dir)?;
+    Ok(out)
+}
+
+/// Compact a campaign: fold the ledger into the index snapshot and
+/// persist it. With `archive`, a fully ingested ledger is additionally
+/// moved to `<spool>/ledger/archive/<tag>.log` — refused (not an
+/// error) while unread appends remain, so an active submitter cannot
+/// lose facts. Returns whether the ledger was archived.
+pub fn compact(spool: &Path, tag: &str, archive: bool) -> Result<bool> {
+    campaign::validate_tag(tag)?;
+    let _lock = campaign::lock_tag(spool, tag)?;
+    let mut idx = CampaignIndex::load(spool, tag)?;
+    idx.refresh(spool)?;
+    idx.save(spool)?;
+    if !archive {
+        return Ok(false);
+    }
+    let path = ledger_path(spool, tag);
+    let size = match std::fs::metadata(&path) {
+        Ok(m) => m.len(),
+        Err(_) => return Ok(false), // already archived
+    };
+    if size != idx.ledger_bytes {
+        return Ok(false); // unread (possibly in-flight) appends remain
+    }
+    let dir = ledger_dir(spool).join("archive");
+    std::fs::create_dir_all(&dir)?;
+    std::fs::rename(&path, dir.join(format!("{tag}.log")))?;
+    // The log is gone: bump the generation and reset the snapshot's
+    // cursor so it is authoritative for any refresh that raced past
+    // the archive, then publish the new generation in the sidecar.
+    idx.generation += 1;
+    idx.ledger_bytes = 0;
+    idx.save(spool)?;
+    let gen_path = generation_path(spool, tag);
+    let tmp = unique_tmp(&gen_path);
+    std::fs::write(&tmp, idx.generation.to_string())?;
+    std::fs::rename(&tmp, &gen_path)?;
+    Ok(true)
+}
+
+// ------------------------------------------------- spool-wide status
+
+fn status_cache_path(spool: &Path) -> PathBuf {
+    ledger_dir(spool).join("status-cache.json")
+}
+
+/// `elaps spool status` through the ledger machinery: the queue and
+/// running scans are unchanged (those directories are small by
+/// construction), but the done set — the part that grows to millions —
+/// is folded incrementally: stamps are read only for reports not yet
+/// in the cache snapshot, so a quiet spool costs one readdir and zero
+/// stamp reads. Jobs whose stamp was missing when first seen are
+/// re-probed (never cached as unknown), so the output converges to the
+/// directory-scan path's — the differential bar both must meet.
+pub fn spool_status_ledger(dir: &Path) -> Result<lease::SpoolStatus> {
+    let mut st = lease::status_queue_and_running(dir)?;
+    let cache_path = status_cache_path(dir);
+    let mut cache: BTreeMap<String, (String, String)> = BTreeMap::new();
+    if let Ok(text) = std::fs::read_to_string(&cache_path) {
+        if let Ok(j) = Json::parse(&text) {
+            if let Some(obj) = j.get("done").as_obj() {
+                for (id, v) in obj {
+                    if let (Some(h), Some(o)) = (v.get("host").as_str(), v.get("outcome").as_str())
+                    {
+                        cache.insert(id.clone(), (h.to_string(), o.to_string()));
+                    }
+                }
+            }
+        }
+    }
+    let mut grew = false;
+    for entry in std::fs::read_dir(dir.join("done"))?.filter_map(|e| e.ok()) {
+        let Some(job_id) = entry
+            .file_name()
+            .to_str()
+            .and_then(|n| n.strip_suffix(".report.json"))
+            .map(String::from)
+        else {
+            continue;
+        };
+        st.done += 1;
+        let (host, outcome) = match cache.get(&job_id) {
+            Some((h, o)) => (h.clone(), o.clone()),
+            None => match campaign::read_stamp(dir, &job_id) {
+                Some(s) => {
+                    let pair = (s.host, s.outcome.as_str().to_string());
+                    cache.insert(job_id.clone(), pair.clone());
+                    grew = true;
+                    pair
+                }
+                None => ("(unknown)".to_string(), "unknown".to_string()),
+            },
+        };
+        if outcome == "error" {
+            st.done_errors += 1;
+        }
+        *st.done_by_host.entry(host).or_insert(0) += 1;
+    }
+    if grew {
+        let mut done = Json::obj();
+        for (id, (h, o)) in &cache {
+            let mut e = Json::obj();
+            e.set("host", h.as_str()).set("outcome", o.as_str());
+            done.set(id.as_str(), e);
+        }
+        let mut j = Json::obj();
+        j.set("v", 1u64).set("done", done);
+        std::fs::create_dir_all(ledger_dir(dir))?;
+        let tmp = unique_tmp(&cache_path);
+        if std::fs::write(&tmp, j.to_string_pretty()).is_ok() {
+            let _ = std::fs::rename(&tmp, &cache_path);
+        }
+    }
+    Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::tests_support::dgemm_experiment;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("elaps_ledger_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_fact(kind: EventKind, job: &str, seq: u64) -> Event {
+        Event {
+            kind,
+            job_id: job.to_string(),
+            campaign: "camp".into(),
+            host: "hostA".into(),
+            worker: "hostA#1-0".into(),
+            epoch: 0,
+            t_unix_ns: 1_700_000_000_000_000_000,
+            seq,
+            extra: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // the classic IEEE 802.3 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_roundtrip_and_corruption_detection() {
+        let ev = sample_fact(EventKind::Submitted, "job-1", 0);
+        let payload = ev.to_json().to_string_compact();
+        let line = frame_record(&payload);
+        assert!(line.ends_with('\n'));
+        assert_eq!(parse_frame(line.trim_end()), Some(payload.as_str()));
+        // flip one payload byte: the CRC catches it
+        let mut corrupt = line.trim_end().to_string();
+        let n = corrupt.len() - 1;
+        corrupt.replace_range(n.., "!");
+        assert_eq!(parse_frame(&corrupt), None);
+        // splice two frames on one line: the length check catches it
+        let spliced = format!("{}{}", line.trim_end(), payload);
+        assert_eq!(parse_frame(&spliced), None);
+        assert_eq!(parse_frame("nonsense"), None);
+        assert_eq!(parse_frame(""), None);
+    }
+
+    #[test]
+    fn ledger_scan_tolerates_torn_tail_and_counts_bad_lines() {
+        let a = sample_fact(EventKind::Submitted, "a", 0);
+        let b = sample_fact(EventKind::Submitted, "b", 1);
+        let c = sample_fact(EventKind::Submitted, "c", 2);
+        let mut text = frame_record(&a.to_json().to_string_compact());
+        text.push_str("deadbeef 4 junk\n"); // framed but CRC-wrong
+        text.push_str(&frame_record(&b.to_json().to_string_compact()));
+        let cut = frame_record(&c.to_json().to_string_compact());
+        let keep = text.len();
+        text.push_str(&cut[..cut.len() / 2]); // torn in-flight append
+        let scan = parse_ledger_text(&text);
+        assert_eq!(scan.events, vec![a, b]);
+        assert_eq!(scan.skipped, 1);
+        assert_eq!(scan.bytes, keep as u64, "cursor stops before the torn tail");
+    }
+
+    #[test]
+    fn append_and_incremental_read_roundtrip() {
+        let dir = tmpdir("append");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = sample_fact(EventKind::Submitted, "a", 0);
+        let b = sample_fact(EventKind::Submitted, "b", 1);
+        append(&dir, "camp", &[a.clone()]).unwrap();
+        let first = read_ledger_from(&ledger_path(&dir, "camp"), 0).unwrap();
+        assert_eq!(first.events, vec![a.clone()]);
+        append(&dir, "camp", &[b.clone()]).unwrap();
+        // resuming from the cursor yields exactly the new fact
+        let second = read_ledger_from(&ledger_path(&dir, "camp"), first.bytes).unwrap();
+        assert_eq!(second.events, vec![b]);
+        assert_eq!(second.skipped, 0);
+        // a missing ledger scans as empty at the same cursor
+        let none = read_ledger_from(&ledger_path(&dir, "nope"), 7).unwrap();
+        assert!(none.events.is_empty());
+        assert_eq!(none.bytes, 7);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn index_folds_submit_retry_dead_letter_facts() {
+        let dir = tmpdir("fold");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut sub = sample_fact(EventKind::Submitted, "j1", 0);
+        sub.extra.insert("attempt".into(), 1u64.into());
+        let mut retried = sample_fact(EventKind::Retried, "j2", 1);
+        retried.extra.insert("of".into(), Json::Str("j1".into()));
+        retried.extra.insert("attempt".into(), 2u64.into());
+        let mut sub2 = sample_fact(EventKind::Submitted, "j2", 2);
+        sub2.extra.insert("attempt".into(), 2u64.into());
+        let mut dead = sample_fact(EventKind::DeadLettered, "j2", 3);
+        dead.extra.insert("attempts".into(), 2u64.into());
+        append(&dir, "camp", &[sub, retried, sub2, dead]).unwrap();
+        let mut idx = CampaignIndex::load(&dir, "camp").unwrap();
+        idx.refresh(&dir).unwrap();
+        assert_eq!(idx.job_ids(), vec!["j1".to_string(), "j2".to_string()]);
+        assert_eq!(idx.jobs["j1"].retried_to.as_deref(), Some("j2"));
+        assert_eq!(idx.jobs["j2"].retry_of.as_deref(), Some("j1"));
+        assert_eq!(idx.jobs["j2"].attempt, 2);
+        assert!(idx.jobs["j2"].dead);
+        assert_eq!(idx.dead_letters().len(), 1);
+        // snapshot roundtrip preserves the folded state and cursor
+        idx.save(&dir).unwrap();
+        let idx2 = CampaignIndex::load(&dir, "camp").unwrap();
+        assert_eq!(idx2.ledger_bytes, idx.ledger_bytes);
+        assert_eq!(idx2.order, idx.order);
+        assert_eq!(idx2.jobs, idx.jobs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn ledger_submit_wait_status_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let spool = Spooler::new(&dir).unwrap().with_events(false);
+        let exps: Vec<_> = (0..3i64).map(|i| dgemm_experiment(8 + 4 * i)).collect();
+        let ids = submit_experiments(&spool, "camp", &exps).unwrap();
+        assert_eq!(ids.len(), 3);
+        assert!(has_ledger(&dir, "camp"));
+        assert_eq!(campaign_jobs_resolved(&dir, "camp", true).unwrap(), ids);
+        // no record file was written: the ledger is the canonical store
+        assert!(campaign::campaign_jobs(&dir, "camp").is_err());
+        let mut idx = CampaignIndex::load(&dir, "camp").unwrap();
+        idx.refresh(&dir).unwrap();
+        let st = idx.status(&dir);
+        assert_eq!((st.total, st.queued, st.done()), (3, 3, 0));
+        spool.drain(2).unwrap();
+        idx.refresh(&dir).unwrap();
+        let st = idx.status(&dir);
+        assert_eq!((st.total, st.done_ok), (3, 3));
+        assert!(idx.pending_ids().is_empty());
+        // done-ok entries drop their embedded experiment
+        assert!(idx.jobs[&ids[0]].experiment.is_none());
+        // compact + archive: the fully ingested ledger moves aside and
+        // the snapshot alone still answers queries
+        idx.save(&dir).unwrap();
+        assert!(compact(&dir, "camp", true).unwrap());
+        assert!(!ledger_path(&dir, "camp").exists());
+        let mut idx2 = CampaignIndex::load(&dir, "camp").unwrap();
+        idx2.refresh(&dir).unwrap();
+        assert_eq!(idx2.job_ids(), ids);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_index_resyncs_across_archive_via_generation_marker() {
+        let dir = tmpdir("genmark");
+        std::fs::create_dir_all(&dir).unwrap();
+        append(&dir, "camp", &[sample_fact(EventKind::Submitted, "a", 0)]).unwrap();
+        // a long-lived reader folds the first fact and keeps its cursor
+        let mut stale = CampaignIndex::load(&dir, "camp").unwrap();
+        stale.refresh(&dir).unwrap();
+        let old_cursor = stale.ledger_bytes;
+        assert!(old_cursor > 0);
+        // compaction archives the log behind the reader's back...
+        assert!(compact(&dir, "camp", true).unwrap());
+        // ...and enough new facts land that the recreated log grows
+        // PAST the old cursor — the case a length check cannot detect
+        let fresh: Vec<Event> = (0..8)
+            .map(|i| sample_fact(EventKind::Submitted, &format!("post{i}"), 1 + i))
+            .collect();
+        append(&dir, "camp", &fresh).unwrap();
+        assert!(std::fs::metadata(ledger_path(&dir, "camp")).unwrap().len() > old_cursor);
+        stale.refresh(&dir).unwrap();
+        let mut want = vec!["a".to_string()];
+        want.extend((0..8).map(|i| format!("post{i}")));
+        assert_eq!(stale.job_ids(), want, "every fact seen exactly once across the archive");
+        assert_eq!(stale.generation, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_refuses_archive_with_unread_appends() {
+        let dir = tmpdir("compactref");
+        std::fs::create_dir_all(&dir).unwrap();
+        append(&dir, "camp", &[sample_fact(EventKind::Submitted, "a", 0)]).unwrap();
+        // compact folds everything → archivable
+        let mut idx = CampaignIndex::load(&dir, "camp").unwrap();
+        idx.refresh(&dir).unwrap();
+        idx.save(&dir).unwrap();
+        // a new append lands after the snapshot: archive must refuse
+        append(&dir, "camp", &[sample_fact(EventKind::Submitted, "b", 1)]).unwrap();
+        std::fs::create_dir_all(dir.join("queue")).unwrap();
+        std::fs::create_dir_all(dir.join("running")).unwrap();
+        std::fs::create_dir_all(dir.join("done")).unwrap();
+        // (compact() itself re-refreshes, so it *will* ingest the new
+        // fact and then archive; simulate a stale-snapshot archiver by
+        // checking the guard directly)
+        let size = std::fs::metadata(ledger_path(&dir, "camp")).unwrap().len();
+        assert!(idx.ledger_bytes < size, "stale cursor must differ from file size");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -12,11 +12,13 @@ pub mod plot;
 pub mod io;
 pub mod lease;
 pub mod campaign;
+pub mod ledger;
 pub mod submit;
 
 pub use campaign::{CampaignManifest, CampaignStatus, ManifestEntry, Stamp, StampOutcome};
 pub use experiment::{Call, CallArg, DataGen, Experiment, RangeDef, Vary};
 pub use lease::{FenceReason, Lease, PublishOutcome, SpoolStatus};
+pub use ledger::{CampaignIndex, JobEntry, RetryOutcome};
 pub use plot::Figure;
 pub use report::{Metric, PointResult, Report};
 pub use stats::Stat;

@@ -132,27 +132,19 @@ pub struct Spooler {
     /// ([`Spooler::try_claim`]). Entries may be stale — each claim
     /// re-checks the job under its per-job lease lock.
     claim_batch: Arc<Mutex<VecDeque<String>>>,
-    /// Amortized cross-process backpressure accounting: the live-lease
-    /// count at the last full `<spool>/leases/` scan plus the leases
-    /// this handle (and its clones) wrote since. While the estimate is
-    /// safely under the cap the per-claim scan is skipped; a claim is
-    /// only ever *refused* after a fresh scan
-    /// ([`Spooler::disk_leases_at_cap`]).
-    lease_estimate: Arc<Mutex<LeaseEstimate>>,
 }
 
-/// Cross-process live-lease accounting between full scans of
-/// `<spool>/leases/` (see [`Spooler::disk_leases_at_cap`]).
-#[derive(Debug, Default)]
-struct LeaseEstimate {
-    /// Whether `scanned` reflects a completed scan of this spool.
-    valid: bool,
-    /// Live leases held by this host at the last scan.
-    scanned: usize,
-    /// Leases written by this handle and its clones since that scan
-    /// (releases are not tracked — they only make the estimate an
-    /// over-count, which triggers a fresh scan, never a wrong refusal).
-    created_since: usize,
+/// Why [`Spooler::claim_candidate`] did not produce a claim.
+enum CandidateOutcome {
+    /// The candidate was claimed and leased.
+    Claimed(ClaimedJob),
+    /// The candidate is no longer claimable (another worker took it
+    /// since the scan) — move on to the next one.
+    Gone,
+    /// This host's live leases (counting every process) are at the
+    /// `max_leases` cap, proven by a fresh scan under the host cap
+    /// lock. No lease was written.
+    AtCap,
 }
 
 impl Spooler {
@@ -185,7 +177,6 @@ impl Spooler {
             events,
             verbose: false,
             claim_batch: Arc::new(Mutex::new(VecDeque::new())),
-            lease_estimate: Arc::new(Mutex::new(LeaseEstimate::default())),
         })
     }
 
@@ -241,10 +232,12 @@ impl Spooler {
     /// Cap the number of live leases this host may hold at once (the
     /// `elaps worker --max-leases` backpressure). `0` removes the cap.
     /// Worker-pool clones of this handle share one slot counter, so
-    /// enforcement within a daemon is exact; other processes on the
-    /// same host are throttled via the on-disk live-lease count (a
-    /// check-then-claim, so momentary overshoot across *processes* is
-    /// possible — run one daemon per host for a hard cap).
+    /// enforcement within a daemon is cheap and exact; *across*
+    /// processes every lease write runs under the host's on-disk cap
+    /// lock against a shared counter, resynced by a fresh lease scan
+    /// whenever it cannot prove the cap — so an observer scanning
+    /// `<spool>/leases/` never counts more than `max` live leases for
+    /// this host, no matter how many capped processes share it.
     pub fn with_max_leases(mut self, max: usize) -> Spooler {
         self.max_leases = if max == 0 { None } else { Some(max) };
         self
@@ -358,16 +351,13 @@ impl Spooler {
                         Err(seen) => cur = seen,
                     }
                 }
-                let guard = SlotGuard {
+                // the cross-process arm of the cap — leases of this
+                // host written by other processes, or left behind by a
+                // crashed claim — is checked under the host cap lock at
+                // lease-write time in claim_candidate
+                Some(SlotGuard {
                     _release: Arc::new(SlotRelease { held: self.slots_held.clone() }),
-                };
-                // then the on-disk count: leases of this host written
-                // by other processes (or left behind by a crashed
-                // claim) also occupy capacity until they expire
-                if self.disk_leases_at_cap(cap)? {
-                    return at_capacity(self); // guard drops
-                }
-                Some(guard)
+                })
             }
         };
         // Drain the shared candidate batch; rescan the queue only when
@@ -384,8 +374,17 @@ impl Spooler {
                 refilled = true;
                 continue;
             };
-            if let Some(claimed) = self.claim_candidate(&job_id, &mut pause)? {
-                return Ok(ClaimOutcome::Claimed(ClaimedJob { _slot: slot, ..claimed }));
+            match self.claim_candidate(&job_id, &mut pause)? {
+                CandidateOutcome::Claimed(claimed) => {
+                    return Ok(ClaimOutcome::Claimed(ClaimedJob { _slot: slot, ..claimed }));
+                }
+                CandidateOutcome::Gone => {}
+                CandidateOutcome::AtCap => {
+                    // the candidate was not consumed — put it back for
+                    // whoever claims once capacity frees up
+                    self.claim_batch.lock().unwrap().push_front(job_id);
+                    return at_capacity(self);
+                }
             }
         }
     }
@@ -411,18 +410,19 @@ impl Spooler {
         Ok(!batch.is_empty())
     }
 
-    /// Try to claim one scanned candidate; `None` (not an error) when
-    /// the job is no longer claimable — another worker took it since
-    /// the scan. All on-disk steps run under the job's lease lock, and
-    /// the lease is written before the queue→running rename: any job
-    /// visible in `running/` already has a lease, and a lease written
-    /// here is withdrawn if the rename is lost to a claimer outside the
-    /// lock (an older binary sharing the spool).
+    /// Try to claim one scanned candidate; [`CandidateOutcome::Gone`]
+    /// (not an error) when the job is no longer claimable — another
+    /// worker took it since the scan. All on-disk steps run under the
+    /// job's lease lock, and the lease is written before the
+    /// queue→running rename: any job visible in `running/` already has
+    /// a lease, and a lease written here is withdrawn if the rename is
+    /// lost to a claimer outside the lock (an older binary sharing the
+    /// spool).
     fn claim_candidate<F: FnOnce(&str)>(
         &self,
         job_id: &str,
         pause: &mut Option<F>,
-    ) -> Result<Option<ClaimedJob>> {
+    ) -> Result<CandidateOutcome> {
         let queued = self.dir.join("queue").join(format!("{job_id}.json"));
         let running = self.dir.join("running").join(format!("{job_id}.json"));
         let lock = lease::lock_job(&self.dir, job_id)?;
@@ -431,7 +431,7 @@ impl Spooler {
         // lease of a job some other worker is already running would
         // fence that worker for nothing.
         if !queued.exists() {
-            return Ok(None);
+            return Ok(CandidateOutcome::Gone);
         }
         // Acquire the lease. The epoch chains across the job's whole
         // claim history (the previous lease file is left in place by
@@ -445,8 +445,23 @@ impl Spooler {
             epoch,
             expires_unix: lease::now_unix() + self.ttl.as_secs_f64(),
         };
+        // Cross-process arm of the `max_leases` cap, taken *before* the
+        // lease write it guards: under the host cap lock, prove the cap
+        // via the shared counter (cheap) or a fresh lease scan (when
+        // the counter cannot prove it), and record the write. Holding
+        // the cap lock across the lease write keeps the counter an
+        // upper bound on this host's live leases at every instant, so
+        // an observer never counts more than `cap` — regardless of how
+        // many capped processes share the host.
+        let cap_guard = match self.max_leases {
+            None => None,
+            Some(cap) => match self.cap_acquire(cap)? {
+                Some(guard) => Some(guard),
+                None => return Ok(CandidateOutcome::AtCap),
+            },
+        };
         lease::write(&self.dir, &l)?;
-        self.lease_estimate.lock().unwrap().created_since += 1;
+        drop(cap_guard);
         if let Some(pause) = pause.take() {
             pause(job_id);
         }
@@ -459,8 +474,9 @@ impl Spooler {
                 // re-written it already.
                 if lease::read(&self.dir, job_id).as_ref() == Some(&l) {
                     lease::remove(&self.dir, job_id)?;
+                    self.cap_release();
                 }
-                return Ok(None);
+                return Ok(CandidateOutcome::Gone);
             }
             Err(e) => return Err(e.into()),
         }
@@ -468,11 +484,11 @@ impl Spooler {
         let text = match std::fs::read_to_string(&running) {
             Ok(text) => text,
             // a concurrent recover_stale requeued it already
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(CandidateOutcome::Gone),
             Err(e) => return Err(e.into()),
         };
         self.events.emit(EventKind::Claimed, job_id, epoch, &[]);
-        Ok(Some(ClaimedJob {
+        Ok(CandidateOutcome::Claimed(ClaimedJob {
             job_id: job_id.to_string(),
             lease: l,
             running,
@@ -481,30 +497,73 @@ impl Spooler {
         }))
     }
 
-    /// Cross-process arm of the backpressure check: has this host's
-    /// on-disk live-lease count reached `cap`? The full
-    /// `<spool>/leases/` scan is amortized: between scans the count is
-    /// estimated as `last scan + leases written since` — an upper bound
-    /// until a lease is released, and releases only make it more of an
-    /// over-count — and a claim is only ever *refused* after a fresh
-    /// scan confirms the cap, so a stale estimate can trigger an extra
-    /// scan but never a spurious Backpressured. Leases written by
-    /// *other* processes between scans widen the documented momentary
-    /// cross-process overshoot window; in-daemon enforcement stays
-    /// exact via the slot counter.
-    fn disk_leases_at_cap(&self, cap: usize) -> Result<bool> {
-        {
-            let est = self.lease_estimate.lock().unwrap();
-            if est.valid && est.scanned + est.created_since < cap {
-                return Ok(false);
+    /// This host's cap-lock and cap-counter sidecars in
+    /// `<spool>/leases/`. Dot-prefixed and non-`.json`, so every lease
+    /// scan ignores them.
+    fn cap_paths(&self) -> (PathBuf, PathBuf) {
+        let dir = self.dir.join("leases");
+        (
+            dir.join(format!(".cap-{}.lock", self.host)),
+            dir.join(format!(".cap-{}.count", self.host)),
+        )
+    }
+
+    /// Take the host cap lock and prove there is room for one more
+    /// lease: `None` if this host's live leases (across all processes)
+    /// are at `cap` — proven by a fresh `<spool>/leases/` scan, never
+    /// by the counter alone, so a drifted counter can cost a scan but
+    /// never a wrong refusal. On success the counter is advanced past
+    /// the upcoming lease write and the held lock is returned; the
+    /// caller writes the lease, then drops the lock.
+    ///
+    /// The counter only ever over-counts: a crash between the counter
+    /// write and the lease write (or a lease expiring away without its
+    /// holder) strands an increment, which the next at-cap scan
+    /// resyncs. An under-count — the direction that would let an
+    /// observer see `cap + 1` — would need a decrement without a
+    /// removed lease, and [`Spooler::cap_release`] decrements only
+    /// after removing one.
+    fn cap_acquire(&self, cap: usize) -> Result<Option<lease::JobLock>> {
+        let (lock_path, count_path) = self.cap_paths();
+        let guard = lease::flock_path(&lock_path, false)?;
+        let counted = std::fs::read_to_string(&count_path)
+            .ok()
+            .and_then(|t| t.trim().parse::<usize>().ok());
+        let live = match counted {
+            Some(n) if n < cap => n,
+            // missing, unparsable, or cannot prove room: fresh scan
+            _ => {
+                let fresh = lease::live_leases_for_host(&self.dir, &self.host)?;
+                if fresh >= cap {
+                    let _ = std::fs::write(&count_path, fresh.to_string());
+                    return Ok(None);
+                }
+                fresh
             }
+        };
+        std::fs::write(&count_path, (live + 1).to_string())?;
+        Ok(Some(guard))
+    }
+
+    /// Decrement the host cap counter after removing one of this
+    /// host's live leases. A missing or unparsable counter is left
+    /// alone — the next at-cap scan resyncs it; guessing here could
+    /// under-count, which is the one direction that would break the
+    /// observer-visible cap.
+    fn cap_release(&self) {
+        if self.max_leases.is_none() {
+            return;
         }
-        let fresh = lease::live_leases_for_host(&self.dir, &self.host)?;
-        let mut est = self.lease_estimate.lock().unwrap();
-        est.valid = true;
-        est.scanned = fresh;
-        est.created_since = 0;
-        Ok(fresh >= cap)
+        let (lock_path, count_path) = self.cap_paths();
+        let Ok(_guard) = lease::flock_path(&lock_path, false) else {
+            return;
+        };
+        if let Some(n) = std::fs::read_to_string(&count_path)
+            .ok()
+            .and_then(|t| t.trim().parse::<usize>().ok())
+        {
+            let _ = std::fs::write(&count_path, n.saturating_sub(1).to_string());
+        }
     }
 
     /// [`Spooler::try_claim`] flattened to an `Option`: `None` covers
@@ -615,16 +674,16 @@ impl Spooler {
             .is_some_and(|l| {
                 l.worker_id == claim.lease.worker_id && l.epoch == claim.lease.epoch
             });
+        let outcome = match crate::util::json::Json::parse(payload) {
+            Ok(j) if j.get("error").is_null() => StampOutcome::Ok,
+            _ => StampOutcome::Error,
+        };
         if still_ours {
             // Stamp sidecar: the O(#jobs) index over done reports that
             // `spool status` and campaign-level wait read instead of
             // the report bodies. Written right after the report (a
             // crash in between leaves a report with "(unknown)"
             // provenance, never a stamp without its report).
-            let outcome = match crate::util::json::Json::parse(payload) {
-                Ok(j) if j.get("error").is_null() => StampOutcome::Ok,
-                _ => StampOutcome::Error,
-            };
             campaign::write_stamp(
                 &self.dir,
                 &Stamp {
@@ -644,8 +703,14 @@ impl Spooler {
                 Err(e) => return Err(e.into()),
             }
             lease::remove(&self.dir, &claim.job_id)?;
+            self.cap_release();
         }
-        self.events.emit(EventKind::Published, &claim.job_id, claim.lease.epoch, &[]);
+        self.events.emit(
+            EventKind::Published,
+            &claim.job_id,
+            claim.lease.epoch,
+            &[("outcome", outcome.as_str().into())],
+        );
         Ok(PublishOutcome::Published)
     }
 
@@ -817,8 +882,29 @@ impl Spooler {
     /// executions publish complete reports atomically and the zombie's
     /// is fenced out, so readers still see exactly one report.
     pub fn recover_stale(&self, legacy_max_age: Duration) -> Result<usize> {
+        self.recover_stale_impl(legacy_max_age, |_| {})
+    }
+
+    /// [`Spooler::recover_stale`] with a fault-injection hook fired per
+    /// candidate, between the unlocked staleness pre-check and the
+    /// locked re-verify — the window where an unserialized reclaimer
+    /// historically raced a concurrent reclaim + re-claim and stole the
+    /// successor's live claim. Tests pause a reclaimer there.
+    #[doc(hidden)]
+    pub fn recover_stale_with_pause(
+        &self,
+        legacy_max_age: Duration,
+        pause: impl FnMut(&str),
+    ) -> Result<usize> {
+        self.recover_stale_impl(legacy_max_age, pause)
+    }
+
+    fn recover_stale_impl(
+        &self,
+        legacy_max_age: Duration,
+        mut pause: impl FnMut(&str),
+    ) -> Result<usize> {
         let running = self.dir.join("running");
-        let now = lease::now_unix();
         let mut recovered = 0;
         for entry in std::fs::read_dir(&running)?.filter_map(|e| e.ok()) {
             let path = entry.path();
@@ -826,22 +912,22 @@ impl Spooler {
                 continue;
             }
             let job_id = path_job_id(&path);
-            let stale = match lease::read(&self.dir, &job_id) {
-                // leased claim: absolute expiry, mtimes are irrelevant
-                Some(l) => l.expired_at(now),
-                // legacy claim: fall back to the old mtime heuristic.
-                // Only a readable, past timestamp older than
-                // legacy_max_age is stale; future-dated mtimes (clock
-                // skew) and unreadable metadata count as fresh so live
-                // jobs are never stolen on a hiccup.
-                None => entry
-                    .metadata()
-                    .ok()
-                    .and_then(|m| m.modified().ok())
-                    .and_then(|t| t.elapsed().ok())
-                    .is_some_and(|age| age >= legacy_max_age),
-            };
-            if !stale {
+            // Unlocked pre-check: skip obviously live claims without
+            // touching their job lock. Anything that looks stale is
+            // re-verified under the lock below — this check alone
+            // proves nothing, because a reclaim + fresh claim can land
+            // between it and the rename.
+            if !self.claim_is_stale(&entry, &job_id, legacy_max_age) {
+                continue;
+            }
+            pause(&job_id);
+            // Re-verify under the job's lease lock, like every other
+            // lease read-modify-write: a merely-paused legacy claimer
+            // whose job a concurrent reclaimer already requeued (and a
+            // fresh worker re-claimed) must not be "reclaimed" again —
+            // the claim in running/ now belongs to the new holder.
+            let _lock = lease::lock_job(&self.dir, &job_id)?;
+            if !self.claim_is_stale(&entry, &job_id, legacy_max_age) {
                 continue;
             }
             let dest = self.dir.join("queue").join(path.file_name().unwrap());
@@ -854,6 +940,36 @@ impl Spooler {
             }
         }
         Ok(recovered)
+    }
+
+    /// Whether one `running/` claim is reclaimable *right now*: a
+    /// leased claim whose lease has expired, or a legacy (lease-less)
+    /// claim whose file mtime — re-stat'd on every call, never cached
+    /// across a lock acquisition — is older than `legacy_max_age`.
+    /// Only a readable, past timestamp counts as stale; future-dated
+    /// mtimes (clock skew), unreadable metadata, and a vanished claim
+    /// file all count as fresh so live jobs are never stolen on a
+    /// hiccup.
+    fn claim_is_stale(
+        &self,
+        entry: &std::fs::DirEntry,
+        job_id: &str,
+        legacy_max_age: Duration,
+    ) -> bool {
+        match lease::read(&self.dir, job_id) {
+            // leased claim: absolute expiry, mtimes are irrelevant
+            Some(l) => l.expired_at(lease::now_unix()),
+            // legacy claim: the old mtime heuristic, from fresh
+            // metadata (a re-claim's rename into running/ updates the
+            // claim's identity; its mtime reflects the new claim file)
+            None => entry
+                .path()
+                .metadata()
+                .ok()
+                .and_then(|m| m.modified().ok())
+                .and_then(|t| t.elapsed().ok())
+                .is_some_and(|age| age >= legacy_max_age),
+        }
     }
 
     /// [`Spooler::recover_stale`] restricted to the lease protocol:

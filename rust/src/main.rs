@@ -14,7 +14,10 @@
 //!   cache stats|gc|clear  result-cache lifecycle (sizes, LRU eviction)
 //!   sampler               stdin/stdout sampler (the paper's §3.1 tool)
 //!   worker --spool <dir>  lease-based batch-queue worker daemon
+//!   retry                 resubmit a campaign's error jobs exactly once
 //!   spool status          queued/leased/done per host for a spool dir
+//!   spool dead-letter     list a campaign's dead-lettered jobs
+//!   spool compact         fold a campaign ledger into its index snapshot
 //!   analyze               latency/throughput/cache/audit over a spool's
 //!                         job-lifecycle event log
 //!   kernels               list the kernel signature database
@@ -26,7 +29,7 @@
 //! serves hits only from entries measured without contention (jobs ≤ 1).
 
 use anyhow::{anyhow, bail, Context, Result};
-use elaps::coordinator::{campaign, io, Metric, Spooler, Stat};
+use elaps::coordinator::{campaign, io, ledger, Metric, Spooler, Stat};
 use elaps::engine::{Engine, EngineConfig};
 use elaps::perfmodel::MachineModel;
 use elaps::sampler::Sampler;
@@ -43,7 +46,10 @@ USAGE:
   elaps batch <exp.json>… [--jobs N] [--cache DIR] [--out-dir batch_out]
   elaps submit <exp-or-manifest.json>… [--campaign TAG] [--spool DIR]
   elaps wait [JOB_ID…] [--campaign TAG] [--timeout DUR] [--spool DIR]
+             [--no-ledger]
   elaps fetch [JOB_ID…] [--campaign TAG] [--out-dir fetched] [--spool DIR]
+             [--no-ledger]
+  elaps retry --campaign TAG [--max-attempts N] [--spool DIR]
   elaps view <report.json> [--metric M] [--stat S]
   elaps plot <report.json> [--metric M] [--stat S] [--svg out.svg]
   elaps figures [T1 F1 F2 … W1|all] [--full] [--jobs N] [--cache DIR]
@@ -54,7 +60,9 @@ USAGE:
   elaps sampler [--library L] [--machine M]
   elaps worker --spool DIR [--once] [--workers N] [--lease-ttl DUR]
                [--max-leases N] [--recover SECS|0=off] [--verbose]
-  elaps spool status [--spool DIR] [--json]
+  elaps spool status [--spool DIR] [--json] [--no-ledger]
+  elaps spool dead-letter --campaign TAG [--spool DIR] [--json]
+  elaps spool compact --campaign TAG [--archive] [--spool DIR]
   elaps analyze [--campaign TAG] [--spool DIR] [--json]
   elaps bench [SUITE…] [--quick] [--out DIR]
   elaps kernels
@@ -78,12 +86,26 @@ stats:   min max avg med std
                --warm and --jobs are byte-identical (env ELAPS_SEED)
 --max-bytes N  cache gc byte budget; K/M/G suffixes are powers of 1024
 --max-age DUR  cache gc age cutoff by store time: N[s|m|h|d], e.g. 7d
---campaign TAG address jobs as a named campaign: submit records the job
-               ids under <spool>/campaigns/<TAG>.json; wait and fetch
-               then take the tag instead of individual job ids. A
-               manifest file {\"campaign\": TAG, \"experiments\": [...]}
-               submits a whole campaign in one call (entries are paths
-               resolved relative to the manifest, or inline experiments)
+--campaign TAG address jobs as a named campaign: submit appends the
+               jobs to the campaign ledger <spool>/ledger/<TAG>.log
+               (with --no-ledger: records ids under
+               <spool>/campaigns/<TAG>.json); wait and fetch then take
+               the tag instead of individual job ids. A manifest file
+               {\"campaign\": TAG, \"experiments\": [...]} submits a
+               whole campaign in one call (entries are paths resolved
+               relative to the manifest, or inline experiments)
+--no-ledger    submit: record the campaign in the flock-merged record
+               file instead of the ledger; wait/fetch/spool status:
+               answer from directory scans instead of the ledger index.
+               Both paths yield identical results — the ledger is the
+               O(changed-since-snapshot) fast path, not a different
+               answer
+--max-attempts retry: per-chain attempt budget, counting the original
+               submission (default 3). An error job already at the
+               budget is dead-lettered instead of resubmitted
+--archive      spool compact: additionally move a fully folded ledger
+               to <spool>/ledger/archive/<TAG>.log (refused, not an
+               error, while unread appends remain)
 --timeout DUR  wait deadline, N[s|m|h|d] (default 10m). Waiting is
                O(#jobs) per poll: report existence + stamp sidecars
                (a report body is read only as the outcome fallback for
@@ -145,6 +167,8 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
             "trusted-only",
             "warm",
             "no-events",
+            "no-ledger",
+            "archive",
             "verbose",
             "json",
             "quick",
@@ -162,6 +186,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "cache" => cmd_cache(&args),
         "sampler" => cmd_sampler(&args),
         "worker" => cmd_worker(&args),
+        "retry" => cmd_retry(&args),
         "spool" => cmd_spool(&args),
         "analyze" => cmd_analyze(&args),
         "bench" => cmd_bench(&args),
@@ -377,7 +402,14 @@ fn cmd_submit(args: &Args) -> Result<()> {
             let exp = io::experiment_from_json(&j).with_context(|| path.clone())?;
             (override_tag.map(String::from), vec![exp])
         };
-        let ids = campaign::submit_experiments(&spool, tag.as_deref(), &exps)?;
+        // campaigns default to the ledger (append-only canonical
+        // store); --no-ledger keeps the flock-merged record file
+        let ids = match &tag {
+            Some(t) if !args.flag("no-ledger") => {
+                ledger::submit_experiments(&spool, t, &exps)?
+            }
+            _ => campaign::submit_experiments(&spool, tag.as_deref(), &exps)?,
+        };
         for id in &ids {
             println!("{id}");
         }
@@ -411,7 +443,7 @@ fn jobs_from_args(args: &Args, spool: &std::path::Path) -> Result<Vec<String>> {
         }
     }
     if let Some(tag) = args.opt("campaign") {
-        for id in campaign::campaign_jobs(spool, tag)? {
+        for id in ledger::campaign_jobs_resolved(spool, tag, !args.flag("no-ledger"))? {
             if seen.insert(id.clone()) {
                 ids.push(id);
             }
@@ -423,12 +455,71 @@ fn jobs_from_args(args: &Args, spool: &std::path::Path) -> Result<Vec<String>> {
     Ok(ids)
 }
 
+/// Print one finished job's outcome line — the shared format of the
+/// stamp path and the ledger path, byte-identical between them — and
+/// bucket the result. A job whose outcome is unknown (no stamp, or a
+/// ledger entry folded without one) falls back to probing its report
+/// body, so an error report still fails the wait either way.
+fn print_outcome_line(
+    dir: &std::path::Path,
+    id: &str,
+    known: Option<(elaps::coordinator::StampOutcome, &str, &str, u64)>,
+    ok: &mut usize,
+    errors: &mut usize,
+    unknown: &mut usize,
+) {
+    use elaps::coordinator::StampOutcome;
+    match known {
+        Some((outcome, host, worker, epoch)) => {
+            println!(
+                "{id}  {} (host {host}, worker {worker}, epoch {epoch})",
+                outcome.as_str()
+            );
+            match outcome {
+                StampOutcome::Ok => *ok += 1,
+                StampOutcome::Error => *errors += 1,
+            }
+        }
+        None => {
+            let body_error = std::fs::read_to_string(
+                dir.join("done").join(format!("{id}.report.json")),
+            )
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .map(|j| !j.get("error").is_null());
+            match body_error {
+                Some(true) => {
+                    println!("{id}  error (no stamp; outcome from report body)");
+                    *errors += 1;
+                }
+                Some(false) => {
+                    println!("{id}  ok (no stamp; outcome from report body)");
+                    *ok += 1;
+                }
+                None => {
+                    println!("{id}  done (no stamp, unreadable report: outcome unknown)");
+                    *unknown += 1;
+                }
+            }
+        }
+    }
+}
+
 /// `elaps wait`: block until every addressed job has published,
-/// polling with jittered backoff. O(#jobs) per poll and O(#jobs) for
-/// the final outcome summary — report existence checks and stamp
-/// sidecars only, never a report body.
+/// polling with jittered backoff. The file-backed path is O(#jobs) per
+/// poll (report existence checks and stamp sidecars only, never a
+/// report body); a ledger-backed campaign polls only the jobs its
+/// index has not yet seen done — O(changed-since-snapshot).
 fn cmd_wait(args: &Args) -> Result<()> {
     let spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    if let Some(tag) = args.opt("campaign") {
+        if args.positional.is_empty()
+            && !args.flag("no-ledger")
+            && ledger::has_ledger(&spool.dir, tag)
+        {
+            return cmd_wait_ledger(args, &spool, tag);
+        }
+    }
     let ids = jobs_from_args(args, &spool.dir)?;
     let timeout = args
         .opt_duration_strict("timeout")
@@ -444,47 +535,11 @@ fn cmd_wait(args: &Args) -> Result<()> {
     // this point, so the summary needs no further probing)
     let (mut ok, mut errors, mut unknown) = (0usize, 0usize, 0usize);
     for id in &ids {
-        match campaign::read_stamp(&spool.dir, id) {
-            Some(s) => {
-                println!(
-                    "{id}  {} (host {}, worker {}, epoch {})",
-                    s.outcome.as_str(),
-                    s.host,
-                    s.worker,
-                    s.epoch
-                );
-                match s.outcome {
-                    elaps::coordinator::StampOutcome::Ok => ok += 1,
-                    elaps::coordinator::StampOutcome::Error => errors += 1,
-                }
-            }
-            None => {
-                // stamp missing (a pre-stamp worker, or a crash in the
-                // report→stamp window): fall back to probing this one
-                // report's body, so an error report still fails the
-                // wait — the O(#jobs) guarantee holds for stamped jobs
-                let body_error = std::fs::read_to_string(
-                    spool.dir.join("done").join(format!("{id}.report.json")),
-                )
-                .ok()
-                .and_then(|text| Json::parse(&text).ok())
-                .map(|j| !j.get("error").is_null());
-                match body_error {
-                    Some(true) => {
-                        println!("{id}  error (no stamp; outcome from report body)");
-                        errors += 1;
-                    }
-                    Some(false) => {
-                        println!("{id}  ok (no stamp; outcome from report body)");
-                        ok += 1;
-                    }
-                    None => {
-                        println!("{id}  done (no stamp, unreadable report: outcome unknown)");
-                        unknown += 1;
-                    }
-                }
-            }
-        }
+        let stamp = campaign::read_stamp(&spool.dir, id);
+        let known = stamp
+            .as_ref()
+            .map(|s| (s.outcome, s.host.as_str(), s.worker.as_str(), s.epoch));
+        print_outcome_line(&spool.dir, id, known, &mut ok, &mut errors, &mut unknown);
     }
     if let Some(tag) = args.opt("campaign") {
         let st = elaps::coordinator::CampaignStatus {
@@ -499,6 +554,94 @@ fn cmd_wait(args: &Args) -> Result<()> {
     if errors > 0 {
         bail!("{errors} of {} job(s) published error reports", ids.len());
     }
+    Ok(())
+}
+
+/// The ledger-backed arm of [`cmd_wait`]: jobs and outcomes come from
+/// the campaign index, so only the still-pending jobs are polled and
+/// the final summary costs zero per-job I/O for everything the
+/// snapshot already saw done. Output is byte-identical to the
+/// file-backed arm — same outcome lines, same summary.
+fn cmd_wait_ledger(args: &Args, spool: &Spooler, tag: &str) -> Result<()> {
+    let timeout = args
+        .opt_duration_strict("timeout")
+        .map_err(|e| anyhow!(e))?
+        .unwrap_or(std::time::Duration::from_secs(600));
+    let mut idx = ledger::CampaignIndex::load(&spool.dir, tag)?;
+    idx.refresh(&spool.dir)?;
+    if idx.job_ids().is_empty() {
+        bail!("nothing to address: pass job ids or --campaign TAG");
+    }
+    let pending = idx.pending_ids();
+    if let Err(e) = spool.wait_many(&pending, timeout) {
+        idx.refresh(&spool.dir)?;
+        let _ = idx.save(&spool.dir);
+        eprint!("{}", idx.status(&spool.dir).render(tag));
+        return Err(e);
+    }
+    idx.refresh(&spool.dir)?;
+    idx.save(&spool.dir)?;
+    let ids = idx.job_ids();
+    let (mut ok, mut errors, mut unknown) = (0usize, 0usize, 0usize);
+    for id in &ids {
+        let known = idx.jobs.get(id).and_then(|e| {
+            e.outcome
+                .map(|o| (o, e.host.as_str(), e.worker.as_str(), e.epoch))
+        });
+        print_outcome_line(&spool.dir, id, known, &mut ok, &mut errors, &mut unknown);
+    }
+    let st = elaps::coordinator::CampaignStatus {
+        total: ids.len(),
+        done_ok: ok,
+        done_error: errors,
+        done_unknown: unknown,
+        ..Default::default()
+    };
+    print!("{}", st.render(tag));
+    if errors > 0 {
+        bail!("{errors} of {} job(s) published error reports", ids.len());
+    }
+    Ok(())
+}
+
+/// `elaps retry`: resubmit every error-stamped job of a ledger-backed
+/// campaign exactly once (durably — a `retried` ledger fact marks the
+/// failure as replaced, so a second invocation is a no-op), printing
+/// the new job ids on stdout like `elaps submit`. Failures whose retry
+/// chain is at the attempt budget are dead-lettered instead.
+fn cmd_retry(args: &Args) -> Result<()> {
+    if args.flag("campaign") {
+        bail!("--campaign requires a tag");
+    }
+    let Some(tag) = args.opt("campaign") else {
+        bail!("usage: elaps retry --campaign TAG [--max-attempts N] [--spool DIR]");
+    };
+    let mut spool = Spooler::new(args.opt_or("spool", ".elaps-spool"))?;
+    if args.flag("no-events") {
+        spool = spool.with_events(false);
+    }
+    let max_attempts = match args.opt_usize_strict("max-attempts").map_err(|e| anyhow!(e))? {
+        Some(0) => bail!("--max-attempts must be ≥ 1"),
+        Some(n) => n as u64,
+        None => ledger::DEFAULT_MAX_ATTEMPTS,
+    };
+    let out = ledger::retry_errors(&spool, tag, max_attempts)?;
+    for (old, new) in &out.resubmitted {
+        println!("{new}");
+        eprintln!("retrying {old} as {new}");
+    }
+    for id in &out.dead_lettered {
+        eprintln!("dead-lettered {id} (attempt budget {max_attempts} exhausted)");
+    }
+    for id in &out.unrecoverable {
+        eprintln!("cannot retry {id}: no experiment recorded in the ledger");
+    }
+    eprintln!(
+        "campaign '{tag}': {} resubmitted, {} dead-lettered, {} unrecoverable",
+        out.resubmitted.len(),
+        out.dead_lettered.len(),
+        out.unrecoverable.len()
+    );
     Ok(())
 }
 
@@ -775,18 +918,30 @@ fn cmd_worker(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `elaps spool status`: queued/leased/done counts for a spool
-/// directory, with the per-host lease and provenance breakdown.
+/// The `elaps spool {status,dead-letter,compact}` subcommands.
+/// `status`: queued/leased/done counts with the per-host lease and
+/// provenance breakdown — through the incremental ledger status cache
+/// by default, via full directory scans under `--no-ledger` (both
+/// produce identical output). `dead-letter`: a campaign's
+/// dead-lettered jobs. `compact`: fold a campaign ledger into its
+/// index snapshot, optionally archiving it.
 fn cmd_spool(args: &Args) -> Result<()> {
     let sub = args
         .positional
         .first()
         .map(String::as_str)
-        .ok_or_else(|| anyhow!("usage: elaps spool status [--spool DIR]"))?;
+        .ok_or_else(|| anyhow!("usage: elaps spool status|dead-letter|compact …"))?;
+    let dir = std::path::PathBuf::from(args.opt_or("spool", ".elaps-spool"));
+    if args.flag("campaign") {
+        bail!("--campaign requires a tag");
+    }
     match sub {
         "status" => {
-            let dir = std::path::PathBuf::from(args.opt_or("spool", ".elaps-spool"));
-            let st = elaps::coordinator::lease::spool_status(&dir)?;
+            let st = if args.flag("no-ledger") {
+                elaps::coordinator::lease::spool_status(&dir)?
+            } else {
+                ledger::spool_status_ledger(&dir)?
+            };
             if args.flag("json") {
                 println!("{}", st.to_json().to_string_pretty());
             } else {
@@ -794,7 +949,48 @@ fn cmd_spool(args: &Args) -> Result<()> {
                 print!("{}", st.render());
             }
         }
-        other => bail!("unknown spool subcommand '{other}' (expected status)"),
+        "dead-letter" => {
+            let Some(tag) = args.opt("campaign") else {
+                bail!("usage: elaps spool dead-letter --campaign TAG [--spool DIR] [--json]");
+            };
+            let mut idx = ledger::CampaignIndex::load(&dir, tag)?;
+            idx.refresh(&dir)?;
+            let dead = idx.dead_letters();
+            if args.flag("json") {
+                let arr = Json::Arr(dead.iter().map(|e| e.to_json()).collect());
+                println!("{}", arr.to_string_pretty());
+            } else {
+                for e in &dead {
+                    println!(
+                        "{}  attempt {} (retry of {})",
+                        e.job_id,
+                        e.attempt,
+                        e.retry_of.as_deref().unwrap_or("-")
+                    );
+                }
+                eprintln!("{} dead-lettered job(s) in campaign '{tag}'", dead.len());
+            }
+            let _ = idx.save(&dir);
+        }
+        "compact" => {
+            let Some(tag) = args.opt("campaign") else {
+                bail!("usage: elaps spool compact --campaign TAG [--archive] [--spool DIR]");
+            };
+            let archived = ledger::compact(&dir, tag, args.flag("archive"))?;
+            if archived {
+                println!("campaign '{tag}': ledger folded into its snapshot and archived");
+            } else if args.flag("archive") {
+                println!(
+                    "campaign '{tag}': snapshot refreshed; ledger kept (already archived, \
+                     or unread appends remain)"
+                );
+            } else {
+                println!("campaign '{tag}': ledger folded into its snapshot");
+            }
+        }
+        other => {
+            bail!("unknown spool subcommand '{other}' (expected status|dead-letter|compact)")
+        }
     }
     Ok(())
 }

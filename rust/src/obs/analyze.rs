@@ -6,7 +6,6 @@
 //! modeling roadmap (ROADMAP items on `calibrate`/`rank`) builds on.
 
 use super::events::{read_events, Event, EventKind};
-use crate::coordinator::campaign;
 use crate::coordinator::stats::percentile_of_sorted;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
@@ -177,8 +176,14 @@ pub fn analyze(spool: &Path, campaign_tag: Option<&str>) -> Result<Analysis> {
         bail!("{} is not a spool directory (no queue/)", spool.display());
     }
     let scan = read_events(spool);
+    // campaign membership from the ledger index when the campaign has
+    // one (O(changed-since-snapshot)), else from the record file
     let job_filter: Option<BTreeSet<String>> = match campaign_tag {
-        Some(tag) => Some(campaign::campaign_jobs(spool, tag)?.into_iter().collect()),
+        Some(tag) => Some(
+            crate::coordinator::ledger::campaign_jobs_resolved(spool, tag, true)?
+                .into_iter()
+                .collect(),
+        ),
         None => None,
     };
     let in_scope = |ev: &Event| match &job_filter {
@@ -542,7 +547,7 @@ mod tests {
         }
         // register the campaign so --campaign filtering can join
         let ids: Vec<String> = ["job-a", "job-b", "job-c"].iter().map(|s| s.to_string()).collect();
-        campaign::record_jobs(&dir, "camp", &ids).unwrap();
+        crate::coordinator::campaign::record_jobs(&dir, "camp", &ids).unwrap();
         let a = analyze(&dir, Some("camp")).unwrap();
         assert_eq!(a.audit.done, 3);
         assert!(a.audit.ok(), "{:?}", a.audit.violations);

@@ -12,8 +12,9 @@
 //! - `spool`: the per-claim queue scan the batched claim replaced
 //!   (`queue_scan_sorted`, kept as the old-cost reference), the new
 //!   batched claim (solo and under 4-thread contention, with an
-//!   exactly-once check), the locked lease renewal, and the lease /
-//!   stamp directory scans.
+//!   exactly-once check), the locked lease renewal, the lease / stamp
+//!   directory scans, and the ledger-index campaign queries
+//!   (`status_ledger`, `wait_ledger`) those scans are diffed against.
 //! - `obs`: event-log append and read, plus the `LatencySummary`
 //!   single-sort vs the triple `stats::percentile` sort it replaced.
 //! - `sampler`: the sampler inner loop on a tiny kernel — per-call
@@ -292,7 +293,8 @@ fn suite_cache(quick: bool) -> Result<SuiteResult> {
 
 /// Spooler hot paths: the old per-claim queue scan vs the batched
 /// claim, claims under contention (with an exactly-once check), the
-/// locked lease renewal, and the lease / stamp directory scans.
+/// locked lease renewal, the lease / stamp directory scans, and the
+/// ledger-index campaign queries the scans are diffed against.
 fn suite_spool(quick: bool) -> Result<SuiteResult> {
     let dir = bench_dir("spool");
     let spool = Spooler::new(&dir)?.with_ttl(Duration::from_secs(600)).with_events(false);
@@ -422,6 +424,70 @@ fn suite_spool(quick: bool) -> Result<SuiteResult> {
     m.items = Some(jobs);
     note(&m);
     metrics.push(m);
+
+    // Ledger-index campaign queries, next to the scan metrics above
+    // for before/after diffs: a fully drained ledger campaign of the
+    // same size, folded into its snapshot once; `status_ledger` is the
+    // snapshot-path status (load + refresh + fold — zero per-job I/O
+    // for done jobs) and `wait_ledger` the pending-set computation a
+    // campaign wait polls with (instant when everything is done).
+    {
+        use crate::coordinator::ledger;
+        use crate::obs::events::Event;
+        let facts: Vec<Event> = (0..jobs)
+            .map(|i| {
+                let job_id = format!("bench-ledger-{i:06}");
+                let mut ev = Event {
+                    kind: EventKind::Submitted,
+                    job_id: job_id.clone(),
+                    campaign: "bench".into(),
+                    host: spool.host().to_string(),
+                    worker: "bench#0".into(),
+                    epoch: 0,
+                    t_unix_ns: 0,
+                    seq: i as u64,
+                    extra: Default::default(),
+                };
+                ev.extra.insert("attempt".into(), 1u64.into());
+                ev
+            })
+            .collect();
+        ledger::append(&dir, "bench", &facts)?;
+        for i in 0..jobs {
+            let job_id = format!("bench-ledger-{i:06}");
+            std::fs::write(dir.join("done").join(format!("{job_id}.report.json")), "{}")?;
+            campaign::write_stamp(
+                &dir,
+                &Stamp {
+                    job_id,
+                    host: spool.host().to_string(),
+                    worker: "bench#0".to_string(),
+                    epoch: 1,
+                    outcome: StampOutcome::Ok,
+                },
+            )?;
+        }
+        let mut idx = ledger::CampaignIndex::load(&dir, "bench")?;
+        idx.refresh(&dir)?;
+        idx.save(&dir)?;
+        let s = sample_ns(scan_samples, 1, || {
+            let mut idx = ledger::CampaignIndex::load(&dir, "bench").expect("index load");
+            idx.refresh(&dir).expect("index refresh");
+            black_box(idx.status(&dir).done());
+        });
+        let mut m = metric_from("status_ledger", &s, scan_samples);
+        m.items = Some(jobs);
+        note(&m);
+        metrics.push(m);
+        let s = sample_ns(scan_samples, 1, || {
+            let idx = ledger::CampaignIndex::load(&dir, "bench").expect("index load");
+            black_box(idx.pending_ids().len());
+        });
+        let mut m = metric_from("wait_ledger", &s, scan_samples);
+        m.items = Some(jobs);
+        note(&m);
+        metrics.push(m);
+    }
 
     drop(claims);
     let _ = std::fs::remove_dir_all(&dir);

@@ -43,6 +43,15 @@ const CORE_KEYS: [&str; 9] =
 /// | `cache_hit`      | engine cache probe          | `class`, `count`    |
 /// | `cache_miss`     | engine cache probe          | `class`, `count`    |
 /// | `cache_skip`     | engine, no cache configured | `class`, `count`    |
+/// | `retried`        | client (`elaps retry`)      | `of`, `attempt`     |
+/// | `dead_lettered`  | client (`elaps retry`)      | `attempts`          |
+///
+/// `retried` and `dead_lettered` are ledger facts (`elaps retry`
+/// records them in the campaign ledger, not the per-host event logs):
+/// `retried` marks the *new* job id with `of` naming the failed job it
+/// replaces; `dead_lettered` marks a job whose retry chain exhausted
+/// its attempt budget. Both are additions under the compatibility rule
+/// — older readers skip them.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum EventKind {
     Submitted,
@@ -56,6 +65,8 @@ pub enum EventKind {
     CacheHit,
     CacheMiss,
     CacheSkip,
+    Retried,
+    DeadLettered,
 }
 
 /// Every kind, in lifecycle order.
@@ -71,6 +82,8 @@ pub const ALL_EVENT_KINDS: &[EventKind] = &[
     EventKind::CacheHit,
     EventKind::CacheMiss,
     EventKind::CacheSkip,
+    EventKind::Retried,
+    EventKind::DeadLettered,
 ];
 
 impl EventKind {
@@ -87,6 +100,8 @@ impl EventKind {
             EventKind::CacheHit => "cache_hit",
             EventKind::CacheMiss => "cache_miss",
             EventKind::CacheSkip => "cache_skip",
+            EventKind::Retried => "retried",
+            EventKind::DeadLettered => "dead_lettered",
         }
     }
 

@@ -22,6 +22,7 @@
 
 use elaps::coordinator::campaign::{self, StampOutcome};
 use elaps::coordinator::lease;
+use elaps::coordinator::ledger;
 use elaps::coordinator::{io, ClaimOutcome, Experiment, Spooler};
 use elaps::engine::{set_default_config, EngineConfig};
 use elaps::figures::call;
@@ -149,7 +150,10 @@ fn campaign_submit_wait_fetch_roundtrip_is_differential() {
         .collect();
     assert_eq!(ids.len(), 4, "{ids:?}");
     assert_eq!(count_json(&spool_dir, "queue"), 4);
-    assert_eq!(campaign::campaign_jobs(&spool_dir, "camp-rt").unwrap(), ids);
+    // the CLI submit records the campaign in the ledger, not the old
+    // flock'd record file — the resolved job list is identical
+    assert!(ledger::has_ledger(&spool_dir, "camp-rt"));
+    assert_eq!(ledger::campaign_jobs_resolved(&spool_dir, "camp-rt", true).unwrap(), ids);
 
     // two worker daemons on two simulated hosts drain the campaign
     // concurrently, each with a 2-thread pool and the same fixed seed

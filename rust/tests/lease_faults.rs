@@ -374,6 +374,61 @@ fn rename_loser_withdraws_its_own_lease() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+#[test]
+fn legacy_reclaim_is_serialized_against_concurrent_reclaim_and_reclaim() {
+    det_config();
+    let dir = tmpdir("legacyrace");
+    let ttl = Duration::from_secs(30);
+    let a = Spooler::new(&dir).unwrap().with_host("hostA").with_ttl(ttl);
+    let b = Spooler::new(&dir).unwrap().with_host("hostB").with_ttl(ttl);
+    let c = Spooler::new(&dir).unwrap().with_host("hostC").with_ttl(ttl);
+    let exp = small_exp(16);
+    let id = a.submit(&exp).unwrap();
+    // a legacy claim: a pre-lease worker moved the job into running/
+    // without writing any lease — only the mtime heuristic can judge it
+    std::fs::rename(
+        dir.join("queue").join(format!("{id}.json")),
+        dir.join("running").join(format!("{id}.json")),
+    )
+    .unwrap();
+    // Reclaimer A pre-checks the claim as stale, then pauses. In the
+    // pause window a concurrent reclaimer B requeues the job and a
+    // fresh worker C re-claims it under the lease protocol. The rename
+    // preserved the claim file's old mtime, so A's heuristic STILL
+    // calls it stale — the unserialized reclaim would now steal C's
+    // live claim back into the queue and the job would run twice. The
+    // locked re-verify must see C's lease instead and skip.
+    let fired = AtomicUsize::new(0);
+    let mut succ = None;
+    let recovered = a
+        .recover_stale_with_pause(Duration::ZERO, |job_id| {
+            assert_eq!(job_id, id);
+            fired.fetch_add(1, Ordering::Relaxed);
+            assert_eq!(b.recover_stale(Duration::ZERO).unwrap(), 1);
+            let claim = c.claim_next().unwrap().unwrap();
+            assert_eq!(claim.job_id, id);
+            assert_eq!(claim.lease.epoch, 1);
+            succ = Some(claim);
+        })
+        .unwrap();
+    assert_eq!(fired.load(Ordering::Relaxed), 1, "the injection hook must fire");
+    assert_eq!(recovered, 0, "a live successor claim must never be re-reclaimed");
+    let succ = succ.expect("the injected re-claim must have claimed");
+    // C's claim and lease are untouched: still running, still epoch 1
+    assert!(dir.join("running").join(format!("{id}.json")).exists());
+    assert_eq!(count_json(&dir, "queue"), 0, "the job must not be stolen back");
+    let on_disk = lease::read(&dir, &id).unwrap();
+    assert_eq!(on_disk.epoch, 1);
+    assert!(!on_disk.expired_at(lease::now_unix()));
+    // C serves normally: exactly one report, byte-identical
+    assert!(c.serve_claim(&succ, false).unwrap().published());
+    assert_eq!(count_json(&dir, "done"), 1);
+    assert_eq!(count_json(&dir, "running"), 0);
+    assert_eq!(count_json(&dir, "leases"), 0, "lease released on publish");
+    assert_eq!(normalize(&c.fetch(&id).unwrap().unwrap()), serial_reference(&exp));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// The multi-host fault storm: `workers` in-process hosts drain one
 /// spool while injections kill the first claim of host 0, zombify the
 /// first claim of host 1 and pause-with-heartbeat the first claim of

@@ -565,6 +565,254 @@ fn prop_event_log_reader_recovers_complete_events_exactly_once() {
 }
 
 #[test]
+fn prop_ledger_scan_recovers_complete_facts_exactly_once_at_any_split() {
+    // the ledger twin of the event-log contract: over any
+    // order-preserving interleaving of per-writer framed facts — with
+    // corrupt lines mixed in and the final line torn mid-append — a
+    // one-shot scan recovers every complete fact exactly once and
+    // counts exactly the corrupt lines as skipped; and for ANY byte
+    // split, scanning the prefix and resuming from its cursor yields
+    // the same facts and the same skipped count (a line straddling the
+    // split is torn in the prefix scan and recovered — or counted —
+    // exactly once by the resume)
+    use elaps::coordinator::ledger::{frame_record, parse_ledger_text};
+    use elaps::obs::events::{Event, EventKind};
+    use std::collections::BTreeMap;
+    forall(
+        0xF2,
+        60,
+        |r, size| {
+            let writers = r.range_usize(1, 3);
+            let mut remaining: Vec<usize> =
+                (0..writers).map(|_| r.range_usize(1, 3 + size.min(8))).collect();
+            let mut corrupt = r.range_usize(0, 3);
+            // a random order-preserving merge of the writers' fact
+            // streams, with corrupt lines (None) at random positions
+            let mut ops: Vec<Option<usize>> = Vec::new();
+            while remaining.iter().any(|&n| n > 0) || corrupt > 0 {
+                let total: usize = remaining.iter().sum::<usize>() + corrupt;
+                let mut pick = r.below(total);
+                let mut chosen = None;
+                for (w, n) in remaining.iter_mut().enumerate() {
+                    if pick < *n {
+                        *n -= 1;
+                        chosen = Some(w);
+                        break;
+                    }
+                    pick -= *n;
+                }
+                if chosen.is_none() {
+                    corrupt -= 1;
+                }
+                ops.push(chosen);
+            }
+            (ops, r.chance(0.5), r.next_u64())
+        },
+        |(ops, torn_tail, splitter)| {
+            let make = |w: usize, i: usize| Event {
+                kind: EventKind::Submitted,
+                job_id: format!("job-{w}-{i}"),
+                campaign: "camp".to_string(),
+                host: format!("h{w}"),
+                worker: format!("h{w}#0"),
+                epoch: 0,
+                t_unix_ns: 1_700_000_000_000_000_000,
+                seq: i as u64,
+                extra: BTreeMap::new(),
+            };
+            // three corruption shapes a reader must reject and count:
+            // CRC mismatch, an unframed line, a length mismatch (a
+            // blank line is the one shape skipped *silently*, so none
+            // here — the count would drift)
+            const CORRUPT: [&str; 3] =
+                ["00000000 5 xxxxx\n", "deadbeef notaframe\n", "deadbeef 10 ab\n"];
+            let mut text = String::new();
+            let mut counters = vec![0usize; 4];
+            let mut merged: Vec<Event> = Vec::new();
+            let mut corrupt_lines = 0usize;
+            for op in ops {
+                match op {
+                    Some(w) => {
+                        let i = counters[*w];
+                        counters[*w] += 1;
+                        let ev = make(*w, i);
+                        text.push_str(&frame_record(&ev.to_json().to_string_compact()));
+                        merged.push(ev);
+                    }
+                    None => {
+                        text.push_str(CORRUPT[corrupt_lines % CORRUPT.len()]);
+                        corrupt_lines += 1;
+                    }
+                }
+            }
+            if *torn_tail {
+                // a writer torn mid-append: a valid frame minus its
+                // newline and final byte (frames are pure ASCII)
+                let mut tail = make(0, 0);
+                tail.seq = 999_999;
+                let line = frame_record(&tail.to_json().to_string_compact());
+                text.push_str(&line[..line.len() - 2]);
+            }
+            let whole = parse_ledger_text(&text);
+            if whole.events != merged {
+                return Err(format!(
+                    "one-shot scan recovered {} facts, want {}",
+                    whole.events.len(),
+                    merged.len()
+                ));
+            }
+            if whole.skipped != corrupt_lines {
+                return Err(format!("skipped {}, want {corrupt_lines}", whole.skipped));
+            }
+            if *torn_tail && whole.bytes as usize >= text.len() {
+                return Err("torn tail was consumed by the cursor".to_string());
+            }
+            // resumability: split anywhere, scan the prefix, resume
+            // from its cursor — nothing lost, duplicated, or recounted
+            let k = (*splitter as usize) % (text.len() + 1);
+            let first = parse_ledger_text(&text[..k]);
+            let rest = parse_ledger_text(&text[first.bytes as usize..]);
+            let mut combined = first.events;
+            combined.extend(rest.events);
+            if combined != merged {
+                return Err(format!("split at {k}: facts lost, duplicated or reordered"));
+            }
+            if first.skipped + rest.skipped != corrupt_lines {
+                return Err(format!(
+                    "split at {k}: skipped {} + {} != {corrupt_lines}",
+                    first.skipped, rest.skipped
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ledger_index_incremental_fold_matches_one_shot_reference() {
+    // the index contract: folding a campaign's facts incrementally —
+    // random append batches, with snapshot save/reload cycles and
+    // archiving compactions interleaved at random — converges to
+    // exactly the state a fresh one-shot fold of the same facts
+    // produces. This is what makes `elaps wait`/`status`/`retry` safe
+    // to run concurrently with `spool compact --archive`.
+    use elaps::coordinator::ledger::{append, compact, CampaignIndex};
+    use elaps::obs::events::{Event, EventKind};
+    use std::collections::BTreeMap;
+    forall(
+        0xF3,
+        20,
+        |r, size| {
+            let jobs = r.range_usize(2, 4 + size.min(6));
+            // per-job retry-chain shape: 0 = plain submit (1 fact),
+            // 1 = failed + retried (3 facts), 2 = dead-lettered (2)
+            let kinds: Vec<usize> = (0..jobs).map(|_| r.below(3)).collect();
+            let total: usize = kinds.iter().map(|&k| [1usize, 3, 2][k]).sum();
+            let mut chunks = Vec::new();
+            let mut covered = 0;
+            while covered < total {
+                let sz = r.range_usize(1, 4);
+                chunks.push((sz, r.chance(0.4), r.chance(0.3)));
+                covered += sz;
+            }
+            (kinds, chunks, r.next_u64())
+        },
+        |(kinds, chunks, salt)| {
+            let fact = |kind: EventKind, id: &str, seq: u64| Event {
+                kind,
+                job_id: id.to_string(),
+                campaign: "plc".to_string(),
+                host: "hostP".to_string(),
+                worker: "hostP#0".to_string(),
+                epoch: 0,
+                t_unix_ns: 1_700_000_000_000_000_000,
+                seq,
+                extra: BTreeMap::new(),
+            };
+            let mut facts: Vec<Event> = Vec::new();
+            for (i, &k) in kinds.iter().enumerate() {
+                let id = format!("job-{i:02}");
+                let mut exp = Json::obj();
+                exp.set("library", "rustblocked").set("n", i as u64);
+                let mut sub = fact(EventKind::Submitted, &id, facts.len() as u64);
+                sub.extra.insert("attempt".into(), 1u64.into());
+                sub.extra.insert("experiment".into(), exp.clone());
+                facts.push(sub);
+                match k {
+                    1 => {
+                        let rid = format!("{id}-r");
+                        let mut retried = fact(EventKind::Retried, &rid, facts.len() as u64);
+                        retried.extra.insert("of".into(), Json::Str(id.clone()));
+                        retried.extra.insert("attempt".into(), 2u64.into());
+                        facts.push(retried);
+                        let mut sub2 = fact(EventKind::Submitted, &rid, facts.len() as u64);
+                        sub2.extra.insert("attempt".into(), 2u64.into());
+                        sub2.extra.insert("experiment".into(), exp);
+                        facts.push(sub2);
+                    }
+                    2 => {
+                        let mut dead = fact(EventKind::DeadLettered, &id, facts.len() as u64);
+                        dead.extra.insert("attempts".into(), 1u64.into());
+                        facts.push(dead);
+                    }
+                    _ => {}
+                }
+            }
+            let base = std::env::temp_dir()
+                .join(format!("elaps_prop_plc_{}_{salt:016x}", std::process::id()));
+            let dir = base.join("inc");
+            let refdir = base.join("ref");
+            let _ = std::fs::remove_dir_all(&base);
+            let fail = |e: anyhow::Error| format!("{e:#}");
+            // incremental: batched appends, with reload and archiving
+            // compaction interleaved per the generated schedule
+            let mut idx = CampaignIndex::load(&dir, "plc").map_err(fail)?;
+            let mut cursor = 0usize;
+            for &(sz, reload, archive) in chunks {
+                if cursor >= facts.len() {
+                    break;
+                }
+                let end = (cursor + sz).min(facts.len());
+                append(&dir, "plc", &facts[cursor..end]).map_err(fail)?;
+                cursor = end;
+                idx.refresh(&dir).map_err(fail)?;
+                if archive {
+                    compact(&dir, "plc", true).map_err(fail)?;
+                }
+                if reload {
+                    idx.save(&dir).map_err(fail)?;
+                    idx = CampaignIndex::load(&dir, "plc").map_err(fail)?;
+                }
+            }
+            if cursor < facts.len() {
+                append(&dir, "plc", &facts[cursor..]).map_err(fail)?;
+            }
+            idx.refresh(&dir).map_err(fail)?;
+            // reference: every fact in one append, folded once
+            append(&refdir, "plc", &facts).map_err(fail)?;
+            let mut reference = CampaignIndex::load(&refdir, "plc").map_err(fail)?;
+            reference.refresh(&refdir).map_err(fail)?;
+            // compare the folded entries (cursor and generation
+            // legitimately differ after archives)
+            let got = idx.to_json();
+            let want = reference.to_json();
+            if got.get("jobs") != want.get("jobs") {
+                return Err(format!(
+                    "incremental fold diverged from one-shot reference:\n{}\nvs\n{}",
+                    got.to_string_pretty(),
+                    want.to_string_pretty()
+                ));
+            }
+            if idx.skipped != 0 {
+                return Err(format!("incremental fold skipped {} facts", idx.skipped));
+            }
+            let _ = std::fs::remove_dir_all(&base);
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_eigenvalues_match_across_drivers() {
     use elaps::linalg::lapack::{dsyev, dsyevd, dsyevr, dsyevx};
     forall(
