@@ -406,7 +406,7 @@ pub fn cache_envelope_from_json(j: &Json) -> Option<CacheEnvelope> {
 pub fn report_to_json(r: &Report) -> Json {
     let mut j = Json::obj();
     j.set("experiment", experiment_to_json(&r.experiment));
-    j.set("machine", r.machine.name);
+    j.set("machine", r.machine.name.as_str());
     j.set(
         "points",
         Json::Arr(r.points.iter().map(point_result_to_json).collect()),
@@ -417,8 +417,12 @@ pub fn report_to_json(r: &Report) -> Json {
 pub fn report_from_json(j: &Json) -> Result<Report> {
     let experiment = experiment_from_json(j.get("experiment"))?;
     let machine_name = j.get("machine").as_str().unwrap_or("localhost");
-    // accept both registry names and model display names
-    let machine = MachineModel::by_name(&experiment.machine)
+    // accept machine specs (registry names, profile:PATH, a
+    // profile-shadowed localhost) and model display names; reports
+    // must stay loadable even when a profile file has moved, so
+    // resolution failures fall back to the built-in localhost
+    let machine = crate::perfmodel::resolve_machine(&experiment.machine)
+        .ok()
         .or_else(|| MachineModel::by_name(machine_name))
         .unwrap_or_else(MachineModel::localhost);
     let points = j

@@ -157,7 +157,13 @@ impl Report {
                     Metric::Gflops => flops / secs / 1e9,
                     Metric::FlopsPerCycle => flops / self.machine.cycles(secs),
                     Metric::Efficiency => {
-                        100.0 * flops / secs / self.machine.peak_flops(point.nthreads)
+                        // the scaling model clamps threads to physical
+                        // cores (perfmodel/scaling.rs); the peak in the
+                        // denominator must agree, or oversubscribed
+                        // points are judged against capacity the
+                        // machine does not have
+                        let t = point.nthreads.min(self.machine.cores).max(1);
+                        100.0 * flops / secs / self.machine.peak_flops(t)
                     }
                     Metric::Counter(i) => {
                         let per_rep = point.sum_iters * point.calls_per_iter;
@@ -279,6 +285,38 @@ mod tests {
         let e = rep.series(Metric::Efficiency, Stat::Avg)[0].1;
         // 2e6 flops / 0.01 s = 0.2 Gflops/s on a 20.8 Gflops peak
         assert!((e - 100.0 * 0.2 / 20.8).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn efficiency_clamps_oversubscribed_threads_to_cores() {
+        // the scaling model clamps nthreads to machine.cores, so an
+        // oversubscribed point runs exactly like a cores-wide one —
+        // its efficiency must be judged against the same (physical)
+        // peak, not a phantom nthreads× one
+        let report_at = |nthreads: usize| {
+            let exp = dgemm_experiment(100);
+            let machine = MachineModel::sandybridge(); // 8 cores
+            Report::assemble(
+                exp,
+                machine,
+                vec![PointResult {
+                    range_value: 0,
+                    nthreads,
+                    sum_iters: 1,
+                    calls_per_iter: 1,
+                    records: vec![fake_record("dgemm", 0.01, 2e6)],
+                }],
+            )
+            .unwrap()
+        };
+        let at_cores = report_at(8).series(Metric::Efficiency, Stat::Avg)[0].1;
+        let oversub = report_at(64).series(Metric::Efficiency, Stat::Avg)[0].1;
+        assert!(
+            (oversub - at_cores).abs() < 1e-12,
+            "nthreads=64 efficiency {oversub} must equal nthreads=8 {at_cores}"
+        );
+        // and the old unclamped denominator would have been 8× off
+        assert!(oversub > at_cores / 2.0, "{oversub} vs {at_cores}");
     }
 
     #[test]

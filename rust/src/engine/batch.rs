@@ -208,8 +208,7 @@ fn run_batch_stats_inner(
     // -- phase 1: validate and unroll everything before spawning
     let mut plans = Vec::with_capacity(exps.len());
     for exp in exps {
-        let machine = MachineModel::by_name(&exp.machine)
-            .ok_or_else(|| anyhow!("unknown machine '{}'", exp.machine))?;
+        let machine = crate::perfmodel::resolve_machine(&exp.machine)?;
         // fail fast on unknown libraries before any worker spawns; the
         // workers re-resolve per point so every point gets a library
         // instance with fresh thread-count state, exactly like serial
@@ -219,7 +218,11 @@ fn run_batch_stats_inner(
         plans.push(Plan { exp, machine, points });
     }
     let cache = match &cfg.cache_dir {
-        Some(dir) => Some(ResultCache::open(dir)?.with_trusted_only(cfg.trusted_only)),
+        Some(dir) => Some(
+            ResultCache::open(dir)?
+                .with_trusted_only(cfg.trusted_only)
+                .with_seeded(cfg.seed.is_some()),
+        ),
         None => None,
     };
     if cfg.warm {
@@ -238,7 +241,7 @@ fn run_batch_stats_inner(
                     cache.as_ref().map(|_| {
                         ResultCache::fingerprint_with(
                             &p.exp.library,
-                            p.machine.name,
+                            &p.machine.name,
                             p.exp.nreps,
                             pt,
                             cfg.seed,
@@ -402,14 +405,14 @@ fn run_batch_warm(
                 .map(|it| {
                     cache.as_ref().map(|_| {
                         let plan = &plans[it.exp_i];
-                        let chain = (plan.exp.library.as_str(), plan.machine.name);
+                        let chain = (plan.exp.library.as_str(), plan.machine.name.as_str());
                         if prev_chain != Some(chain) {
                             prev = None;
                             prev_chain = Some(chain);
                         }
                         let k = ResultCache::warm_fingerprint(
                             &plan.exp.library,
-                            plan.machine.name,
+                            &plan.machine.name,
                             plan.exp.nreps,
                             &plan.points[it.pt_i],
                             cfg.seed,
@@ -456,7 +459,7 @@ fn run_batch_warm(
         }
         // execute the whole shard in order, one carried sampler per
         // (library, machine) stretch
-        let mut current: Option<(String, &'static str, Sampler)> = None;
+        let mut current: Option<(String, String, Sampler)> = None;
         for (i, it) in shard.iter().enumerate() {
             if failed.load(Ordering::Relaxed) {
                 return;
@@ -478,7 +481,7 @@ fn run_batch_warm(
                     if let Some(seed) = cfg.seed {
                         s = s.deterministic(seed);
                     }
-                    current = Some((plan.exp.library.clone(), plan.machine.name, s));
+                    current = Some((plan.exp.library.clone(), plan.machine.name.clone(), s));
                 }
                 let sampler = &mut current.as_mut().unwrap().2;
                 let shared = !crate::libraries::RUST_LIBRARIES

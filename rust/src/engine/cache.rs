@@ -52,6 +52,11 @@ pub struct ResultCache {
     /// When set, `lookup` serves only entries proven to be measured
     /// without worker contention (`jobs ≤ 1`).
     trusted_only: bool,
+    /// Whether this handle's keys are seed-specific (the run executes
+    /// with modeled timings). Seeded entries are pure functions of the
+    /// script, so trusted-only mode serves them regardless of the
+    /// worker-pool width that produced them.
+    seeded: bool,
     /// Host/worker provenance recorded on every `store` (schema-3
     /// envelope fields). Defaults to this process on this host.
     host: String,
@@ -84,6 +89,7 @@ impl ResultCache {
             store_jobs: 1,
             warm: false,
             trusted_only: false,
+            seeded: false,
             host: crate::util::hostid::hostname().to_string(),
             worker: crate::util::hostid::new_worker_id(),
         })
@@ -121,6 +127,16 @@ impl ResultCache {
     /// become misses.
     pub fn with_trusted_only(mut self, trusted_only: bool) -> ResultCache {
         self.trusted_only = trusted_only;
+        self
+    }
+
+    /// Mark this handle as serving a seeded (modeled-time) run. Seeded
+    /// keys embed the seed and only ever match seeded entries, which
+    /// are bit-reproducible pure functions of the script — so
+    /// trusted-only mode accepts them even when they were produced by a
+    /// contended (`jobs > 1`) pool.
+    pub fn with_seeded(mut self, seeded: bool) -> ResultCache {
+        self.seeded = seeded;
         self
     }
 
@@ -233,7 +249,9 @@ impl ResultCache {
         if env.warm != self.warm {
             return None;
         }
-        if self.trusted_only && !env.trusted() {
+        // seeded entries are provably reproducible whatever pool width
+        // produced them; contention can only taint measured wall time
+        if self.trusted_only && !self.seeded && !env.trusted() {
             return None;
         }
         if env.result.records.len() != expected_records {

@@ -19,6 +19,8 @@
 //! *replay* pass ([`ReplayRunner`]) hands each builder its measured
 //! reports to assemble the figure outputs.
 
+pub mod calibrate;
+
 use crate::coordinator::{
     run_local, Call, CallArg, DataGen, Experiment, Expr, Figure, Metric, PointResult,
     RangeDef, Report, Stat, Vary,
@@ -190,8 +192,7 @@ fn exp_key(exp: &Experiment) -> String {
 /// the plan pass stand-in. Kernel labels follow the call list so
 /// per-call breakdowns keep their shape.
 fn placeholder_report(exp: &Experiment) -> Result<Report> {
-    let machine = crate::perfmodel::MachineModel::by_name(&exp.machine)
-        .ok_or_else(|| anyhow!("unknown machine '{}'", exp.machine))?;
+    let machine = crate::perfmodel::resolve_machine(&exp.machine)?;
     let ncounters = exp.counters.len();
     let points: Vec<PointResult> = exp
         .unroll()?

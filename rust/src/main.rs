@@ -12,6 +12,8 @@
 //!   plot <report.json>    ASCII + SVG plot of a stored report
 //!   figures [ids…]        regenerate the paper's tables/figures
 //!   cache stats|gc|clear  result-cache lifecycle (sizes, LRU eviction)
+//!   calibrate             fit a machine profile from a seeded sweep
+//!   rank <exp.json>       model-predict and rank a grid, no execution
 //!   sampler               stdin/stdout sampler (the paper's §3.1 tool)
 //!   worker --spool <dir>  lease-based batch-queue worker daemon
 //!   retry                 resubmit a campaign's error jobs exactly once
@@ -31,7 +33,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use elaps::coordinator::{campaign, io, ledger, Metric, Spooler, Stat};
 use elaps::engine::{Engine, EngineConfig};
-use elaps::perfmodel::MachineModel;
+use elaps::perfmodel::resolve_machine;
 use elaps::sampler::Sampler;
 use elaps::util::cli::Args;
 use elaps::util::json::Json;
@@ -57,6 +59,9 @@ USAGE:
   elaps cache stats [--cache DIR]
   elaps cache gc [--max-bytes N[K|M|G]] [--max-age DUR] [--cache DIR]
   elaps cache clear [--cache DIR]
+  elaps calibrate [--library L] [--machine M] [--out PROFILE.json]
+                  [--quick] [--json] [--seed S] [--jobs N] [--cache DIR]
+  elaps rank <experiment.json> [--machine M] [--seed S] [--json]
   elaps sampler [--library L] [--machine M]
   elaps worker --spool DIR [--once] [--workers N] [--lease-ttl DUR]
                [--max-leases N] [--recover SECS|0=off] [--verbose]
@@ -69,14 +74,27 @@ USAGE:
   elaps libraries
 
 metrics: cycles time_s time_ms gflops flops_per_cycle efficiency
+         counter0 counter1 … (one per experiment counter)
 stats:   min max avg med std
+
+--machine M    machine spec: a preset (sandybridge ivybridge bluegene
+               haswell xeonphi localhost) or profile:PATH for a fitted
+               profile from `elaps calibrate`. `localhost` automatically
+               prefers $ELAPS_MACHINE_PROFILE, then
+               ./.elaps-machine-profile.json, then the built-in constants.
+               calibrate itself takes a preset name (profiles refine
+               presets) and writes the default path unless --out/--json
+               say otherwise
 
 --jobs N       engine worker threads (default 1; env ELAPS_JOBS). Note:
                parallel kernels contend for the CPU, so measure final
                timings (and fill shared caches) with --jobs 1.
 --cache DIR    content-addressed result cache (env ELAPS_CACHE)
 --trusted-only serve cache hits only from entries measured with jobs <= 1
-               (publication-quality timings; env ELAPS_TRUSTED_ONLY=1)
+               (publication-quality timings; env ELAPS_TRUSTED_ONLY=1).
+               Seeded (--seed) entries are modeled, hence pure functions
+               of the script: they are served whatever pool width stored
+               them
 --warm         warm execution: each worker reuses one sampler across its
                points, carrying simulated cache state (back-to-back
                campaign semantics); scheduling becomes deterministic
@@ -184,6 +202,8 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "plot" => cmd_plot(&args),
         "figures" => cmd_figures(&args),
         "cache" => cmd_cache(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "rank" => cmd_rank(&args),
         "sampler" => cmd_sampler(&args),
         "worker" => cmd_worker(&args),
         "retry" => cmd_retry(&args),
@@ -670,7 +690,14 @@ fn parse_metric(name: &str) -> Result<Metric> {
         "efficiency" => Metric::Efficiency,
         other => {
             if let Some(i) = other.strip_prefix("counter") {
-                Metric::Counter(i.parse().unwrap_or(0))
+                // a malformed index must not silently alias counter 0
+                let idx: usize = i.parse().map_err(|_| {
+                    anyhow!(
+                        "unknown metric '{other}' (counter metrics are \
+                         counter0, counter1, … — one per experiment counter)"
+                    )
+                })?;
+                Metric::Counter(idx)
             } else {
                 bail!("unknown metric '{other}'")
             }
@@ -795,13 +822,146 @@ fn cmd_figures(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `elaps calibrate`: run the staged, seeded calibration campaign
+/// ([`elaps::figures::calibrate`]) and persist the fitted machine
+/// profile. In `--json` mode stdout is the profile JSON itself (for
+/// piping into `jq`), progress goes to stderr and no file is written
+/// unless `--out` is given explicitly.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    try_register_xla();
+    let lib = args.opt_or("library", "rustblocked");
+    let machine = args.opt_or("machine", "localhost");
+    let mut cfg = engine_config(args)?;
+    if cfg.seed.is_none() {
+        // the fit wants modeled (seeded) cycles: they are exactly linear
+        // in (flops, misses), so the recovered parameters are exact
+        cfg.seed = Some(elaps::figures::calibrate::CALIBRATE_SEED);
+    }
+    elaps::engine::set_default_config(cfg.clone());
+    let quick = args.flag("quick");
+    let (profile, stats) = elaps::figures::calibrate::calibrate(machine, lib, quick, cfg)?;
+    let json_mode = args.flag("json");
+    if json_mode {
+        println!("{}", profile.to_json().to_string_pretty());
+        eprintln!("{}", stats.summary_line());
+    } else {
+        println!("{}", stats.summary_line());
+        println!(
+            "fitted '{}' (base {}): flops/cycle {:.4}, miss penalties [{}] cycles",
+            profile.name,
+            profile.base,
+            profile.flops_per_cycle,
+            profile
+                .miss_penalty_cycles
+                .iter()
+                .map(|p| format!("{p:.2}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+        println!(
+            "fit: {} point(s), mean |rel err| {:.2e} (uncalibrated constants: {:.2e})",
+            profile.fit_points, profile.mean_abs_rel_err, profile.uncalibrated_mean_abs_rel_err
+        );
+    }
+    let out = match args.opt("out") {
+        Some(p) => Some(p.to_string()),
+        None if !json_mode => {
+            Some(elaps::perfmodel::profile::DEFAULT_PROFILE_PATH.to_string())
+        }
+        None => None,
+    };
+    if let Some(path) = out {
+        profile.save(&path)?;
+        if path == elaps::perfmodel::profile::DEFAULT_PROFILE_PATH {
+            eprintln!("profile written to {path} (picked up automatically by --machine localhost)");
+        } else {
+            eprintln!("profile written to {path} (use --machine profile:{path})");
+        }
+    }
+    Ok(())
+}
+
+/// `elaps rank`: predict `modeled_seconds` for every point of an
+/// experiment's variant/parameter grid *without executing any kernel*
+/// (one fresh predictive sampler per point — exactly the engine's cold
+/// seeded semantics, so the ranking provably matches what `elaps run
+/// --seed S` would measure) and print the grid fastest-first.
+fn cmd_rank(args: &Args) -> Result<()> {
+    try_register_xla();
+    let path = args.positional.first().ok_or_else(|| {
+        anyhow!("usage: elaps rank <experiment.json> [--machine M] [--seed S] [--json]")
+    })?;
+    let exp = load_experiment(path)?;
+    let spec = args.opt_or("machine", &exp.machine);
+    let machine = resolve_machine(spec)?;
+    let seed = args
+        .opt_usize_strict("seed")
+        .map_err(|e| anyhow!(e))?
+        .map(|s| s as u64)
+        .unwrap_or(elaps::figures::calibrate::CALIBRATE_SEED);
+    let library = elaps::libraries::by_name(&exp.library)
+        .ok_or_else(|| anyhow!("unknown library '{}'", exp.library))?;
+    let mut points = Vec::new();
+    for pt in exp.unroll()? {
+        let mut sampler =
+            Sampler::new(std::sync::Arc::clone(&library), machine.clone()).predictive(seed);
+        points.push(elaps::engine::execute_point_on(&mut sampler, &exp, &pt)?);
+    }
+    let report = elaps::Report::assemble(exp, machine, points)?;
+    let series = report.series(Metric::TimeS, Stat::Median);
+    let mut ranked: Vec<(usize, i64, usize, f64)> = series
+        .iter()
+        .enumerate()
+        .map(|(i, &(x, t))| (i, x, report.points[i].nthreads, t))
+        .collect();
+    ranked.sort_by(|a, b| a.3.total_cmp(&b.3));
+    if args.flag("json") {
+        let rows: Vec<Json> = ranked
+            .iter()
+            .enumerate()
+            .map(|(rank, &(i, x, t, secs))| {
+                let mut j = Json::obj();
+                j.set("rank", rank + 1);
+                j.set("point", i);
+                j.set("range_value", x);
+                j.set("nthreads", t);
+                j.set("modeled_seconds", secs);
+                j
+            })
+            .collect();
+        let mut top = Json::obj();
+        top.set("experiment", report.experiment.name.as_str());
+        top.set("machine", report.machine.name.as_str());
+        top.set("seed", seed);
+        top.set("ranking", rows);
+        println!("{}", top.to_string_pretty());
+    } else {
+        println!(
+            "modeled ranking of '{}' on machine '{}' ({} point(s); no kernels executed):",
+            report.experiment.name,
+            report.machine.name,
+            ranked.len()
+        );
+        let sym = report
+            .experiment
+            .range
+            .as_ref()
+            .map(|r| r.sym.as_str())
+            .unwrap_or("point");
+        println!("  {:>4} {sym:>8} {:>8} {:>16}", "rank", "threads", "modeled[s]");
+        for (rank, &(_, x, t, secs)) in ranked.iter().enumerate() {
+            println!("  {:>4} {x:>8} {t:>8} {secs:>16.6}", rank + 1);
+        }
+    }
+    Ok(())
+}
+
 fn cmd_sampler(args: &Args) -> Result<()> {
     try_register_xla();
     let lib_name = args.opt_or("library", "rustblocked");
     let library = elaps::libraries::by_name(lib_name)
         .ok_or_else(|| anyhow!("unknown library '{lib_name}'"))?;
-    let machine = MachineModel::by_name(args.opt_or("machine", "localhost"))
-        .ok_or_else(|| anyhow!("unknown machine"))?;
+    let machine = resolve_machine(args.opt_or("machine", "localhost"))?;
     let mut sampler = Sampler::new(library, machine);
     let stdin = std::io::stdin();
     let mut out = std::io::stdout();

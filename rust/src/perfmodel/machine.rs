@@ -14,7 +14,7 @@ pub struct CacheLevel {
 /// timing leads to a number of metrics" (§2).
 #[derive(Debug, Clone)]
 pub struct MachineModel {
-    pub name: &'static str,
+    pub name: String,
     /// Nominal core frequency in Hz (cycles = seconds × freq).
     pub freq_hz: f64,
     /// Peak double-precision flops per cycle per core.
@@ -26,7 +26,19 @@ pub struct MachineModel {
     /// Overhead per OpenMP-style task spawn/join, in seconds (used by
     /// the thread-scaling model).
     pub task_overhead_s: f64,
+    /// Latency charge per line miss at cache level i (cycles, innermost
+    /// first): a miss at L1 that hits L2, a miss at L2 that hits L3,
+    /// and a miss in the last level that goes to memory. Instance data
+    /// so `elaps calibrate` can fit per-machine values; deeper-than-
+    /// modeled levels reuse the last (memory) charge.
+    pub miss_penalty_cycles: Vec<f64>,
 }
+
+/// The uncalibrated default per-level miss penalties (cycles). These
+/// were the former global `LINE_MISS_PENALTY_CYCLES` constant; presets
+/// whose instance vector differs model a machine whose memory system
+/// the defaults mispredict — exactly what calibration must recover.
+pub const DEFAULT_MISS_PENALTY_CYCLES: [f64; 3] = [12.0, 40.0, 200.0];
 
 impl MachineModel {
     /// Peak flops/s of one core.
@@ -62,18 +74,12 @@ impl MachineModel {
     /// ([`super::scaling`]) downstream, identically for measured and
     /// modeled records.
     pub fn modeled_seconds(&self, flops: f64, miss_lines: &[u64]) -> f64 {
-        // Latency charge per line miss at level i (cycles): a miss at
-        // L1 that hits L2, a miss at L2 that hits L3, and a miss in
-        // the last level that goes to memory. Deeper-than-modeled
-        // levels reuse the memory charge.
-        const LINE_MISS_PENALTY_CYCLES: [f64; 3] = [12.0, 40.0, 200.0];
+        let penalties = &self.miss_penalty_cycles;
         let compute_cycles = flops / self.flops_per_cycle;
         let mem_cycles: f64 = miss_lines
             .iter()
             .enumerate()
-            .map(|(i, &m)| {
-                m as f64 * LINE_MISS_PENALTY_CYCLES[i.min(LINE_MISS_PENALTY_CYCLES.len() - 1)]
-            })
+            .map(|(i, &m)| m as f64 * penalties[i.min(penalties.len() - 1)])
             .sum();
         (compute_cycles + mem_cycles) / self.freq_hz
     }
@@ -82,7 +88,7 @@ impl MachineModel {
     /// 2.6 GHz, 8 DP flops/cycle (AVX), 8 cores.
     pub fn sandybridge() -> MachineModel {
         MachineModel {
-            name: "SandyBridge-E5-2670",
+            name: "SandyBridge-E5-2670".into(),
             freq_hz: 2.6e9,
             flops_per_cycle: 8.0,
             cores: 8,
@@ -92,6 +98,7 @@ impl MachineModel {
                 CacheLevel { name: "L3", size_bytes: 20 * 1024 * 1024, line_bytes: 64 },
             ],
             task_overhead_s: 5e-6,
+            miss_penalty_cycles: DEFAULT_MISS_PENALTY_CYCLES.to_vec(),
         }
     }
 
@@ -99,7 +106,7 @@ impl MachineModel {
     /// machine): 2.8 GHz, 8 DP flops/cycle, 10 cores.
     pub fn ivybridge() -> MachineModel {
         MachineModel {
-            name: "IvyBridge-E5-2680v2",
+            name: "IvyBridge-E5-2680v2".into(),
             freq_hz: 2.8e9,
             flops_per_cycle: 8.0,
             cores: 10,
@@ -109,6 +116,7 @@ impl MachineModel {
                 CacheLevel { name: "L3", size_bytes: 25 * 1024 * 1024, line_bytes: 64 },
             ],
             task_overhead_s: 5e-6,
+            miss_penalty_cycles: vec![12.0, 38.0, 190.0],
         }
     }
 
@@ -116,7 +124,7 @@ impl MachineModel {
     /// 8 DP flops/cycle (QPX), 16 cores.
     pub fn bluegene_a2() -> MachineModel {
         MachineModel {
-            name: "BlueGeneQ-A2",
+            name: "BlueGeneQ-A2".into(),
             freq_hz: 1.6e9,
             flops_per_cycle: 8.0,
             cores: 16,
@@ -125,6 +133,9 @@ impl MachineModel {
                 CacheLevel { name: "L2", size_bytes: 32 * 1024 * 1024, line_bytes: 128 },
             ],
             task_overhead_s: 8e-6,
+            // two modeled levels: L1→L2 and L2→memory (the in-order A2
+            // core eats a far larger memory charge than the defaults)
+            miss_penalty_cycles: vec![14.0, 320.0],
         }
     }
 
@@ -132,7 +143,7 @@ impl MachineModel {
     /// 16 DP flops/cycle (AVX2+FMA), 4 cores (8 hardware threads).
     pub fn haswell_laptop() -> MachineModel {
         MachineModel {
-            name: "Haswell-i7-4850HQ",
+            name: "Haswell-i7-4850HQ".into(),
             freq_hz: 2.3e9,
             flops_per_cycle: 16.0,
             cores: 8, // hardware threads; the paper's Fig. 13 scales to 8
@@ -142,6 +153,7 @@ impl MachineModel {
                 CacheLevel { name: "L3", size_bytes: 6 * 1024 * 1024, line_bytes: 64 },
             ],
             task_overhead_s: 3e-6,
+            miss_penalty_cycles: vec![10.0, 34.0, 170.0],
         }
     }
 
@@ -149,7 +161,7 @@ impl MachineModel {
     /// 16 DP flops/cycle, 60 cores.
     pub fn xeon_phi() -> MachineModel {
         MachineModel {
-            name: "XeonPhi-KNC",
+            name: "XeonPhi-KNC".into(),
             freq_hz: 1.1e9,
             flops_per_cycle: 16.0,
             cores: 60,
@@ -158,15 +170,21 @@ impl MachineModel {
                 CacheLevel { name: "L2", size_bytes: 512 * 1024, line_bytes: 64 },
             ],
             task_overhead_s: 1e-5,
+            // two modeled levels; KNC misses to GDDR are painful
+            miss_penalty_cycles: vec![16.0, 420.0],
         }
     }
 
-    /// The local host: calibrated at first use by a short dgemm probe
-    /// (frequency unknown inside the container; we report against a
-    /// nominal 3 GHz scalar-FMA core).
+    /// The local host's built-in fallback description: a nominal
+    /// 3 GHz scalar-FMA core with the uncalibrated default miss
+    /// penalties. This constructor never calibrates anything — run
+    /// `elaps calibrate` to fit a machine profile, which
+    /// [`super::resolve_machine`] (and hence `--machine localhost` on
+    /// the CLI) picks up from `ELAPS_MACHINE_PROFILE` or the default
+    /// profile path in preference to these constants.
     pub fn localhost() -> MachineModel {
         MachineModel {
-            name: "localhost",
+            name: "localhost".into(),
             freq_hz: 3.0e9,
             flops_per_cycle: 4.0, // 2-wide SIMD FMA assumed for autovec f64
             cores: 1,
@@ -176,10 +194,17 @@ impl MachineModel {
                 CacheLevel { name: "L3", size_bytes: 32 * 1024 * 1024, line_bytes: 64 },
             ],
             task_overhead_s: 5e-6,
+            miss_penalty_cycles: DEFAULT_MISS_PENALTY_CYCLES.to_vec(),
         }
     }
 
-    /// Look up a machine by name.
+    /// The built-in registry names accepted by [`Self::by_name`].
+    pub const REGISTRY_NAMES: [&'static str; 6] =
+        ["sandybridge", "ivybridge", "bluegene", "haswell", "xeonphi", "localhost"];
+
+    /// Look up a machine by (registry) name. Machine *specs* that may
+    /// also be a `profile:PATH` or a profile-shadowed `localhost` go
+    /// through [`super::resolve_machine`] instead.
     pub fn by_name(name: &str) -> Option<MachineModel> {
         match name {
             "sandybridge" => Some(Self::sandybridge()),

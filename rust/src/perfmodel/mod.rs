@@ -17,7 +17,9 @@
 
 pub mod machine;
 pub mod cache;
+pub mod profile;
 pub mod scaling;
 
 pub use cache::CacheSim;
 pub use machine::MachineModel;
+pub use profile::{resolve_machine, MachineProfile};

@@ -1,0 +1,270 @@
+//! Fitted machine profiles: the persistence format behind
+//! `elaps calibrate` and the `--machine profile:PATH` spec.
+//!
+//! A profile refines a built-in [`MachineModel`] preset (its `base`)
+//! with parameters fitted from a calibration sweep: the effective
+//! flops/cycle of the compute-bound stage and the per-cache-level line
+//! miss penalties recovered by least squares against the simulated
+//! miss counters. Everything the fit does not touch (frequency, core
+//! count, cache geometry) is inherited from the base preset.
+//!
+//! Profiles are versioned JSON (`schema` = [`PROFILE_SCHEMA`]); files
+//! with an unknown schema are rejected with an error rather than
+//! guessed at, mirroring the result-cache envelope policy.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::machine::MachineModel;
+use crate::util::json::Json;
+
+/// Version tag of the profile file format.
+pub const PROFILE_SCHEMA: u64 = 1;
+
+/// Environment variable consulted when resolving `localhost`.
+pub const PROFILE_ENV: &str = "ELAPS_MACHINE_PROFILE";
+
+/// Default profile path (relative to the working directory) consulted
+/// when resolving `localhost` and `ELAPS_MACHINE_PROFILE` is unset.
+pub const DEFAULT_PROFILE_PATH: &str = ".elaps-machine-profile.json";
+
+/// A fitted machine profile, as persisted by `elaps calibrate`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineProfile {
+    /// Display name the resolved model carries (also keys result-cache
+    /// fingerprints, so distinctly-fitted profiles should be named
+    /// distinctly).
+    pub name: String,
+    /// Registry name of the preset the profile refines.
+    pub base: String,
+    /// Fitted effective flops/cycle (compute-bound stage).
+    pub flops_per_cycle: f64,
+    /// Fitted per-level line miss penalties, innermost first.
+    pub miss_penalty_cycles: Vec<f64>,
+    /// Number of calibration points the fit used.
+    pub fit_points: usize,
+    /// Mean |modeled − observed| / observed over the calibration sweep
+    /// under the fitted parameters.
+    pub mean_abs_rel_err: f64,
+    /// Same error under the uncalibrated preset constants, for
+    /// comparison (the fit must beat this).
+    pub uncalibrated_mean_abs_rel_err: f64,
+}
+
+impl MachineProfile {
+    /// Serialize to the versioned profile JSON.
+    pub fn to_json(&self) -> Json {
+        let mut fitted = Json::obj();
+        fitted.set("flops_per_cycle", self.flops_per_cycle);
+        fitted.set("miss_penalty_cycles", self.miss_penalty_cycles.clone());
+        let mut fit = Json::obj();
+        fit.set("points", self.fit_points);
+        fit.set("mean_abs_rel_err", self.mean_abs_rel_err);
+        fit.set("uncalibrated_mean_abs_rel_err", self.uncalibrated_mean_abs_rel_err);
+        let mut j = Json::obj();
+        j.set("schema", PROFILE_SCHEMA);
+        j.set("name", self.name.as_str());
+        j.set("base", self.base.as_str());
+        j.set("fitted", fitted);
+        j.set("fit", fit);
+        j
+    }
+
+    /// Parse the versioned profile JSON; unknown schemas are an error,
+    /// not a guess.
+    pub fn from_json(j: &Json) -> Result<MachineProfile> {
+        let schema = j
+            .get("schema")
+            .as_u64()
+            .ok_or_else(|| anyhow!("machine profile: missing numeric 'schema' field"))?;
+        if schema != PROFILE_SCHEMA {
+            bail!(
+                "machine profile: unknown schema {schema} (this build reads schema \
+                 {PROFILE_SCHEMA}); re-run `elaps calibrate` to regenerate the profile"
+            );
+        }
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("machine profile: missing 'name'"))?
+            .to_string();
+        let base = j
+            .get("base")
+            .as_str()
+            .ok_or_else(|| anyhow!("machine profile: missing 'base'"))?
+            .to_string();
+        if MachineModel::by_name(&base).is_none() {
+            bail!(
+                "machine profile: unknown base machine '{base}' (expected one of {})",
+                MachineModel::REGISTRY_NAMES.join(", ")
+            );
+        }
+        let fitted = j.get("fitted");
+        let flops_per_cycle = fitted
+            .get("flops_per_cycle")
+            .as_f64()
+            .filter(|f| f.is_finite() && *f > 0.0)
+            .ok_or_else(|| anyhow!("machine profile: missing/invalid fitted.flops_per_cycle"))?;
+        let miss_penalty_cycles: Vec<f64> = fitted
+            .get("miss_penalty_cycles")
+            .as_arr()
+            .ok_or_else(|| anyhow!("machine profile: missing fitted.miss_penalty_cycles"))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .filter(|p| p.is_finite() && *p >= 0.0)
+                    .ok_or_else(|| anyhow!("machine profile: invalid miss penalty entry"))
+            })
+            .collect::<Result<_>>()?;
+        if miss_penalty_cycles.is_empty() {
+            bail!("machine profile: fitted.miss_penalty_cycles must be non-empty");
+        }
+        let fit = j.get("fit");
+        Ok(MachineProfile {
+            name,
+            base,
+            flops_per_cycle,
+            miss_penalty_cycles,
+            fit_points: fit.get("points").as_u64().unwrap_or(0) as usize,
+            mean_abs_rel_err: fit.get("mean_abs_rel_err").as_f64().unwrap_or(f64::NAN),
+            uncalibrated_mean_abs_rel_err: fit
+                .get("uncalibrated_mean_abs_rel_err")
+                .as_f64()
+                .unwrap_or(f64::NAN),
+        })
+    }
+
+    /// Load a profile from a JSON file.
+    pub fn load(path: impl AsRef<Path>) -> Result<MachineProfile> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading machine profile {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("machine profile {}: {e}", path.display()))?;
+        Self::from_json(&j)
+            .with_context(|| format!("loading machine profile {}", path.display()))
+    }
+
+    /// Persist the profile as pretty-printed JSON.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing machine profile {}", path.display()))
+    }
+
+    /// Materialize the profile as a [`MachineModel`]: the base preset
+    /// with the fitted parameters (and the profile's name) spliced in.
+    pub fn apply(&self) -> MachineModel {
+        let mut m = MachineModel::by_name(&self.base).unwrap_or_else(MachineModel::localhost);
+        m.name = self.name.clone();
+        m.flops_per_cycle = self.flops_per_cycle;
+        m.miss_penalty_cycles = self.miss_penalty_cycles.clone();
+        m
+    }
+}
+
+/// Resolve a machine *spec* — what `--machine` and experiment files
+/// accept — into a model:
+///
+/// * `profile:PATH` loads a fitted profile file;
+/// * `localhost` prefers a fitted profile from `$ELAPS_MACHINE_PROFILE`
+///   or, failing that, [`DEFAULT_PROFILE_PATH`] in the working
+///   directory, falling back to the built-in
+///   [`MachineModel::localhost`] constants when neither exists;
+/// * any other registry name resolves via [`MachineModel::by_name`].
+///
+/// Unknown specs report the full list of valid names.
+pub fn resolve_machine(spec: &str) -> Result<MachineModel> {
+    if let Some(path) = spec.strip_prefix("profile:") {
+        return Ok(MachineProfile::load(path)?.apply());
+    }
+    if spec == "localhost" {
+        if let Ok(path) = std::env::var(PROFILE_ENV) {
+            if !path.is_empty() {
+                // explicitly pointed at: a broken profile is an error,
+                // not a silent fallback
+                return Ok(MachineProfile::load(&path)?.apply());
+            }
+        }
+        if Path::new(DEFAULT_PROFILE_PATH).is_file() {
+            return Ok(MachineProfile::load(DEFAULT_PROFILE_PATH)?.apply());
+        }
+    }
+    MachineModel::by_name(spec).ok_or_else(|| {
+        anyhow!(
+            "unknown machine '{spec}' (expected one of {}, or profile:PATH for a \
+             fitted profile from `elaps calibrate`)",
+            MachineModel::REGISTRY_NAMES.join(", ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MachineProfile {
+        MachineProfile {
+            name: "localhost+fit".into(),
+            base: "localhost".into(),
+            flops_per_cycle: 3.7,
+            miss_penalty_cycles: vec![11.5, 41.25, 198.0],
+            fit_points: 24,
+            mean_abs_rel_err: 0.013,
+            uncalibrated_mean_abs_rel_err: 0.21,
+        }
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip_is_identity() {
+        let p = sample();
+        let j = Json::parse(&p.to_json().to_string_pretty()).unwrap();
+        assert_eq!(MachineProfile::from_json(&j).unwrap(), p);
+    }
+
+    #[test]
+    fn unknown_schema_is_a_clear_error() {
+        let mut j = sample().to_json();
+        j.set("schema", 99u64);
+        let err = MachineProfile::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("unknown schema 99"), "got: {err}");
+        // and a missing schema is equally explicit
+        let err = MachineProfile::from_json(&Json::obj()).unwrap_err().to_string();
+        assert!(err.contains("schema"), "got: {err}");
+    }
+
+    #[test]
+    fn apply_splices_fit_into_base() {
+        let m = sample().apply();
+        let base = MachineModel::localhost();
+        assert_eq!(m.name, "localhost+fit");
+        assert_eq!(m.flops_per_cycle, 3.7);
+        assert_eq!(m.miss_penalty_cycles, vec![11.5, 41.25, 198.0]);
+        assert_eq!(m.freq_hz, base.freq_hz);
+        assert_eq!(m.caches.len(), base.caches.len());
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_spec_with_name_list() {
+        let err = resolve_machine("cray").unwrap_err().to_string();
+        for n in MachineModel::REGISTRY_NAMES {
+            assert!(err.contains(n), "error must list '{n}': {err}");
+        }
+        assert!(err.contains("profile:PATH"), "got: {err}");
+    }
+
+    #[test]
+    fn resolve_profile_path_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("elaps-profile-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.json");
+        sample().save(&path).unwrap();
+        let m = resolve_machine(&format!("profile:{}", path.display())).unwrap();
+        assert_eq!(m.name, "localhost+fit");
+        assert_eq!(m.flops_per_cycle, 3.7);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -91,6 +91,10 @@ pub struct Sampler {
     /// prediction ([`MachineModel::modeled_seconds`]) instead of
     /// measured wall time.
     modeled_time: bool,
+    /// When set, queued kernels are *not* executed: records carry the
+    /// modeled time and simulated counters only (`elaps rank`). Implies
+    /// `modeled_time`; numerical results are unavailable in this mode.
+    predict_only: bool,
 }
 
 impl Sampler {
@@ -108,6 +112,7 @@ impl Sampler {
             rng: Xoshiro256::seeded(DEFAULT_RNG_SEED),
             rng_seed: DEFAULT_RNG_SEED,
             modeled_time: false,
+            predict_only: false,
         }
     }
 
@@ -121,6 +126,20 @@ impl Sampler {
         self.rng_seed = seed;
         self.rng = Xoshiro256::seeded(seed);
         self.modeled_time = true;
+        self
+    }
+
+    /// Switch this sampler into pure prediction mode: deterministic as
+    /// [`Sampler::deterministic`], but queued kernels are never
+    /// executed — only the operand touches are fed to the cache
+    /// simulator and each record reports the machine model's predicted
+    /// time. Because kernel execution never reads or advances the
+    /// simulated cache, a predictive run's records carry exactly the
+    /// timings and counters a seeded *executed* run would report, at
+    /// planning cost (`elaps rank`).
+    pub fn predictive(mut self, seed: u64) -> Sampler {
+        self = self.deterministic(seed);
+        self.predict_only = true;
         self
     }
 
@@ -370,10 +389,16 @@ impl Sampler {
             .map(|c| self.cache.counter(c).unwrap_or(0))
             .collect();
         let level_misses = self.cache.level_misses();
-        // execute + time
-        let t0 = Instant::now();
-        self.library.execute(av, &ops)?;
-        let measured = t0.elapsed().as_secs_f64();
+        // execute + time (prediction mode skips execution entirely:
+        // the model's inputs — flops and simulated misses — are all
+        // gathered above, so the record is identical either way)
+        let measured = if self.predict_only {
+            0.0
+        } else {
+            let t0 = Instant::now();
+            self.library.execute(av, &ops)?;
+            t0.elapsed().as_secs_f64()
+        };
         // deterministic mode reports the model's prediction for this
         // call (a pure function of script + simulated cache state); the
         // kernel still executes so numerical state and errors are real

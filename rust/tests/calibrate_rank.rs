@@ -1,0 +1,269 @@
+//! End-to-end tests of the calibration-and-prediction subsystem:
+//! `elaps calibrate` (profile fitting, determinism, file workflow) and
+//! `elaps rank` (modeled ranking), including the differential test that
+//! the predicted ordering matches the ordering a seeded run measures,
+//! and the seeded trusted-only cache rule.
+
+use std::process::Command;
+
+use elaps::coordinator::{io, Metric, Stat};
+use elaps::perfmodel::MachineProfile;
+use elaps::util::json::Json;
+
+fn elaps_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_elaps")
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("elaps-calrank-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A dgemm sweep over shuffled sizes: the modeled-time ordering (sorted
+/// by n) is a non-identity permutation of the grid order, so a ranking
+/// that merely echoed the input would fail.
+const SWEEP_EXP: &str = r#"{"name":"rank-sweep","library":"rustblocked",
+    "machine":"haswell","nreps":2,"discard_first":false,
+    "range":{"sym":"n","values":[48,16,64,24,32]},
+    "calls":[["dgemm","N","N","n","n","n",1,"$A","n","$B","n",0,"$C","n"]]}"#;
+
+/// Kendall rank correlation between two orderings of the same items.
+fn kendall_tau(a: &[i64], b: &[i64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let pos = |v: &[i64], x: i64| v.iter().position(|&y| y == x).unwrap();
+    let (mut conc, mut disc) = (0i64, 0i64);
+    for i in 0..a.len() {
+        for j in i + 1..a.len() {
+            if pos(b, a[i]) < pos(b, a[j]) {
+                conc += 1;
+            } else {
+                disc += 1;
+            }
+        }
+    }
+    (conc - disc) as f64 / (conc + disc).max(1) as f64
+}
+
+#[test]
+fn rank_ordering_matches_seeded_measured_ordering() {
+    let dir = temp_dir("diff");
+    let exp = dir.join("exp.json");
+    std::fs::write(&exp, SWEEP_EXP).unwrap();
+    // predicted ordering: elaps rank --json (no kernel execution)
+    let out = Command::new(elaps_bin())
+        .args(["rank", exp.to_str().unwrap(), "--seed", "7", "--json"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = Json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    let predicted: Vec<i64> = j
+        .get("ranking")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| r.get("range_value").as_i64().unwrap())
+        .collect();
+    assert_eq!(predicted.len(), 5);
+    // measured ordering: a seeded run of the same experiment
+    let report_path = dir.join("report.json");
+    let out = Command::new(elaps_bin())
+        .args([
+            "run",
+            exp.to_str().unwrap(),
+            "--seed",
+            "7",
+            "--out",
+            report_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let rj = Json::parse(&std::fs::read_to_string(&report_path).unwrap()).unwrap();
+    let report = io::report_from_json(&rj).unwrap();
+    let mut series = report.series(Metric::TimeS, Stat::Median);
+    series.sort_by(|a, b| a.1.total_cmp(&b.1));
+    let measured: Vec<i64> = series.iter().map(|&(x, _)| x).collect();
+    // the predictive sampler is bit-identical to the seeded executed
+    // one, so the orderings must agree essentially perfectly
+    assert_eq!(predicted[0], measured[0], "top-1 must match");
+    let tau = kendall_tau(&predicted, &measured);
+    assert!(tau >= 0.999, "kendall tau {tau}: predicted {predicted:?} vs {measured:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn calibrate_json_is_byte_identical_across_runs() {
+    let dir = temp_dir("det");
+    let run = || {
+        let out = Command::new(elaps_bin())
+            .args(["calibrate", "--quick", "--json", "--machine", "haswell", "--seed", "7"])
+            .current_dir(&dir)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        out.stdout
+    };
+    let first = run();
+    let second = run();
+    assert!(!first.is_empty());
+    assert_eq!(first, second, "calibrate --json must be deterministic under --seed");
+    // --json without --out must not drop a profile file into the cwd
+    assert!(
+        !dir.join(".elaps-machine-profile.json").exists(),
+        "--json mode should write no implicit profile file"
+    );
+    let j = Json::parse(&String::from_utf8_lossy(&first)).unwrap();
+    assert_eq!(j.get("schema").as_u64(), Some(1));
+    assert_eq!(j.get("base").as_str(), Some("haswell"));
+    let fit = j.get("fit");
+    let fitted_err = fit.get("mean_abs_rel_err").as_f64().unwrap();
+    let uncal_err = fit.get("uncalibrated_mean_abs_rel_err").as_f64().unwrap();
+    // the fitted model must beat the uncalibrated constants on haswell,
+    // whose instance penalties differ from the defaults
+    assert!(fitted_err < 0.05, "fitted err {fitted_err}");
+    assert!(fitted_err < uncal_err, "fitted {fitted_err} vs uncalibrated {uncal_err}");
+    assert!(uncal_err > 0.01, "uncalibrated err should be visible: {uncal_err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn calibrate_profile_file_feeds_rank_machine_spec() {
+    let dir = temp_dir("profile");
+    let profile_path = dir.join("p.json");
+    let out = Command::new(elaps_bin())
+        .args([
+            "calibrate",
+            "--quick",
+            "--machine",
+            "haswell",
+            "--seed",
+            "7",
+            "--out",
+            profile_path.to_str().unwrap(),
+        ])
+        .current_dir(&dir)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let profile = MachineProfile::load(&profile_path).unwrap();
+    assert_eq!(profile.name, "haswell+calibrated");
+    assert_eq!(profile.base, "haswell");
+    // the profile file is a valid --machine spec everywhere
+    let exp = dir.join("exp.json");
+    std::fs::write(&exp, SWEEP_EXP).unwrap();
+    let spec = format!("profile:{}", profile_path.display());
+    let out = Command::new(elaps_bin())
+        .args(["rank", exp.to_str().unwrap(), "--machine", &spec, "--json"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = Json::parse(&String::from_utf8_lossy(&out.stdout)).unwrap();
+    assert_eq!(j.get("machine").as_str(), Some("haswell+calibrated"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_machine_error_lists_valid_specs() {
+    let dir = temp_dir("unknown-machine");
+    let exp = dir.join("exp.json");
+    std::fs::write(&exp, SWEEP_EXP).unwrap();
+    let out = Command::new(elaps_bin())
+        .args(["rank", exp.to_str().unwrap(), "--machine", "cray"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    for name in ["sandybridge", "haswell", "localhost", "profile:PATH"] {
+        assert!(err.contains(name), "error must mention {name}: {err}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_counter_metric_is_rejected() {
+    let dir = temp_dir("metric");
+    let exp = dir.join("exp.json");
+    std::fs::write(&exp, SWEEP_EXP).unwrap();
+    let report = dir.join("report.json");
+    let out = Command::new(elaps_bin())
+        .args(["run", exp.to_str().unwrap(), "--seed", "1", "--out", report.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // pre-fix this silently aliased to counter0; now it must fail loudly
+    let out = Command::new(elaps_bin())
+        .args(["view", report.to_str().unwrap(), "--metric", "counterfoo"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "counterfoo must not alias counter0");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown metric 'counterfoo'"), "{err}");
+    // well-formed counter indices still parse (the report has no
+    // counters, so the series is all zeros — but the metric resolves)
+    let out = Command::new(elaps_bin())
+        .args(["view", report.to_str().unwrap(), "--metric", "counter0"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trusted_only_serves_seeded_entries_from_any_pool_width() {
+    let dir = temp_dir("trusted");
+    let exp = dir.join("exp.json");
+    std::fs::write(&exp, SWEEP_EXP).unwrap();
+    let cache = dir.join("cache");
+    let run = |extra: &[&str]| {
+        let mut args = vec![
+            "run",
+            exp.to_str().unwrap(),
+            "--jobs",
+            "2",
+            "--cache",
+            cache.to_str().unwrap(),
+            "--out",
+            dir.join("report.json").to_str().unwrap(),
+        ];
+        args.extend_from_slice(extra);
+        let out = Command::new(elaps_bin()).args(&args).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    // seeded entries are pure functions of the script: stored at jobs=2
+    // they must still satisfy a --trusted-only re-run
+    run(&["--seed", "7"]);
+    let second = run(&["--seed", "7", "--trusted-only"]);
+    assert!(
+        second.contains("0 executed"),
+        "seeded entries must be trusted at any pool width: {second}"
+    );
+    // whereas unseeded (wall-clock) entries stored at jobs=2 stay
+    // untrusted and are re-measured
+    let cache2 = dir.join("cache-wall");
+    let run_wall = |extra: &[&str]| {
+        let mut args = vec![
+            "run",
+            exp.to_str().unwrap(),
+            "--jobs",
+            "2",
+            "--cache",
+            cache2.to_str().unwrap(),
+            "--out",
+            dir.join("report2.json").to_str().unwrap(),
+        ];
+        args.extend_from_slice(extra);
+        let out = Command::new(elaps_bin()).args(&args).output().unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    run_wall(&[]);
+    let wall_second = run_wall(&["--trusted-only"]);
+    assert!(
+        !wall_second.contains("0 executed"),
+        "contended wall-clock entries must be re-measured: {wall_second}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
