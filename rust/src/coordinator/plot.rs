@@ -18,6 +18,8 @@ pub struct Figure {
     pub series: Vec<Series>,
     /// Render bars (per-x grouped) instead of lines.
     pub bars: bool,
+    /// Labeled vertical markers (e.g. series crossover points).
+    pub vlines: Vec<(f64, String)>,
 }
 
 impl Figure {
@@ -28,11 +30,19 @@ impl Figure {
             ylabel: ylabel.into(),
             series: vec![],
             bars: false,
+            vlines: vec![],
         }
     }
 
     pub fn add_series(&mut self, label: &str, points: Vec<(f64, f64)>) -> &mut Self {
         self.series.push(Series { label: label.into(), points });
+        self
+    }
+
+    /// Mark a vertical line at `x` (rendered dashed in SVG, listed in
+    /// the ASCII footer) — used for differential-report crossovers.
+    pub fn add_vline(&mut self, x: f64, label: &str) -> &mut Self {
+        self.vlines.push((x, label.into()));
         self
     }
 
@@ -137,6 +147,9 @@ impl Figure {
                 s.label
             ));
         }
+        for (x, label) in &self.vlines {
+            out.push_str(&format!("{:>10}  | {} at {} = {}\n", "", label, self.xlabel, x));
+        }
         out
     }
 
@@ -203,6 +216,20 @@ impl Figure {
             mt + ph / 2.0,
             xml_escape(&self.ylabel)
         ));
+        // vertical markers (crossovers) behind the data series
+        for (x, label) in &self.vlines {
+            if !x.is_finite() || *x < x0 || *x > x1 {
+                continue;
+            }
+            let xx = px(*x);
+            s.push_str(&format!(
+                r##"<line x1="{xx}" y1="{mt}" x2="{xx}" y2="{}" stroke="#888" stroke-dasharray="4 3"/><text x="{}" y="{}" font-size="9" font-family="sans-serif" fill="#555">{}</text>"##,
+                mt + ph,
+                xx + 3.0,
+                mt + 10.0,
+                xml_escape(label)
+            ));
+        }
         let nseries = self.series.len().max(1) as f64;
         for (si, ser) in self.series.iter().enumerate() {
             let color = COLORS[si % COLORS.len()];
@@ -309,6 +336,21 @@ mod tests {
         let a = f.to_ascii(20, 5);
         assert!(a.contains('*'));
         let _ = f.to_svg(200, 100);
+    }
+
+    #[test]
+    fn vlines_render_in_both_outputs() {
+        let mut f = fig();
+        f.add_vline(200.0, "crossover rustref→rustblocked");
+        let s = f.to_svg(640, 400);
+        assert!(s.contains("stroke-dasharray"));
+        assert!(s.contains("crossover"));
+        let a = f.to_ascii(40, 10);
+        assert!(a.contains("crossover"));
+        // out-of-range markers are skipped in SVG, listed in ASCII
+        let mut g = fig();
+        g.add_vline(9999.0, "far");
+        assert!(!g.to_svg(640, 400).contains("stroke-dasharray"));
     }
 
     #[test]

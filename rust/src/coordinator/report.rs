@@ -38,6 +38,16 @@ impl Metric {
             Metric::Counter(i) => format!("counter[{i}]"),
         }
     }
+
+    /// Whether smaller values of this metric are better — the
+    /// comparison direction used by differential reports (winner per
+    /// point, library ranking).
+    pub fn lower_is_better(self) -> bool {
+        match self {
+            Metric::Cycles | Metric::TimeS | Metric::TimeMs | Metric::Counter(_) => true,
+            Metric::Gflops | Metric::FlopsPerCycle | Metric::Efficiency => false,
+        }
+    }
 }
 
 /// Results of one parameter-range point.
@@ -154,8 +164,24 @@ impl Report {
                     Metric::Cycles => self.machine.cycles(secs),
                     Metric::TimeS => secs,
                     Metric::TimeMs => secs * 1e3,
-                    Metric::Gflops => flops / secs / 1e9,
-                    Metric::FlopsPerCycle => flops / self.machine.cycles(secs),
+                    // a modeled repetition can reduce to exactly 0
+                    // seconds (e.g. a degenerate call list); rate
+                    // metrics report 0.0 then, never inf/NaN
+                    Metric::Gflops => {
+                        if secs > 0.0 {
+                            flops / secs / 1e9
+                        } else {
+                            0.0
+                        }
+                    }
+                    Metric::FlopsPerCycle => {
+                        let cycles = self.machine.cycles(secs);
+                        if cycles > 0.0 {
+                            flops / cycles
+                        } else {
+                            0.0
+                        }
+                    }
                     Metric::Efficiency => {
                         // the scaling model clamps threads to physical
                         // cores (perfmodel/scaling.rs); the peak in the
@@ -163,7 +189,11 @@ impl Report {
                         // points are judged against capacity the
                         // machine does not have
                         let t = point.nthreads.min(self.machine.cores).max(1);
-                        100.0 * flops / secs / self.machine.peak_flops(t)
+                        if secs > 0.0 {
+                            100.0 * flops / secs / self.machine.peak_flops(t)
+                        } else {
+                            0.0
+                        }
                     }
                     Metric::Counter(i) => {
                         let per_rep = point.sum_iters * point.calls_per_iter;
@@ -217,9 +247,16 @@ impl Report {
     }
 
     /// The paper's §2 metrics table for single-point experiments.
-    pub fn metrics_table(&self) -> Vec<(String, f64)> {
+    ///
+    /// Errors on a report with no measurement points (possible via a
+    /// malformed or empty range) instead of panicking on the missing
+    /// first series entry.
+    pub fn metrics_table(&self) -> Result<Vec<(String, f64)>> {
+        if self.points.is_empty() {
+            bail!("report '{}' has no measurement points", self.experiment.name);
+        }
         let stat = Stat::Median;
-        [
+        Ok([
             Metric::Cycles,
             Metric::TimeMs,
             Metric::Gflops,
@@ -228,7 +265,7 @@ impl Report {
         ]
         .iter()
         .map(|&m| (m.name(), self.series(m, stat)[0].1))
-        .collect()
+        .collect())
     }
 }
 
@@ -375,11 +412,52 @@ mod tests {
     #[test]
     fn metrics_table_has_paper_rows() {
         let rep = fake_report(2, false);
-        let table = rep.metrics_table();
+        let table = rep.metrics_table().unwrap();
         let names: Vec<&str> = table.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(
             names,
             vec!["cycles", "time [ms]", "Gflops/s", "flops/cycle", "efficiency [%]"]
         );
+    }
+
+    #[test]
+    fn metrics_table_on_empty_report_errors_instead_of_panicking() {
+        let exp = dgemm_experiment(100);
+        let machine = MachineModel::sandybridge();
+        let rep = Report::assemble(exp, machine, vec![]).unwrap();
+        let err = rep.metrics_table().unwrap_err();
+        assert!(err.to_string().contains("no measurement points"), "{err}");
+    }
+
+    #[test]
+    fn zero_second_repetition_yields_zero_rates_not_inf() {
+        let exp = dgemm_experiment(100);
+        let machine = MachineModel::sandybridge();
+        let rep = Report::assemble(
+            exp,
+            machine,
+            vec![PointResult {
+                range_value: 0,
+                nthreads: 1,
+                sum_iters: 1,
+                calls_per_iter: 1,
+                records: vec![fake_record("dgemm", 0.0, 2e6)],
+            }],
+        )
+        .unwrap();
+        for metric in [Metric::Gflops, Metric::FlopsPerCycle, Metric::Efficiency] {
+            let v = rep.series(metric, Stat::Median)[0].1;
+            assert!(v.is_finite(), "{metric:?} must be finite, got {v}");
+            assert_eq!(v, 0.0, "{metric:?} at 0 s must be 0.0");
+        }
+    }
+
+    #[test]
+    fn rate_direction_is_higher_is_better() {
+        assert!(Metric::TimeS.lower_is_better());
+        assert!(Metric::Cycles.lower_is_better());
+        assert!(Metric::Counter(0).lower_is_better());
+        assert!(!Metric::Gflops.lower_is_better());
+        assert!(!Metric::Efficiency.lower_is_better());
     }
 }

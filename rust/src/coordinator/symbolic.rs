@@ -37,17 +37,25 @@ impl Expr {
         Expr::Sym(s.to_string())
     }
 
-    /// Evaluate under bindings; errors on unbound symbols or division
-    /// by zero.
+    /// Evaluate under bindings; errors on unbound symbols, division by
+    /// zero, or i64 overflow (`n*n*n` at large n must not wrap silently
+    /// in release builds).
     pub fn eval(&self, b: &Bindings) -> Result<i64, String> {
+        let overflow = || format!("overflow in '{self}'");
         Ok(match self {
             Expr::Const(v) => *v,
             Expr::Sym(s) => {
                 *b.get(s).ok_or_else(|| format!("unbound symbol '{s}'"))?
             }
-            Expr::Add(l, r) => l.eval(b)? + r.eval(b)?,
-            Expr::Sub(l, r) => l.eval(b)? - r.eval(b)?,
-            Expr::Mul(l, r) => l.eval(b)? * r.eval(b)?,
+            Expr::Add(l, r) => {
+                l.eval(b)?.checked_add(r.eval(b)?).ok_or_else(overflow)?
+            }
+            Expr::Sub(l, r) => {
+                l.eval(b)?.checked_sub(r.eval(b)?).ok_or_else(overflow)?
+            }
+            Expr::Mul(l, r) => {
+                l.eval(b)?.checked_mul(r.eval(b)?).ok_or_else(overflow)?
+            }
             Expr::Div(l, r) => {
                 let d = r.eval(b)?;
                 if d == 0 {
@@ -61,7 +69,7 @@ impl Expr {
                     return Err("division by zero".into());
                 }
                 let n = l.eval(b)?;
-                (n + d - 1).div_euclid(d)
+                n.checked_add(d - 1).ok_or_else(overflow)?.div_euclid(d)
             }
             Expr::Min(l, r) => l.eval(b)?.min(r.eval(b)?),
             Expr::Max(l, r) => l.eval(b)?.max(r.eval(b)?),
@@ -250,8 +258,14 @@ impl P {
             }
             Some(Tok::Op('-')) => {
                 self.pos += 1;
+                // fold a negated literal into a negative constant, so
+                // `Display` output like "-5" reparses to Const(-5)
+                // instead of Sub(0, 5) (parse ∘ Display = id)
                 let e = self.atom()?;
-                Ok(Expr::Sub(Box::new(Expr::Const(0)), Box::new(e)))
+                Ok(match e {
+                    Expr::Const(v) => Expr::Const(-v),
+                    other => Expr::Sub(Box::new(Expr::Const(0)), Box::new(other)),
+                })
             }
             other => Err(format!("unexpected token {other:?}")),
         }
@@ -321,5 +335,39 @@ mod tests {
     fn min_ident_not_function_without_paren() {
         let e = Expr::parse("min + 1").unwrap();
         assert_eq!(e.eval(&bind(&[("min", 4)])).unwrap(), 5);
+    }
+
+    #[test]
+    fn negated_literal_parses_to_negative_const() {
+        assert_eq!(Expr::parse("-5").unwrap(), Expr::Const(-5));
+        // negated non-literals keep the 0 - e desugaring
+        assert_eq!(
+            Expr::parse("-n").unwrap(),
+            Expr::Sub(Box::new(Expr::Const(0)), Box::new(Expr::sym("n")))
+        );
+    }
+
+    #[test]
+    fn eval_overflow_is_an_error_not_a_wrap() {
+        // add at the top of the range
+        let e = Expr::parse("a + b").unwrap();
+        let err = e.eval(&bind(&[("a", i64::MAX), ("b", 1)])).unwrap_err();
+        assert!(err.contains("overflow in '(a + b)'"), "{err}");
+        // sub at the bottom of the range
+        let e = Expr::parse("a - b").unwrap();
+        let err = e.eval(&bind(&[("a", i64::MIN), ("b", 1)])).unwrap_err();
+        assert!(err.contains("overflow in '(a - b)'"), "{err}");
+        // the motivating case: n*n*n wraps silently in release pre-fix
+        let e = Expr::parse("n*n*n").unwrap();
+        let err = e.eval(&bind(&[("n", 3_000_000)])).unwrap_err();
+        assert!(err.contains("overflow"), "{err}");
+        // ceildiv's internal n + d - 1 must also be checked
+        let e = Expr::parse("ceildiv(a, b)").unwrap();
+        assert!(e.eval(&bind(&[("a", i64::MAX), ("b", 2)])).is_err());
+        // boundary values that do NOT overflow still evaluate
+        let e = Expr::parse("a + 0").unwrap();
+        assert_eq!(e.eval(&bind(&[("a", i64::MAX)])).unwrap(), i64::MAX);
+        let e = Expr::parse("a - 0").unwrap();
+        assert_eq!(e.eval(&bind(&[("a", i64::MIN)])).unwrap(), i64::MIN);
     }
 }

@@ -20,6 +20,7 @@
 //! reports to assemble the figure outputs.
 
 pub mod calibrate;
+pub mod scenarios;
 
 use crate::coordinator::{
     run_local, Call, CallArg, DataGen, Experiment, Expr, Figure, Metric, PointResult,
@@ -251,7 +252,7 @@ pub fn call(kernel: &str, toks: &[&str]) -> Result<Call> {
     Call::new(kernel, args)
 }
 
-fn base(name: &str, lib: &str) -> Experiment {
+pub(crate) fn base(name: &str, lib: &str) -> Experiment {
     Experiment {
         name: name.into(),
         library: lib.into(),
@@ -278,7 +279,7 @@ pub fn t1_dgemm_metrics(runner: &dyn ExperimentRunner, quick: bool) -> Result<Fi
     )?];
     let report = runner.run(&exp)?;
     let mut rows = vec!["metric,value".to_string()];
-    for (name, v) in report.metrics_table() {
+    for (name, v) in report.metrics_table()? {
         rows.push(format!("{name},{v:.4}"));
     }
     for (i, cname) in exp.counters.iter().enumerate() {
@@ -1048,9 +1049,17 @@ pub fn all_builders() -> Vec<(&'static str, FigureBuilder)> {
     ]
 }
 
+/// All builders addressable by id: the paper figures plus the
+/// scenario pack ([`scenarios::scenario_builders`], ids S1…).
+pub fn builder_registry() -> Vec<(&'static str, FigureBuilder)> {
+    let mut v = all_builders();
+    v.extend(scenarios::scenario_builders());
+    v
+}
+
 /// Run one figure by id, executing immediately (the standalone path).
 pub fn run_figure(id: &str, quick: bool) -> Result<FigureOutput> {
-    let builder = all_builders()
+    let builder = builder_registry()
         .into_iter()
         .find(|(fid, _)| fid.eq_ignore_ascii_case(id))
         .ok_or_else(|| anyhow!("unknown figure id '{id}'"))?;
@@ -1079,7 +1088,7 @@ pub struct CampaignOutcome {
 /// figure's output does **not** discard the other figures — it is
 /// reported in [`CampaignOutcome::failures`] instead.
 pub fn run_figures_campaign(ids: &[String], quick: bool) -> Result<CampaignOutcome> {
-    let registry = all_builders();
+    let registry = builder_registry();
     let mut builders: Vec<(&'static str, FigureBuilder)> = Vec::new();
     for id in ids {
         let found = registry

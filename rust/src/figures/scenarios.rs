@@ -1,0 +1,723 @@
+//! Scenario pack + multi-library differential studies (ROADMAP item 4;
+//! the paper's §4 application scenarios, generalized).
+//!
+//! Two layers live here:
+//!
+//! * [`compare_libraries`] — run one operation template across several
+//!   backends over a shared parameter grid and assemble a
+//!   [`CompareReport`]: per-library series for any [`Metric`], the
+//!   winner at every grid point, crossover points where the winner
+//!   changes, and a direction-aware library ranking. `elaps compare`
+//!   is a thin CLI shell around this; `--predicted` swaps the engine
+//!   for a [`PredictiveRunner`], so measured and modeled rankings can
+//!   be diffed side by side.
+//! * Scenario builders S1–S4 — seeded campaigns on the standard
+//!   [`ExperimentRunner`] plumbing (`elaps figures S1 … --seed S`),
+//!   each a deterministic end-to-end regression fixture: a blocked
+//!   Cholesky block-size sweep, a symbolic operand-size study, a
+//!   threads-vs-size efficiency surface, and a cross-library
+//!   comparison.
+
+use super::{base, call, ExperimentRunner, FigureBuilder, FigureOutput};
+use crate::coordinator::symbolic::Bindings;
+use crate::coordinator::{
+    DataGen, Experiment, Expr, Figure, Metric, RangeDef, Report, Stat, Vary,
+};
+use crate::sampler::Sampler;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+// ------------------------------------------------- predictive runner
+
+/// An [`ExperimentRunner`] that never executes a kernel: every point
+/// runs on a fresh predictive sampler (`Sampler::predictive`), exactly
+/// the engine's cold seeded semantics, so its reports are bit-identical
+/// to what a seeded `elaps run` would measure. This is `elaps rank`'s
+/// per-point loop behind the runner abstraction — `elaps compare
+/// --predicted` and model-vs-measurement diffs run on it.
+pub struct PredictiveRunner {
+    pub seed: u64,
+    /// Overrides each experiment's machine spec when set.
+    pub machine_spec: Option<String>,
+}
+
+impl PredictiveRunner {
+    pub fn new(seed: u64) -> PredictiveRunner {
+        PredictiveRunner { seed, machine_spec: None }
+    }
+}
+
+impl ExperimentRunner for PredictiveRunner {
+    fn run(&self, exp: &Experiment) -> Result<Report> {
+        let spec = self.machine_spec.as_deref().unwrap_or(&exp.machine);
+        let machine = crate::perfmodel::resolve_machine(spec)?;
+        let library = crate::libraries::by_name(&exp.library)
+            .ok_or_else(|| anyhow!("unknown library '{}'", exp.library))?;
+        let mut points = Vec::new();
+        for pt in exp.unroll()? {
+            let mut sampler =
+                Sampler::new(Arc::clone(&library), machine.clone()).predictive(self.seed);
+            points.push(crate::engine::execute_point_on(&mut sampler, exp, &pt)?);
+        }
+        Report::assemble(exp.clone(), machine, points)
+    }
+
+    // the default warm/cold legs spin up a real engine; a predictive
+    // runner must stay execution-free, and modeled warm == cold anyway
+    fn run_warm(&self, exp: &Experiment) -> Result<Report> {
+        self.run(exp)
+    }
+
+    fn run_cold(&self, exp: &Experiment) -> Result<Report> {
+        self.run(exp)
+    }
+}
+
+// ------------------------------------------------ differential report
+
+/// One backend's series over the shared grid.
+pub struct LibrarySeries {
+    pub library: String,
+    /// (range value, metric value) per grid point.
+    pub series: Vec<(i64, f64)>,
+}
+
+/// One entry of the differential ranking.
+pub struct RankEntry {
+    pub library: String,
+    /// Mean of the metric over the grid (the ranking key, compared in
+    /// the metric's [`Metric::lower_is_better`] direction).
+    pub score: f64,
+    /// Number of grid points this library wins outright.
+    pub wins: usize,
+}
+
+/// The ranked differential report of one operation across backends.
+pub struct CompareReport {
+    pub experiment: String,
+    pub machine: String,
+    pub metric: Metric,
+    pub stat: Stat,
+    /// "measured" or "predicted".
+    pub mode: String,
+    pub libraries: Vec<LibrarySeries>,
+    /// Per grid point: (range value, winning library, its value).
+    pub winners: Vec<(i64, String, f64)>,
+    /// Winner changes along the grid: (at range value, from, to).
+    pub crossovers: Vec<(i64, String, String)>,
+    /// Libraries best-first by direction-aware mean score; ties break
+    /// by library name, so the ordering is deterministic.
+    pub ranking: Vec<RankEntry>,
+}
+
+impl CompareReport {
+    /// The stable `--json` contract of `elaps compare`.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("experiment", self.experiment.as_str());
+        j.set("machine", self.machine.as_str());
+        j.set("metric", self.metric.name());
+        j.set("stat", self.stat.name());
+        j.set("mode", self.mode.as_str());
+        j.set("lower_is_better", self.metric.lower_is_better());
+        let series: Vec<Json> = self
+            .libraries
+            .iter()
+            .map(|ls| {
+                let mut o = Json::obj();
+                o.set("library", ls.library.as_str());
+                let pts: Vec<Json> = ls
+                    .series
+                    .iter()
+                    .map(|&(x, v)| {
+                        let mut p = Json::obj();
+                        p.set("range_value", x);
+                        p.set("value", v);
+                        p
+                    })
+                    .collect();
+                o.set("points", pts);
+                o
+            })
+            .collect();
+        j.set("series", series);
+        let winners: Vec<Json> = self
+            .winners
+            .iter()
+            .map(|(x, lib, v)| {
+                let mut o = Json::obj();
+                o.set("range_value", *x);
+                o.set("library", lib.as_str());
+                o.set("value", *v);
+                o
+            })
+            .collect();
+        j.set("winners", winners);
+        let crossovers: Vec<Json> = self
+            .crossovers
+            .iter()
+            .map(|(x, from, to)| {
+                let mut o = Json::obj();
+                o.set("at", *x);
+                o.set("from", from.as_str());
+                o.set("to", to.as_str());
+                o
+            })
+            .collect();
+        j.set("crossovers", crossovers);
+        let ranking: Vec<Json> = self
+            .ranking
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let mut o = Json::obj();
+                o.set("rank", i + 1);
+                o.set("library", r.library.as_str());
+                o.set("score", r.score);
+                o.set("wins", r.wins);
+                o
+            })
+            .collect();
+        j.set("ranking", ranking);
+        j
+    }
+
+    /// Multi-series figure with dashed markers at every crossover.
+    pub fn to_figure(&self) -> Figure {
+        let mut fig = Figure::new(
+            &format!("{} — {} across libraries ({})", self.experiment, self.metric.name(), self.mode),
+            "range value",
+            &self.metric.name(),
+        );
+        for ls in &self.libraries {
+            fig.add_iseries(&ls.library, &ls.series);
+        }
+        for (x, from, to) in &self.crossovers {
+            fig.add_vline(*x as f64, &format!("{from}→{to}"));
+        }
+        fig
+    }
+
+    /// CSV rows: the per-library grid, the winner column, then the
+    /// ranking block.
+    pub fn csv_rows(&self) -> Vec<String> {
+        let mut rows = vec![format!(
+            "range_value,{},winner",
+            self.libraries.iter().map(|l| l.library.as_str()).collect::<Vec<_>>().join(",")
+        )];
+        for (i, (x, winner, _)) in self.winners.iter().enumerate() {
+            let vals: Vec<String> =
+                self.libraries.iter().map(|l| format!("{:.6}", l.series[i].1)).collect();
+            rows.push(format!("{x},{},{winner}", vals.join(",")));
+        }
+        rows.push(String::new());
+        rows.push("rank,library,score,wins".into());
+        for (i, r) in self.ranking.iter().enumerate() {
+            rows.push(format!("{},{},{:.6},{}", i + 1, r.library, r.score, r.wins));
+        }
+        rows
+    }
+}
+
+/// Run `template` once per backend in `libs` (same grid, same calls —
+/// only the library differs) through one `run_batch`, and assemble the
+/// ranked differential report for `metric`/`stat`.
+pub fn compare_libraries(
+    runner: &dyn ExperimentRunner,
+    template: &Experiment,
+    libs: &[String],
+    metric: Metric,
+    stat: Stat,
+    mode: &str,
+) -> Result<CompareReport> {
+    if libs.is_empty() {
+        bail!("no libraries to compare");
+    }
+    let mut exps = Vec::with_capacity(libs.len());
+    for lib in libs {
+        let mut exp = template.clone();
+        exp.library = lib.clone();
+        exp.name = format!("{}-{lib}", template.name);
+        exps.push(exp);
+    }
+    let reports = runner.run_batch(&exps)?;
+    let machine =
+        reports.first().map(|r| r.machine.name.clone()).unwrap_or_default();
+    let libraries: Vec<LibrarySeries> = libs
+        .iter()
+        .zip(&reports)
+        .map(|(lib, report)| LibrarySeries {
+            library: lib.clone(),
+            series: report.series(metric, stat),
+        })
+        .collect();
+    // the grid must be shared — differential columns are meaningless
+    // otherwise
+    let xs: Vec<i64> = libraries[0].series.iter().map(|&(x, _)| x).collect();
+    for ls in &libraries[1..] {
+        let other: Vec<i64> = ls.series.iter().map(|&(x, _)| x).collect();
+        if other != xs {
+            bail!(
+                "library '{}' measured grid {:?}, expected {:?}",
+                ls.library,
+                other,
+                xs
+            );
+        }
+    }
+    let lower = metric.lower_is_better();
+    let better = |v: f64, than: f64| if lower { v < than } else { v > than };
+    let mut winners = Vec::with_capacity(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        // ties keep the earliest library in `libs` order — deterministic
+        let mut best = (&libraries[0].library, libraries[0].series[i].1);
+        for ls in &libraries[1..] {
+            if better(ls.series[i].1, best.1) {
+                best = (&ls.library, ls.series[i].1);
+            }
+        }
+        winners.push((x, best.0.clone(), best.1));
+    }
+    let crossovers: Vec<(i64, String, String)> = winners
+        .windows(2)
+        .filter(|w| w[0].1 != w[1].1)
+        .map(|w| (w[1].0, w[0].1.clone(), w[1].1.clone()))
+        .collect();
+    let mut ranking: Vec<RankEntry> = libraries
+        .iter()
+        .map(|ls| RankEntry {
+            library: ls.library.clone(),
+            score: ls.series.iter().map(|&(_, v)| v).sum::<f64>() / ls.series.len() as f64,
+            wins: winners.iter().filter(|(_, w, _)| *w == ls.library).count(),
+        })
+        .collect();
+    ranking.sort_by(|a, b| {
+        let ord = if lower {
+            a.score.total_cmp(&b.score)
+        } else {
+            b.score.total_cmp(&a.score)
+        };
+        ord.then_with(|| a.library.cmp(&b.library))
+    });
+    Ok(CompareReport {
+        experiment: template.name.clone(),
+        machine,
+        metric,
+        stat,
+        mode: mode.to_string(),
+        libraries,
+        winners,
+        crossovers,
+        ranking,
+    })
+}
+
+/// Operations `elaps compare` knows how to template over a square-ish
+/// `n` grid.
+pub const COMPARE_OPS: &[&str] = &["dgemm", "dtrsyl", "dpotrf", "dgetrf"];
+
+/// Build the shared comparison template for one operation: a range
+/// sweep `n ∈ values` with per-operation calls and operand generators.
+pub fn op_experiment(op: &str, values: Vec<i64>, nreps: usize) -> Result<Experiment> {
+    if values.is_empty() {
+        bail!("empty parameter grid");
+    }
+    let mut exp = base(&format!("compare-{op}"), "rustblocked");
+    exp.nreps = nreps;
+    exp.range = Some(RangeDef::new("n", values));
+    match op {
+        "dgemm" => {
+            exp.calls = vec![call(
+                "dgemm",
+                &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+            )?];
+        }
+        "dtrsyl" => {
+            exp.calls = vec![call(
+                "dtrsyl",
+                &["N", "N", "1", "n", "n", "$A", "n", "$B", "n", "$C", "n"],
+            )?];
+            exp.datagen.insert("A".into(), DataGen::Tri(Expr::sym("n"), 'U'));
+            exp.datagen.insert("B".into(), DataGen::Tri(Expr::sym("n"), 'U'));
+        }
+        "dpotrf" => {
+            exp.calls = vec![call("dpotrf", &["L", "n", "$A", "n"])?];
+            exp.datagen.insert("A".into(), DataGen::Spd(Expr::sym("n")));
+            // dpotrf overwrites A with its factor, which is not SPD —
+            // a fresh matrix per repetition keeps every rep valid
+            exp.vary.insert("A".into(), Vary { with_rep: true, ..Default::default() });
+        }
+        "dgetrf" => {
+            exp.calls = vec![call("dgetrf", &["n", "n", "$A", "n"])?];
+            exp.vary.insert("A".into(), Vary { with_rep: true, ..Default::default() });
+        }
+        other => bail!(
+            "unsupported compare operation '{other}' (supported: {})",
+            COMPARE_OPS.join(", ")
+        ),
+    }
+    Ok(exp)
+}
+
+// ----------------------------------------------------- scenario pack
+
+/// S1 — blocked-algorithm block-size sweep: right-looking blocked
+/// Cholesky, one sum-range step per diagonal block (dpotrf on the
+/// nb×nb diagonal block, dtrsm for the panel, dsyrk for the trailing
+/// update — sizes are symbolic in the block index `i`).
+pub fn s1_blocked_cholesky(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
+    let n: i64 = if quick { 256 } else { 1024 };
+    let nbs: Vec<i64> = if quick {
+        vec![8, 16, 32, 64]
+    } else {
+        vec![8, 16, 32, 64, 96, 128, 192, 256]
+    };
+    let mut pts = Vec::new();
+    let mut rows = vec!["nb,gflops".to_string()];
+    for &nb in &nbs {
+        let nbs_ = nb.to_string();
+        let mut exp = base(&format!("s1-chol-nb{nb}"), "rustblocked");
+        exp.nreps = 3;
+        let steps: Vec<i64> = (0..n).step_by(nb as usize).collect();
+        exp.sumrange = Some(RangeDef::new("i", steps));
+        let rem = format!("max({n} - i - {nb}, 0)");
+        let remld = format!("max({n} - i - {nb}, 1)");
+        exp.calls = vec![
+            call("dpotrf", &["L", &nbs_, "$A11", &nbs_])?,
+            call(
+                "dtrsm",
+                &["R", "L", "T", "N", &rem, &nbs_, "1.0", "$A11", &nbs_, "$A21", &remld],
+            )?,
+            call(
+                "dsyrk",
+                &["L", "N", &rem, &nbs_, "-1.0", "$A21", &remld, "1.0", "$A22", &remld],
+            )?,
+        ];
+        exp.datagen.insert("A11".into(), DataGen::Spd(Expr::Const(nb)));
+        // re-factoring a Cholesky factor is invalid — fresh SPD block
+        // per sum-range step and repetition
+        exp.vary.insert(
+            "A11".into(),
+            Vary { with_sumrange: true, with_rep: true, pad_elems: 0 },
+        );
+        let report = runner.run(&exp)?;
+        // rate against the true Cholesky flop count n³/3
+        let secs = report.series(Metric::TimeS, Stat::Median)[0].1;
+        let gflops =
+            if secs > 0.0 { (n as f64).powi(3) / 3.0 / secs / 1e9 } else { 0.0 };
+        rows.push(format!("{nb},{gflops:.4}"));
+        pts.push((nb, gflops));
+    }
+    let mut fig = Figure::new(
+        &format!("S1 — blocked Cholesky block-size sweep, n={n}"),
+        "block size nb",
+        "Gflops/s",
+    );
+    fig.add_iseries("rustblocked", &pts);
+    let best = pts.iter().cloned().fold((0i64, 0.0f64), |a, b| if b.1 > a.1 { b } else { a });
+    Ok(FigureOutput {
+        id: "S1",
+        title: "S1 — block-size tuning of blocked Cholesky".into(),
+        figure: Some(fig),
+        rows,
+        notes: format!(
+            "best nb = {} at {:.2} Gflops/s. Interior optimum expected: tiny nb is \
+             panel-bound, huge nb is unblocked-dpotrf-bound. Seeded runs replay \
+             byte-identically (regression fixture).",
+            best.0, best.1
+        ),
+    })
+}
+
+/// S2 — symbolic operand-size study: one dgemm whose column and depth
+/// dimensions are symbolic expressions of the swept size
+/// (`ceildiv(n, 4)` and `min(n, 64)`), exercising the
+/// `coordinator/symbolic.rs` grammar end to end through script
+/// generation; the CSV re-evaluates the same expressions per point.
+pub fn s2_symbolic_sizes(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
+    let (lo, step, hi): (i64, i64, i64) = if quick { (32, 32, 160) } else { (64, 64, 640) };
+    let cols = Expr::parse("ceildiv(n, 4)").map_err(|e| anyhow!(e))?;
+    let depth = Expr::parse("min(n, 64)").map_err(|e| anyhow!(e))?;
+    let mut exp = base("s2-symbolic", "rustblocked");
+    exp.nreps = 3;
+    exp.range = Some(RangeDef::span("n", lo, step, hi));
+    exp.calls = vec![call(
+        "dgemm",
+        &[
+            "N",
+            "N",
+            "n",
+            "ceildiv(n, 4)",
+            "min(n, 64)",
+            "1.0",
+            "$A",
+            "n",
+            "$B",
+            "min(n, 64)",
+            "0.0",
+            "$C",
+            "n",
+        ],
+    )?];
+    let report = runner.run(&exp)?;
+    let series = report.series(Metric::Gflops, Stat::Median);
+    let mut rows = vec!["n,cols,depth,gflops".to_string()];
+    let mut pts = Vec::new();
+    for &(x, g) in &series {
+        let mut b = Bindings::new();
+        b.insert("n".into(), x);
+        let c = cols.eval(&b).map_err(|e| anyhow!(e))?;
+        let d = depth.eval(&b).map_err(|e| anyhow!(e))?;
+        rows.push(format!("{x},{c},{d},{g:.4}"));
+        pts.push((x, g));
+    }
+    let mut fig = Figure::new(
+        "S2 — symbolic operand sizes: C(n×⌈n/4⌉) += A·B, k=min(n,64)",
+        "n",
+        "Gflops/s",
+    );
+    fig.add_iseries("rustblocked", &pts);
+    Ok(FigureOutput {
+        id: "S2",
+        title: "S2 — symbolic operand-size study".into(),
+        figure: Some(fig),
+        rows,
+        notes: format!(
+            "n = {lo}:{step}:{hi}; cols = ceildiv(n, 4), depth = min(n, 64) — the \
+             rate should flatten once the depth cap engages at n ≥ 64. Sizes in the \
+             CSV are re-evaluated from the same symbolic expressions the sampler \
+             script used."
+        ),
+    })
+}
+
+/// S3 — threads-vs-size efficiency surface: the same dgemm sweep at
+/// 1/2/4/8 library threads (thread-scaling model on a 1-core host,
+/// DESIGN.md §Subst 4), reported as efficiency so the surface shows
+/// where parallelism stops paying.
+pub fn s3_thread_surface(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
+    let (lo, step, hi): (i64, i64, i64) = if quick { (64, 64, 256) } else { (128, 128, 768) };
+    let threads: &[i64] = &[1, 2, 4, 8];
+    let mut exps = Vec::with_capacity(threads.len());
+    for &t in threads {
+        let mut exp = base(&format!("s3-threads{t}"), "rustblocked");
+        exp.machine = "sandybridge".into();
+        exp.nreps = 3;
+        exp.nthreads = Expr::Const(t);
+        exp.range = Some(RangeDef::span("n", lo, step, hi));
+        exp.calls = vec![call(
+            "dgemm",
+            &["N", "N", "n", "n", "n", "1.0", "$A", "n", "$B", "n", "0.0", "$C", "n"],
+        )?];
+        exps.push(exp);
+    }
+    let reports = runner.run_batch(&exps)?;
+    let mut fig = Figure::new(
+        "S3 — efficiency surface: dgemm over size × threads (simulated threads)",
+        "n",
+        "efficiency [%]",
+    );
+    let mut per_thread: Vec<Vec<(i64, f64)>> = Vec::new();
+    for (&t, report) in threads.iter().zip(&reports) {
+        let s = report.series(Metric::Efficiency, Stat::Median);
+        fig.add_iseries(&format!("{t} thread(s)"), &s);
+        per_thread.push(s);
+    }
+    let mut rows = vec![format!(
+        "n,{}",
+        threads.iter().map(|t| format!("eff_t{t}")).collect::<Vec<_>>().join(",")
+    )];
+    for (i, &(x, _)) in per_thread[0].iter().enumerate() {
+        let vals: Vec<String> =
+            per_thread.iter().map(|s| format!("{:.3}", s[i].1)).collect();
+        rows.push(format!("{x},{}", vals.join(",")));
+    }
+    Ok(FigureOutput {
+        id: "S3",
+        title: "S3 — threads-vs-size efficiency surface".into(),
+        figure: Some(fig),
+        rows,
+        notes: format!(
+            "n = {lo}:{step}:{hi} at 1/2/4/8 library threads on the sandybridge \
+             model. SIMULATED THREADS: efficiency is measured against the thread \
+             count's peak, so small sizes at high thread counts sit lowest — the \
+             surface's diagonal is where parallelism starts paying."
+        ),
+    })
+}
+
+/// S4 — cross-library comparison: the full differential report
+/// ([`compare_libraries`]) of one Cholesky factorization across every
+/// built-in backend, through the standard runner plumbing.
+pub fn s4_cross_library(runner: &dyn ExperimentRunner, quick: bool) -> Result<FigureOutput> {
+    let values: Vec<i64> = if quick {
+        vec![32, 64, 96, 128]
+    } else {
+        vec![64, 128, 192, 256, 384, 512]
+    };
+    let template = op_experiment("dpotrf", values, 3)?;
+    let libs: Vec<String> =
+        crate::libraries::RUST_LIBRARIES.iter().map(|s| s.to_string()).collect();
+    let cmp = compare_libraries(runner, &template, &libs, Metric::Gflops, Stat::Median, "measured")?;
+    let mut rows = cmp.csv_rows();
+    rows.push(String::new());
+    rows.push("crossover_at,from,to".into());
+    for (x, from, to) in &cmp.crossovers {
+        rows.push(format!("{x},{from},{to}"));
+    }
+    let best = cmp.ranking.first().map(|r| r.library.clone()).unwrap_or_default();
+    Ok(FigureOutput {
+        id: "S4",
+        title: "S4 — dpotrf across libraries (differential report)".into(),
+        figure: Some(cmp.to_figure()),
+        rows,
+        notes: format!(
+            "winner-per-point, crossovers and direction-aware ranking over \
+             {} backends; overall best: {best}. The same assembly backs \
+             `elaps compare`, which adds --predicted for model-vs-measurement \
+             diffs.",
+            cmp.libraries.len()
+        ),
+    })
+}
+
+/// The scenario-pack registry (ids S1…S4), merged into
+/// [`super::builder_registry`] so `elaps figures S1 …` runs them like
+/// any paper figure.
+pub fn scenario_builders() -> Vec<(&'static str, FigureBuilder)> {
+    vec![
+        ("S1", s1_blocked_cholesky),
+        ("S2", s2_symbolic_sizes),
+        ("S3", s3_thread_surface),
+        ("S4", s4_cross_library),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::LocalRunner;
+
+    fn seeded_predictive() -> PredictiveRunner {
+        PredictiveRunner::new(7)
+    }
+
+    #[test]
+    fn op_experiment_rejects_unknown_and_empty() {
+        assert!(op_experiment("dfoo", vec![64], 2).is_err());
+        assert!(op_experiment("dgemm", vec![], 2).is_err());
+    }
+
+    #[test]
+    fn compare_report_shape_and_determinism() {
+        let template = op_experiment("dgemm", vec![16, 32, 48], 2).unwrap();
+        let libs: Vec<String> =
+            crate::libraries::RUST_LIBRARIES.iter().map(|s| s.to_string()).collect();
+        let runner = seeded_predictive();
+        let a = compare_libraries(&runner, &template, &libs, Metric::Gflops, Stat::Median, "predicted")
+            .unwrap();
+        assert_eq!(a.libraries.len(), libs.len());
+        assert_eq!(a.winners.len(), 3);
+        assert_eq!(a.ranking.len(), libs.len());
+        // ranking is direction-aware: best-first by Gflops mean
+        for w in a.ranking.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+        // wins sum to the number of grid points
+        assert_eq!(a.ranking.iter().map(|r| r.wins).sum::<usize>(), 3);
+        // same seed → byte-identical JSON
+        let b = compare_libraries(&runner, &template, &libs, Metric::Gflops, Stat::Median, "predicted")
+            .unwrap();
+        assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn compare_time_metric_ranks_lowest_first() {
+        let template = op_experiment("dgemm", vec![16, 32], 2).unwrap();
+        let libs: Vec<String> =
+            crate::libraries::RUST_LIBRARIES.iter().map(|s| s.to_string()).collect();
+        let cmp = compare_libraries(
+            &seeded_predictive(),
+            &template,
+            &libs,
+            Metric::TimeS,
+            Stat::Median,
+            "predicted",
+        )
+        .unwrap();
+        for w in cmp.ranking.windows(2) {
+            assert!(w[0].score <= w[1].score, "time ranking must be ascending");
+        }
+        // winner at each point is the per-point minimum
+        for (i, (_, winner, v)) in cmp.winners.iter().enumerate() {
+            for ls in &cmp.libraries {
+                assert!(
+                    ls.series[i].1 >= *v || ls.library == *winner,
+                    "winner must hold the minimum"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn compare_rejects_empty_library_list() {
+        let template = op_experiment("dgemm", vec![16], 1).unwrap();
+        let r = compare_libraries(
+            &seeded_predictive(),
+            &template,
+            &[],
+            Metric::Gflops,
+            Stat::Median,
+            "predicted",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn predicted_matches_measured_under_seed() {
+        // the predictive runner and a seeded engine run must agree
+        // bit-for-bit (the PR-9 invariant, here through compare)
+        let template = op_experiment("dgemm", vec![16, 32], 2).unwrap();
+        let libs = vec!["rustref".to_string(), "rustblocked".to_string()];
+        let predicted = compare_libraries(
+            &seeded_predictive(),
+            &template,
+            &libs,
+            Metric::TimeS,
+            Stat::Median,
+            "predicted",
+        )
+        .unwrap();
+        let cfg = crate::engine::EngineConfig::default().with_seed(7);
+        let engine = crate::engine::Engine::new(cfg);
+        let mut exps = Vec::new();
+        for lib in &libs {
+            let mut e = template.clone();
+            e.library = lib.clone();
+            e.name = format!("{}-{lib}", template.name);
+            exps.push(e);
+        }
+        let reports = engine.run_batch(&exps).unwrap();
+        for (ls, report) in predicted.libraries.iter().zip(&reports) {
+            assert_eq!(ls.series, report.series(Metric::TimeS, Stat::Median), "{}", ls.library);
+        }
+    }
+
+    #[test]
+    fn scenarios_run_quick_on_predictive_runner() {
+        let runner = seeded_predictive();
+        for (id, builder) in scenario_builders() {
+            let out = builder(&runner, true).unwrap_or_else(|e| panic!("{id}: {e:#}"));
+            assert_eq!(out.id, id);
+            assert!(out.rows.len() > 1, "{id} must emit data rows");
+        }
+    }
+
+    #[test]
+    fn s4_runs_through_local_runner() {
+        let out = s4_cross_library(&LocalRunner, true).unwrap();
+        assert_eq!(out.id, "S4");
+        assert!(out.rows.iter().any(|r| r.starts_with("rank,library")));
+    }
+}

@@ -306,20 +306,37 @@ pub fn dispatch(variant: Variant, av: &ArgValues, ops: &OperandSet) -> Result<()
         }
         "dsyev" | "dsyevd" | "dsyevx" | "dsyevr" => {
             let n = av.dim("n");
+            let lda = av.dim("lda");
             let want_v = av.flag("jobz") == 'V';
+            // validate the leading dimension before the solver mutates
+            // A: the eigenvector writeback below slices
+            // `a[j*lda..j*lda+n]`, which corrupts neighboring columns
+            // (or panics mid-slice) when lda < n
+            if lda < n {
+                bail!("{name}: lda ({lda}) must be >= n ({n})");
+            }
             let a = ops.get_mut(0);
+            if n > 0 && a.len() < (n - 1) * lda + n {
+                bail!(
+                    "{name}: operand A has {} elements, need at least {} for n={n}, lda={lda}",
+                    a.len(),
+                    (n - 1) * lda + n
+                );
+            }
             let w = ops.get_mut(1);
+            if w.len() < n {
+                bail!("{name}: operand W has {} elements, need at least n={n}", w.len());
+            }
             let res = match name {
-                "dsyev" => lp::dsyev(n, a, av.dim("lda"), want_v),
-                "dsyevd" => lp::dsyevd(n, a, av.dim("lda"), want_v),
-                "dsyevx" => lp::dsyevx(n, a, av.dim("lda"), want_v),
-                _ => lp::dsyevr(n, a, av.dim("lda"), want_v),
+                "dsyev" => lp::dsyev(n, a, lda, want_v),
+                "dsyevd" => lp::dsyevd(n, a, lda, want_v),
+                "dsyevx" => lp::dsyevx(n, a, lda, want_v),
+                _ => lp::dsyevr(n, a, lda, want_v),
             }
             .map_err(|e| anyhow!("{name}: {e}"))?;
             w[..n].copy_from_slice(&res.values);
             if let Some(vecs) = res.vectors {
                 // overwrite A with the eigenvectors (LAPACK jobz='V')
-                let lda = av.dim("lda");
                 for j in 0..n {
                     a[j * lda..j * lda + n].copy_from_slice(&vecs[j * n..(j + 1) * n]);
                 }
@@ -384,6 +401,17 @@ pub fn by_name(name: &str) -> Option<Arc<dyn KernelLibrary>> {
 
 /// Names of the always-available rust libraries.
 pub const RUST_LIBRARIES: &[&str] = &["rustref", "rustblocked", "rustrecursive"];
+
+/// All backend names resolvable by [`by_name`] right now: the three
+/// built-in rust libraries followed by any [`register`]ed extras
+/// (sorted), e.g. `xla` once its runtime artifacts are loaded.
+pub fn available_libraries() -> Vec<String> {
+    let mut names: Vec<String> = RUST_LIBRARIES.iter().map(|s| s.to_string()).collect();
+    let mut extras: Vec<String> = extra().read().unwrap().keys().cloned().collect();
+    extras.sort();
+    names.extend(extras);
+    names
+}
 
 #[cfg(test)]
 mod tests {
@@ -479,6 +507,46 @@ mod tests {
             assert!(w[0] <= w[1]);
         }
         assert!(wbuf[0] > 0.0); // SPD
+    }
+
+    #[test]
+    fn syev_rejects_lda_smaller_than_n() {
+        let mut rng = Xoshiro256::seeded(203);
+        let n = 10;
+        let a0 = Matrix::random_spd(n, &mut rng);
+        let lib = by_name("rustref").unwrap();
+        // lda=8 < n=10: must error cleanly, not corrupt columns or
+        // panic mid-slice in the eigenvector writeback
+        let av = args("dsyev", &["V", "L", "10", "A", "8", "W"]);
+        let mut abuf = a0.data.clone();
+        let snapshot = abuf.clone();
+        let mut wbuf = vec![0.0; n];
+        let ops = opset(&mut [(&mut abuf, DataDir::InOut), (&mut wbuf, DataDir::Out)]);
+        let err = lib.execute(&av, &ops).unwrap_err();
+        assert!(err.to_string().contains("lda"), "{err}");
+        // validation fires before the solver touches A
+        assert_eq!(abuf, snapshot);
+    }
+
+    #[test]
+    fn syev_rejects_short_operand_buffers() {
+        let lib = by_name("rustref").unwrap();
+        let av = args("dsyev", &["N", "L", "10", "A", "10", "W"]);
+        let mut abuf = vec![0.0; 50]; // needs 10*10
+        let mut wbuf = vec![0.0; 10];
+        let ops = opset(&mut [(&mut abuf, DataDir::InOut), (&mut wbuf, DataDir::Out)]);
+        let err = lib.execute(&av, &ops).unwrap_err();
+        assert!(err.to_string().contains("operand A"), "{err}");
+    }
+
+    #[test]
+    fn available_libraries_lists_builtins_first() {
+        let names = available_libraries();
+        assert!(names.len() >= RUST_LIBRARIES.len());
+        assert_eq!(&names[..RUST_LIBRARIES.len()], RUST_LIBRARIES);
+        for name in &names {
+            assert!(by_name(name).is_some(), "{name} listed but not resolvable");
+        }
     }
 
     #[test]

@@ -23,7 +23,10 @@
 //!   analyze               latency/throughput/cache/audit over a spool's
 //!                         job-lifecycle event log
 //!   kernels               list the kernel signature database
-//!   libraries             list available kernel libraries
+//!   libraries             list kernel libraries (built-ins + registered
+//!                         extras such as the xla backends)
+//!   compare <op>          cross-library differential report over a
+//!                         shared grid (winners, crossovers, ranking)
 //!
 //! `--jobs N` fans experiment points out over N engine worker threads;
 //! `--cache DIR` enables the content-addressed result cache, so re-runs
@@ -54,14 +57,18 @@ USAGE:
   elaps retry --campaign TAG [--max-attempts N] [--spool DIR]
   elaps view <report.json> [--metric M] [--stat S]
   elaps plot <report.json> [--metric M] [--stat S] [--svg out.svg]
-  elaps figures [T1 F1 F2 … W1|all] [--full] [--jobs N] [--cache DIR]
-                [--out-dir figures_out]
+  elaps figures [T1 F1 … W1 S1 … S4|all|scenarios] [--full] [--jobs N]
+                [--cache DIR] [--out-dir figures_out] [--seed S]
   elaps cache stats [--cache DIR]
   elaps cache gc [--max-bytes N[K|M|G]] [--max-age DUR] [--cache DIR]
   elaps cache clear [--cache DIR]
   elaps calibrate [--library L] [--machine M] [--out PROFILE.json]
                   [--quick] [--json] [--seed S] [--jobs N] [--cache DIR]
   elaps rank <experiment.json> [--machine M] [--seed S] [--json]
+  elaps compare <dgemm|dtrsyl|dpotrf|dgetrf> [--libraries a,b,…]
+                [--range lo:step:hi] [--metric M] [--stat S] [--nreps N]
+                [--machine M] [--predicted] [--seed S] [--json]
+                [--svg out.svg] [--jobs N] [--cache DIR]
   elaps sampler [--library L] [--machine M]
   elaps worker --spool DIR [--once] [--workers N] [--lease-ttl DUR]
                [--max-leases N] [--recover SECS|0=off] [--verbose]
@@ -71,7 +78,9 @@ USAGE:
   elaps analyze [--campaign TAG] [--spool DIR] [--json]
   elaps bench [SUITE…] [--quick] [--out DIR]
   elaps kernels
-  elaps libraries
+  elaps libraries   lists built-ins and registered extra backends (e.g.
+                    xla/xla-pallas once AOT artifacts are found) — the
+                    default backend set of `elaps compare`
 
 metrics: cycles time_s time_ms gflops flops_per_cycle efficiency
          counter0 counter1 … (one per experiment counter)
@@ -102,6 +111,14 @@ stats:   min max avg med std
 --seed S       fully deterministic run: seeded operand data + modeled
                (machine-model) timings; two runs with the same seed,
                --warm and --jobs are byte-identical (env ELAPS_SEED)
+--predicted    compare: rank the libraries from the machine model alone
+               (one predictive sampler per point, no kernel executed) —
+               bit-identical to what the same --seed would measure, so
+               diffing it against a measured run validates the model
+--libraries    compare: comma-separated backend list (default: every
+               resolvable library, built-ins first)
+--range        compare: the shared n grid as lo:step:hi (inclusive;
+               lo:hi and a single value also work)
 --max-bytes N  cache gc byte budget; K/M/G suffixes are powers of 1024
 --max-age DUR  cache gc age cutoff by store time: N[s|m|h|d], e.g. 7d
 --campaign TAG address jobs as a named campaign: submit appends the
@@ -190,6 +207,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
             "verbose",
             "json",
             "quick",
+            "predicted",
         ],
     );
     match cmd.as_str() {
@@ -204,6 +222,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "cache" => cmd_cache(&args),
         "calibrate" => cmd_calibrate(&args),
         "rank" => cmd_rank(&args),
+        "compare" => cmd_compare(&args),
         "sampler" => cmd_sampler(&args),
         "worker" => cmd_worker(&args),
         "retry" => cmd_retry(&args),
@@ -721,7 +740,7 @@ fn print_report_summary(report: &elaps::Report) -> Result<()> {
         report.experiment.nreps
     );
     if report.points.len() == 1 {
-        for (name, v) in report.metrics_table() {
+        for (name, v) in report.metrics_table()? {
             println!("  {name:<18} {v:>16.4}");
         }
     } else {
@@ -785,9 +804,22 @@ fn cmd_figures(args: &Args) -> Result<()> {
     let ids: Vec<String> = if args.positional.is_empty()
         || args.positional.iter().any(|p| p == "all")
     {
-        elaps::figures::all_builders().iter().map(|(id, _)| id.to_string()).collect()
+        elaps::figures::builder_registry().iter().map(|(id, _)| id.to_string()).collect()
     } else {
-        args.positional.clone()
+        // "scenarios" expands to the S* pack (CI regression fixtures)
+        args.positional
+            .iter()
+            .flat_map(|p| {
+                if p == "scenarios" {
+                    elaps::figures::scenarios::scenario_builders()
+                        .iter()
+                        .map(|(id, _)| id.to_string())
+                        .collect()
+                } else {
+                    vec![p.clone()]
+                }
+            })
+            .collect()
     };
     // every builder's experiments go through ONE engine batch, so
     // campaign-level sharding and the cache probe cover them all
@@ -952,6 +984,124 @@ fn cmd_rank(args: &Args) -> Result<()> {
         for (rank, &(_, x, t, secs)) in ranked.iter().enumerate() {
             println!("  {:>4} {x:>8} {t:>8} {secs:>16.6}", rank + 1);
         }
+    }
+    Ok(())
+}
+
+/// `elaps compare`: run one operation across several backends over a
+/// shared parameter grid and print the ranked differential report —
+/// per-library series, winner per point, crossovers, direction-aware
+/// ranking. `--predicted` swaps the engine for the predictive sampler
+/// ([`elaps::figures::scenarios::PredictiveRunner`]), so measured and
+/// modeled rankings can be diffed with the same output contract.
+fn cmd_compare(args: &Args) -> Result<()> {
+    use elaps::figures::scenarios::{compare_libraries, op_experiment, PredictiveRunner, COMPARE_OPS};
+    try_register_xla();
+    let op = args.positional.first().map(String::as_str).ok_or_else(|| {
+        anyhow!(
+            "usage: elaps compare <{}> [--libraries a,b,…] [--range lo:step:hi] \
+             [--metric M] [--stat S] [--predicted] [--seed S] [--json]",
+            COMPARE_OPS.join("|")
+        )
+    })?;
+    let values: Vec<i64> = match args.opt("range") {
+        Some(spec) => elaps::util::cli::parse_range(spec)
+            .ok_or_else(|| anyhow!("--range expects lo:step:hi (inclusive)"))?
+            .into_iter()
+            .map(|v| v as i64)
+            .collect(),
+        None => vec![32, 64, 96, 128, 192, 256],
+    };
+    let nreps = args
+        .opt_usize_strict("nreps")
+        .map_err(|e| anyhow!(e))?
+        .unwrap_or(3);
+    if nreps == 0 {
+        bail!("--nreps must be ≥ 1");
+    }
+    let libs: Vec<String> = match args.opt("libraries") {
+        Some(list) => {
+            let libs: Vec<String> = list
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect();
+            for lib in &libs {
+                if elaps::libraries::by_name(lib).is_none() {
+                    bail!(
+                        "unknown library '{lib}' (available: {})",
+                        elaps::libraries::available_libraries().join(", ")
+                    );
+                }
+            }
+            libs
+        }
+        None => elaps::libraries::available_libraries(),
+    };
+    let metric = parse_metric(args.opt_or("metric", "gflops"))?;
+    let stat = Stat::by_name(args.opt_or("stat", "med"))
+        .ok_or_else(|| anyhow!("unknown stat (use min/max/avg/med/std)"))?;
+    let mut template = op_experiment(op, values, nreps)?;
+    if let Some(m) = args.opt("machine") {
+        template.machine = m.to_string();
+    }
+    let cmp = if args.flag("predicted") {
+        let seed = args
+            .opt_usize_strict("seed")
+            .map_err(|e| anyhow!(e))?
+            .map(|s| s as u64)
+            .unwrap_or(elaps::figures::calibrate::CALIBRATE_SEED);
+        let runner = PredictiveRunner::new(seed);
+        compare_libraries(&runner, &template, &libs, metric, stat, "predicted")?
+    } else {
+        elaps::engine::set_default_config(engine_config(args)?);
+        compare_libraries(&elaps::figures::LocalRunner, &template, &libs, metric, stat, "measured")?
+    };
+    if args.flag("json") {
+        println!("{}", cmp.to_json().to_string_pretty());
+    } else {
+        println!(
+            "{} of '{}' on machine '{}' — {} ({}), {} librar(ies), {} point(s):",
+            cmp.mode,
+            cmp.experiment,
+            cmp.machine,
+            cmp.metric.name(),
+            cmp.stat.name(),
+            cmp.libraries.len(),
+            cmp.winners.len(),
+        );
+        let header: Vec<String> =
+            cmp.libraries.iter().map(|l| format!("{:>14}", l.library)).collect();
+        println!("  {:>8} {} {:>14}", "n", header.join(" "), "winner");
+        for (i, (x, winner, _)) in cmp.winners.iter().enumerate() {
+            let vals: Vec<String> =
+                cmp.libraries.iter().map(|l| format!("{:>14.4}", l.series[i].1)).collect();
+            println!("  {x:>8} {} {winner:>14}", vals.join(" "));
+        }
+        if cmp.crossovers.is_empty() {
+            println!("no crossovers: one library wins the whole grid");
+        } else {
+            for (x, from, to) in &cmp.crossovers {
+                println!("crossover at n={x}: {from} → {to}");
+            }
+        }
+        println!("ranking (best first, by mean {}):", cmp.metric.name());
+        for (i, r) in cmp.ranking.iter().enumerate() {
+            println!(
+                "  {:>4} {:<14} score {:>14.4}  wins {}/{}",
+                i + 1,
+                r.library,
+                r.score,
+                r.wins,
+                cmp.winners.len()
+            );
+        }
+        println!("\n{}", cmp.to_figure().to_ascii(70, 20));
+    }
+    if let Some(svg) = args.opt("svg") {
+        std::fs::write(svg, cmp.to_figure().to_svg(720, 440))?;
+        println!("svg written to {svg}");
     }
     Ok(())
 }
@@ -1196,12 +1346,15 @@ fn cmd_kernels() -> Result<()> {
 
 fn cmd_libraries() -> Result<()> {
     try_register_xla();
-    for name in elaps::libraries::RUST_LIBRARIES {
-        println!("{name}");
-    }
-    for name in ["xla", "xla-pallas"] {
-        if elaps::libraries::by_name(name).is_some() {
-            println!("{name}  (AOT artifacts via PJRT)");
+    // built-ins first, then every registered extra (xla backends land
+    // here once try_register_xla finds artifacts) — the same list
+    // `elaps compare` defaults to
+    let builtin: &[&str] = elaps::libraries::RUST_LIBRARIES;
+    for name in elaps::libraries::available_libraries() {
+        if builtin.contains(&name.as_str()) {
+            println!("{name}");
+        } else {
+            println!("{name}  (registered)");
         }
     }
     Ok(())

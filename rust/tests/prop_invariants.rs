@@ -812,6 +812,59 @@ fn prop_ledger_index_incremental_fold_matches_one_shot_reference() {
     );
 }
 
+/// A random symbolic expression with the given maximum depth. Avoids
+/// `i64::MIN` constants: their `Display` magnitude does not fit the
+/// tokenizer's unsigned literal, so they are the one constant that
+/// legitimately cannot round-trip.
+fn random_expr(r: &mut Xoshiro256, depth: usize) -> elaps::coordinator::Expr {
+    use elaps::coordinator::Expr;
+    if depth == 0 || r.chance(0.3) {
+        return if r.chance(0.5) {
+            const SYMS: &[&str] = &["n", "m", "k", "i", "nb", "x_1"];
+            Expr::sym(SYMS[r.below(SYMS.len())])
+        } else if r.chance(0.5) {
+            Expr::c(r.range_usize(0, 1024) as i64 - 512)
+        } else {
+            Expr::c((r.next_u64() as i64).max(i64::MIN + 1))
+        };
+    }
+    let l = Box::new(random_expr(r, depth - 1));
+    let rhs = Box::new(random_expr(r, depth - 1));
+    match r.below(7) {
+        0 => Expr::Add(l, rhs),
+        1 => Expr::Sub(l, rhs),
+        2 => Expr::Mul(l, rhs),
+        3 => Expr::Div(l, rhs),
+        4 => Expr::CeilDiv(l, rhs),
+        5 => Expr::Min(l, rhs),
+        _ => Expr::Max(l, rhs),
+    }
+}
+
+#[test]
+fn prop_symbolic_display_reparses_identically() {
+    // parse ∘ Display = id on the AST, for arbitrary expressions over
+    // every operator — including negative constants in any position
+    // ("(x - -5)" must reparse to Sub(x, Const(-5))). Experiments
+    // persist expressions through Display, so a round-trip loss would
+    // silently change a reloaded experiment's operand sizes.
+    use elaps::coordinator::Expr;
+    forall(
+        0xC7,
+        400,
+        |r, size| random_expr(r, 1 + size.min(5)),
+        |e| {
+            let text = e.to_string();
+            let back = Expr::parse(&text)
+                .map_err(|err| format!("'{text}' failed to reparse: {err}"))?;
+            if back != *e {
+                return Err(format!("'{text}' reparsed to '{back}' ({back:?} != {e:?})"));
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_eigenvalues_match_across_drivers() {
     use elaps::linalg::lapack::{dsyev, dsyevd, dsyevr, dsyevx};
